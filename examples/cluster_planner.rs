@@ -1,0 +1,83 @@
+//! Cluster planner — the paper's "guidance for practitioners" use case
+//! inverted: given a model and a target MFU, what memory/bandwidth must
+//! the cluster provide, and which registry cluster is the cheapest fit?
+//!
+//! Uses Conclusion 2 (Eq 14): α_MFU ≤ (2 + l/3H) · 3/(4LHQ²) · S·M_free/S_F
+//! — solve for the required `S_volume · M_free` product, then scan the
+//! hardware registry.
+//!
+//! ```bash
+//! cargo run --release --example cluster_planner -- 30B 0.5 4096
+//! ```
+
+use fsdp_bw::config::{ClusterConfig, ModelConfig, Precision, TrainingConfig, GIB};
+use fsdp_bw::gridsearch::{max_ctx_bs1, GridSearch};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model_name = args.first().map(String::as_str).unwrap_or("30B");
+    let target_mfu: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let seq: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4096);
+
+    let model = ModelConfig::preset(model_name).expect("unknown model preset");
+    let q = Precision::Bf16.bytes();
+    let (l, h) = (model.layers as f64, model.hidden as f64);
+
+    // Required S_volume·M_free product from Eq 14 (per unit S_FLOPs).
+    let factor = (2.0 + seq as f64 / (3.0 * h)) * 3.0 / (4.0 * l * h * q * q);
+    println!("plan for {model_name} at target MFU {target_mfu} (ctx {seq}):");
+    println!(
+        "required S_volume·M_free ≥ {target_mfu}/{factor:.3e} · S_FLOPs  (Eq 14)\n"
+    );
+
+    println!(
+        "{:<22} {:>7} {:>9} {:>9} {:>10} {:>8}",
+        "cluster", "GPUs", "mfu_max", "peak MFU", "max ctx", "verdict"
+    );
+    for cluster in ClusterConfig::table3_presets() {
+        let n = 512;
+        let cfg = TrainingConfig::bs1_max_ctx(seq);
+        let sm = fsdp_bw::analysis::StepModel::new(&model, &cluster, &cfg, n);
+        let bound = sm.bounds().mfu_max;
+        let search = GridSearch::new(&model, &cluster, n).run();
+        let peak = search.best_mfu.map(|p| p.mfu);
+        let ctx = max_ctx_bs1(&model, &cluster, n);
+        let verdict = match peak {
+            Some(p) if p >= target_mfu => "OK",
+            Some(_) => "too slow",
+            None => "OOM",
+        };
+        println!(
+            "{:<22} {:>7} {:>9.3} {:>9} {:>10} {:>8}",
+            cluster.name,
+            n,
+            bound,
+            peak.map(|p| format!("{p:.3}")).unwrap_or_else(|| "-".into()),
+            ctx.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
+            verdict
+        );
+    }
+
+    // Minimum-bandwidth scan on the A100-40GB cluster shape.
+    println!("\nminimum per-GPU bandwidth on 40GB A100s @512 GPUs for MFU ≥ {target_mfu}:");
+    for gbps in [25.0, 50.0, 100.0, 200.0, 400.0, 800.0] {
+        let mut cluster = ClusterConfig::new(
+            &format!("40GB-A100-{gbps:.0}Gbps"),
+            128,
+            4,
+            fsdp_bw::config::GpuSpec::a100_40gb(),
+            gbps,
+        );
+        cluster.reserved_bytes = 10.0 * GIB;
+        let peak = GridSearch::new(&model, &cluster, 512).run().best_mfu.map(|p| p.mfu);
+        let ok = peak.map(|p| p >= target_mfu).unwrap_or(false);
+        println!(
+            "  {gbps:>5.0} Gbps → peak MFU {}  {}",
+            peak.map(|p| format!("{p:.3}")).unwrap_or_else(|| "OOM ".into()),
+            if ok { "✓ sufficient" } else { "" }
+        );
+        if ok {
+            break;
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: evaluate the paper's analytical model and run the
+//! Algorithm-1 grid search for one (model, cluster, N) point.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fsdp_bw::analysis::StepModel;
+use fsdp_bw::config::{ClusterConfig, ModelConfig, TrainingConfig, GIB};
+use fsdp_bw::gridsearch::GridSearch;
+use fsdp_bw::simulator::{simulate_step, EfficiencyModel};
+
+fn main() {
+    // 1. Pick a model and a cluster from the paper's registry.
+    let model = ModelConfig::preset("13B").expect("preset");
+    let cluster = ClusterConfig::preset("40GB-A100-200Gbps").expect("preset");
+    let n_gpus = 8;
+    let cfg = TrainingConfig::paper_default(10_240, 1); // ctx 10240, bs 1, γ=0
+
+    // 2. Closed-form chain (paper §2): memory, transfer, step time, metrics.
+    let sm = StepModel::new(&model, &cluster, &cfg, n_gpus);
+    let mem = sm.memory();
+    println!("== analytical model (paper §2) ==");
+    println!("M_free          : {:.1} GiB", mem.m_free / GIB);
+    println!("T_transfer      : {:.3} s   (Eq 5)", sm.t_transfer());
+    let b = sm.breakdown(0.75);
+    println!("T_fwd / T_bwd   : {:.3} / {:.3} s at α̂=0.75", b.t_fwd, b.t_bwd);
+    println!("R_fwd / R_bwd   : {:.2} / {:.2}  (Eq 10)", b.r_fwd, b.r_bwd);
+    let m = sm.metrics(0.75);
+    println!("K / HFU / MFU   : {:.0} TGS / {:.3} / {:.3}  (Eq 11)", m.tgs, m.hfu, m.mfu);
+
+    // 3. The §2.7 closed-form maxima — "memory × bandwidth" bounds.
+    let bounds = sm.bounds();
+    println!("\n== bounds (Conclusions 1–3) ==");
+    println!("E_MAX  ≤ {:.0} tokens/GPU", bounds.e_max);
+    println!("α_MFU  ≤ {:.3}", bounds.mfu_max);
+    println!("K      ≤ {:.0} TGS", bounds.k_max);
+
+    // 4. The calibrated cluster simulator — the "measured" analog.
+    let s = simulate_step(&model, &cluster, &cfg, n_gpus, &EfficiencyModel::default());
+    println!("\n== calibrated simulator ==");
+    println!("MFU {:.3}  TGS {:.0}  (paper measured 0.59 / 1806)", s.mfu, s.tgs);
+
+    // 5. Algorithm 1: best feasible configuration at 512 GPUs.
+    let r = GridSearch::new(&model, &cluster, 512).run();
+    if let Some(p) = r.best_mfu {
+        println!("\n== Algorithm 1 @512 GPUs ==");
+        println!(
+            "peak MFU {:.3} at γ={:.2}, {} ({} feasible grid points)",
+            p.mfu, p.gamma, p.stage, r.feasible
+        );
+    }
+}

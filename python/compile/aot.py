@@ -1,0 +1,189 @@
+"""AOT lowering: jax → HLO **text** + manifest.json.
+
+HLO text (not serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+— the Rust side unpacks one tuple per execution.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` does). Python never runs after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+from .kernels.flash_attention import flash_attention
+from .kernels.layernorm import layernorm
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name: str, shape, dtype: str) -> dict:
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def lower_train_step(cfg: model.ModelCfg, batch: int) -> tuple[str, dict]:
+    """Lower one train_step variant; returns (hlo_text, manifest entry)."""
+    specs = model.param_specs(cfg)
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    args.append(jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32))  # tokens
+    args.append(jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32))  # targets
+    lowered = jax.jit(model.make_train_step(cfg)).lower(*args)
+    hlo = to_hlo_text(lowered)
+
+    # L2 profile: XLA's own cost analysis of the lowered module — the
+    # §Perf evidence that the graph does the FLOPs it should (no redundant
+    # recompute beyond the γ=0 remat policy) and how many bytes it touches.
+    try:
+        cost = lowered.compile().cost_analysis()
+        flops = float(cost.get("flops", -1.0))
+        bytes_accessed = float(cost.get("bytes accessed", -1.0))
+    except Exception:  # pragma: no cover - cost analysis is best-effort
+        flops, bytes_accessed = -1.0, -1.0
+
+    inputs = [_spec(n, s, "f32") for n, s in specs]
+    inputs.append(_spec("tokens", (batch, cfg.seq_len), "i32"))
+    inputs.append(_spec("targets", (batch, cfg.seq_len), "i32"))
+    outputs = [_spec("loss", (), "f32")]
+    outputs += [_spec(f"grad.{n.removeprefix('param.')}", s, "f32") for n, s in specs]
+    entry = {
+        "inputs": inputs,
+        "outputs": outputs,
+        "meta": {
+            "model": cfg.name,
+            "layers": cfg.layers,
+            "hidden": cfg.hidden,
+            "heads": cfg.heads,
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "batch": batch,
+            "params": model.param_count(cfg),
+            "use_pallas": cfg.use_pallas,
+            "xla_flops": flops,
+            "xla_bytes_accessed": bytes_accessed,
+        },
+    }
+    return hlo, entry
+
+
+def lower_kernel_pair(seq: int = 128, head_dim: int = 64) -> dict:
+    """Lower the flash-attention kernel AND its jnp oracle at the same
+    shape, so the Rust test suite can execute both and assert numerics
+    end-to-end through PJRT."""
+    q = jax.ShapeDtypeStruct((2, 4, seq, head_dim), jnp.float32)
+
+    def kernel_fn(q, k, v):
+        return (flash_attention(q, k, v, causal=True),)
+
+    def ref_fn(q, k, v):
+        return (ref.attention_ref(q, k, v, causal=True),)
+
+    out: dict = {}
+    for name, fn in [("flash_attention", kernel_fn), ("attention_ref", ref_fn)]:
+        lowered = jax.jit(fn).lower(q, q, q)
+        io = [_spec(x, q.shape, "f32") for x in ("q", "k", "v")]
+        out[name] = (
+            to_hlo_text(lowered),
+            {
+                "inputs": io,
+                "outputs": [_spec("o", q.shape, "f32")],
+                "meta": {"seq_len": seq, "head_dim": head_dim, "kind": "kernel-pair"},
+            },
+        )
+
+    ln_x = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    ln_p = jax.ShapeDtypeStruct((256,), jnp.float32)
+
+    def ln_fn(x, s, b):
+        return (layernorm(x, s, b),)
+
+    def ln_ref_fn(x, s, b):
+        return (ref.layernorm_ref(x, s, b),)
+
+    for name, fn in [("layernorm", ln_fn), ("layernorm_ref", ln_ref_fn)]:
+        lowered = jax.jit(fn).lower(ln_x, ln_p, ln_p)
+        out[name] = (
+            to_hlo_text(lowered),
+            {
+                "inputs": [
+                    _spec("x", ln_x.shape, "f32"),
+                    _spec("scale", ln_p.shape, "f32"),
+                    _spec("bias", ln_p.shape, "f32"),
+                ],
+                "outputs": [_spec("o", ln_x.shape, "f32")],
+                "meta": {"kind": "kernel-pair"},
+            },
+        )
+    return out
+
+
+#: The artifact set `make artifacts` builds. tiny_b1/b4 exist for the
+#: N=4-rank vs N=1-rank parity test (same global batch of 4 sequences).
+VARIANTS = [
+    ("train_step_tiny_b1", "tiny", 1, True),
+    ("train_step_tiny_b4", "tiny", 4, True),
+    ("train_step_tiny_b1_jnp", "tiny", 1, False),
+    ("train_step_27m", "27m", 2, True),
+    ("train_step_27m_jnp", "27m", 2, False),
+]
+
+
+def build(out_dir: pathlib.Path, only: list[str] | None = None) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {"artifacts": {}}
+
+    for art_name, preset_name, batch, use_pallas in VARIANTS:
+        if only and art_name not in only:
+            continue
+        cfg = dataclasses.replace(model.preset(preset_name), use_pallas=use_pallas)
+        hlo, entry = lower_train_step(cfg, batch)
+        fname = f"{art_name}.hlo.txt"
+        (out_dir / fname).write_text(hlo)
+        entry["hlo"] = fname
+        manifest["artifacts"][art_name] = entry
+        print(f"  {art_name}: {len(hlo)/1e6:.1f} MB HLO, {entry['meta']['params']} params")
+
+    if not only:
+        for name, (hlo, entry) in lower_kernel_pair().items():
+            fname = f"{name}.hlo.txt"
+            (out_dir / fname).write_text(hlo)
+            entry["hlo"] = fname
+            manifest["artifacts"][name] = entry
+            print(f"  {name}: {len(hlo)/1e3:.0f} KB HLO")
+
+    text = json.dumps(manifest, indent=2, sort_keys=True)
+    (out_dir / "manifest.json").write_text(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['artifacts'])} artifacts, {digest})")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", type=pathlib.Path)
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    build(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: fused LayerNorm.
+
+One pass per row-block: mean, variance, normalize, scale+shift — fused so
+the row never round-trips to HBM between moments and normalization (the
+transformer block of the paper's Fig 5 interleaves two of these per layer).
+Rows are tiled in VMEM-sized blocks; the feature axis stays whole (H is at
+most a few thousand floats — well inside VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+EPS = 1e-5
+
+
+def _layernorm_kernel(x_ref, scale_ref, bias_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # (block_rows, hidden)
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    normed = (x - mean) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = (normed * scale_ref[...] + bias_ref[...]).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    b = min(preferred, n)
+    while n % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _layernorm_impl(x, scale, bias, block_rows, interpret):
+    orig_shape = x.shape
+    hidden = orig_shape[-1]
+    rows = int(x.size // hidden)
+    xf = x.reshape(rows, hidden)
+    br = _pick_block(rows, block_rows)
+
+    out = pl.pallas_call(
+        _layernorm_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, scale, bias)
+    return out.reshape(orig_shape)
+
+
+def _layernorm_math(x, scale, bias):
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mean) * jax.lax.rsqrt(var + EPS) * scale + bias).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _layernorm(x, scale, bias, block_rows, interpret):
+    return _layernorm_impl(x, scale, bias, block_rows, interpret)
+
+
+def _ln_fwd(x, scale, bias, block_rows, interpret):
+    return _layernorm_impl(x, scale, bias, block_rows, interpret), (x, scale, bias)
+
+
+def _ln_bwd(block_rows, interpret, residuals, g):
+    x, scale, bias = residuals
+    _, vjp = jax.vjp(_layernorm_math, x, scale, bias)
+    return vjp(g)
+
+
+_layernorm.defvjp(_ln_fwd, _ln_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def layernorm(
+    x: jax.Array,
+    scale: jax.Array,
+    bias: jax.Array,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jax.Array:
+    """LayerNorm over the last axis of ``x`` (any leading shape).
+
+    Differentiable via a recomputing custom VJP (no Pallas autodiff in
+    interpret mode)."""
+    return _layernorm(x, scale, bias, block_rows, interpret)

@@ -1,0 +1,32 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite asserts the kernels against
+(`assert_allclose`), and the `use_pallas=False` path of the L2 model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Exact softmax attention, ``(batch, heads, seq, head_dim)`` layout."""
+    head_dim = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / (head_dim**0.5)
+    if causal:
+        seq = q.shape[2]
+        mask = jnp.tril(jnp.ones((seq, seq), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def layernorm_ref(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    """LayerNorm over the last axis."""
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mean) * jax.lax.rsqrt(var + EPS) * scale + bias).astype(x.dtype)

@@ -1,0 +1,212 @@
+"""L2: the decoder-only transformer (fwd/bwd) in JAX, calling the L1
+Pallas kernels.
+
+Matches the paper's architecture model (§2.1, Appendix A / Fig 5): L
+pre-LN blocks of MHA + ratio-4 FFN, ``phi = 12*L*H^2`` block parameters,
+plus embedding / positional / LM-head tensors (which the paper's phi
+excludes but a real model needs).
+
+Parameters travel as a **flat ordered list** of named arrays — the exact
+contract with the Rust FSDP runtime: the AOT manifest records
+(name, shape) in this order, Rust concatenates them into one flat vector,
+shards it, and feeds the all-gathered tensors back positionally. The
+``train_step`` function returns ``(loss, *grads)`` with grads in the same
+order.
+
+Build-time only: nothing here is imported on the training path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.flash_attention import flash_attention
+from .kernels.layernorm import layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    """Architecture hyper-parameters (mirrors Rust ``ModelConfig``)."""
+
+    name: str
+    layers: int
+    hidden: int
+    heads: int
+    vocab: int
+    seq_len: int
+    ffn_ratio: int = 4
+    # When False, attention/layernorm use the pure-jnp reference ops — the
+    # ablation path for measuring interpret-mode Pallas overhead in the
+    # lowered HLO.
+    use_pallas: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def ffn_dim(self) -> int:
+        return self.ffn_ratio * self.hidden
+
+
+TINY = ModelCfg("tiny", layers=2, hidden=64, heads=4, vocab=256, seq_len=32)
+M27 = ModelCfg("27m", layers=8, hidden=512, heads=8, vocab=4096, seq_len=256)
+M112 = ModelCfg("112m", layers=12, hidden=768, heads=12, vocab=32000, seq_len=256)
+
+
+def param_specs(cfg: ModelCfg) -> list:
+    """Ordered (name, shape) list — the flat-parameter contract."""
+    specs = [
+        ("param.embed", (cfg.vocab, cfg.hidden)),
+        ("param.pos", (cfg.seq_len, cfg.hidden)),
+    ]
+    for i in range(cfg.layers):
+        b = f"param.blocks.{i}"
+        specs += [
+            (f"{b}.ln1.scale", (cfg.hidden,)),
+            (f"{b}.ln1.bias", (cfg.hidden,)),
+            (f"{b}.attn.wq", (cfg.hidden, cfg.hidden)),
+            (f"{b}.attn.wk", (cfg.hidden, cfg.hidden)),
+            (f"{b}.attn.wv", (cfg.hidden, cfg.hidden)),
+            (f"{b}.attn.wo", (cfg.hidden, cfg.hidden)),
+            (f"{b}.ln2.scale", (cfg.hidden,)),
+            (f"{b}.ln2.bias", (cfg.hidden,)),
+            (f"{b}.ffn.w1", (cfg.hidden, cfg.ffn_dim)),
+            (f"{b}.ffn.w2", (cfg.ffn_dim, cfg.hidden)),
+        ]
+    specs += [
+        ("param.ln_f.scale", (cfg.hidden,)),
+        ("param.ln_f.bias", (cfg.hidden,)),
+        ("param.head", (cfg.hidden, cfg.vocab)),
+    ]
+    return specs
+
+
+def param_count(cfg: ModelCfg) -> int:
+    total = 0
+    for _, shape in param_specs(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def block_param_count(cfg: ModelCfg) -> int:
+    """The paper's phi = 12*L*H^2 (blocks only, no embeddings)."""
+    return 12 * cfg.layers * cfg.hidden * cfg.hidden
+
+
+def init_params(cfg: ModelCfg, key: jax.Array) -> list:
+    """Reference initializer (mirrors Rust ``init_params``): ``.scale`` → 1,
+    ``.bias`` → 0, everything else ~ N(0, 0.02²)."""
+    params = []
+    for name, shape in param_specs(cfg):
+        if name.endswith(".scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith(".bias"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            params.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _ln(cfg: ModelCfg, x, scale, bias):
+    if cfg.use_pallas:
+        return layernorm(x, scale, bias)
+    return ref.layernorm_ref(x, scale, bias)
+
+
+def _attention(cfg: ModelCfg, x, wq, wk, wv, wo):
+    batch, seq, hidden = x.shape
+    heads, hd = cfg.heads, cfg.head_dim
+
+    def split(w):
+        y = x @ w  # (b, s, H)
+        return y.reshape(batch, seq, heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(wq), split(wk), split(wv)
+    if cfg.use_pallas:
+        o = flash_attention(q, k, v, causal=True)
+    else:
+        o = ref.attention_ref(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(batch, seq, hidden)
+    return o @ wo
+
+
+def _block(cfg: ModelCfg, named: dict, i: int, x):
+    b = f"param.blocks.{i}"
+    h = _ln(cfg, x, named[f"{b}.ln1.scale"], named[f"{b}.ln1.bias"])
+    x = x + _attention(
+        cfg,
+        h,
+        named[f"{b}.attn.wq"],
+        named[f"{b}.attn.wk"],
+        named[f"{b}.attn.wv"],
+        named[f"{b}.attn.wo"],
+    )
+    h = _ln(cfg, x, named[f"{b}.ln2.scale"], named[f"{b}.ln2.bias"])
+    h = jax.nn.gelu(h @ named[f"{b}.ffn.w1"])
+    return x + h @ named[f"{b}.ffn.w2"]
+
+
+def forward(cfg: ModelCfg, params: list, tokens: jax.Array) -> jax.Array:
+    """Logits for a ``(batch, seq)`` int32 token batch."""
+    named = dict(zip([n for n, _ in param_specs(cfg)], params))
+    x = named["param.embed"][tokens] + named["param.pos"][None, :, :]
+    for i in range(cfg.layers):
+        # γ=0 activation checkpointing: each block's interior is
+        # rematerialized in the backward pass — exactly the "complete
+        # re-computation" regime the paper's evaluation uses (§3).
+        x = jax.checkpoint(functools.partial(_block, cfg, named, i))(x)
+    x = _ln(cfg, x, named["param.ln_f.scale"], named["param.ln_f.bias"])
+    return x @ named["param.head"]
+
+
+def loss_fn(cfg: ModelCfg, params: list, tokens: jax.Array, targets: jax.Array):
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -picked.mean()
+
+
+def make_train_step(cfg: ModelCfg) -> Callable:
+    """``fn(*params, tokens, targets) -> (loss, *grads)`` — the artifact the
+    Rust FSDP runtime executes every step."""
+    n = len(param_specs(cfg))
+
+    def step(*args):
+        params = list(args[:n])
+        tokens, targets = args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens, targets))(params)
+        return (loss, *grads)
+
+    return step
+
+
+def make_forward(cfg: ModelCfg) -> Callable:
+    """``fn(*params, tokens) -> (logits,)`` — inference-only artifact."""
+    n = len(param_specs(cfg))
+
+    def fwd(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        return (forward(cfg, params, tokens),)
+
+    return fwd
+
+
+def preset(name: str) -> ModelCfg:
+    for cfg in (TINY, M27, M112):
+        if cfg.name == name:
+            return cfg
+    raise KeyError(name)

@@ -1,0 +1,8 @@
+"""Pytest path setup: make `compile` importable when pytest is invoked
+from the repository root (`pytest python/tests/`) as well as from
+`python/` (`python -m pytest tests/`)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

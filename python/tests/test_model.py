@@ -1,0 +1,143 @@
+"""L2 correctness: transformer shapes, parameter accounting, gradients,
+pallas-vs-jnp model parity, and a short optimization smoke test."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def tiny(use_pallas=True):
+    return dataclasses.replace(model.TINY, use_pallas=use_pallas)
+
+
+def batch(cfg, b, key=0):
+    k = jax.random.PRNGKey(key)
+    toks = jax.random.randint(k, (b, cfg.seq_len), 0, cfg.vocab, jnp.int32)
+    targets = jnp.roll(toks, -1, axis=1)
+    return toks, targets
+
+
+def test_param_specs_accounting():
+    cfg = tiny()
+    specs = model.param_specs(cfg)
+    # 2 (embed, pos) + 10 per block + 3 tail.
+    assert len(specs) == 2 + 10 * cfg.layers + 3
+    # Block parameters match the paper's 12LH^2 exactly.
+    block_elems = sum(
+        int(np.prod(s)) for n, s in specs if ".blocks." in n
+    )
+    ln_elems = sum(
+        int(np.prod(s)) for n, s in specs if ".blocks." in n and (".ln" in n)
+    )
+    assert block_elems - ln_elems == model.block_param_count(cfg)
+    # Names are unique and all param-prefixed.
+    names = [n for n, _ in specs]
+    assert len(set(names)) == len(names)
+    assert all(n.startswith("param.") for n in names)
+
+
+def test_forward_shapes_and_determinism():
+    cfg = tiny()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    toks, _ = batch(cfg, 3)
+    logits = model.forward(cfg, params, toks)
+    assert logits.shape == (3, cfg.seq_len, cfg.vocab)
+    logits2 = model.forward(cfg, params, toks)
+    np.testing.assert_array_equal(logits, logits2)
+
+
+def test_loss_near_uniform_at_init():
+    cfg = tiny()
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    toks, targets = batch(cfg, 4)
+    loss = model.loss_fn(cfg, params, toks, targets)
+    # 0.02-scale init ⇒ near-uniform logits ⇒ loss ≈ ln(vocab).
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.2
+
+
+def test_pallas_and_jnp_models_agree():
+    cfg_p, cfg_j = tiny(True), tiny(False)
+    params = model.init_params(cfg_p, jax.random.PRNGKey(1))
+    toks, targets = batch(cfg_p, 2)
+    lp = model.loss_fn(cfg_p, params, toks, targets)
+    lj = model.loss_fn(cfg_j, params, toks, targets)
+    np.testing.assert_allclose(lp, lj, rtol=1e-5, atol=1e-5)
+
+
+def test_train_step_returns_loss_and_grads():
+    cfg = tiny()
+    step = jax.jit(model.make_train_step(cfg))
+    params = model.init_params(cfg, jax.random.PRNGKey(2))
+    toks, targets = batch(cfg, 2)
+    out = step(*params, toks, targets)
+    assert len(out) == len(params) + 1
+    assert out[0].shape == ()
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+        assert jnp.all(jnp.isfinite(g))
+
+
+def test_grad_matches_finite_difference():
+    # Directional finite difference on the head matrix (single-coordinate
+    # FD drowns in f32 noise: the loss is O(ln vocab) while a 1e-3 bump
+    # moves it by O(1e-6)).
+    cfg = tiny()
+    params = model.init_params(cfg, jax.random.PRNGKey(3))
+    toks, targets = batch(cfg, 1)
+    loss = lambda ps: model.loss_fn(cfg, ps, toks, targets)
+    grads = jax.grad(loss)(params)
+    head_i = len(params) - 1
+    direction = jax.random.normal(jax.random.PRNGKey(13), params[head_i].shape)
+    direction = direction / jnp.linalg.norm(direction)
+    eps = 3e-2
+    plus = loss(params[:head_i] + [params[head_i] + eps * direction])
+    minus = loss(params[:head_i] + [params[head_i] - eps * direction])
+    fd = (plus - minus) / (2 * eps)
+    analytic = jnp.vdot(grads[head_i], direction)
+    np.testing.assert_allclose(analytic, fd, rtol=5e-2, atol=2e-4)
+
+
+def test_short_training_reduces_loss():
+    cfg = tiny()
+    step = jax.jit(model.make_train_step(cfg))
+    params = model.init_params(cfg, jax.random.PRNGKey(4))
+    # Repeating batch: the model must be able to overfit it quickly.
+    toks, targets = batch(cfg, 4)
+    lr = 5e-2
+    first = None
+    for _ in range(40):
+        out = step(*params, toks, targets)
+        loss, grads = out[0], out[1:]
+        if first is None:
+            first = float(loss)
+        params = [p - lr * g for p, g in zip(params, grads)]
+    assert float(loss) < first - 0.8, f"{first} -> {float(loss)}"
+
+
+def test_causal_lm_property():
+    # Changing a future token must not change earlier logits.
+    cfg = tiny()
+    params = model.init_params(cfg, jax.random.PRNGKey(5))
+    toks, _ = batch(cfg, 1)
+    logits = model.forward(cfg, params, toks)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % cfg.vocab)
+    logits2 = model.forward(cfg, params, toks2)
+    np.testing.assert_allclose(
+        logits[0, : cfg.seq_len - 1], logits2[0, : cfg.seq_len - 1], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_presets_resolve():
+    for name in ("tiny", "27m", "112m"):
+        cfg = model.preset(name)
+        assert cfg.hidden % cfg.heads == 0
+    with pytest.raises(KeyError):
+        model.preset("nope")
+    # 27m really is ≈27M params (incl. embeddings).
+    assert 20e6 < model.param_count(model.M27) < 35e6
+    assert 90e6 < model.param_count(model.M112) < 145e6

@@ -1,0 +1,31 @@
+//! Bench: the analytical chain (Eqs 1–15) — the innermost hot path of the
+//! grid search, target < 1 µs per full evaluation.
+
+use fsdp_bw::analysis::StepModel;
+use fsdp_bw::config::{ClusterConfig, ModelConfig, TrainingConfig};
+use fsdp_bw::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let model = ModelConfig::preset("13B").unwrap();
+    let cluster = ClusterConfig::preset("40GB-A100-200Gbps").unwrap();
+    let cfg = TrainingConfig::paper_default(10_240, 1);
+
+    b.case("analysis/step_model_full_chain", 1.0, || {
+        let sm = StepModel::new(&model, &cluster, &cfg, 8);
+        let m = sm.metrics(0.75);
+        std::hint::black_box(m.mfu)
+    });
+
+    b.case("analysis/memory_model", 1.0, || {
+        let sm = StepModel::new(&model, &cluster, &cfg, 8);
+        std::hint::black_box(sm.memory().m_free)
+    });
+
+    b.case("analysis/bounds_eq12_to_15", 1.0, || {
+        let sm = StepModel::new(&model, &cluster, &cfg, 8);
+        std::hint::black_box(sm.bounds().k_max)
+    });
+
+    println!("\n{}", b.dump_json());
+}

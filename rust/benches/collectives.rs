@@ -1,0 +1,101 @@
+//! Bench: the in-process fabric and ring collectives — real data movement
+//! (no modeled sleep), measured in steady state with persistent rank
+//! threads (the trainer's actual shape), target within ~2× of the memcpy
+//! roofline per rank at 2 ranks.
+
+use std::sync::Arc;
+
+use fsdp_bw::coordinator::{Communicator, Fabric, FabricConfig};
+use fsdp_bw::util::bench::Bench;
+use fsdp_bw::util::channel::{channel, Sender};
+
+enum Cmd {
+    AllGather,
+    ReduceScatter,
+    Quit,
+}
+
+/// Persistent rank pool: threads live across rounds like trainer ranks do.
+struct Pool {
+    cmd_txs: Vec<Sender<Cmd>>,
+    done_rx: fsdp_bw::util::channel::Receiver<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    n: usize,
+}
+
+impl Pool {
+    fn new(n: usize, len: usize) -> Self {
+        let fabric = Arc::new(Fabric::new(n, FabricConfig::default()));
+        let (done_tx, done_rx) = channel::<()>(0);
+        let mut cmd_txs = Vec::new();
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let (tx, rx) = channel::<Cmd>(0);
+            cmd_txs.push(tx);
+            let fabric = fabric.clone();
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let comm = Communicator::new(fabric, rank);
+                let shard = vec![rank as f32; len];
+                let full = vec![rank as f32; len * comm.n_ranks()];
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::AllGather => {
+                            std::hint::black_box(comm.all_gather(&shard).unwrap());
+                        }
+                        Cmd::ReduceScatter => {
+                            std::hint::black_box(comm.reduce_scatter_mean(&full).unwrap());
+                        }
+                        Cmd::Quit => break,
+                    }
+                    let _ = done.send(());
+                }
+            }));
+        }
+        Self { cmd_txs, done_rx, handles, n }
+    }
+
+    fn round(&self, ag: bool) {
+        for tx in &self.cmd_txs {
+            tx.send(if ag { Cmd::AllGather } else { Cmd::ReduceScatter }).unwrap();
+        }
+        for _ in 0..self.n {
+            self.done_rx.recv().unwrap();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Quit);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    // 1 MiB shard per rank — comparable to one transformer block's shard.
+    let len = 256 * 1024;
+    for n in [2usize, 4, 8] {
+        let pool = Pool::new(n, len);
+        let bytes = (len * 4 * (n - 1)) as f64; // per-rank traffic
+        b.case(&format!("collectives/all_gather_{n}ranks_1MiB"), bytes, || pool.round(true));
+        b.case(&format!("collectives/reduce_scatter_{n}ranks_1MiB"), bytes, || {
+            pool.round(false)
+        });
+    }
+
+    // Memcpy roofline reference for the throughput comparison.
+    let src = vec![1.0f32; len * 4];
+    let mut dst = vec![0.0f32; len * 4];
+    b.case("collectives/memcpy_4MiB_reference", (len * 16) as f64, || {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(dst[0])
+    });
+
+    println!("\n{}", b.dump_json());
+}

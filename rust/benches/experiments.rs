@@ -1,0 +1,15 @@
+//! Bench: one case per paper table/figure family — the regeneration cost
+//! of the full evaluation section (`fsdp-bw experiment all`).
+
+use fsdp_bw::experiments;
+use fsdp_bw::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    for id in experiments::EXPERIMENT_IDS {
+        b.case(&format!("experiments/{id}"), 1.0, || {
+            std::hint::black_box(experiments::run(id).expect("experiment runs").tables.len())
+        });
+    }
+    println!("\n{}", b.dump_json());
+}

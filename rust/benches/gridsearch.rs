@@ -1,0 +1,48 @@
+//! Bench: Algorithm 1 sweeps — a full Fig 1 panel (7 models × 2 clusters)
+//! must regenerate in well under a second.
+
+use fsdp_bw::config::{ClusterConfig, ModelConfig};
+use fsdp_bw::gridsearch::{max_batch_at_ctx, max_ctx_bs1, ConfigTable, GridSearch};
+use fsdp_bw::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let model = ModelConfig::preset("13B").unwrap();
+    let cluster = ClusterConfig::preset("40GB-A100-200Gbps").unwrap();
+
+    // One full Algorithm-1 sweep (95 α × 101 γ × 2 stages ≈ 19k points).
+    b.case("gridsearch/algorithm1_single_point", 19_190.0, || {
+        std::hint::black_box(GridSearch::new(&model, &cluster, 512).run().feasible)
+    });
+
+    // The Fig 1 workload: all models, both clusters, optimum panel.
+    let clusters: Vec<_> = ["40GB-A100-200Gbps", "40GB-A100-100Gbps"]
+        .iter()
+        .map(|n| ClusterConfig::table3_presets().into_iter().find(|c| &c.name == n).unwrap())
+        .collect();
+    b.case("gridsearch/fig1_full_panel", 14.0, || {
+        let mut acc = 0.0;
+        for c in &clusters {
+            for m in ModelConfig::presets() {
+                if let Some(p) = GridSearch::new(&m, c, 512).run().best_mfu {
+                    acc += p.mfu;
+                }
+            }
+        }
+        std::hint::black_box(acc)
+    });
+
+    b.case("gridsearch/max_ctx_bs1_cell", 1.0, || {
+        std::hint::black_box(max_ctx_bs1(&model, &cluster, 64))
+    });
+
+    b.case("gridsearch/max_batch_cell", 1.0, || {
+        std::hint::black_box(max_batch_at_ctx(&model, &cluster, 64, 512))
+    });
+
+    b.case("gridsearch/table4_generation", 56.0, || {
+        std::hint::black_box(ConfigTable::generate(&cluster, None).cells.len())
+    });
+
+    println!("\n{}", b.dump_json());
+}

@@ -1,0 +1,73 @@
+//! Bench: the PJRT runtime hot path — executable dispatch overhead,
+//! kernel-artifact execution, and one real FSDP training step end-to-end.
+//!
+//! Requires `make artifacts`; exits 0 with a message otherwise.
+
+use std::path::PathBuf;
+
+use fsdp_bw::coordinator::{FabricConfig, TrainParams, Trainer};
+use fsdp_bw::runtime::{ArtifactManifest, Executable, HostTensor};
+use fsdp_bw::util::bench::Bench;
+use fsdp_bw::util::Rng64;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP runtime bench: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let mut b = Bench::new();
+
+    // Kernel artifact execute (includes host<->device literal traffic).
+    let (spec, path) = manifest.get("flash_attention").unwrap();
+    let exe = Executable::load("flash_attention", &path).unwrap();
+    let mut rng = Rng64::new(1);
+    let shape = spec.inputs[0].shape.clone();
+    let n: usize = shape.iter().product();
+    let mk = |rng: &mut Rng64| {
+        HostTensor::f32((0..n).map(|_| rng.normal() as f32).collect(), &shape).unwrap()
+    };
+    let inputs = vec![mk(&mut rng), mk(&mut rng), mk(&mut rng)];
+    let flops = {
+        // 4 * seq^2 * head_dim per (batch*head): QK^T + PV.
+        let (bh, s, d) = (shape[0] * shape[1], shape[2], shape[3]);
+        (4 * bh * s * s * d) as f64
+    };
+    b.case("runtime/flash_attention_execute", flops, || {
+        std::hint::black_box(exe.run(&inputs).unwrap().len())
+    });
+
+    // The jnp-oracle artifact at the same shape: the interpret-mode
+    // overhead ratio of the Pallas lowering (structure cost, not a TPU
+    // performance proxy).
+    let (_, rpath) = manifest.get("attention_ref").unwrap();
+    let rexe = Executable::load("attention_ref", &rpath).unwrap();
+    b.case("runtime/attention_ref_execute", flops, || {
+        std::hint::black_box(rexe.run(&inputs).unwrap().len())
+    });
+
+    // Dispatch overhead: the smallest artifact.
+    let (lspec, lpath) = manifest.get("layernorm_ref").unwrap();
+    let lexe = Executable::load("layernorm_ref", &lpath).unwrap();
+    let lx: usize = lspec.inputs[0].shape.iter().product();
+    let hid = lspec.inputs[1].shape[0];
+    let linputs = vec![
+        HostTensor::f32(vec![1.0; lx], &lspec.inputs[0].shape).unwrap(),
+        HostTensor::f32(vec![1.0; hid], &[hid]).unwrap(),
+        HostTensor::f32(vec![0.0; hid], &[hid]).unwrap(),
+    ];
+    b.case("runtime/small_execute_dispatch", 1.0, || {
+        std::hint::black_box(lexe.run(&linputs).unwrap().len())
+    });
+
+    // A full FSDP job (tiny model, 2 ranks, 8 steps): spin-up (manifest +
+    // XLA compile + thread pool) plus the steady-state step loop.
+    b.case("runtime/fsdp_job_tiny_2ranks_8steps", 8.0, || {
+        let mut p = TrainParams::new("train_step_tiny_b1", dir.clone(), 2, 8);
+        p.fabric = FabricConfig::default();
+        std::hint::black_box(Trainer::run(&p).unwrap().final_loss)
+    });
+
+    println!("\n{}", b.dump_json());
+}

@@ -1,0 +1,36 @@
+//! Bench: the discrete-event step simulator — sweep-grade throughput
+//! (target ≥ 10⁵ simulated steps/s so table regeneration stays instant).
+
+use fsdp_bw::config::{ClusterConfig, ModelConfig, TrainingConfig};
+use fsdp_bw::simulator::{simulate_step, AllocatorModel, EfficiencyModel, NetworkModel};
+use fsdp_bw::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let eff = EfficiencyModel::default();
+    let cluster = ClusterConfig::preset("40GB-A100-200Gbps").unwrap();
+
+    for (name, model, seq, n) in [
+        ("simulator/step_13b_8gpu", "13B", 10_240u64, 8u64),
+        ("simulator/step_175b_512gpu", "175B", 2048, 512),
+        ("simulator/step_1.3b_4gpu", "1.3B", 55_936, 4),
+    ] {
+        let m = ModelConfig::preset(model).unwrap();
+        let cfg = TrainingConfig::bs1_max_ctx(seq);
+        b.case(name, 1.0, || {
+            std::hint::black_box(simulate_step(&m, &cluster, &cfg, n, &eff).mfu)
+        });
+    }
+
+    let m = ModelConfig::preset("13B").unwrap();
+    let cfg = TrainingConfig::paper_default(10_240, 1);
+    b.case("simulator/allocator_model", 1.0, || {
+        std::hint::black_box(AllocatorModel::new(&m, &cluster, &cfg, 8).reserved)
+    });
+    b.case("simulator/network_model_ring", 1.0, || {
+        let net = NetworkModel::new(&cluster, 512);
+        std::hint::black_box(net.all_gather(1e9))
+    });
+
+    println!("\n{}", b.dump_json());
+}

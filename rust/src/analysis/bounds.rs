@@ -1,0 +1,163 @@
+//! Closed-form efficiency maxima — paper §2.7 (Conclusions 1–3) and
+//! Appendix B (Eqs 12–15, 16–32).
+//!
+//! The headline result: the *product* `M_free · S_volume` of free GPU
+//! memory and per-GPU bandwidth bounds every efficiency metric — "memory
+//! and bandwidth are all you need".
+
+use super::StepModel;
+
+/// The three §2.7 conclusions evaluated at one point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bounds {
+    /// Eq 12: `E_MAX ≤ M_free / (L·H·Q)` — max tokens per GPU (γ=0).
+    pub e_max: f64,
+    /// Eq 13: upper bound on hardware FLOPs utilization.
+    pub hfu_max: f64,
+    /// Eq 14: upper bound on model FLOPs utilization.
+    pub mfu_max: f64,
+    /// Eq 15: `K ≤ M_free·S_volume / (24·Q²·L²·H³)` — max TGS.
+    pub k_max: f64,
+}
+
+impl Bounds {
+    pub fn new(sm: &StepModel) -> Self {
+        let mem = sm.memory();
+        let q = sm.cfg.precision.bytes();
+        let l = sm.model.layers as f64;
+        let h = sm.model.hidden as f64;
+        let lseq = sm.cfg.seq_len as f64;
+        let s_vol = sm.cluster.job_bandwidth(sm.n_gpus);
+        let s_flops = sm.cluster.s_flops();
+        let m_free = mem.m_free;
+
+        let e_max = m_free / (l * h * q);
+
+        // Eq 13 (γ=0 form, the loosest over γ):
+        let hw = s_vol * m_free / s_flops;
+        let hfu_max = ((2.0 + lseq / (3.0 * h)) / (l * h * q * q) * hw).min(1.0);
+
+        // Eq 14:
+        let mfu_max = ((2.0 + lseq / (3.0 * h)) * 3.0 / (4.0 * l * h * q * q) * hw).min(1.0);
+
+        // Eq 15 (via Eq 32 with φ = 12LH²):
+        let k_max = m_free * s_vol / (24.0 * q * q * l * l * h * h * h);
+
+        Self { e_max, hfu_max, mfu_max, k_max }
+    }
+
+    /// Eq 22: the γ-dependent tighter HFU bound of Appendix B.
+    pub fn hfu_max_gamma(sm: &StepModel, gamma: f64) -> f64 {
+        let mem = sm.memory();
+        let q = sm.cfg.precision.bytes();
+        let l = sm.model.layers as f64;
+        let h = sm.model.hidden as f64;
+        let lseq = sm.cfg.seq_len as f64;
+        let s_vol = sm.cluster.job_bandwidth(sm.n_gpus);
+        let denom = (q + 15.0 * gamma * q + 2.0 * gamma) * l * h * q;
+        ((2.0 + lseq / (3.0 * h)) / denom * s_vol * mem.m_free / sm.cluster.s_flops()).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::StepModel;
+    use crate::config::*;
+
+    fn sm(model: &str, seq: u64, n: u64, cluster: &str) -> StepModel {
+        StepModel::new(
+            &ModelConfig::preset(model).unwrap(),
+            &ClusterConfig::preset(cluster).unwrap(),
+            &TrainingConfig::paper_default(seq, 1),
+            n,
+        )
+    }
+
+    /// Eq 12: token capacity at γ=0 must equal the memory model's capacity.
+    #[test]
+    fn e_max_equals_gamma0_capacity() {
+        let s = sm("13B", 8192, 8, "40GB-A100-200Gbps");
+        let b = s.bounds();
+        let mem = s.memory();
+        assert!((b.e_max - mem.capacity_tokens).abs() / b.e_max < 1e-12);
+    }
+
+    /// Achieved metrics can never exceed the closed-form bounds, for any
+    /// assumed kernel efficiency and any feasible configuration.
+    #[test]
+    fn achieved_below_bounds() {
+        for model in ["1.3B", "7B", "13B", "30B", "65B"] {
+            for n in [8u64, 64, 512] {
+                for seq in [512u64, 2048, 8192] {
+                    let s = sm(model, seq, n, "40GB-A100-100Gbps");
+                    if !s.memory().fits() {
+                        continue;
+                    }
+                    let b = s.bounds();
+                    // Use capacity tokens (the bound's premise: memory full).
+                    let e = s.memory().capacity_tokens;
+                    for alpha in [0.2, 0.5, 0.8, 1.0] {
+                        let bd = crate::analysis::step::breakdown(&s, alpha, e);
+                        let m = crate::analysis::metrics::from_breakdown(&s, &bd);
+                        assert!(
+                            m.tgs <= b.k_max * (1.0 + 1e-9) || b.k_max >= 1e9,
+                            "{model} n={n} seq={seq} α={alpha}: K={} > K_max={}",
+                            m.tgs,
+                            b.k_max
+                        );
+                        // Eq 13's premise is full overlap (R_fwd ≤ 1);
+                        // partially comm-bound points fall outside it.
+                        if bd.r_fwd <= 1.0 {
+                            assert!(
+                                m.hfu <= b.hfu_max + 1e-9,
+                                "{model} n={n} seq={seq} α={alpha}: HFU={} > max={}",
+                                m.hfu,
+                                b.hfu_max
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The product form: doubling bandwidth doubles K_max; doubling free
+    /// memory doubles K_max.
+    #[test]
+    fn kmax_product_scaling() {
+        let lo = sm("13B", 2048, 8, "40GB-A100-100Gbps").bounds();
+        let hi = sm("13B", 2048, 8, "40GB-A100-200Gbps").bounds();
+        assert!((hi.k_max / lo.k_max - 2.0).abs() < 1e-9);
+    }
+
+    /// Longer sequences raise the HFU bound (Conclusion 2: "models with
+    /// longer sequence lengths have the potential to achieve higher
+    /// hardware utilization").
+    #[test]
+    fn hfu_bound_grows_with_seq() {
+        let b1 = sm("13B", 512, 8, "40GB-A100-100Gbps").bounds();
+        let b2 = sm("13B", 10_240, 8, "40GB-A100-100Gbps").bounds();
+        assert!(b2.hfu_max > b1.hfu_max);
+    }
+
+    /// The γ-form bound at γ=0 coincides with Eq 13.
+    #[test]
+    fn gamma_bound_consistency() {
+        let s = sm("7B", 2048, 16, "40GB-A100-200Gbps");
+        let eq13 = s.bounds().hfu_max;
+        let eq22 = Bounds::hfu_max_gamma(&s, 0.0);
+        assert!((eq13 - eq22).abs() < 1e-12);
+        // Larger γ keeps more activations → tighter (smaller) bound.
+        assert!(Bounds::hfu_max_gamma(&s, 1.0) < eq22);
+    }
+
+    /// mfu_max = (3/4)·hfu_max by construction (Eq 14 vs Eq 13).
+    #[test]
+    fn mfu_is_three_quarters_hfu() {
+        let b = sm("30B", 4096, 64, "40GB-A100-200Gbps").bounds();
+        if b.hfu_max < 1.0 && b.mfu_max < 1.0 {
+            assert!((b.mfu_max / b.hfu_max - 0.75).abs() < 1e-9);
+        }
+    }
+}

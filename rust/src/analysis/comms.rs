@@ -1,0 +1,96 @@
+//! Network communication model — paper §2.3, Eq 5, plus the ring-collective
+//! cost model the discrete-event simulator refines it with.
+//!
+//! Eq 5: `T_transfer = φQ / S_volume + L·N·ε` — time to aggregate the full
+//! parameter set once, where `S_volume` is the per-GPU inter-node bandwidth
+//! share and `ε` the per-hop latency (0 in the paper's simulations).
+
+/// Eq 5 verbatim.
+pub fn t_transfer(phi: f64, q: f64, s_volume: f64, layers: u64, n_gpus: u64, epsilon: f64) -> f64 {
+    if n_gpus <= 1 {
+        return 0.0; // single GPU: no parameter aggregation
+    }
+    phi * q / s_volume + layers as f64 * n_gpus as f64 * epsilon
+}
+
+/// Ring all-gather wall time for `total_bytes` spread over `n` ranks at
+/// per-rank link bandwidth `bw` (bytes/s): each rank sends/receives
+/// `(n−1)/n · total_bytes` over `n−1` steps, each paying latency `eps`.
+pub fn ring_all_gather(total_bytes: f64, n: u64, bw: f64, eps: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    total_bytes * (nf - 1.0) / nf / bw + (nf - 1.0) * eps
+}
+
+/// Ring reduce-scatter wall time — same volume/step structure as all-gather.
+pub fn ring_reduce_scatter(total_bytes: f64, n: u64, bw: f64, eps: f64) -> f64 {
+    ring_all_gather(total_bytes, n, bw, eps)
+}
+
+/// Bytes one rank moves (tx = rx) during a ring all-gather of `total_bytes`.
+pub fn ring_bytes_per_rank(total_bytes: f64, n: u64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    total_bytes * (n as f64 - 1.0) / n as f64
+}
+
+/// Per-step FSDP (ZeRO-3) communication volume in bytes of parameter/grad
+/// traffic per rank: all-gather params in fwd, all-gather params in bwd,
+/// reduce-scatter grads in bwd.
+pub fn fsdp_step_bytes_per_rank(phi: f64, q: f64, n: u64) -> f64 {
+    3.0 * ring_bytes_per_rank(phi * q, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq5_matches_hand_calc() {
+        // 13B (φ=12.58e9) in BF16 over 200 Gbps (25e9 B/s), ε=0:
+        // T = 12.58e9·2/25e9 ≈ 1.0066 s
+        let phi = 12.0 * 40.0 * 5120.0f64.powi(2);
+        let t = t_transfer(phi, 2.0, 25e9, 40, 8, 0.0);
+        assert!((t - phi * 2.0 / 25e9).abs() < 1e-9);
+        assert!((t - 1.0066).abs() < 0.01, "t={t}");
+    }
+
+    #[test]
+    fn latency_term_scales_with_l_and_n() {
+        let base = t_transfer(1e9, 2.0, 25e9, 40, 8, 0.0);
+        let with_eps = t_transfer(1e9, 2.0, 25e9, 40, 8, 1e-4);
+        assert!((with_eps - base - 40.0 * 8.0 * 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_gpu_is_free() {
+        assert_eq!(t_transfer(1e9, 2.0, 25e9, 40, 1, 1e-3), 0.0);
+        assert_eq!(ring_all_gather(1e9, 1, 25e9, 1e-3), 0.0);
+    }
+
+    #[test]
+    fn ring_volume_factor() {
+        // (n-1)/n factor: at n=8, 7/8 of the data crosses each link.
+        let t = ring_all_gather(8e9, 8, 1e9, 0.0);
+        assert!((t - 7.0).abs() < 1e-9);
+        assert_eq!(ring_bytes_per_rank(8e9, 8), 7e9);
+    }
+
+    #[test]
+    fn ring_converges_to_eq5_at_large_n() {
+        // (n-1)/n → 1, so the ring model approaches Eq 5's φQ/S.
+        let eq5 = t_transfer(1e10, 2.0, 25e9, 96, 512, 0.0);
+        let ring = ring_all_gather(2e10, 512, 25e9, 0.0);
+        assert!((ring - eq5).abs() / eq5 < 0.01);
+    }
+
+    #[test]
+    fn fsdp_step_volume() {
+        // 3 collectives × (n-1)/n × φQ
+        let v = fsdp_step_bytes_per_rank(1e9, 2.0, 4);
+        assert!((v - 3.0 * 0.75 * 2e9).abs() < 1.0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Compute model — paper §2.4, Eqs 6–8.
+//!
+//! Per-token forward FLOPs with Flash-Attention: `F_fwd = 2φ + 4·L·H·l_seq`
+//! (weight GEMMs contribute 2 FLOP per parameter per token; attention score
+//! and value products contribute `4·H·l_seq` per layer per token).
+//! Backward: `F_bwd = 2·F_fwd + (1−γ)·F_fwd` (the extra term is activation
+//! recomputation). Total `F = (4−γ)·F_fwd`.
+
+use crate::config::ModelConfig;
+
+/// Eq 6's `F_fwd` per token.
+pub fn f_fwd_per_token(model: &ModelConfig, seq_len: u64) -> f64 {
+    let l = model.layers as f64;
+    let h = model.hidden as f64;
+    2.0 * model.phi() + 4.0 * l * h * seq_len as f64
+}
+
+/// `F_bwd = (3−γ)·F_fwd` per token.
+pub fn f_bwd_per_token(model: &ModelConfig, seq_len: u64, gamma: f64) -> f64 {
+    (3.0 - gamma) * f_fwd_per_token(model, seq_len)
+}
+
+/// Eq 6's total `F = (4−γ)·F_fwd` per token.
+pub fn f_total_per_token(model: &ModelConfig, seq_len: u64, gamma: f64) -> f64 {
+    (4.0 - gamma) * f_fwd_per_token(model, seq_len)
+}
+
+/// Fraction of forward FLOPs spent in attention (`4LHl / F_fwd`) — drives
+/// the simulator's seq-length-dependent kernel efficiency.
+pub fn attention_flop_fraction(model: &ModelConfig, seq_len: u64) -> f64 {
+    let l = model.layers as f64;
+    let h = model.hidden as f64;
+    let attn = 4.0 * l * h * seq_len as f64;
+    attn / (2.0 * model.phi() + attn)
+}
+
+/// Eq 8: phase duration for `e` tokens at hardware utilization `alpha` on a
+/// GPU with peak `s_flops`.
+pub fn phase_time(flops_per_token: f64, e: f64, alpha: f64, s_flops: f64) -> f64 {
+    flops_per_token * e / (alpha * s_flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m13() -> ModelConfig {
+        ModelConfig::preset("13B").unwrap()
+    }
+
+    #[test]
+    fn f_fwd_hand_calc() {
+        // 13B, seq 10240: 2·12.58e9 + 4·40·5120·10240 = 25.17e9 + 8.39e9
+        let f = f_fwd_per_token(&m13(), 10_240);
+        let expect = 2.0 * m13().phi() + 4.0 * 40.0 * 5120.0 * 10_240.0;
+        assert_eq!(f, expect);
+        assert!((f / 1e9 - 33.55).abs() < 0.1, "f={}", f / 1e9);
+    }
+
+    #[test]
+    fn gamma_flop_accounting() {
+        let m = m13();
+        // γ=1 (no recompute): F = 3·F_fwd. γ=0 (full recompute): F = 4·F_fwd.
+        let f1 = f_total_per_token(&m, 2048, 1.0);
+        let f0 = f_total_per_token(&m, 2048, 0.0);
+        let ff = f_fwd_per_token(&m, 2048);
+        assert!((f1 - 3.0 * ff).abs() < 1.0);
+        assert!((f0 - 4.0 * ff).abs() < 1.0);
+        assert!((f_bwd_per_token(&m, 2048, 0.0) - 3.0 * ff).abs() < 1.0);
+    }
+
+    #[test]
+    fn attention_fraction_limits() {
+        let m = m13();
+        // l → 0: fraction → 0; attention share is l/(6H + l).
+        assert!(attention_flop_fraction(&m, 1) < 1e-4);
+        let f = attention_flop_fraction(&m, 10_240);
+        let expect = 10_240.0 / (6.0 * 5120.0 + 10_240.0);
+        assert!((f - expect).abs() < 1e-12);
+        // Longer sequences → larger attention share, monotonically.
+        assert!(attention_flop_fraction(&m, 60_000) > f);
+    }
+
+    #[test]
+    fn phase_time_units() {
+        // 1e12 FLOP at 50% of 312e12 FLOP/s → ~6.41 ms
+        let t = phase_time(1e9, 1000.0, 0.5, 312e12);
+        assert!((t - 1e12 / 156e12).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,96 @@
+//! Throughput and utilization metrics — paper §2.6, Eq 11.
+//!
+//! `K = E/T` (tokens per GPU per second, "TGS"),
+//! `α_HFU = K·F / S_FLOPs^MAX`, `α_MFU = 3·K·F_fwd / S_FLOPs^MAX`.
+//! The MFU numerator is the *model* FLOPs (fwd + 2×fwd for bwd, no
+//! recomputation), hence `α_MFU = 3/(4−γ)·α_HFU`.
+
+use super::{step::StepBreakdown, StepModel};
+
+/// Achieved training efficiency at one evaluated point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Metrics {
+    /// Eq 11's `K` — tokens per GPU per second.
+    pub tgs: f64,
+    /// Hardware FLOPs utilization.
+    pub hfu: f64,
+    /// Model FLOPs utilization.
+    pub mfu: f64,
+}
+
+/// Evaluate Eq 11 from a step breakdown.
+pub fn from_breakdown(sm: &StepModel, b: &StepBreakdown) -> Metrics {
+    let s_flops = sm.cluster.s_flops();
+    let k = if b.t_step > 0.0 { b.tokens / b.t_step } else { 0.0 };
+    Metrics {
+        tgs: k,
+        hfu: k * sm.f_total() / s_flops,
+        mfu: 3.0 * k * sm.f_fwd() / s_flops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::StepModel;
+    use crate::config::*;
+
+    fn sm(gamma: f64) -> StepModel {
+        StepModel::new(
+            &ModelConfig::preset("13B").unwrap(),
+            &ClusterConfig::preset("40GB-A100-200Gbps").unwrap(),
+            &TrainingConfig::paper_default(10_240, 1).with_gamma(gamma),
+            8,
+        )
+    }
+
+    /// `α_MFU = 3/(4−γ)·α_HFU` — the paper's identity below Eq 14.
+    #[test]
+    fn mfu_hfu_identity() {
+        for gamma in [0.0, 0.3, 0.7, 1.0] {
+            let m = sm(gamma).metrics(0.7);
+            let expect = 3.0 / (4.0 - gamma) * m.hfu;
+            assert!((m.mfu - expect).abs() < 1e-12, "γ={gamma}");
+        }
+    }
+
+    /// When compute-bound, achieved HFU equals the assumed kernel α.
+    #[test]
+    fn compute_bound_hfu_equals_alpha() {
+        let model = sm(0.0);
+        let b = model.breakdown(0.6);
+        assert!(!b.bandwidth_bound(), "must be compute-bound for this check");
+        let m = model.metrics(0.6);
+        assert!((m.hfu - 0.6).abs() < 1e-9, "hfu={}", m.hfu);
+    }
+
+    /// When bandwidth-bound, achieved HFU drops strictly below α.
+    #[test]
+    fn bandwidth_bound_hfu_below_alpha() {
+        let model = StepModel::new(
+            &ModelConfig::preset("175B").unwrap(),
+            &ClusterConfig::preset("40GB-A100-100Gbps").unwrap(),
+            &TrainingConfig::paper_default(512, 1),
+            32,
+        );
+        let b = model.breakdown(0.8);
+        assert!(b.bandwidth_bound());
+        let m = model.metrics(0.8);
+        assert!(m.hfu < 0.8 * 0.7, "hfu={}", m.hfu);
+    }
+
+    /// TGS scales linearly with tokens in the compute-bound regime
+    /// (same per-token cost).
+    #[test]
+    fn tgs_stable_when_compute_bound() {
+        let a = StepModel::new(
+            &ModelConfig::preset("13B").unwrap(),
+            &ClusterConfig::preset("40GB-A100-200Gbps").unwrap(),
+            &TrainingConfig::paper_default(10_240, 1),
+            8,
+        );
+        let m1 = a.metrics(0.7);
+        let b2 = crate::analysis::step::breakdown(&a, 0.7, 2.0 * a.cfg.tokens_per_gpu() as f64);
+        let m2 = crate::analysis::metrics::from_breakdown(&a, &b2);
+        assert!((m1.tgs - m2.tgs).abs() / m1.tgs < 1e-9);
+    }
+}

@@ -1,0 +1,110 @@
+//! Step-time model — paper §2.4 Eq 9 and §2.5 Eq 10.
+//!
+//! Eq 9 assumes full overlap of parameter aggregation with compute within
+//! each phase: `T = max(T_fwd, T_transfer) + max(T_bwd, T_transfer)`.
+
+use super::{compute, StepModel};
+
+/// All phase durations and ratios for one step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepBreakdown {
+    /// Tokens per GPU in this step (`E`).
+    pub tokens: f64,
+    /// Eq 8 forward time.
+    pub t_fwd: f64,
+    /// Eq 8 backward time (includes recomputation).
+    pub t_bwd: f64,
+    /// Eq 5 transfer time.
+    pub t_transfer: f64,
+    /// Eq 9 overlapped step time.
+    pub t_step: f64,
+    /// Eq 10 `R_fwd = T_transfer / T_fwd`.
+    pub r_fwd: f64,
+    /// Eq 10 `R_bwd = T_transfer / T_bwd`.
+    pub r_bwd: f64,
+}
+
+impl StepBreakdown {
+    /// True when either phase is communication-bound (R > 1).
+    pub fn bandwidth_bound(&self) -> bool {
+        self.r_fwd > 1.0 || self.r_bwd > 1.0
+    }
+
+    /// Seconds of transfer time not hidden behind compute.
+    pub fn exposed_comm(&self) -> f64 {
+        (self.t_transfer - self.t_fwd).max(0.0) + (self.t_transfer - self.t_bwd).max(0.0)
+    }
+}
+
+/// Evaluate Eqs 7–10 at an assumed kernel efficiency `alpha_hfu` for `e`
+/// tokens per GPU.
+pub fn breakdown(sm: &StepModel, alpha_hfu: f64, e: f64) -> StepBreakdown {
+    let s_flops = sm.cluster.s_flops();
+    let f_fwd = sm.f_fwd();
+    let f_bwd = compute::f_bwd_per_token(&sm.model, sm.cfg.seq_len, sm.cfg.gamma);
+
+    let t_fwd = compute::phase_time(f_fwd, e, alpha_hfu, s_flops);
+    let t_bwd = compute::phase_time(f_bwd, e, alpha_hfu, s_flops);
+    let t_transfer = sm.t_transfer();
+
+    let t_step = t_fwd.max(t_transfer) + t_bwd.max(t_transfer);
+
+    StepBreakdown {
+        tokens: e,
+        t_fwd,
+        t_bwd,
+        t_transfer,
+        t_step,
+        r_fwd: if t_fwd > 0.0 { t_transfer / t_fwd } else { f64::INFINITY },
+        r_bwd: if t_bwd > 0.0 { t_transfer / t_bwd } else { f64::INFINITY },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::analysis::StepModel;
+    use crate::config::*;
+
+    fn sm(model: &str, seq: u64, n: u64, cluster: &str) -> StepModel {
+        StepModel::new(
+            &ModelConfig::preset(model).unwrap(),
+            &ClusterConfig::preset(cluster).unwrap(),
+            &TrainingConfig::paper_default(seq, 1),
+            n,
+        )
+    }
+
+    #[test]
+    fn eq9_overlap_max() {
+        let b = sm("13B", 10_240, 8, "40GB-A100-200Gbps").breakdown(0.75);
+        assert!((b.t_step - (b.t_fwd.max(b.t_transfer) + b.t_bwd.max(b.t_transfer))).abs() < 1e-12);
+        assert!(b.t_bwd > b.t_fwd, "bwd (3×) must exceed fwd");
+    }
+
+    /// Small token counts push R_fwd above 1 (communication-bound) — the
+    /// paper's core claim about short sequences.
+    #[test]
+    fn short_seq_is_bandwidth_bound() {
+        let short = sm("13B", 512, 8, "40GB-A100-200Gbps").breakdown(0.75);
+        assert!(short.r_fwd > 1.0, "r_fwd={}", short.r_fwd);
+        let long = sm("13B", 10_240, 8, "40GB-A100-200Gbps").breakdown(0.75);
+        assert!(long.r_fwd < short.r_fwd);
+    }
+
+    /// Halving bandwidth exactly doubles T_transfer (ε=0) and can only
+    /// increase step time.
+    #[test]
+    fn bandwidth_monotonicity() {
+        let hi = sm("13B", 10_240, 8, "40GB-A100-200Gbps").breakdown(0.75);
+        let lo = sm("13B", 10_240, 8, "40GB-A100-100Gbps").breakdown(0.75);
+        assert!((lo.t_transfer / hi.t_transfer - 2.0).abs() < 1e-9);
+        assert!(lo.t_step >= hi.t_step);
+    }
+
+    #[test]
+    fn exposed_comm_consistent() {
+        let b = sm("175B", 512, 512, "40GB-A100-100Gbps").breakdown(0.75);
+        assert!((b.t_step - (b.t_fwd + b.t_bwd + b.exposed_comm())).abs() < 1e-9);
+        assert!(b.bandwidth_bound());
+    }
+}

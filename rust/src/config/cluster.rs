@@ -1,0 +1,202 @@
+//! Hardware registry — GPU specs and cluster topologies (paper Tables 1 & 3).
+//!
+//! Bandwidth convention: the paper quotes an *aggregate* inter-node link
+//! (e.g. 800 Gbps per node) and an *average per-GPU share* (`S_volume`,
+//! e.g. 200 Gbps = aggregate / 4 GPUs). All analytical formulas use the
+//! per-GPU share, converted to bytes/s.
+
+
+use super::{gbps_to_bytes_per_sec, GIB};
+
+/// A GPU model: device memory and peak dense half-precision throughput.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Marketing name, e.g. `"A100-40GB"`.
+    pub name: String,
+    /// Device memory in bytes (`M_MAX`).
+    pub mem_bytes: f64,
+    /// Peak dense BF16/FP16 FLOP/s (`S_FLOPs^MAX`), no sparsity.
+    pub peak_flops: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA V100-SXM2 16 GB: 125 TFLOP/s FP16 tensor.
+    pub fn v100_16gb() -> Self {
+        Self { name: "V100-16GB".into(), mem_bytes: 16.0 * GIB, peak_flops: 125e12 }
+    }
+    /// NVIDIA A100 40 GB: 312 TFLOP/s BF16 dense.
+    pub fn a100_40gb() -> Self {
+        Self { name: "A100-40GB".into(), mem_bytes: 40.0 * GIB, peak_flops: 312e12 }
+    }
+    /// NVIDIA A100 80 GB: 312 TFLOP/s BF16 dense.
+    pub fn a100_80gb() -> Self {
+        Self { name: "A100-80GB".into(), mem_bytes: 80.0 * GIB, peak_flops: 312e12 }
+    }
+    /// NVIDIA H100-SXM 80 GB: 989 TFLOP/s BF16 dense.
+    pub fn h100_80gb() -> Self {
+        Self { name: "H100-80GB".into(), mem_bytes: 80.0 * GIB, peak_flops: 989e12 }
+    }
+}
+
+/// A homogeneous GPU cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Registry name, e.g. `"40GB-A100-200Gbps"`.
+    pub name: String,
+    /// Number of nodes available.
+    pub nodes: u64,
+    /// GPUs per node.
+    pub gpus_per_node: u64,
+    /// GPU model.
+    pub gpu: GpuSpec,
+    /// Average per-GPU inter-node bandwidth share in Gbps (the paper's
+    /// `S_volume`; Table 1's "Average Inter-Node Connection").
+    pub inter_node_gbps: f64,
+    /// Intra-node (NVLink) per-GPU bandwidth in Gbps. JUWELS A100 nodes:
+    /// NVLink3 ≈ 600 GB/s = 4800 Gbps per GPU.
+    pub intra_node_gbps: f64,
+    /// Per-hop communication latency overhead (the paper's `ε`, seconds).
+    pub latency: f64,
+    /// Memory the framework/driver reserves and FSDP cannot use
+    /// (the paper assumes 10 GB in simulations).
+    pub reserved_bytes: f64,
+}
+
+impl ClusterConfig {
+    /// Build a cluster from parts with the paper's defaults for NVLink,
+    /// latency (ε = 0 in the paper's simulations) and reserved memory (10 GB).
+    pub fn new(name: &str, nodes: u64, gpus_per_node: u64, gpu: GpuSpec, inter_node_gbps: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            nodes,
+            gpus_per_node,
+            gpu,
+            inter_node_gbps,
+            intra_node_gbps: 4800.0,
+            latency: 0.0,
+            reserved_bytes: 10.0 * GIB,
+        }
+    }
+
+    /// `S_volume` in bytes/s — the per-GPU inter-node bandwidth share.
+    pub fn s_volume(&self) -> f64 {
+        gbps_to_bytes_per_sec(self.inter_node_gbps)
+    }
+
+    /// Per-GPU intra-node (NVLink) bandwidth in bytes/s.
+    pub fn s_intra(&self) -> f64 {
+        gbps_to_bytes_per_sec(self.intra_node_gbps)
+    }
+
+    /// `S_FLOPs^MAX` of one GPU.
+    pub fn s_flops(&self) -> f64 {
+        self.gpu.peak_flops
+    }
+
+    /// `M_MAX` of one GPU.
+    pub fn m_max(&self) -> f64 {
+        self.gpu.mem_bytes
+    }
+
+    /// Usable memory after the reserved share (`M_MAX − M_Reserved`).
+    pub fn m_usable(&self) -> f64 {
+        (self.gpu.mem_bytes - self.reserved_bytes).max(0.0)
+    }
+
+    /// Total GPUs in the cluster.
+    pub fn total_gpus(&self) -> u64 {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// The effective per-GPU bandwidth for an `n`-GPU job: NVLink when the
+    /// job fits in one node, the inter-node share otherwise.
+    pub fn job_bandwidth(&self, n_gpus: u64) -> f64 {
+        if n_gpus <= self.gpus_per_node {
+            self.s_intra()
+        } else {
+            self.s_volume()
+        }
+    }
+
+    /// Number of nodes an `n`-GPU job spans.
+    pub fn job_nodes(&self, n_gpus: u64) -> u64 {
+        n_gpus.div_ceil(self.gpus_per_node)
+    }
+
+    /// The two empirically-tested clusters of Table 1.
+    pub fn table1_presets() -> Vec<ClusterConfig> {
+        vec![
+            ClusterConfig::new("40GB-A100-200Gbps", 128, 4, GpuSpec::a100_40gb(), 200.0),
+            ClusterConfig::new("40GB-A100-100Gbps", 32, 4, GpuSpec::a100_40gb(), 100.0),
+        ]
+    }
+
+    /// The simulation-only extra clusters of Table 3 (Appendix D).
+    pub fn table3_presets() -> Vec<ClusterConfig> {
+        vec![
+            ClusterConfig::new("16GB-V100-100Gbps", 128, 4, GpuSpec::v100_16gb(), 100.0),
+            ClusterConfig::new("40GB-A100-100Gbps", 128, 4, GpuSpec::a100_40gb(), 100.0),
+            ClusterConfig::new("80GB-A100-100Gbps", 128, 4, GpuSpec::a100_80gb(), 100.0),
+            ClusterConfig::new("80GB-H100-100Gbps", 128, 4, GpuSpec::h100_80gb(), 100.0),
+            ClusterConfig::new("16GB-V100-200Gbps", 128, 4, GpuSpec::v100_16gb(), 200.0),
+            ClusterConfig::new("40GB-A100-200Gbps", 128, 4, GpuSpec::a100_40gb(), 200.0),
+            ClusterConfig::new("80GB-A100-200Gbps", 128, 4, GpuSpec::a100_80gb(), 200.0),
+            ClusterConfig::new("80GB-H100-200Gbps", 128, 4, GpuSpec::h100_80gb(), 200.0),
+        ]
+    }
+
+    /// Resolve a preset by name from Table 1 ∪ Table 3.
+    pub fn preset(name: &str) -> Option<ClusterConfig> {
+        Self::table1_presets()
+            .into_iter()
+            .chain(Self::table3_presets())
+            .find(|c| c.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_units() {
+        let c = ClusterConfig::preset("40GB-A100-200Gbps").unwrap();
+        assert_eq!(c.s_volume(), 25e9); // 200 Gbps = 25 GB/s
+        assert_eq!(c.total_gpus(), 512);
+        assert_eq!(c.m_max(), 40.0 * GIB);
+    }
+
+    #[test]
+    fn job_topology() {
+        let c = ClusterConfig::preset("40GB-A100-200Gbps").unwrap();
+        // Single-node jobs ride NVLink.
+        assert_eq!(c.job_bandwidth(4), c.s_intra());
+        assert!(c.job_bandwidth(8) < c.job_bandwidth(4));
+        assert_eq!(c.job_nodes(4), 1);
+        assert_eq!(c.job_nodes(8), 2);
+        assert_eq!(c.job_nodes(512), 128);
+    }
+
+    #[test]
+    fn table1_and_table3_resolve() {
+        for name in ["40GB-A100-200Gbps", "40GB-A100-100Gbps"] {
+            assert!(ClusterConfig::preset(name).is_some());
+        }
+        assert_eq!(ClusterConfig::table3_presets().len(), 8);
+        for c in ClusterConfig::table3_presets() {
+            assert!(ClusterConfig::preset(&c.name).is_some());
+        }
+    }
+
+    #[test]
+    fn usable_memory_subtracts_reserve() {
+        let c = ClusterConfig::preset("40GB-A100-100Gbps").unwrap();
+        assert_eq!(c.m_usable(), 30.0 * GIB);
+    }
+
+    #[test]
+    fn gpu_specs_sane() {
+        assert!(GpuSpec::h100_80gb().peak_flops > GpuSpec::a100_40gb().peak_flops);
+        assert!(GpuSpec::a100_40gb().peak_flops > GpuSpec::v100_16gb().peak_flops);
+    }
+}

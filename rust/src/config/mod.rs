@@ -1,0 +1,22 @@
+//! Configuration registry: models (paper Table 2), clusters (Tables 1 & 3),
+//! training setups, and numeric precision.
+
+mod cluster;
+mod model;
+mod precision;
+mod training;
+pub mod scenario;
+
+pub use cluster::{ClusterConfig, GpuSpec};
+pub use model::ModelConfig;
+pub use precision::Precision;
+pub use training::{TrainingConfig, ZeroStage};
+
+/// One gibibyte in bytes. The paper reports memory in GiB ("40GB A100" is
+/// the marketing 40·2³⁰ device).
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Convert a link rate in Gbps (10⁹ bits/s) to bytes/s.
+pub fn gbps_to_bytes_per_sec(gbps: f64) -> f64 {
+    gbps * 1e9 / 8.0
+}

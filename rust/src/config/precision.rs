@@ -1,0 +1,48 @@
+//! Training numeric precision — the paper's `Q` (bytes per floating-point
+//! element): 4 for FP32, 2 for FP16/BF16 mixed-precision training.
+
+
+/// Floating-point precision used for parameters/gradients/activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// 32-bit IEEE float (`Q = 4`).
+    Fp32,
+    /// 16-bit brain float (`Q = 2`) — the paper's default for all runs.
+    #[default]
+    Bf16,
+    /// 16-bit IEEE half (`Q = 2`).
+    Fp16,
+}
+
+impl Precision {
+    /// The paper's `Q`: bytes per element.
+    pub fn bytes(self) -> f64 {
+        match self {
+            Precision::Fp32 => 4.0,
+            Precision::Bf16 | Precision::Fp16 => 2.0,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Precision::Fp32 => write!(f, "fp32"),
+            Precision::Bf16 => write!(f, "bf16"),
+            Precision::Fp16 => write!(f, "fp16"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_bytes_match_paper() {
+        assert_eq!(Precision::Fp32.bytes(), 4.0);
+        assert_eq!(Precision::Bf16.bytes(), 2.0);
+        assert_eq!(Precision::Fp16.bytes(), 2.0);
+    }
+
+}

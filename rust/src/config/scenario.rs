@@ -1,0 +1,209 @@
+//! Scenario files — a flat `key = value` configuration format so users can
+//! evaluate their own model/cluster rather than the paper presets.
+//!
+//! (The offline build has no TOML crate; this dialect is the subset we
+//! need: one `key = value` per line, `#` comments, no sections.)
+//!
+//! ```text
+//! # my-cluster.scn
+//! model        = 13B          # preset name, or custom via model.* keys
+//! cluster      = 40GB-A100-200Gbps
+//! n_gpus       = 64
+//! seq_len      = 8192
+//! batch        = 1
+//! gamma        = 0.0
+//! zero_stage   = 3
+//! empty_cache  = false
+//! # custom-cluster overrides (optional):
+//! # cluster.inter_node_gbps = 400
+//! # cluster.gpu_mem_gib     = 80
+//! # cluster.peak_tflops     = 989
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ClusterConfig, ModelConfig, TrainingConfig, ZeroStage, GIB};
+
+/// A complete scenario: what to train, on what, and how.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    pub training: TrainingConfig,
+    /// GPUs to use for the job (≤ cluster.total_gpus()).
+    pub n_gpus: u64,
+}
+
+/// Parse the `key = value` dialect into a map.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        map.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(map)
+}
+
+impl Scenario {
+    /// Load a scenario file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse scenario text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let kv = parse_kv(text)?;
+        let get = |k: &str, d: &str| kv.get(k).cloned().unwrap_or_else(|| d.to_string());
+
+        let mut model = match kv.get("model") {
+            Some(name) => ModelConfig::lookup(name)
+                .with_context(|| format!("unknown model preset {name:?}"))?,
+            None => {
+                // Fully custom model from model.* keys.
+                ModelConfig::new(
+                    &get("model.name", "custom"),
+                    get("model.layers", "").parse().context("model.layers")?,
+                    get("model.hidden", "").parse().context("model.hidden")?,
+                    get("model.heads", "8").parse().context("model.heads")?,
+                )
+            }
+        };
+        if let Some(v) = kv.get("model.vocab") {
+            model.vocab = v.parse().context("model.vocab")?;
+        }
+
+        let mut cluster = match kv.get("cluster") {
+            Some(name) => ClusterConfig::preset(name)
+                .with_context(|| format!("unknown cluster preset {name:?}"))?,
+            None => ClusterConfig::preset("40GB-A100-200Gbps").expect("default preset"),
+        };
+        if let Some(v) = kv.get("cluster.inter_node_gbps") {
+            cluster.inter_node_gbps = v.parse().context("cluster.inter_node_gbps")?;
+        }
+        if let Some(v) = kv.get("cluster.gpu_mem_gib") {
+            cluster.gpu.mem_bytes = v.parse::<f64>().context("cluster.gpu_mem_gib")? * GIB;
+        }
+        if let Some(v) = kv.get("cluster.peak_tflops") {
+            cluster.gpu.peak_flops = v.parse::<f64>().context("cluster.peak_tflops")? * 1e12;
+        }
+        if let Some(v) = kv.get("cluster.nodes") {
+            cluster.nodes = v.parse().context("cluster.nodes")?;
+        }
+
+        let mut training = TrainingConfig::paper_default(
+            get("seq_len", "2048").parse().context("seq_len")?,
+            get("batch", "1").parse().context("batch")?,
+        );
+        training.gamma = get("gamma", "0.0").parse().context("gamma")?;
+        training.empty_cache = get("empty_cache", "false").parse().context("empty_cache")?;
+        training.zero_stage = match get("zero_stage", "3").as_str() {
+            "3" => ZeroStage::Stage3,
+            "1" | "2" | "12" | "1/2" => ZeroStage::Stage12,
+            other => bail!("zero_stage must be 3 or 1/2, got {other:?}"),
+        };
+
+        let s = Scenario {
+            model,
+            cluster,
+            training,
+            n_gpus: get("n_gpus", "8").parse().context("n_gpus")?,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Serialize back to the `key = value` dialect.
+    pub fn to_text(&self) -> String {
+        format!(
+            "model = {}\ncluster = {}\nn_gpus = {}\nseq_len = {}\nbatch = {}\ngamma = {}\nzero_stage = {}\nempty_cache = {}\n",
+            self.model.name,
+            self.cluster.name,
+            self.n_gpus,
+            self.training.seq_len,
+            self.training.batch_per_gpu,
+            self.training.gamma,
+            match self.training.zero_stage {
+                ZeroStage::Stage3 => "3",
+                ZeroStage::Stage12 => "1/2",
+            },
+            self.training.empty_cache,
+        )
+    }
+
+    /// Sanity-check cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n_gpus >= 1, "n_gpus must be ≥ 1");
+        anyhow::ensure!(
+            self.n_gpus <= self.cluster.total_gpus(),
+            "job wants {} GPUs but cluster {} has {}",
+            self.n_gpus,
+            self.cluster.name,
+            self.cluster.total_gpus()
+        );
+        anyhow::ensure!(self.model.hidden % self.model.heads == 0, "hidden % heads != 0");
+        anyhow::ensure!((0.0..=1.0).contains(&self.training.gamma), "gamma must be in [0,1]");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_presets_and_options() {
+        let s = Scenario::parse(
+            "model = 13B\ncluster = 40GB-A100-100Gbps\nn_gpus = 16\nseq_len = 4096\nbatch = 2\ngamma = 0.5\nzero_stage = 1/2\n",
+        )
+        .unwrap();
+        assert_eq!(s.model.name, "13B");
+        assert_eq!(s.cluster.inter_node_gbps, 100.0);
+        assert_eq!(s.n_gpus, 16);
+        assert_eq!(s.training.seq_len, 4096);
+        assert_eq!(s.training.gamma, 0.5);
+        assert_eq!(s.training.zero_stage, ZeroStage::Stage12);
+    }
+
+    #[test]
+    fn custom_model_and_cluster_overrides() {
+        let s = Scenario::parse(
+            "model.name = mine\nmodel.layers = 12\nmodel.hidden = 1024\nmodel.heads = 8\ncluster.inter_node_gbps = 400\ncluster.gpu_mem_gib = 80\nn_gpus = 8\nseq_len = 1024\n",
+        )
+        .unwrap();
+        assert_eq!(s.model.name, "mine");
+        assert_eq!(s.model.phi(), 12.0 * 12.0 * 1024.0 * 1024.0);
+        assert_eq!(s.cluster.inter_node_gbps, 400.0);
+        assert_eq!(s.cluster.gpu.mem_bytes, 80.0 * GIB);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ok() {
+        let kv = parse_kv("# hi\n\na = 1 # trailing\n").unwrap();
+        assert_eq!(kv.get("a").unwrap(), "1");
+    }
+
+    #[test]
+    fn roundtrip_through_text() {
+        let s = Scenario::parse("model = 7B\nn_gpus = 32\nseq_len = 2048\n").unwrap();
+        let s2 = Scenario::parse(&s.to_text()).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn validation_rejects_oversized_job() {
+        assert!(Scenario::parse("model = 7B\nn_gpus = 100000\n").is_err());
+        assert!(Scenario::parse("model = 7B\ngamma = 2.0\n").is_err());
+        assert!(Scenario::parse("model = nope\n").is_err());
+    }
+}

@@ -1,0 +1,185 @@
+//! Checkpointing: save/restore the sharded training state.
+//!
+//! Layout mirrors what the trainer holds — one file per rank with its
+//! parameter shard and Adam state, plus a small JSON header binding the
+//! checkpoint to (artifact, shard layout, step). Binary format: little-
+//! endian f32 runs, no external dependencies.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One rank's persisted state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankCheckpoint {
+    pub artifact: String,
+    pub step: u64,
+    pub rank: usize,
+    pub n_ranks: usize,
+    pub params: Vec<f32>,
+    /// Adam first/second moments (same length as params).
+    pub adam_m: Vec<f32>,
+    pub adam_v: Vec<f32>,
+    /// Adam step counter.
+    pub adam_t: u64,
+}
+
+fn write_f32s(out: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    out.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(inp: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    inp.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl RankCheckpoint {
+    /// File path for (dir, rank).
+    pub fn path(dir: &Path, rank: usize) -> PathBuf {
+        dir.join(format!("rank{rank:04}.ckpt"))
+    }
+
+    /// Persist to `dir` (created if needed).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut header = std::collections::BTreeMap::new();
+        header.insert("artifact".to_string(), Json::Str(self.artifact.clone()));
+        header.insert("step".to_string(), Json::Num(self.step as f64));
+        header.insert("rank".to_string(), Json::Num(self.rank as f64));
+        header.insert("n_ranks".to_string(), Json::Num(self.n_ranks as f64));
+        header.insert("len".to_string(), Json::Num(self.params.len() as f64));
+        header.insert("adam_t".to_string(), Json::Num(self.adam_t as f64));
+        let header = Json::Obj(header).dump();
+
+        let path = Self::path(dir, self.rank);
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        write_f32s(&mut f, &self.params)?;
+        write_f32s(&mut f, &self.adam_m)?;
+        write_f32s(&mut f, &self.adam_v)?;
+        Ok(())
+    }
+
+    /// Load rank `rank` from `dir`.
+    pub fn load(dir: &Path, rank: usize) -> Result<Self> {
+        let path = Self::path(dir, rank);
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+        let len = header.get("len")?.as_usize()?;
+        let ck = Self {
+            artifact: header.get("artifact")?.as_str()?.to_string(),
+            step: header.get("step")?.as_usize()? as u64,
+            rank: header.get("rank")?.as_usize()?,
+            n_ranks: header.get("n_ranks")?.as_usize()?,
+            params: read_f32s(&mut f, len)?,
+            adam_m: read_f32s(&mut f, len)?,
+            adam_v: read_f32s(&mut f, len)?,
+            adam_t: header.get("adam_t")?.as_usize()? as u64,
+        };
+        anyhow::ensure!(ck.rank == rank, "checkpoint rank mismatch");
+        Ok(ck)
+    }
+
+    /// Load all ranks and reassemble the full (unpadded) parameter vector.
+    pub fn load_full_params(dir: &Path, n_ranks: usize, total: usize) -> Result<Vec<f32>> {
+        let layout = super::ShardLayout::new(total, n_ranks);
+        let mut shards = Vec::with_capacity(n_ranks);
+        for rank in 0..n_ranks {
+            let ck = Self::load(dir, rank)?;
+            anyhow::ensure!(
+                ck.n_ranks == n_ranks,
+                "checkpoint written for {} ranks, loading with {n_ranks}",
+                ck.n_ranks
+            );
+            anyhow::ensure!(ck.params.len() == layout.shard_len, "shard length mismatch");
+            shards.push(ck.params);
+        }
+        Ok(layout.unshard(&shards))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn sample(rank: usize) -> RankCheckpoint {
+        RankCheckpoint {
+            artifact: "train_step_tiny_b1".into(),
+            step: 17,
+            rank,
+            n_ranks: 2,
+            params: (0..10).map(|i| (rank * 10 + i) as f32).collect(),
+            adam_m: vec![0.5; 10],
+            adam_v: vec![0.25; 10],
+            adam_t: 17,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = TempDir::new().unwrap();
+        let ck = sample(0);
+        ck.save(dir.path()).unwrap();
+        let back = RankCheckpoint::load(dir.path(), 0).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn full_params_reassembly() {
+        let dir = TempDir::new().unwrap();
+        for rank in 0..2 {
+            sample(rank).save(dir.path()).unwrap();
+        }
+        // Sample shards are length 10, so total must satisfy
+        // ceil(total/2) == 10; use 19 (one padded tail element).
+        let full = RankCheckpoint::load_full_params(dir.path(), 2, 19).unwrap();
+        assert_eq!(full.len(), 19);
+        assert_eq!(full[0], 0.0);
+        assert_eq!(full[10], 10.0);
+        assert_eq!(full[16], 16.0);
+    }
+
+    #[test]
+    fn wrong_rank_count_rejected() {
+        let dir = TempDir::new().unwrap();
+        sample(0).save(dir.path()).unwrap();
+        assert!(RankCheckpoint::load_full_params(dir.path(), 1, 10).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dir = TempDir::new().unwrap();
+        assert!(RankCheckpoint::load(dir.path(), 3).is_err());
+    }
+
+    #[test]
+    fn corrupt_header_errors() {
+        let dir = TempDir::new().unwrap();
+        let path = RankCheckpoint::path(dir.path(), 0);
+        std::fs::write(&path, [5u8, 0, 0, 0, b'h', b'e', b'l', b'l', b'o']).unwrap();
+        assert!(RankCheckpoint::load(dir.path(), 0).is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! Ring collectives over the fabric: all-gather, reduce-scatter,
+//! all-reduce, broadcast.
+//!
+//! Standard (bandwidth-optimal) ring algorithms: `n−1` steps, each rank
+//! sending one chunk to its successor per step — exactly the volume model
+//! (`(n−1)/n · total`) the analysis layer assumes, so measured and modeled
+//! traffic agree by construction.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::fabric::Fabric;
+
+/// A rank's handle on the fabric for collective operations.
+#[derive(Clone)]
+pub struct Communicator {
+    fabric: Arc<Fabric>,
+    rank: usize,
+}
+
+impl Communicator {
+    pub fn new(fabric: Arc<Fabric>, rank: usize) -> Self {
+        Self { fabric, rank }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.fabric.n_ranks()
+    }
+
+    pub fn barrier(&self) {
+        self.fabric.barrier();
+    }
+
+    fn next(&self) -> usize {
+        (self.rank + 1) % self.n_ranks()
+    }
+
+    fn prev(&self) -> usize {
+        (self.rank + self.n_ranks() - 1) % self.n_ranks()
+    }
+
+    /// Ring all-gather: every rank contributes `shard` (equal lengths) and
+    /// receives the concatenation ordered by rank.
+    pub fn all_gather(&self, shard: &[f32]) -> Result<Vec<f32>> {
+        let n = self.n_ranks();
+        let len = shard.len();
+        // Write received chunks straight into the output buffer; the carry
+        // Vec's allocation is reused for every forward (no per-step clone —
+        // see EXPERIMENTS.md §Perf).
+        let mut out = vec![0.0f32; n * len];
+        out[self.rank * len..(self.rank + 1) * len].copy_from_slice(shard);
+        let mut carry = shard.to_vec();
+        for s in 0..n - 1 {
+            // At step s we forward the chunk originally owned by rank−s.
+            self.fabric.send(self.rank, self.next(), carry)?;
+            let got = self.fabric.recv(self.rank, self.prev())?;
+            let origin = (self.rank + n - 1 - s) % n;
+            out[origin * len..(origin + 1) * len].copy_from_slice(&got);
+            carry = got;
+        }
+        Ok(out)
+    }
+
+    /// Ring reduce-scatter with mean reduction: `full` has `n · shard_len`
+    /// elements; returns this rank's reduced shard (sum over ranks / n).
+    pub fn reduce_scatter_mean(&self, full: &[f32]) -> Result<Vec<f32>> {
+        let n = self.n_ranks();
+        anyhow::ensure!(full.len() % n == 0, "reduce_scatter: len {} % {n} != 0", full.len());
+        let len = full.len() / n;
+        let chunk = |i: usize| &full[i * len..(i + 1) * len];
+        // Start by sending chunk (rank−1); after n−1 steps each rank holds
+        // the fully-reduced chunk (rank).
+        let mut carry: Vec<f32> = Vec::new();
+        for s in 0..n - 1 {
+            let buf = if s == 0 {
+                chunk((self.rank + n - 1) % n).to_vec()
+            } else {
+                carry
+            };
+            self.fabric.send(self.rank, self.next(), buf)?;
+            let mut got = self.fabric.recv(self.rank, self.prev())?;
+            let add_idx = (self.rank + 2 * n - 2 - s) % n;
+            for (g, &c) in got.iter_mut().zip(chunk(add_idx)) {
+                *g += c;
+            }
+            carry = got;
+        }
+        let mut out = if n == 1 { chunk(0).to_vec() } else { carry };
+        let inv = 1.0 / n as f32;
+        for x in &mut out {
+            *x *= inv;
+        }
+        Ok(out)
+    }
+
+    /// All-reduce (mean) = reduce-scatter + all-gather.
+    pub fn all_reduce_mean(&self, full: &[f32]) -> Result<Vec<f32>> {
+        let n = self.n_ranks();
+        let pad = full.len().div_ceil(n) * n;
+        let mut padded = full.to_vec();
+        padded.resize(pad, 0.0);
+        let shard = self.reduce_scatter_mean(&padded)?;
+        let mut out = self.all_gather(&shard)?;
+        out.truncate(full.len());
+        Ok(out)
+    }
+
+    /// Broadcast from `root` (simple star — used only at init).
+    pub fn broadcast(&self, root: usize, buf: &[f32]) -> Result<Vec<f32>> {
+        if self.rank == root {
+            for dst in 0..self.n_ranks() {
+                if dst != root {
+                    self.fabric.send(self.rank, dst, buf.to_vec())?;
+                }
+            }
+            Ok(buf.to_vec())
+        } else {
+            self.fabric.recv(self.rank, root)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fabric::FabricConfig;
+
+    /// Run `f(rank)` on n threads over one fabric and collect results.
+    fn run_ranks<T: Send + 'static>(
+        n: usize,
+        f: impl Fn(Communicator) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let fabric = Arc::new(Fabric::new(n, FabricConfig::default()));
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let fabric = fabric.clone();
+                let f = f.clone();
+                std::thread::spawn(move || f(Communicator::new(fabric, rank)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        for n in [1usize, 2, 3, 4, 8] {
+            let outs = run_ranks(n, move |c| {
+                let shard = vec![c.rank() as f32; 3];
+                c.all_gather(&shard).unwrap()
+            });
+            let expect: Vec<f32> = (0..n).flat_map(|r| vec![r as f32; 3]).collect();
+            for o in outs {
+                assert_eq!(o, expect, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_means() {
+        for n in [1usize, 2, 4, 5] {
+            let outs = run_ranks(n, move |c| {
+                // Every rank contributes full = [rank, rank, ...] over n·2 elems.
+                let full = vec![c.rank() as f32; n * 2];
+                c.reduce_scatter_mean(&full).unwrap()
+            });
+            // Mean over ranks of constant vectors = mean(0..n).
+            let mean = (0..n).sum::<usize>() as f32 / n as f32;
+            for (r, o) in outs.iter().enumerate() {
+                assert_eq!(o.len(), 2);
+                for &x in o {
+                    assert!((x - mean).abs() < 1e-6, "n={n} rank={r}: {x} != {mean}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_distinct_chunks() {
+        // Rank r contributes chunk j filled with value r + 10·j; the reduced
+        // chunk j must be mean_r(r + 10·j) = mean(r) + 10·j.
+        let n = 4usize;
+        let outs = run_ranks(n, move |c| {
+            let mut full = Vec::new();
+            for j in 0..n {
+                full.extend(vec![c.rank() as f32 + 10.0 * j as f32; 3]);
+            }
+            c.reduce_scatter_mean(&full).unwrap()
+        });
+        let mean_r = 1.5f32;
+        for (j, o) in outs.iter().enumerate() {
+            for &x in o {
+                assert!((x - (mean_r + 10.0 * j as f32)).abs() < 1e-5, "chunk {j}: {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_matches_manual_mean() {
+        let n = 3usize;
+        let outs = run_ranks(n, move |c| {
+            let data: Vec<f32> = (0..7).map(|i| (c.rank() * 7 + i) as f32).collect();
+            c.all_reduce_mean(&data).unwrap()
+        });
+        let expect: Vec<f32> = (0..7).map(|i| (0..n).map(|r| (r * 7 + i) as f32).sum::<f32>() / n as f32).collect();
+        for o in outs {
+            assert_eq!(o.len(), 7);
+            for (a, b) in o.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let outs = run_ranks(4, move |c| c.broadcast(2, &[c.rank() as f32 * 5.0]).unwrap());
+        for o in outs {
+            assert_eq!(o, vec![10.0]);
+        }
+    }
+
+    /// all-gather of shards then reduce_scatter must be inverse-compatible
+    /// with ShardLayout (integration of the two pieces).
+    #[test]
+    fn gather_matches_shard_layout() {
+        use crate::coordinator::sharding::ShardLayout;
+        let n = 4usize;
+        let total = 10usize;
+        let full_src: Vec<f32> = (0..total).map(|i| i as f32).collect();
+        let layout = ShardLayout::new(total, n);
+        let src = full_src.clone();
+        let outs = run_ranks(n, move |c| {
+            let shard = layout.shard_of(&src, c.rank());
+            c.all_gather(&shard).unwrap()
+        });
+        for o in outs {
+            assert_eq!(&o[..total], &full_src[..]);
+            assert_eq!(o.len(), layout.padded());
+        }
+    }
+}

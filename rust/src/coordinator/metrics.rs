@@ -1,0 +1,137 @@
+//! Training metrics: per-step timing breakdown, measured comm/compute
+//! ratios (the real-path analog of the paper's Eq 10), and the loss log.
+
+
+/// One training step as measured on the real FSDP path (rank-0 view,
+/// loss averaged over ranks).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepMetrics {
+    pub step: u64,
+    pub loss: f32,
+    /// Wall-clock of the whole step (s).
+    pub t_step: f64,
+    /// Wall-clock inside the PJRT train_step execution (s).
+    pub t_compute: f64,
+    /// Wall-clock inside collectives (s).
+    pub t_comm_wall: f64,
+    /// *Modeled* transfer time of this step's traffic under the fabric's
+    /// bandwidth/latency law (Eq 5 applied to real bytes), in seconds.
+    pub t_comm_modeled: f64,
+    /// Bytes this rank transmitted during the step.
+    pub bytes_tx: u64,
+    /// Tokens processed per rank this step.
+    pub tokens: u64,
+}
+
+impl StepMetrics {
+    /// Measured analog of Eq 10's R = T_transfer / T_compute using the
+    /// modeled transfer time.
+    pub fn r_modeled(&self) -> f64 {
+        if self.t_compute > 0.0 {
+            self.t_comm_modeled / self.t_compute
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Tokens per rank per second of wall-clock.
+    pub fn tgs(&self) -> f64 {
+        self.tokens as f64 / self.t_step
+    }
+}
+
+/// Accumulated log over a training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainLog {
+    pub steps: Vec<StepMetrics>,
+}
+
+impl TrainLog {
+    pub fn push(&mut self, m: StepMetrics) {
+        self.steps.push(m);
+    }
+
+    pub fn losses(&self) -> Vec<f32> {
+        self.steps.iter().map(|s| s.loss).collect()
+    }
+
+    /// Mean loss over the first and last `k` steps — the e2e convergence
+    /// check.
+    pub fn loss_drop(&self, k: usize) -> Option<(f32, f32)> {
+        if self.steps.len() < 2 * k || k == 0 {
+            return None;
+        }
+        let head: f32 =
+            self.steps[..k].iter().map(|s| s.loss).sum::<f32>() / k as f32;
+        let tail: f32 = self.steps[self.steps.len() - k..].iter().map(|s| s.loss).sum::<f32>()
+            / k as f32;
+        Some((head, tail))
+    }
+
+    /// Mean step wall time over steps `skip..` (skip warm-up).
+    pub fn mean_step_time(&self, skip: usize) -> f64 {
+        let xs: Vec<f64> = self.steps.iter().skip(skip).map(|s| s.t_step).collect();
+        crate::util::mean(&xs)
+    }
+
+    /// Write the log as CSV (step,loss,t_step,t_compute,t_comm_wall,
+    /// t_comm_modeled,bytes_tx,tokens).
+    pub fn to_csv(&self) -> String {
+        let mut out =
+            String::from("step,loss,t_step,t_compute,t_comm_wall,t_comm_modeled,bytes_tx,tokens\n");
+        for s in &self.steps {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.6},{},{}\n",
+                s.step, s.loss, s.t_step, s.t_compute, s.t_comm_wall, s.t_comm_modeled, s.bytes_tx, s.tokens
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(step: u64, loss: f32) -> StepMetrics {
+        StepMetrics {
+            step,
+            loss,
+            t_step: 0.1,
+            t_compute: 0.08,
+            t_comm_wall: 0.01,
+            t_comm_modeled: 0.02,
+            bytes_tx: 1000,
+            tokens: 512,
+        }
+    }
+
+    #[test]
+    fn ratios_and_tgs() {
+        let s = m(0, 2.0);
+        assert!((s.r_modeled() - 0.25).abs() < 1e-12);
+        assert!((s.tgs() - 5120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loss_drop_windows() {
+        let mut log = TrainLog::default();
+        for i in 0..10 {
+            log.push(m(i, 10.0 - i as f32));
+        }
+        let (head, tail) = log.loss_drop(3).unwrap();
+        assert!((head - 9.0).abs() < 1e-6);
+        assert!((tail - 2.0).abs() < 1e-6);
+        assert!(log.loss_drop(6).is_none());
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let mut log = TrainLog::default();
+        log.push(m(0, 1.0));
+        log.push(m(1, 0.5));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("step,loss"));
+    }
+}

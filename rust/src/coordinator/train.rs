@@ -1,0 +1,351 @@
+//! The FSDP trainer: spawns N rank threads over one fabric and one PJRT
+//! compute server and runs real ZeRO-3 training steps.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::{
+    Adam, AdamConfig, Communicator, Fabric, FabricConfig, ShardLayout, StepMetrics,
+    SyntheticCorpus, TrainLog,
+};
+use crate::runtime::{ArtifactManifest, ComputeServer, HostTensor, TensorSpec};
+use crate::util::Rng64;
+
+/// Everything needed to run a training job.
+#[derive(Debug, Clone)]
+pub struct TrainParams {
+    /// Artifact name in the manifest (e.g. `"train_step_tiny_b1"`).
+    pub artifact: String,
+    /// Directory holding `manifest.json` + HLO files.
+    pub artifacts_dir: PathBuf,
+    /// Simulated FSDP ranks.
+    pub n_ranks: usize,
+    /// Optimizer steps to run.
+    pub steps: u64,
+    pub adam: AdamConfig,
+    pub fabric: FabricConfig,
+    /// Seed for parameter init and the synthetic corpus.
+    pub seed: u64,
+    /// When set, each rank saves its shard + Adam state here at the end of
+    /// the run, and resumes from it at the start if present.
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl TrainParams {
+    pub fn new(artifact: &str, artifacts_dir: PathBuf, n_ranks: usize, steps: u64) -> Self {
+        Self {
+            artifact: artifact.to_string(),
+            artifacts_dir,
+            n_ranks,
+            steps,
+            adam: AdamConfig::default(),
+            fabric: FabricConfig::default(),
+            seed: 42,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Rank-0's per-step log.
+    pub log: TrainLog,
+    /// Mean loss across ranks at the last step.
+    pub final_loss: f32,
+    /// Final full (unsharded) parameters — used by parity tests.
+    pub final_params: Vec<f32>,
+    /// Whole-run wall time (s).
+    pub wall_secs: f64,
+    /// Per-rank tokens per step.
+    pub tokens_per_rank: u64,
+}
+
+/// Deterministic parameter init from tensor specs: `*.scale` → 1,
+/// `*.bias` → 0, everything else ~ N(0, 0.02²). All ranks derive the same
+/// full vector from the same seed, then keep only their shard.
+pub fn init_params(specs: &[TensorSpec], seed: u64) -> Vec<f32> {
+    let mut rng = Rng64::new(seed);
+    let mut flat = Vec::new();
+    for spec in specs {
+        let n = spec.elements();
+        if spec.name.ends_with(".scale") {
+            flat.extend(std::iter::repeat(1.0f32).take(n));
+        } else if spec.name.ends_with(".bias") {
+            flat.extend(std::iter::repeat(0.0f32).take(n));
+        } else {
+            flat.extend((0..n).map(|_| (rng.normal() * 0.02) as f32));
+        }
+    }
+    flat
+}
+
+struct ArtifactLayout {
+    param_specs: Vec<TensorSpec>,
+    /// Offset of each param tensor in the flat vector.
+    offsets: Vec<usize>,
+    total: usize,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+}
+
+fn analyze_specs(inputs: &[TensorSpec]) -> Result<ArtifactLayout> {
+    let mut param_specs = Vec::new();
+    let mut offsets = Vec::new();
+    let mut total = 0usize;
+    let mut tok_shape = None;
+    for spec in inputs {
+        if spec.name.starts_with("param.") {
+            anyhow::ensure!(spec.dtype == "f32", "param {} must be f32", spec.name);
+            offsets.push(total);
+            total += spec.elements();
+            param_specs.push(spec.clone());
+        } else if spec.name == "tokens" {
+            tok_shape = Some(spec.shape.clone());
+        }
+    }
+    let tok_shape = tok_shape.ok_or_else(|| anyhow::anyhow!("artifact has no 'tokens' input"))?;
+    anyhow::ensure!(tok_shape.len() == 2, "tokens must be [batch, seq]");
+    // Vocab = rows of the embedding table.
+    let vocab = param_specs
+        .iter()
+        .find(|s| s.name.contains("embed"))
+        .map(|s| s.shape[0])
+        .ok_or_else(|| anyhow::anyhow!("no param.embed tensor"))?;
+    Ok(ArtifactLayout {
+        param_specs,
+        offsets,
+        total,
+        batch: tok_shape[0],
+        seq: tok_shape[1],
+        vocab,
+    })
+}
+
+/// The trainer.
+pub struct Trainer;
+
+impl Trainer {
+    /// Run the job to completion.
+    pub fn run(params: &TrainParams) -> Result<TrainReport> {
+        let manifest = ArtifactManifest::load(&params.artifacts_dir)
+            .context("loading artifact manifest (run `make artifacts` first)")?;
+        let (spec, hlo_path) = manifest.get(&params.artifact)?;
+        let layout_info = Arc::new(analyze_specs(&spec.inputs)?);
+        anyhow::ensure!(
+            spec.outputs.len() == layout_info.param_specs.len() + 1,
+            "artifact must return (loss, grads…): {} outputs for {} params",
+            spec.outputs.len(),
+            layout_info.param_specs.len()
+        );
+
+        let server = ComputeServer::spawn(vec![(params.artifact.clone(), hlo_path)])?;
+        let fabric = Arc::new(Fabric::new(params.n_ranks, params.fabric));
+        let full_init = Arc::new(init_params(&layout_info.param_specs, params.seed));
+        let shard_layout = ShardLayout::new(layout_info.total, params.n_ranks);
+        let corpus = SyntheticCorpus::new(layout_info.vocab as u32, params.seed ^ 0xC0FFEE);
+
+        let start = Instant::now();
+        let mut handles = Vec::new();
+        for rank in 0..params.n_ranks {
+            let fabric = fabric.clone();
+            let full_init = full_init.clone();
+            let layout_info = layout_info.clone();
+            let corpus = corpus.clone();
+            let compute = server.handle();
+            let p = params.clone();
+            handles.push(std::thread::spawn(move || -> Result<(TrainLog, f32, Vec<f32>)> {
+                let comm = Communicator::new(fabric.clone(), rank);
+                let mut shard = shard_layout.shard_of(&full_init, rank);
+                let mut adam = Adam::new(p.adam, shard.len());
+                let mut start_step = 0u64;
+                // Resume from a checkpoint when one exists.
+                if let Some(ckpt_dir) = &p.checkpoint_dir {
+                    if super::RankCheckpoint::path(ckpt_dir, rank).exists() {
+                        let ck = super::RankCheckpoint::load(ckpt_dir, rank)?;
+                        anyhow::ensure!(
+                            ck.artifact == p.artifact && ck.n_ranks == p.n_ranks,
+                            "checkpoint mismatch: {}@{} vs {}@{}",
+                            ck.artifact,
+                            ck.n_ranks,
+                            p.artifact,
+                            p.n_ranks
+                        );
+                        shard = ck.params.clone();
+                        adam = Adam::restore(p.adam, ck.adam_m, ck.adam_v, ck.adam_t);
+                        start_step = ck.step;
+                    }
+                }
+                let mut log = TrainLog::default();
+                let mut last_loss = f32::NAN;
+                for step in start_step..start_step + p.steps {
+                    let t_step0 = Instant::now();
+                    let comm_bytes0 = fabric.bytes_tx(rank);
+                    let comm_model0 = fabric.modeled_secs(rank);
+
+                    // 1. all-gather parameter shards.
+                    let t_c = Instant::now();
+                    let mut full = comm.all_gather(&shard)?;
+                    full.truncate(layout_info.total);
+                    let mut t_comm_wall = t_c.elapsed().as_secs_f64();
+
+                    // 2. build inputs and execute fwd/bwd.
+                    let mut inputs = Vec::with_capacity(layout_info.param_specs.len() + 2);
+                    for (spec, &off) in layout_info.param_specs.iter().zip(&layout_info.offsets) {
+                        inputs.push(HostTensor::F32 {
+                            data: full[off..off + spec.elements()].to_vec(),
+                            shape: spec.shape.clone(),
+                        });
+                    }
+                    let (tokens, targets) = corpus.batch(
+                        step,
+                        rank,
+                        p.n_ranks,
+                        layout_info.batch,
+                        layout_info.seq,
+                    );
+                    inputs.push(HostTensor::I32 {
+                        data: tokens,
+                        shape: vec![layout_info.batch, layout_info.seq],
+                    });
+                    inputs.push(HostTensor::I32 {
+                        data: targets,
+                        shape: vec![layout_info.batch, layout_info.seq],
+                    });
+                    let t_x = Instant::now();
+                    let outputs = compute.execute(&p.artifact, inputs)?;
+                    let t_compute = t_x.elapsed().as_secs_f64();
+
+                    let loss = *outputs[0]
+                        .as_f32()?
+                        .first()
+                        .ok_or_else(|| anyhow::anyhow!("empty loss"))?;
+
+                    // 3. flatten grads, reduce-scatter to my shard.
+                    let mut flat_grads = Vec::with_capacity(shard_layout.padded());
+                    for out in &outputs[1..] {
+                        flat_grads.extend_from_slice(out.as_f32()?);
+                    }
+                    anyhow::ensure!(
+                        flat_grads.len() == layout_info.total,
+                        "grad elements {} != param elements {}",
+                        flat_grads.len(),
+                        layout_info.total
+                    );
+                    flat_grads.resize(shard_layout.padded(), 0.0);
+                    let t_c = Instant::now();
+                    let grad_shard = comm.reduce_scatter_mean(&flat_grads)?;
+                    // Global grad norm for clipping.
+                    let local_sq = Adam::local_grad_norm_sq(&grad_shard);
+                    let global_sq =
+                        comm.all_reduce_mean(&[local_sq])?[0] * p.n_ranks as f32;
+                    let loss_mean = comm.all_reduce_mean(&[loss])?[0];
+                    t_comm_wall += t_c.elapsed().as_secs_f64();
+
+                    // 4. optimizer update on the local shard.
+                    let clip = Adam::clip_factor(&p.adam, global_sq.sqrt());
+                    adam.step(&mut shard, &grad_shard, clip);
+
+                    last_loss = loss_mean;
+                    log.push(StepMetrics {
+                        step,
+                        loss: loss_mean,
+                        t_step: t_step0.elapsed().as_secs_f64(),
+                        t_compute,
+                        t_comm_wall,
+                        t_comm_modeled: fabric.modeled_secs(rank) - comm_model0,
+                        bytes_tx: fabric.bytes_tx(rank) - comm_bytes0,
+                        tokens: (layout_info.batch * layout_info.seq) as u64,
+                    });
+                }
+                // Persist the final state when checkpointing is on.
+                if let Some(ckpt_dir) = &p.checkpoint_dir {
+                    let (m, v, t_adam) = adam.state();
+                    super::RankCheckpoint {
+                        artifact: p.artifact.clone(),
+                        step: start_step + p.steps,
+                        rank,
+                        n_ranks: p.n_ranks,
+                        params: shard.clone(),
+                        adam_m: m.to_vec(),
+                        adam_v: v.to_vec(),
+                        adam_t: t_adam,
+                    }
+                    .save(ckpt_dir)?;
+                }
+                // Reassemble final parameters for reporting/parity.
+                let mut final_full = comm.all_gather(&shard)?;
+                final_full.truncate(layout_info.total);
+                Ok((log, last_loss, final_full))
+            }));
+        }
+
+        let mut rank0: Option<(TrainLog, f32, Vec<f32>)> = None;
+        for (rank, h) in handles.into_iter().enumerate() {
+            let out = h.join().map_err(|_| anyhow::anyhow!("rank {rank} panicked"))??;
+            if rank == 0 {
+                rank0 = Some(out);
+            }
+        }
+        let (log, final_loss, final_params) = rank0.expect("rank 0 ran");
+        let tokens_per_rank = (layout_info.batch * layout_info.seq) as u64;
+        Ok(TrainReport {
+            log,
+            final_loss,
+            final_params,
+            wall_secs: start.elapsed().as_secs_f64(),
+            tokens_per_rank,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_params_deterministic_and_typed() {
+        let specs = vec![
+            TensorSpec { name: "param.embed".into(), shape: vec![8, 4], dtype: "f32".into() },
+            TensorSpec { name: "param.ln.scale".into(), shape: vec![4], dtype: "f32".into() },
+            TensorSpec { name: "param.ln.bias".into(), shape: vec![4], dtype: "f32".into() },
+        ];
+        let a = init_params(&specs, 1);
+        let b = init_params(&specs, 1);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 40);
+        assert!(a[..32].iter().any(|&x| x != 0.0));
+        assert!(a[32..36].iter().all(|&x| x == 1.0)); // scale
+        assert!(a[36..40].iter().all(|&x| x == 0.0)); // bias
+        let c = init_params(&specs, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn analyze_specs_extracts_layout() {
+        let inputs = vec![
+            TensorSpec { name: "param.embed".into(), shape: vec![256, 16], dtype: "f32".into() },
+            TensorSpec { name: "param.w".into(), shape: vec![16, 16], dtype: "f32".into() },
+            TensorSpec { name: "tokens".into(), shape: vec![2, 32], dtype: "i32".into() },
+            TensorSpec { name: "targets".into(), shape: vec![2, 32], dtype: "i32".into() },
+        ];
+        let l = analyze_specs(&inputs).unwrap();
+        assert_eq!(l.total, 256 * 16 + 256);
+        assert_eq!(l.offsets, vec![0, 4096]);
+        assert_eq!((l.batch, l.seq, l.vocab), (2, 32, 256));
+    }
+
+    #[test]
+    fn analyze_specs_requires_tokens() {
+        let inputs = vec![TensorSpec {
+            name: "param.embed".into(),
+            shape: vec![8, 4],
+            dtype: "f32".into(),
+        }];
+        assert!(analyze_specs(&inputs).is_err());
+    }
+}

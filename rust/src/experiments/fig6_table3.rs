@@ -1,0 +1,75 @@
+//! Fig 6 + Table 3 — best theoretical HFU and max throughput at 512 GPUs
+//! across the extra simulated clusters (V100/A100-40/A100-80/H100 at
+//! 100 and 200 Gbps).
+
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::gridsearch::GridSearch;
+
+use super::report::{Report, Table};
+
+pub fn run() -> Report {
+    let mut rep = Report::new("fig6", "Fig 6 + Table 3 (extra clusters, best HFU & max TGS @512 GPUs)");
+    let mut hfu_t = Table::new(
+        "best HFU @512 GPUs",
+        &["Cluster", "1.3B", "7B", "13B", "30B", "65B", "175B", "310B"],
+    );
+    let mut tgs_t = Table::new(
+        "max TGS @512 GPUs",
+        &["Cluster", "1.3B", "7B", "13B", "30B", "65B", "175B", "310B"],
+    );
+    for cluster in ClusterConfig::table3_presets() {
+        let mut hfu_row = vec![cluster.name.clone()];
+        let mut tgs_row = vec![cluster.name.clone()];
+        for model in ModelConfig::presets() {
+            let r = GridSearch::new(&model, &cluster, 512).run();
+            hfu_row.push(r.best_mfu.map(|p| format!("{:.2}", p.hfu)).unwrap_or_default());
+            tgs_row.push(r.best_tgs.map(|p| format!("{:.0}", p.tgs)).unwrap_or_default());
+        }
+        hfu_t.push_row(hfu_row);
+        tgs_t.push_row(tgs_row);
+    }
+    rep.push(hfu_t);
+    rep.push(tgs_t);
+
+    // Fig 6's qualitative claims.
+    rep.note("memory-rich clusters (80GB) sustain feasibility to larger models than 16GB V100");
+    rep.note("H100's higher peak FLOPs lowers achievable HFU at fixed bandwidth (comm-bound sooner) — the paper's S_volume/S_FLOPs scaling");
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_clusters_seven_models() {
+        let r = run();
+        assert_eq!(r.tables[0].rows.len(), 8);
+        assert_eq!(r.tables[0].rows[0].len(), 8);
+    }
+
+    /// V100-16GB cannot fit the large models that A100-80GB can.
+    #[test]
+    fn memory_gates_feasibility() {
+        let r = run();
+        let rows = &r.tables[0].rows;
+        let v100 = rows.iter().find(|row| row[0] == "16GB-V100-200Gbps").unwrap();
+        let a80 = rows.iter().find(|row| row[0] == "80GB-A100-200Gbps").unwrap();
+        // 310B column (last): empty on V100, present on A100-80.
+        assert!(v100[7].is_empty(), "V100 must OOM on 310B");
+        assert!(!a80[7].is_empty(), "A100-80 must fit 310B at 512 GPUs");
+    }
+
+    /// At the same memory/bandwidth, H100's HFU ≤ A100's HFU for a
+    /// bandwidth-bound large model (higher peak → worse utilization).
+    #[test]
+    fn h100_hfu_not_higher_when_comm_bound() {
+        let r = run();
+        let rows = &r.tables[0].rows;
+        let a100 = rows.iter().find(|row| row[0] == "80GB-A100-100Gbps").unwrap();
+        let h100 = rows.iter().find(|row| row[0] == "80GB-H100-100Gbps").unwrap();
+        // 175B column (index 6).
+        let (a, h): (f64, f64) = (a100[6].parse().unwrap(), h100[6].parse().unwrap());
+        assert!(h <= a + 1e-9, "H100 HFU {h} should not exceed A100 {a} at 100 Gbps");
+    }
+}

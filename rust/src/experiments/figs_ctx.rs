@@ -1,0 +1,155 @@
+//! Fig 8 + Tables 13–16 (ctx=512), Fig 9 + Tables 17–20 (ctx=2048), and
+//! Fig 10 (the side-by-side comparison): the fixed-context studies that
+//! maximize GPU memory with batch size.
+
+use crate::config::{ClusterConfig, ModelConfig, TrainingConfig};
+use crate::simulator::{simulate_step, EfficiencyModel, StepStats};
+
+use super::paper_configs;
+use super::report::{Report, Table};
+
+pub const GPU_COUNTS: &[u64] = &[4, 8, 16, 32, 64, 128, 256, 512];
+pub const MODELS: &[&str] = &["1.3B", "7B", "13B", "30B", "65B", "175B"];
+
+fn cluster(name: &str) -> ClusterConfig {
+    ClusterConfig::table3_presets()
+        .into_iter()
+        .find(|c| c.name == name)
+        .expect("preset")
+}
+
+/// Simulate the paper's Table 5/6 cell at fixed context.
+pub fn cell(model: &ModelConfig, cl: &ClusterConfig, n: u64, ctx: u64) -> Option<StepStats> {
+    let (ctx, batch) = paper_configs::fixed_ctx_config(&model.name, n, ctx)?;
+    let cfg = TrainingConfig::paper_default(ctx, batch);
+    let s = simulate_step(model, cl, &cfg, n, &EfficiencyModel::default());
+    if s.oom {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+fn metric_table(title: &str, cl: &ClusterConfig, ctx: u64, f: impl Fn(&StepStats) -> String) -> Table {
+    let mut header = vec!["GPUs".to_string()];
+    header.extend(MODELS.iter().map(|s| s.to_string()));
+    let mut t = Table::new(title, &header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for &n in GPU_COUNTS {
+        let mut row = vec![n.to_string()];
+        for m in MODELS {
+            let model = ModelConfig::preset(m).expect("preset");
+            row.push(cell(&model, cl, n, ctx).map(|s| f(&s)).unwrap_or_default());
+        }
+        t.push_row(row);
+    }
+    t
+}
+
+fn run_ctx(id: &str, reproduces: &str, ctx: u64) -> Report {
+    let mut rep = Report::new(id, reproduces);
+    for name in ["40GB-A100-200Gbps", "40GB-A100-100Gbps"] {
+        let cl = cluster(name);
+        rep.push(metric_table(&format!("MFU — ctx {ctx} — {name}"), &cl, ctx, |s| format!("{:.2}", s.mfu)));
+        rep.push(metric_table(&format!("TGS — ctx {ctx} — {name}"), &cl, ctx, |s| format!("{:.0}", s.tgs)));
+        rep.push(metric_table(&format!("active GiB — ctx {ctx} — {name}"), &cl, ctx, |s| {
+            format!("{:.1}", s.active_gib)
+        }));
+        rep.push(metric_table(&format!("reserved GiB — ctx {ctx} — {name}"), &cl, ctx, |s| {
+            format!("{:.1}", s.reserved_gib)
+        }));
+    }
+    rep
+}
+
+/// Fig 8 + Tables 13–16.
+pub fn run_ctx512() -> Report {
+    let mut rep = run_ctx("fig8", "Fig 8 + Tables 13–16 (ctx = 512)", 512);
+    // Paper's striking cell: 175B at ctx 512 collapses to 0.03–0.17 MFU.
+    let m = ModelConfig::preset("175B").unwrap();
+    let cl = cluster("40GB-A100-200Gbps");
+    if let Some(s) = cell(&m, &cl, 512, 512) {
+        rep.note(format!(
+            "175B @512 GPUs, ctx 512: MFU {:.2} (paper: 0.17) — the bandwidth-bound collapse",
+            s.mfu
+        ));
+    }
+    rep
+}
+
+/// Fig 9 + Tables 17–20.
+pub fn run_ctx2048() -> Report {
+    run_ctx("fig9", "Fig 9 + Tables 17–20 (ctx = 2048)", 2048)
+}
+
+/// Fig 10 — MFU at ctx 512 vs 2048 side by side (solid = 200 Gbps,
+/// dotted = 100 Gbps in the paper's plot).
+pub fn run_fig10() -> Report {
+    let mut rep = Report::new("fig10", "Fig 10 (ctx 512 vs 2048 comparison, both clusters)");
+    for ctx in [512u64, 2048] {
+        for name in ["40GB-A100-200Gbps", "40GB-A100-100Gbps"] {
+            let cl = cluster(name);
+            rep.push(metric_table(&format!("MFU — ctx {ctx} — {name}"), &cl, ctx, |s| {
+                format!("{:.2}", s.mfu)
+            }));
+        }
+    }
+    // Longer context wins at equal hardware.
+    let m = ModelConfig::preset("13B").unwrap();
+    let cl = cluster("40GB-A100-200Gbps");
+    let (a, b) = (cell(&m, &cl, 64, 512), cell(&m, &cl, 64, 2048));
+    if let (Some(a), Some(b)) = (a, b) {
+        rep.note(format!(
+            "13B @64 GPUs: ctx 2048 MFU {:.2} > ctx 512 MFU {:.2} (paper: 0.59 vs 0.57)",
+            b.mfu, a.mfu
+        ));
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx512_structure_and_bandwidth_ordering() {
+        let r = run_ctx512();
+        assert_eq!(r.tables.len(), 8);
+        // MFU(200Gbps) ≥ MFU(100Gbps) cell-wise where both exist.
+        let (hi, lo) = (&r.tables[0], &r.tables[4]);
+        for (a, b) in hi.rows.iter().zip(&lo.rows) {
+            for (x, y) in a[1..].iter().zip(&b[1..]) {
+                if let (Ok(x), Ok(y)) = (x.parse::<f64>(), y.parse::<f64>()) {
+                    assert!(x >= y - 1e-9, "200Gbps {x} < 100Gbps {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ctx2048_beats_ctx512_for_13b() {
+        let m = ModelConfig::preset("13B").unwrap();
+        let cl = cluster("40GB-A100-200Gbps");
+        let a = cell(&m, &cl, 64, 512).unwrap();
+        let b = cell(&m, &cl, 64, 2048).unwrap();
+        assert!(b.mfu >= a.mfu - 0.01, "2048: {} vs 512: {}", b.mfu, a.mfu);
+    }
+
+    #[test]
+    fn large_model_short_ctx_collapses() {
+        // 175B at ctx 512 on 512 GPUs: MFU far below small models (paper 0.17
+        // vs 0.33+ for 1.3B).
+        let cl = cluster("40GB-A100-200Gbps");
+        let m175 = ModelConfig::preset("175B").unwrap();
+        let m13 = ModelConfig::preset("1.3B").unwrap();
+        if let (Some(big), Some(small)) = (cell(&m175, &cl, 512, 512), cell(&m13, &cl, 512, 512)) {
+            assert!(big.mfu < small.mfu * 0.8, "175B {} vs 1.3B {}", big.mfu, small.mfu);
+            assert!(big.mfu < 0.35, "175B must collapse: {}", big.mfu);
+        }
+    }
+
+    #[test]
+    fn fig10_has_four_panels() {
+        let r = run_fig10();
+        assert_eq!(r.tables.len(), 4);
+    }
+}

@@ -1,0 +1,60 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation (see DESIGN.md §6 for the index).
+//!
+//! Each experiment returns a [`report::Report`] — a set of named tables
+//! that print in the paper's row/column layout — so `fsdp-bw experiment
+//! <id>` reproduces the artifact and EXPERIMENTS.md records the diff.
+
+pub mod ablation;
+pub mod claims;
+pub mod fig1;
+pub mod fig2_table7;
+pub mod fig3_table8;
+pub mod fig4_bs1;
+pub mod fig6_table3;
+pub mod figs_ctx;
+pub mod paper_configs;
+pub mod report;
+pub mod tables456;
+
+pub use report::{Report, Table};
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENT_IDS: &[&str] = &[
+    "table2", "fig1", "tables456", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10",
+    "claims", "ablation",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str) -> anyhow::Result<Report> {
+    match id {
+        "table2" => Ok(fig1::table2()),
+        "fig1" => Ok(fig1::run()),
+        "tables456" => Ok(tables456::run()),
+        "fig2" => Ok(fig2_table7::run()),
+        "fig3" => Ok(fig3_table8::run()),
+        "fig4" => Ok(fig4_bs1::run()),
+        "fig6" => Ok(fig6_table3::run()),
+        "fig8" => Ok(figs_ctx::run_ctx512()),
+        "fig9" => Ok(figs_ctx::run_ctx2048()),
+        "fig10" => Ok(figs_ctx::run_fig10()),
+        "claims" => Ok(claims::run()),
+        "ablation" => Ok(ablation::run()),
+        other => anyhow::bail!("unknown experiment {other:?}; known: {EXPERIMENT_IDS:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn all_ids_resolve() {
+        for id in super::EXPERIMENT_IDS {
+            assert!(super::run(id).is_ok(), "experiment {id} failed");
+        }
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(super::run("nope").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Report/table emitters: aligned text (terminal), CSV, and JSON.
+
+
+/// One table: header row + data rows of strings.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        debug_assert_eq!(row.len(), self.header.len(), "row width mismatch in {}", self.title);
+        self.rows.push(row);
+    }
+
+    /// Column-aligned plain-text rendering.
+    pub fn to_text(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("## {}\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols.saturating_sub(1))));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A named collection of tables — one experiment's output.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub id: String,
+    /// What this regenerates, e.g. `"Fig 2 + Table 7"`.
+    pub reproduces: String,
+    pub tables: Vec<Table>,
+    /// Headline observations checked programmatically.
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, reproduces: &str) -> Self {
+        Self {
+            id: id.to_string(),
+            reproduces: reproduces.to_string(),
+            tables: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, table: Table) {
+        self.tables.push(table);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut out = format!("# {} — reproduces {}\n\n", self.id, self.reproduces);
+        for t in &self.tables {
+            out.push_str(&t.to_text());
+            out.push('\n');
+        }
+        if !self.notes.is_empty() {
+            out.push_str("Notes:\n");
+            for n in &self.notes {
+                out.push_str(&format!("  - {n}\n"));
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        let table_json = |t: &Table| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("title".to_string(), Json::Str(t.title.clone()));
+            m.insert(
+                "header".to_string(),
+                Json::Arr(t.header.iter().map(|h| Json::Str(h.clone())).collect()),
+            );
+            m.insert(
+                "rows".to_string(),
+                Json::Arr(
+                    t.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            );
+            Json::Obj(m)
+        };
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("id".to_string(), Json::Str(self.id.clone()));
+        m.insert("reproduces".to_string(), Json::Str(self.reproduces.clone()));
+        m.insert("tables".to_string(), Json::Arr(self.tables.iter().map(table_json).collect()));
+        m.insert(
+            "notes".to_string(),
+            Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        Json::Obj(m).pretty()
+    }
+}
+
+/// Format an MFU-or-OOM cell the way the paper prints it.
+pub fn mfu_cell(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.2}"),
+        None => "OOM".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["GPUs", "MFU"]);
+        t.push_row(vec!["8".into(), "0.59".into()]);
+        t.push_row(vec!["512".into(), "0.55".into()]);
+        let text = t.to_text();
+        assert!(text.contains("## demo"));
+        assert!(text.contains("0.59"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn report_roundtrips_json() {
+        let mut r = Report::new("fig1", "Fig 1");
+        let mut t = Table::new("x", &["a"]);
+        t.push_row(vec!["1".into()]);
+        r.push(t);
+        r.note("hello");
+        let j = r.to_json();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str().unwrap(), "fig1");
+        assert_eq!(v.get("tables").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(v.get("notes").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn cells() {
+        assert_eq!(mfu_cell(Some(0.654)), "0.65");
+        assert_eq!(mfu_cell(None), "OOM");
+    }
+}

@@ -1,0 +1,91 @@
+//! Tables 4–6 — the configuration-search tables: per (GPUs × model),
+//! the maximal context at batch 1 (Table 4) and the maximal batch at
+//! context 512 / 2048 (Tables 5/6), with tokens per batch.
+
+use crate::config::ClusterConfig;
+use crate::gridsearch::ConfigTable;
+
+use super::report::{Report, Table};
+
+fn render(ct: &ConfigTable, title: &str, tokens_view: bool) -> Table {
+    let mut header = vec!["GPUs".to_string()];
+    header.extend(ct.model_names.iter().cloned());
+    let mut t = Table::new(title, &header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for (i, &n) in ct.gpu_counts.iter().enumerate() {
+        let mut row = vec![n.to_string()];
+        for cell in &ct.cells[i] {
+            row.push(match cell {
+                Some((tokens, batch)) => {
+                    if tokens_view {
+                        tokens.to_string()
+                    } else {
+                        batch.to_string()
+                    }
+                }
+                None => String::new(), // the paper leaves OOM cells empty
+            });
+        }
+        t.push_row(row);
+    }
+    t
+}
+
+/// Regenerate Tables 4, 5 and 6.
+pub fn run() -> Report {
+    let cluster = ClusterConfig::preset("40GB-A100-200Gbps").expect("preset");
+    let mut rep = Report::new("tables456", "Tables 4–6 (configuration search)");
+
+    let t4 = ConfigTable::generate(&cluster, None);
+    rep.push(render(&t4, "Table 4: max context length, batch size 1", true));
+
+    let t5 = ConfigTable::generate(&cluster, Some(512));
+    rep.push(render(&t5, "Table 5: tokens per batch, ctx 512", true));
+    rep.push(render(&t5, "Table 5 (cont.): batch size, ctx 512", false));
+
+    let t6 = ConfigTable::generate(&cluster, Some(2048));
+    rep.push(render(&t6, "Table 6: tokens per batch, ctx 2048", true));
+    rep.push(render(&t6, "Table 6 (cont.): batch size, ctx 2048", false));
+
+    // OOM-frontier note (checked in tests too).
+    let j310 = t4.model_names.iter().position(|n| n == "310B").unwrap();
+    let first_fit = t4
+        .gpu_counts
+        .iter()
+        .enumerate()
+        .find(|(i, _)| t4.cells[*i][j310].is_some())
+        .map(|(_, &n)| n);
+    rep.note(format!(
+        "310B first fits at {} GPUs (paper: 512)",
+        first_fit.map(|n| n.to_string()).unwrap_or_else(|| "∅".into())
+    ));
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn five_tables_generated() {
+        let r = super::run();
+        assert_eq!(r.tables.len(), 5);
+        for t in &r.tables {
+            assert_eq!(t.rows.len(), 8); // 8 GPU counts
+            assert_eq!(t.header.len(), 8); // GPUs + 7 models
+        }
+    }
+
+    #[test]
+    fn empty_cells_for_oom() {
+        let r = super::run();
+        // Table 4, first row (4 GPUs): 13B..310B columns must be empty.
+        let t4 = &r.tables[0];
+        let row4 = &t4.rows[0];
+        assert_eq!(row4[0], "4");
+        for cell in &row4[3..] {
+            assert!(cell.is_empty(), "expected OOM cell, got {cell:?}");
+        }
+        // 1.3B column is populated everywhere.
+        for row in &t4.rows {
+            assert!(!row[1].is_empty());
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Configuration search — regenerates the paper's Tables 4, 5 and 6.
+//!
+//! Table 4: for each (model, N) find the **maximal context length** that
+//! fits in memory with batch size 1 (γ=0, ZeRO-3).
+//! Tables 5/6: for a fixed context (512 / 2048) find the **maximal batch
+//! size** that fits, reporting tokens per batch = batch · ctx.
+//!
+//! Feasibility is judged by the calibrated allocator model
+//! ([`crate::simulator::AllocatorModel`]) — the same memory substrate the
+//! cluster simulator uses — so the predicted tables and the simulated
+//! figure cells agree by construction. The paper found its configurations
+//! by empirical OOM probing; our search reproduces the *shape* (monotone
+//! growth with N, the OOM frontier) and lands within a small factor of the
+//! paper's cells (compared cell-by-cell in the `tables456` experiment).
+
+use crate::config::{ClusterConfig, ModelConfig, TrainingConfig};
+use crate::simulator::AllocatorModel;
+
+/// The paper caps tested context length at 61440 and batch size at 100.
+pub const SEQ_CAP: u64 = 61_440;
+pub const BATCH_CAP: u64 = 100;
+
+/// Does (seq, batch) fit on one GPU at this point?
+pub fn fits(model: &ModelConfig, cluster: &ClusterConfig, cfg: &TrainingConfig, n: u64) -> bool {
+    !AllocatorModel::new(model, cluster, cfg, n).oom()
+}
+
+/// Table 4 cell: maximal context length (batch 1) in the paper's grid —
+/// multiples of 2048, falling back to multiples of 512 below 2048.
+/// Returns None when even ctx 512 OOMs.
+pub fn max_ctx_bs1(model: &ModelConfig, cluster: &ClusterConfig, n: u64) -> Option<u64> {
+    let try_fit = |seq: u64| fits(model, cluster, &TrainingConfig::bs1_max_ctx(seq), n);
+    let mut best = None;
+    let mut seq = 2048;
+    while seq <= SEQ_CAP {
+        if try_fit(seq) {
+            best = Some(seq);
+            seq += 2048;
+        } else {
+            break;
+        }
+    }
+    if best.is_none() {
+        for seq in [1536u64, 1024, 512] {
+            if try_fit(seq) {
+                return Some(seq);
+            }
+        }
+    }
+    best
+}
+
+/// Table 5/6 cell: maximal batch size at a fixed context length.
+pub fn max_batch_at_ctx(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    n: u64,
+    ctx: u64,
+) -> Option<u64> {
+    let try_fit = |batch: u64| {
+        let cfg = TrainingConfig::paper_default(ctx, batch);
+        fits(model, cluster, &cfg, n)
+    };
+    if !try_fit(1) {
+        return None;
+    }
+    // Exponential probe then binary search.
+    let mut lo = 1u64;
+    let mut hi = 2u64;
+    while hi <= BATCH_CAP && try_fit(hi) {
+        lo = hi;
+        hi *= 2;
+    }
+    let mut hi = hi.min(BATCH_CAP + 1);
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if try_fit(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(lo.min(BATCH_CAP))
+}
+
+/// A regenerated Table 4/5/6.
+#[derive(Debug, Clone)]
+pub struct ConfigTable {
+    /// Context length the table fixes, or None for the BS=1 table.
+    pub fixed_ctx: Option<u64>,
+    pub gpu_counts: Vec<u64>,
+    pub model_names: Vec<String>,
+    /// `cells[i][j]`: (tokens per batch, batch size) at `gpu_counts[i]` ×
+    /// `model_names[j]`; None = OOM / not applicable.
+    pub cells: Vec<Vec<Option<(u64, u64)>>>,
+}
+
+impl ConfigTable {
+    /// The paper's GPU-count axis.
+    pub fn paper_gpu_counts() -> Vec<u64> {
+        vec![4, 8, 16, 32, 64, 128, 256, 512]
+    }
+
+    /// Regenerate Table 4 (`fixed_ctx = None`) or Table 5/6.
+    pub fn generate(cluster: &ClusterConfig, fixed_ctx: Option<u64>) -> Self {
+        let models = ModelConfig::presets();
+        let gpu_counts = Self::paper_gpu_counts();
+        let cells = gpu_counts
+            .iter()
+            .map(|&n| {
+                models
+                    .iter()
+                    .map(|m| match fixed_ctx {
+                        None => max_ctx_bs1(m, cluster, n).map(|s| (s, 1)),
+                        Some(ctx) => {
+                            max_batch_at_ctx(m, cluster, n, ctx).map(|b| (b * ctx, b))
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Self {
+            fixed_ctx,
+            gpu_counts,
+            model_names: models.iter().map(|m| m.name.clone()).collect(),
+            cells,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterConfig {
+        ClusterConfig::preset("40GB-A100-200Gbps").unwrap()
+    }
+
+    /// OOM frontier: below these GPU counts the model states alone exceed
+    /// device memory (paper Table 4's leading empty cells).
+    #[test]
+    fn table4_oom_frontier() {
+        let c = cluster();
+        // (model, first N that must fit, N that must OOM)
+        let frontier = [
+            ("13B", 8u64, 4u64),
+            ("30B", 32, 8),
+            ("65B", 64, 16),
+            ("175B", 128, 32),
+            ("310B", 512, 128),
+        ];
+        for (name, fit_n, oom_n) in frontier {
+            let m = ModelConfig::preset(name).unwrap();
+            assert!(max_ctx_bs1(&m, &c, fit_n).is_some(), "{name} must fit at {fit_n} GPUs");
+            assert!(
+                max_ctx_bs1(&m, &c, oom_n).is_none(),
+                "{name} must OOM at {oom_n} GPUs"
+            );
+        }
+    }
+
+    /// Max context grows (weakly) with GPU count — more sharding frees
+    /// memory for activations.
+    #[test]
+    fn ctx_monotone_in_n() {
+        let c = cluster();
+        let m = ModelConfig::preset("30B").unwrap();
+        let mut prev = 0;
+        for n in [32u64, 64, 128, 256, 512] {
+            let ctx = max_ctx_bs1(&m, &c, n).unwrap();
+            assert!(ctx >= prev, "ctx must grow with N");
+            prev = ctx;
+        }
+    }
+
+    /// 1.3B saturates the paper's caps quickly (Table 4 row ≈ 51200–61440;
+    /// Table 5 batch = 100 everywhere).
+    #[test]
+    fn small_model_hits_caps() {
+        let c = cluster();
+        let m = ModelConfig::preset("1.3B").unwrap();
+        let ctx = max_ctx_bs1(&m, &c, 64).unwrap();
+        assert!(ctx >= 49_152, "1.3B@64 ctx {ctx} should approach the cap");
+        let b = max_batch_at_ctx(&m, &c, 8, 512).unwrap();
+        assert!(b >= 90, "1.3B@8 ctx512 batch {b} should approach the cap");
+    }
+
+    /// Predicted cells land within ~3× of the paper's measured cells on
+    /// the overlapping (model, N) grid — the shape-of-table check (the
+    /// paper probed conservatively for the largest models).
+    #[test]
+    fn predictions_near_paper_cells() {
+        use crate::experiments::paper_configs as pc;
+        let c = cluster();
+        let mut worst: f64 = 1.0;
+        for (i, &n) in pc::GPU_COUNTS.iter().enumerate() {
+            for (j, &name) in pc::MODELS.iter().enumerate() {
+                let paper_ctx = pc::TABLE4_CTX[i][j];
+                if paper_ctx == 0 {
+                    continue;
+                }
+                let m = ModelConfig::preset(name).unwrap();
+                let ours = max_ctx_bs1(&m, &c, n);
+                let ours = ours.unwrap_or(0);
+                assert!(ours > 0, "{name}@{n}: paper ran ctx {paper_ctx} but we predict OOM");
+                let ratio = ours as f64 / paper_ctx as f64;
+                worst = worst.max(ratio.max(1.0 / ratio));
+                assert!(
+                    (0.3..=3.2).contains(&ratio),
+                    "{name}@{n}: predicted {ours} vs paper {paper_ctx} (ratio {ratio:.2})"
+                );
+            }
+        }
+        assert!(worst > 1.0, "sanity: some deviation expected");
+    }
+
+    /// Batch at fixed ctx grows with N and shrinks with model size.
+    #[test]
+    fn batch_orderings() {
+        let c = cluster();
+        let m7 = ModelConfig::preset("7B").unwrap();
+        let m30 = ModelConfig::preset("30B").unwrap();
+        let b7_64 = max_batch_at_ctx(&m7, &c, 64, 512).unwrap();
+        let b7_8 = max_batch_at_ctx(&m7, &c, 8, 512).unwrap();
+        assert!(b7_64 >= b7_8);
+        let b30_64 = max_batch_at_ctx(&m30, &c, 64, 512).unwrap();
+        assert!(b7_64 > b30_64);
+    }
+
+    /// Full Table 4 generation produces the paper's 8×7 grid; 310B appears
+    /// only at the largest GPU counts.
+    #[test]
+    fn table_shape() {
+        let t = ConfigTable::generate(&cluster(), None);
+        assert_eq!(t.gpu_counts.len(), 8);
+        assert_eq!(t.model_names.len(), 7);
+        assert!(t.cells.iter().all(|row| row.len() == 7));
+        let j = t.model_names.iter().position(|n| n == "310B").unwrap();
+        for (i, &n) in t.gpu_counts.iter().enumerate() {
+            let fits = t.cells[i][j].is_some();
+            if n <= 128 {
+                assert!(!fits, "310B must OOM at {n} GPUs");
+            }
+            if n == 512 {
+                assert!(fits, "310B must fit at 512 GPUs");
+            }
+        }
+    }
+}

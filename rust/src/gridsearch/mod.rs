@@ -1,0 +1,8 @@
+//! Appendix C's Algorithm 1 grid-search simulator and the configuration
+//! search behind Tables 4–6.
+
+mod configsearch;
+mod search;
+
+pub use configsearch::{max_batch_at_ctx, max_ctx_bs1, ConfigTable};
+pub use search::{GridSearch, SearchPoint, SearchResult};

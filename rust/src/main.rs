@@ -1,0 +1,272 @@
+//! `fsdp-bw` — CLI for the FSDP memory/bandwidth study.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts:
+//! * `experiment <id>` — regenerate a table/figure (see `list`);
+//! * `gridsearch` — Algorithm 1 on one (model, cluster, N) point;
+//! * `simulate` — one simulated training step with the calibrated models;
+//! * `bounds` — the §2.7 closed-form maxima for a configuration;
+//! * `train` — run the real FSDP trainer on AOT artifacts;
+//! * `list` — enumerate experiments, models and clusters.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use fsdp_bw::analysis::StepModel;
+use fsdp_bw::config::{ClusterConfig, ModelConfig, TrainingConfig};
+use fsdp_bw::coordinator::{FabricConfig, TrainParams, Trainer};
+use fsdp_bw::experiments;
+use fsdp_bw::gridsearch::GridSearch;
+use fsdp_bw::simulator::{simulate_step, EfficiencyModel};
+use fsdp_bw::util::cli::Args;
+
+const USAGE: &str = "\
+fsdp-bw — 'Memory and Bandwidth are All You Need for FSDP' reproduction
+
+USAGE: fsdp-bw <command> [options]
+
+COMMANDS:
+  experiment <id|all> [--json]           regenerate a paper table/figure
+  gridsearch [--model 13B] [--cluster 40GB-A100-200Gbps] [--gpus 512]
+                                         Algorithm 1 on one point
+  simulate   [--model 13B] [--cluster ...] [--gpus 8] [--seq 10240]
+             [--batch 1] [--gamma 0.0] [--empty-cache]
+                                         one simulated training step
+  bounds     [--model 13B] [--cluster ...] [--gpus 8] [--seq 10240]
+                                         closed-form §2.7 maxima
+  train      [--artifact train_step_27m] [--artifacts-dir artifacts]
+             [--ranks 4] [--steps 100] [--bandwidth-gbps 200]
+             [--seed 42] [--csv out.csv] [--quiet]
+                                         real FSDP training on AOT artifacts
+  scenario   <file.scn>                  analyze + simulate a user scenario file
+  list                                   experiments, models, clusters
+";
+
+fn lookup_model(name: &str) -> Result<ModelConfig> {
+    ModelConfig::lookup(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}; see `fsdp-bw list`"))
+}
+
+fn lookup_cluster(name: &str) -> Result<ClusterConfig> {
+    ClusterConfig::preset(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown cluster {name:?}; see `fsdp-bw list`"))
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&raw, &["json", "empty-cache", "quiet"])?;
+    let cmd = args.positional[0].as_str();
+    match cmd {
+        "experiment" => cmd_experiment(&args),
+        "gridsearch" => cmd_gridsearch(&args),
+        "simulate" => cmd_simulate(&args),
+        "bounds" => cmd_bounds(&args),
+        "train" => cmd_train(&args),
+        "scenario" => cmd_scenario(&args),
+        "list" => cmd_list(),
+        other => {
+            print!("{USAGE}");
+            anyhow::bail!("unknown command {other:?}");
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    args.check_known(&["json"])?;
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("experiment needs an id (try `fsdp-bw list`)"))?;
+    let ids: Vec<String> = if id == "all" {
+        experiments::EXPERIMENT_IDS.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![id.clone()]
+    };
+    for id in ids {
+        let rep = experiments::run(&id)?;
+        if args.flag("json") {
+            println!("{}", rep.to_json());
+        } else {
+            println!("{}", rep.to_text());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gridsearch(args: &Args) -> Result<()> {
+    args.check_known(&["model", "cluster", "gpus"])?;
+    let m = lookup_model(&args.str_opt("model", "13B"))?;
+    let c = lookup_cluster(&args.str_opt("cluster", "40GB-A100-200Gbps"))?;
+    let gpus = args.num_opt("gpus", 512u64)?;
+    let r = GridSearch::new(&m, &c, gpus).run();
+    println!("feasible grid points: {}", r.feasible);
+    match r.best_mfu {
+        Some(p) => println!(
+            "best MFU : {:.3} (HFU {:.3}, TGS {:.0}) at α̂={:.2} γ={:.2} {} tokens/GPU={:.0}",
+            p.mfu, p.hfu, p.tgs, p.alpha_hat, p.gamma, p.stage, p.tokens
+        ),
+        None => println!("best MFU : infeasible (OOM at every grid point)"),
+    }
+    if let Some(p) = r.best_tgs {
+        println!(
+            "best TGS : {:.0} (MFU {:.3}) at α̂={:.2} γ={:.2} {} tokens/GPU={:.0}",
+            p.tgs, p.mfu, p.alpha_hat, p.gamma, p.stage, p.tokens
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    args.check_known(&["model", "cluster", "gpus", "seq", "batch", "gamma", "empty-cache"])?;
+    let m = lookup_model(&args.str_opt("model", "13B"))?;
+    let c = lookup_cluster(&args.str_opt("cluster", "40GB-A100-200Gbps"))?;
+    let gpus = args.num_opt("gpus", 8u64)?;
+    let seq = args.num_opt("seq", 10_240u64)?;
+    let batch = args.num_opt("batch", 1u64)?;
+    let gamma = args.num_opt("gamma", 0.0f64)?;
+    let mut cfg = TrainingConfig::paper_default(seq, batch).with_gamma(gamma);
+    cfg.empty_cache = args.flag("empty-cache");
+    let s = simulate_step(&m, &c, &cfg, gpus, &EfficiencyModel::default());
+    println!("{} on {}× {}, ctx {} × batch {} (γ={}):", m.name, gpus, c.name, seq, batch, gamma);
+    if s.oom {
+        println!(
+            "  OOM (reserved {:.1} GiB > {:.1} GiB)",
+            s.reserved_gib,
+            c.m_max() / fsdp_bw::config::GIB
+        );
+    }
+    println!(
+        "  step {:.3}s  (fwd {:.3}s, bwd {:.3}s, exposed comm {:.3}s)",
+        s.t_step, s.t_fwd, s.t_bwd, s.exposed_comm
+    );
+    println!("  R_fwd {:.2}  R_bwd {:.2}", s.r_fwd, s.r_bwd);
+    println!("  MFU {:.3}  HFU {:.3}  TGS {:.0}", s.mfu, s.hfu, s.tgs);
+    println!("  memory: active {:.1} GiB, reserved {:.1} GiB", s.active_gib, s.reserved_gib);
+    Ok(())
+}
+
+fn cmd_bounds(args: &Args) -> Result<()> {
+    args.check_known(&["model", "cluster", "gpus", "seq"])?;
+    let m = lookup_model(&args.str_opt("model", "13B"))?;
+    let c = lookup_cluster(&args.str_opt("cluster", "40GB-A100-200Gbps"))?;
+    let gpus = args.num_opt("gpus", 8u64)?;
+    let seq = args.num_opt("seq", 10_240u64)?;
+    let cfg = TrainingConfig::bs1_max_ctx(seq);
+    let sm = StepModel::new(&m, &c, &cfg, gpus);
+    let b = sm.bounds();
+    let mem = sm.memory();
+    println!("{} on {}× {} at seq {}:", m.name, gpus, c.name, seq);
+    println!("  M_free : {:.1} GiB", mem.m_free / fsdp_bw::config::GIB);
+    println!("  E_MAX  : {:.0} tokens/GPU   (Eq 12)", b.e_max);
+    println!("  α_HFU ≤ {:.3}               (Eq 13)", b.hfu_max);
+    println!("  α_MFU ≤ {:.3}               (Eq 14)", b.mfu_max);
+    println!("  K     ≤ {:.0} TGS           (Eq 15)", b.k_max);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "artifact",
+        "artifacts-dir",
+        "ranks",
+        "steps",
+        "bandwidth-gbps",
+        "seed",
+        "csv",
+        "quiet",
+    ])?;
+    let artifact = args.str_opt("artifact", "train_step_27m");
+    let artifacts_dir = PathBuf::from(args.str_opt("artifacts-dir", "artifacts"));
+    let ranks = args.num_opt("ranks", 4usize)?;
+    let steps = args.num_opt("steps", 100u64)?;
+    let bandwidth_gbps = args.num_opt("bandwidth-gbps", 200.0f64)?;
+    let seed = args.num_opt("seed", 42u64)?;
+
+    let mut params = TrainParams::new(&artifact, artifacts_dir, ranks, steps);
+    params.fabric = FabricConfig {
+        bandwidth: fsdp_bw::config::gbps_to_bytes_per_sec(bandwidth_gbps),
+        latency: 8e-6,
+    };
+    params.seed = seed;
+    let report = Trainer::run(&params)?;
+    if !args.flag("quiet") {
+        let n = report.log.steps.len();
+        for s in report.log.steps.iter().step_by((n / 20).max(1)) {
+            println!(
+                "step {:>5}  loss {:.4}  t {:.3}s (compute {:.3}s, comm wall {:.3}s, comm modeled {:.3}s)",
+                s.step, s.loss, s.t_step, s.t_compute, s.t_comm_wall, s.t_comm_modeled
+            );
+        }
+    }
+    println!(
+        "final loss {:.4} over {} steps, {:.1}s wall, {} tokens/rank/step",
+        report.final_loss, steps, report.wall_secs, report.tokens_per_rank
+    );
+    if let Some(path) = args.str_maybe("csv") {
+        std::fs::write(&path, report.log.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    args.check_known(&[])?;
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("scenario needs a file path (key = value format)"))?;
+    let s = fsdp_bw::config::scenario::Scenario::load(std::path::Path::new(path))?;
+    println!(
+        "scenario: {} on {}× {} (ctx {} × batch {}, γ={}, {})",
+        s.model.name,
+        s.n_gpus,
+        s.cluster.name,
+        s.training.seq_len,
+        s.training.batch_per_gpu,
+        s.training.gamma,
+        s.training.zero_stage
+    );
+    let sm = StepModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
+    let b = sm.bounds();
+    println!("bounds : E_MAX {:.0} tok/GPU | MFU ≤ {:.3} | K ≤ {:.0} TGS", b.e_max, b.mfu_max, b.k_max);
+    let st = simulate_step(&s.model, &s.cluster, &s.training, s.n_gpus, &EfficiencyModel::default());
+    if st.oom {
+        println!("simulated: OOM (reserved {:.1} GiB)", st.reserved_gib);
+    } else {
+        println!(
+            "simulated: MFU {:.3} | TGS {:.0} | step {:.3}s | R_fwd {:.2} | active {:.1} GiB",
+            st.mfu, st.tgs, st.t_step, st.r_fwd, st.active_gib
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments: {}", experiments::EXPERIMENT_IDS.join(", "));
+    println!("\npaper models:");
+    for m in ModelConfig::presets() {
+        println!("  {:>5}  L={:<3} H={:<6} heads={}", m.name, m.layers, m.hidden, m.heads);
+    }
+    println!("\nruntime models:");
+    for m in ModelConfig::runtime_presets() {
+        println!(
+            "  {:>5}  L={:<3} H={:<6} heads={} vocab={}",
+            m.name, m.layers, m.hidden, m.heads, m.vocab
+        );
+    }
+    println!("\nclusters:");
+    for c in ClusterConfig::table1_presets().into_iter().chain(ClusterConfig::table3_presets()) {
+        println!(
+            "  {:<22} {:>4} GPUs  {:>3.0} Gbps/GPU  {:>5.0} GiB",
+            c.name,
+            c.total_gpus(),
+            c.inter_node_gbps,
+            c.m_max() / fsdp_bw::config::GIB
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! lowered computation: its HLO text file, input/output tensor specs, and
+//! the model configuration it was traced for. The Rust side loads this to
+//! know what to feed each executable without ever importing Python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Logical name (e.g. `"tokens"`, `"param.blocks.0.attn.wq"`).
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `"f32"` or `"i32"`.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-lowered computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    /// HLO text file, relative to the manifest's directory.
+    pub hlo: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (model config, seq len, …).
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(Self {
+            hlo: v.get("hlo")?.as_str()?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            meta: v
+                .opt("meta")
+                .and_then(|m| m.as_obj().ok())
+                .map(|m| m.clone())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    /// Map of artifact name → spec.
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let root = Json::parse(text).context("parsing manifest JSON")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in root.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec::from_json(spec).with_context(|| format!("artifact {name:?}"))?,
+            );
+        }
+        Ok(Self { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// The default artifacts directory: `$FSDP_BW_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FSDP_BW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Look up an artifact and resolve its HLO path.
+    pub fn get(&self, name: &str) -> Result<(&ArtifactSpec, PathBuf)> {
+        let spec = self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })?;
+        Ok((spec, self.dir.join(&spec.hlo)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> &'static str {
+        r#"{
+          "artifacts": {
+            "train_step_tiny": {
+              "hlo": "train_step_tiny.hlo.txt",
+              "inputs": [
+                {"name": "tokens", "shape": [4, 32], "dtype": "i32"},
+                {"name": "param.embed", "shape": [256, 64], "dtype": "f32"}
+              ],
+              "outputs": [
+                {"name": "loss", "shape": [], "dtype": "f32"}
+              ],
+              "meta": {"seq_len": 32}
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn manifest_parses_and_resolves() {
+        let dir = Path::new("/tmp/fake-artifacts");
+        let m = ArtifactManifest::parse(sample_json(), dir).unwrap();
+        let (spec, path) = m.get("train_step_tiny").unwrap();
+        assert_eq!(spec.inputs.len(), 2);
+        assert_eq!(spec.inputs[0].elements(), 128);
+        assert_eq!(spec.inputs[0].dtype, "i32");
+        assert_eq!(spec.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(spec.meta.get("seq_len").unwrap(), &Json::Num(32.0));
+        assert_eq!(path, dir.join("train_step_tiny.hlo.txt"));
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn load_from_disk() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        std::fs::write(dir.path().join("manifest.json"), sample_json()).unwrap();
+        let m = ArtifactManifest::load(dir.path()).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        assert!(ArtifactManifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        assert!(ArtifactManifest::parse("{}", Path::new("/tmp")).is_err());
+        assert!(ArtifactManifest::parse(r#"{"artifacts": {"x": {"hlo": 3}}}"#, Path::new("/tmp")).is_err());
+    }
+}

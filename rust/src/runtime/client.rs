@@ -1,0 +1,25 @@
+//! PJRT CPU client construction.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so it
+//! cannot live in a global or cross threads. The [`super::server`] module
+//! confines it to one compute-server thread; this helper just constructs
+//! it with error conversion.
+
+use anyhow::Result;
+
+/// Create a CPU PJRT client.
+pub fn create_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_has_devices() {
+        let c = create_client().unwrap();
+        assert!(c.device_count() >= 1);
+        assert!(c.platform_name().to_lowercase().contains("cpu") || !c.platform_name().is_empty());
+    }
+}

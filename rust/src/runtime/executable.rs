@@ -1,0 +1,96 @@
+//! A compiled PJRT executable: HLO text → `PjRtLoadedExecutable`, with a
+//! typed `run` over [`HostTensor`]s.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::HostTensor;
+
+/// One loaded + compiled computation. Not `Send` — lives on the compute
+/// server thread (see [`super::ComputeServer`]).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    name: String,
+}
+
+impl Executable {
+    /// Load HLO text from `path` and compile it on a fresh CPU client —
+    /// convenience for single-threaded use (tests, benches).
+    pub fn load(name: &str, path: &Path) -> Result<Self> {
+        let client = super::client::create_client()?;
+        Self::load_with(&client, name, path)
+    }
+
+    /// Load HLO text and compile on an existing client.
+    pub fn load_with(client: &xla::PjRtClient, name: &str, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Self { exe, client: client.clone(), name: name.to_string() })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host inputs; returns the flattened outputs.
+    ///
+    /// The AOT pipeline lowers with `return_tuple=True`, so the single
+    /// on-device result is a tuple which this unpacks into one
+    /// [`HostTensor`] per logical output.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute`
+        // (literal inputs): xla-rs 0.1.6's C shim `execute` leaks every
+        // input device buffer (`buffer.release()` with no delete), which
+        // OOMs a long training run at ~100 MB/step. `execute_b` over
+        // Rust-owned `PjRtBuffer`s frees them on Drop. See EXPERIMENTS.md
+        // §Perf.
+        let device = self
+            .client
+            .devices()
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no PJRT device"))?;
+        let mut buffers = Vec::with_capacity(inputs.len());
+        // The host→device transfer is asynchronous: every literal must stay
+        // alive until execution has consumed the inputs, so they are kept
+        // in `literals` and dropped only after `execute_b` returns.
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = t.to_literal()?;
+            let buf = self
+                .client
+                .buffer_from_host_literal(Some(&device), &lit)
+                .map_err(|e| anyhow::anyhow!("staging input for {}: {e:?}", self.name))?;
+            literals.push(lit);
+            buffers.push(buf);
+        }
+        let result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+        // PJRT execution is asynchronous: fetching the result synchronizes,
+        // and only then may the input literals/buffers be dropped.
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e:?}", self.name))?;
+        drop(result);
+        drop(buffers);
+        drop(literals);
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("decomposing tuple of {}: {e:?}", self.name))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executable({})", self.name)
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime bridge — loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text + `manifest.json`) and executes them
+//! on the CPU PJRT client via the `xla` crate.
+//!
+//! HLO **text** is the interchange format, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Threading: the crate's `PjRtClient` is `Rc`-based, so all PJRT objects
+//! live on one [`ComputeServer`] thread; FSDP ranks talk to it through a
+//! `Send + Clone` [`ComputeHandle`].
+
+mod artifact;
+mod client;
+mod executable;
+mod server;
+mod tensor;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec, TensorSpec};
+pub use client::create_client;
+pub use executable::Executable;
+pub use server::{ComputeHandle, ComputeServer};
+pub use tensor::HostTensor;

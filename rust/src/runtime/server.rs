@@ -1,0 +1,107 @@
+//! Compute server: a dedicated thread owning the (non-`Send`) PJRT client
+//! and compiled executables, serving execute requests from any number of
+//! worker threads over channels.
+//!
+//! One physical CPU backs all simulated FSDP ranks, so serialized execution
+//! through a single server is both the safe and the honest model; the
+//! per-rank *modeled* timings come from the fabric, not from wall-clock.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::util::channel::{channel, Sender};
+use anyhow::Result;
+
+use super::{client::create_client, Executable, HostTensor};
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<HostTensor>,
+        reply: Sender<Result<Vec<HostTensor>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle for submitting work to the server.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    tx: Sender<Request>,
+}
+
+impl ComputeHandle {
+    /// Execute `artifact` with `inputs`, blocking until the result arrives.
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply_tx, reply_rx) = channel(1);
+        self.tx
+            .send(Request::Execute { artifact: artifact.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("compute server is gone"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("compute server dropped reply"))?
+    }
+}
+
+/// The server: spawn once, hand out handles, drop to shut down.
+pub struct ComputeServer {
+    tx: Sender<Request>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ComputeServer {
+    /// Spawn the server thread and compile the given `(name, hlo_path)`
+    /// artifacts on it. Returns after compilation finishes (or fails).
+    pub fn spawn(artifacts: Vec<(String, PathBuf)>) -> Result<Self> {
+        let (tx, rx) = channel::<Request>(64);
+        let (ready_tx, ready_rx) = channel::<Result<()>>(1);
+        let thread = std::thread::Builder::new()
+            .name("pjrt-compute".into())
+            .spawn(move || {
+                // Build client + executables on this thread; they never leave.
+                let setup = (|| -> Result<HashMap<String, Executable>> {
+                    let client = create_client()?;
+                    let mut map = HashMap::new();
+                    for (name, path) in &artifacts {
+                        map.insert(name.clone(), Executable::load_with(&client, name, path)?);
+                    }
+                    Ok(map)
+                })();
+                let exes = match setup {
+                    Ok(exes) => {
+                        let _ = ready_tx.send(Ok(()));
+                        exes
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Shutdown => break,
+                        Request::Execute { artifact, inputs, reply } => {
+                            let result = match exes.get(&artifact) {
+                                Some(exe) => exe.run(&inputs),
+                                None => Err(anyhow::anyhow!("unknown artifact {artifact:?}")),
+                            };
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })?;
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("compute server died during setup"))??;
+        Ok(Self { tx, thread: Some(thread) })
+    }
+
+    /// A handle for submitting work.
+    pub fn handle(&self) -> ComputeHandle {
+        ComputeHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for ComputeServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}

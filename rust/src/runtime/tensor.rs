@@ -1,0 +1,146 @@
+//! Host-side tensors and their conversion to/from `xla::Literal`.
+
+use anyhow::Result;
+
+/// A host tensor: flat data + shape. Only the dtypes the artifacts use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    /// Zero-filled f32 tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        HostTensor::F32 { data: vec![0.0; n], shape: shape.to_vec() }
+    }
+
+    /// f32 tensor from data (checks element count).
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(data.len() == n, "data len {} != shape product {n}", data.len());
+        Ok(HostTensor::F32 { data, shape: shape.to_vec() })
+    }
+
+    /// i32 tensor from data (checks element count).
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(data.len() == n, "data len {} != shape product {n}", data.len());
+        Ok(HostTensor::I32 { data, shape: shape.to_vec() })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow f32 data (errors on dtype mismatch).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    /// Mutable f32 data (errors on dtype mismatch).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+
+    /// Convert to an `xla::Literal` for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+            }
+            HostTensor::I32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.shape().map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+        let dims: Vec<usize> = match &shape {
+            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+            _ => anyhow::bail!("expected array literal"),
+        };
+        let elem = match &shape {
+            xla::Shape::Array(a) => a.ty(),
+            _ => unreachable!(),
+        };
+        match elem {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                data: lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?,
+                shape: dims,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                data: lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?,
+                shape: dims,
+            }),
+            other => anyhow::bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = HostTensor::i32(vec![1, -2, 3, 4], &[4]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::f32(vec![1.0; 5], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn zeros_and_accessors() {
+        let mut t = HostTensor::zeros(&[3, 2]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.shape(), &[3, 2]);
+        t.as_f32_mut().unwrap()[0] = 7.0;
+        assert_eq!(t.as_f32().unwrap()[0], 7.0);
+        assert!(t.as_f32().is_ok());
+        let i = HostTensor::i32(vec![1], &[1]).unwrap();
+        assert!(i.as_f32().is_err());
+    }
+}

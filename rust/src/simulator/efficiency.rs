@@ -1,0 +1,168 @@
+//! Calibrated GPU kernel-efficiency model.
+//!
+//! The paper's Algorithm 1 treats hardware utilization α̂_HFU as a free
+//! variable; reproducing its *measured* tables needs an actual efficiency
+//! model. We use a two-component blend, fit once against the paper's own
+//! published measurements (Table 7: 1.3B @4 GPUs; Table 8: 13B @8 GPUs) and
+//! then used unchanged for every other prediction:
+//!
+//! * **GEMM efficiency** `η_gemm(H) = A·H/(H+H₀)` — weight GEMMs get more
+//!   efficient as the hidden dimension grows (larger tiles, better MXU/TC
+//!   occupancy).
+//! * **Apparent attention efficiency** `η_attn(l) = a + b·ln l` — FLOPs
+//!   *counted* by the MFU convention are the full `4LHl` per token, while a
+//!   causal Flash-Attention kernel executes roughly half of that, so the
+//!   apparent efficiency can exceed 1 at long sequence length. This is
+//!   exactly why the paper's MFU climbs with context length (Fig 2/3).
+//!
+//! The blend weight is the attention share of forward FLOPs
+//! `l/(6H+l)` (see [`crate::analysis::compute::attention_flop_fraction`]).
+//! A fixed per-step host/launch overhead `t_fixed = c₀ + c₁·L` models the
+//! small-batch MFU droop of Table 7.
+
+use crate::analysis::compute;
+use crate::config::ModelConfig;
+
+/// Calibration constants (fit on Tables 7 and 8; see DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EfficiencyModel {
+    /// GEMM efficiency asymptote.
+    pub gemm_max: f64,
+    /// GEMM half-saturation hidden size.
+    pub gemm_h0: f64,
+    /// Attention apparent-efficiency intercept.
+    pub attn_a: f64,
+    /// Attention apparent-efficiency log slope.
+    pub attn_b: f64,
+    /// Attention apparent-efficiency clamp ceiling.
+    pub attn_cap: f64,
+    /// Fixed per-step overhead: constant part (s).
+    pub fixed_c0: f64,
+    /// Fixed per-step overhead: per-layer part (s).
+    pub fixed_c1: f64,
+    /// Multiplicative time penalty when `empty_cache` runs each step
+    /// (the paper measures a 3–5 % MFU drop).
+    pub empty_cache_penalty: f64,
+    /// Multiplicative time penalty when the allocator is near-full
+    /// (Table 7's high-batch droop).
+    pub mem_pressure_penalty: f64,
+    /// Reserved-fraction threshold at which the pressure penalty applies.
+    pub mem_pressure_threshold: f64,
+    /// Large-job straggler tax toggle (ablation hook).
+    pub straggler_enabled: bool,
+}
+
+impl Default for EfficiencyModel {
+    fn default() -> Self {
+        Self {
+            gemm_max: 0.854,
+            gemm_h0: 774.0,
+            attn_a: 0.196,
+            attn_b: 0.080,
+            attn_cap: 1.15,
+            fixed_c0: 0.010,
+            fixed_c1: 0.0003,
+            empty_cache_penalty: 1.0 / 0.96,
+            mem_pressure_penalty: 1.08,
+            mem_pressure_threshold: 0.92,
+            straggler_enabled: true,
+        }
+    }
+}
+
+impl EfficiencyModel {
+    /// GEMM efficiency at hidden dimension `h`.
+    pub fn eta_gemm(&self, h: f64) -> f64 {
+        self.gemm_max * h / (h + self.gemm_h0)
+    }
+
+    /// Apparent attention efficiency at sequence length `l` (may exceed 1 —
+    /// causal-mask FLOPs double-counting, see module docs).
+    pub fn eta_attn(&self, l: f64) -> f64 {
+        (self.attn_a + self.attn_b * l.max(1.0).ln()).clamp(0.10, self.attn_cap)
+    }
+
+    /// Blended apparent hardware efficiency for this model at this context.
+    pub fn eta(&self, model: &ModelConfig, seq_len: u64) -> f64 {
+        let frac = compute::attention_flop_fraction(model, seq_len);
+        (1.0 - frac) * self.eta_gemm(model.hidden as f64) + frac * self.eta_attn(seq_len as f64)
+    }
+
+    /// Fixed per-step overhead (host sync, launches, optimizer) in seconds.
+    pub fn t_fixed(&self, model: &ModelConfig) -> f64 {
+        self.fixed_c0 + self.fixed_c1 * model.layers as f64
+    }
+
+    /// Per-step straggler slowdown for very large jobs (the paper's
+    /// 128 → 256/512 GPU efficiency step, §3.2.2).
+    pub fn straggler(&self, n_gpus: u64) -> f64 {
+        if !self.straggler_enabled {
+            return 1.0;
+        }
+        let n = n_gpus as f64;
+        if n > 128.0 {
+            1.0 + 0.08 + 0.025 * (n / 256.0).max(1.0).ln()
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(name: &str) -> ModelConfig {
+        ModelConfig::preset(name).unwrap()
+    }
+
+    /// η must increase with sequence length (the paper's central empirical
+    /// pattern, Figs 2/3).
+    #[test]
+    fn eta_monotone_in_seq() {
+        let e = EfficiencyModel::default();
+        let mut prev = 0.0;
+        for l in [512u64, 1024, 4096, 16384, 55936] {
+            let eta = e.eta(&m("1.3B"), l);
+            assert!(eta > prev, "η({l})={eta} must grow");
+            prev = eta;
+        }
+    }
+
+    /// η_gemm increases with H: bigger models have more efficient GEMMs.
+    #[test]
+    fn gemm_monotone_in_h() {
+        let e = EfficiencyModel::default();
+        assert!(e.eta_gemm(5120.0) > e.eta_gemm(2048.0));
+        assert!(e.eta_gemm(16384.0) < e.gemm_max);
+    }
+
+    /// Calibration anchors (within a few percent of the fit targets).
+    #[test]
+    fn calibration_anchors() {
+        let e = EfficiencyModel::default();
+        // 1.3B, ctx 1024: blended η ≈ 0.63 (Table 7 MFU 0.45 incl. overheads)
+        let eta1 = e.eta(&m("1.3B"), 1024);
+        assert!((eta1 - 0.63).abs() < 0.04, "η={eta1}");
+        // 13B, ctx 10240: blended η ≈ 0.79 (Table 8 MFU 0.59)
+        let eta2 = e.eta(&m("13B"), 10_240);
+        assert!((eta2 - 0.79).abs() < 0.04, "η={eta2}");
+    }
+
+    #[test]
+    fn straggler_shape() {
+        let e = EfficiencyModel::default();
+        assert_eq!(e.straggler(4), 1.0);
+        assert_eq!(e.straggler(128), 1.0);
+        assert!(e.straggler(256) > 1.05);
+        assert!(e.straggler(512) > e.straggler(256));
+        assert!(e.straggler(512) < 1.15);
+    }
+
+    #[test]
+    fn fixed_overhead_scales_with_depth() {
+        let e = EfficiencyModel::default();
+        assert!(e.t_fixed(&m("175B")) > e.t_fixed(&m("1.3B")));
+        assert!(e.t_fixed(&m("1.3B")) < 0.03);
+    }
+}

@@ -1,0 +1,103 @@
+//! Network timing for the simulated cluster: ring collectives over the
+//! job's bottleneck link with per-hop latency and a large-scale straggler
+//! tax.
+//!
+//! Topology rule: a job spanning one node rides NVLink; anything larger is
+//! bottlenecked by each GPU's inter-node share (`S_volume`). The straggler
+//! tax models the paper's observed efficiency step from 128 → 256/512 GPUs
+//! ("escalated inter-node communication overhead", §3.2.2): with hundreds
+//! of ranks the per-layer all-gather completes at the pace of the slowest
+//! rank, which grows with ln N.
+
+use crate::analysis::comms;
+use crate::config::ClusterConfig;
+
+/// Evaluated network model for one job.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    /// Per-GPU bottleneck bandwidth for this job size (bytes/s).
+    pub bandwidth: f64,
+    /// Per-hop latency (s).
+    pub latency: f64,
+    /// GPUs in the job.
+    pub n: u64,
+    /// Multiplicative straggler slowdown applied to collective time.
+    pub straggler: f64,
+}
+
+/// Straggler-jitter calibration: zero up to one "comfortable" scale
+/// (≤128 GPUs in the paper's data), then growing with ln(N/128).
+const STRAGGLER_KNEE: f64 = 128.0;
+const STRAGGLER_SLOPE: f64 = 0.085;
+
+impl NetworkModel {
+    pub fn new(cluster: &ClusterConfig, n_gpus: u64) -> Self {
+        let nf = n_gpus as f64;
+        let straggler = if nf > STRAGGLER_KNEE {
+            1.0 + STRAGGLER_SLOPE * (nf / STRAGGLER_KNEE).ln()
+        } else {
+            1.0
+        };
+        Self {
+            bandwidth: cluster.job_bandwidth(n_gpus),
+            // The simulator (unlike the paper's ε=0 closed-form sims) uses a
+            // realistic per-hop NCCL latency.
+            latency: if cluster.latency > 0.0 { cluster.latency } else { 8e-6 },
+            n: n_gpus,
+            straggler,
+        }
+    }
+
+    /// Wall time of a ring all-gather of `bytes` across the job.
+    pub fn all_gather(&self, bytes: f64) -> f64 {
+        comms::ring_all_gather(bytes, self.n, self.bandwidth, self.latency) * self.straggler
+    }
+
+    /// Wall time of a ring reduce-scatter of `bytes` across the job.
+    pub fn reduce_scatter(&self, bytes: f64) -> f64 {
+        comms::ring_reduce_scatter(bytes, self.n, self.bandwidth, self.latency) * self.straggler
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterConfig {
+        ClusterConfig::preset("40GB-A100-200Gbps").unwrap()
+    }
+
+    #[test]
+    fn intra_node_jobs_are_fast() {
+        let n4 = NetworkModel::new(&cluster(), 4);
+        let n8 = NetworkModel::new(&cluster(), 8);
+        assert!(n4.bandwidth > n8.bandwidth * 10.0);
+        assert!(n4.all_gather(1e9) < n8.all_gather(1e9));
+    }
+
+    #[test]
+    fn straggler_kicks_in_above_128() {
+        assert_eq!(NetworkModel::new(&cluster(), 128).straggler, 1.0);
+        let s256 = NetworkModel::new(&cluster(), 256).straggler;
+        let s512 = NetworkModel::new(&cluster(), 512).straggler;
+        assert!(s256 > 1.0 && s512 > s256);
+        assert!(s512 < 1.25, "tax stays modest: {s512}");
+    }
+
+    #[test]
+    fn latency_floor_applied() {
+        let n = NetworkModel::new(&cluster(), 8);
+        assert!(n.latency > 0.0);
+        // An empty all-gather still pays (n-1) hops of latency.
+        assert!(n.all_gather(0.0) > 0.0);
+    }
+
+    #[test]
+    fn bandwidth_scales_between_clusters() {
+        let hi = NetworkModel::new(&ClusterConfig::preset("40GB-A100-200Gbps").unwrap(), 8);
+        let lo = NetworkModel::new(&ClusterConfig::preset("40GB-A100-100Gbps").unwrap(), 8);
+        let t_hi = hi.all_gather(25e9);
+        let t_lo = lo.all_gather(25e9);
+        assert!((t_lo / t_hi - 2.0).abs() < 0.01, "{}", t_lo / t_hi);
+    }
+}

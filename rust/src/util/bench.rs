@@ -1,0 +1,160 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! `harness = false` bench targets call [`Bench::case`] per case; it warms
+//! up, picks an iteration count targeting ~0.5 s, measures batches, and
+//! prints `name  median  mean ± stddev  iters` lines plus an optional
+//! throughput figure. Results are also collected so a bench binary can dump
+//! machine-readable JSON at the end.
+
+use std::time::Instant;
+
+use super::json::Json;
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub iters: u64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("median_ns".into(), Json::Num(self.median_ns));
+        m.insert("mean_ns".into(), Json::Num(self.mean_ns));
+        m.insert("stddev_ns".into(), Json::Num(self.stddev_ns));
+        m.insert("iters".into(), Json::Num(self.iters as f64));
+        if let Some(items) = self.items {
+            m.insert("items_per_iter".into(), Json::Num(items));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Harness state for one bench binary.
+pub struct Bench {
+    pub results: Vec<BenchResult>,
+    /// Batches per measurement (median over these).
+    batches: usize,
+    /// Target wall time per case (seconds).
+    target: f64,
+    /// Quick mode for CI (`FSDP_BW_BENCH_QUICK=1`): fewer, shorter batches.
+    quick: bool,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let quick = std::env::var_os("FSDP_BW_BENCH_QUICK").is_some();
+        Self {
+            results: Vec::new(),
+            batches: if quick { 5 } else { 15 },
+            target: if quick { 0.05 } else { 0.5 },
+            quick,
+        }
+    }
+
+    /// Measure `f`, reporting `items` units of work per call (for
+    /// throughput lines); pass 0 to suppress throughput.
+    pub fn case<T>(&mut self, name: &str, items: f64, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warm-up + calibration: how many iters fit the per-batch budget?
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let per_batch = (self.target / self.batches as f64 / once).ceil().max(1.0) as u64;
+
+        let mut samples = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t = Instant::now();
+            for _ in 0..per_batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() * 1e9 / per_batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("no NaN timings"));
+        let median = samples[samples.len() / 2];
+        let mean = crate::util::mean(&samples);
+        let stddev = crate::util::stddev(&samples);
+
+        let result = BenchResult {
+            name: name.to_string(),
+            median_ns: median,
+            mean_ns: mean,
+            stddev_ns: stddev,
+            iters: per_batch * self.batches as u64,
+            items: if items > 0.0 { Some(items) } else { None },
+        };
+        let thr = result
+            .items
+            .map(|it| format!("  {:>10.3e} items/s", it / (median / 1e9)))
+            .unwrap_or_default();
+        println!(
+            "{:<48} {:>12}  ±{:>8}  ({} iters){}",
+            result.name,
+            fmt_ns(median),
+            fmt_ns(stddev),
+            result.iters,
+            thr
+        );
+        self.results.push(result);
+        self.results.last().expect("just pushed")
+    }
+
+    /// Emit all results as a JSON array (for EXPERIMENTS.md bookkeeping).
+    pub fn dump_json(&self) -> String {
+        Json::Arr(self.results.iter().map(|r| r.to_json()).collect()).pretty()
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+}
+
+/// Human-friendly nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("FSDP_BW_BENCH_QUICK", "1");
+        let mut b = Bench::new();
+        let r = b.case("noop-ish", 1.0, || std::hint::black_box(1 + 1)).clone();
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters > 0);
+        assert_eq!(b.results.len(), 1);
+        let json = b.dump_json();
+        assert!(json.contains("noop-ish"));
+    }
+
+    #[test]
+    fn formats_ranges() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,202 @@
+//! A small MPMC channel on `Mutex<VecDeque>` + `Condvar`.
+//!
+//! `std::sync::mpsc` receivers are `!Sync`, which makes storing a full mesh
+//! of channels inside one shared `Fabric` awkward; this channel is `Sync`
+//! on both ends and supports optional capacity bounds (senders block when
+//! full) and disconnection.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+}
+
+/// Sending half (cloneable).
+pub struct Sender<T>(Arc<Inner<T>>);
+
+/// Receiving half (cloneable).
+pub struct Receiver<T>(Arc<Inner<T>>);
+
+/// Errors.
+#[derive(Debug, PartialEq, Eq)]
+pub struct SendError;
+#[derive(Debug, PartialEq, Eq)]
+pub struct RecvError;
+
+/// Create a channel; `capacity = 0` means unbounded.
+pub fn channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(Inner {
+        queue: Mutex::new(State { items: VecDeque::new(), senders: 1, receivers: 1 }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        capacity,
+    });
+    (Sender(inner.clone()), Receiver(inner))
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; errors when all receivers are gone.
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut st = self.0.queue.lock().expect("channel poisoned");
+        loop {
+            if st.receivers == 0 {
+                return Err(SendError);
+            }
+            if self.0.capacity == 0 || st.items.len() < self.0.capacity {
+                st.items.push_back(item);
+                self.0.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.0.not_full.wait(st).expect("channel poisoned");
+        }
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.0.queue.lock().expect("channel poisoned").senders += 1;
+        Sender(self.0.clone())
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.queue.lock().expect("channel poisoned");
+        st.senders -= 1;
+        if st.senders == 0 {
+            self.0.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; errors when empty and all senders are gone.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.0.queue.lock().expect("channel poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.0.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.senders == 0 {
+                return Err(RecvError);
+            }
+            st = self.0.not_empty.wait(st).expect("channel poisoned");
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.0.queue.lock().expect("channel poisoned");
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.0.not_full.notify_one();
+        }
+        item
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.0.queue.lock().expect("channel poisoned").receivers += 1;
+        Receiver(self.0.clone())
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.0.queue.lock().expect("channel poisoned");
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            self.0.not_full.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = channel::<u32>(0);
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+        assert_eq!(rx.try_recv(), None);
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let (tx, rx) = channel::<u64>(4);
+        let h = std::thread::spawn(move || {
+            for i in 0..1000 {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut sum = 0;
+        for _ in 0..1000 {
+            sum += rx.recv().unwrap();
+        }
+        h.join().unwrap();
+        assert_eq!(sum, 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn bounded_blocks_then_drains() {
+        let (tx, rx) = channel::<u8>(1);
+        tx.send(1).unwrap();
+        let t = std::thread::spawn(move || tx.send(2).unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn disconnect_errors() {
+        let (tx, rx) = channel::<u8>(0);
+        drop(rx);
+        assert_eq!(tx.send(1), Err(SendError));
+        let (tx, rx) = channel::<u8>(0);
+        drop(tx);
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn many_producers() {
+        let (tx, rx) = channel::<usize>(0);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    tx.send(t * 100 + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut got = Vec::new();
+        while let Ok(v) = rx.recv() {
+            got.push(v);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..400).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments, with typed
+//! getters and an unknown-flag check.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: positionals + `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, Option<String>>,
+}
+
+impl Args {
+    /// Parse a raw arg list (without `argv[0]`). `flags` lists option names
+    /// that take **no** value; every other `--name` consumes the next token
+    /// as its value.
+    pub fn parse(raw: &[String], flags: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), Some(v.to_string()));
+                } else if flags.contains(&name) {
+                    out.options.insert(name.to_string(), None);
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{name} expects a value"))?;
+                    out.options.insert(name.to_string(), Some(v.clone()));
+                }
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Was `--name` present (as a flag or with a value)?
+    pub fn flag(&self, name: &str) -> bool {
+        self.options.contains_key(name)
+    }
+
+    /// String option with default.
+    pub fn str_opt(&self, name: &str, default: &str) -> String {
+        match self.options.get(name) {
+            Some(Some(v)) => v.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    /// Optional string option.
+    pub fn str_maybe(&self, name: &str) -> Option<String> {
+        self.options.get(name).and_then(|v| v.clone())
+    }
+
+    /// Typed numeric option with default.
+    pub fn num_opt<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            Some(Some(v)) => v
+                .parse::<T>()
+                .map_err(|e| anyhow!("--{name} {v:?}: {e}")),
+            Some(None) => bail!("--{name} expects a value"),
+            None => Ok(default),
+        }
+    }
+
+    /// Error on options outside the allowed set (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}; known: {}", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&v(&["simulate", "--model", "13B", "--empty-cache", "--gpus=8"]), &["empty-cache"]).unwrap();
+        assert_eq!(a.positional, vec!["simulate"]);
+        assert_eq!(a.str_opt("model", "x"), "13B");
+        assert!(a.flag("empty-cache"));
+        assert_eq!(a.num_opt("gpus", 1u64).unwrap(), 8);
+        assert_eq!(a.num_opt("seq", 512u64).unwrap(), 512);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&v(&["--model"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&v(&["--gpus", "eight"]), &[]).unwrap();
+        assert!(a.num_opt("gpus", 1u64).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = Args::parse(&v(&["--modle", "13B"]), &[]).unwrap();
+        assert!(a.check_known(&["model"]).is_err());
+        assert!(a.check_known(&["modle"]).is_ok());
+    }
+}

@@ -1,0 +1,141 @@
+//! Shared substrates built in-tree for the offline environment: JSON,
+//! channels, CLI parsing, a bench harness, temp dirs, a deterministic RNG,
+//! and small stats helpers.
+
+pub mod bench;
+pub mod channel;
+pub mod cli;
+pub mod json;
+pub mod tempdir;
+
+/// Format bytes as GiB with two decimals (paper convention).
+pub fn gib(bytes: f64) -> String {
+    format!("{:.2}", bytes / (1024.0 * 1024.0 * 1024.0))
+}
+
+/// xorshift64* — tiny deterministic RNG for synthetic data and jitter.
+/// Not cryptographic; seeded explicitly so every run reproduces.
+#[derive(Debug, Clone)]
+pub struct Rng64 {
+    state: u64,
+}
+
+impl Rng64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        (self.next_f64() * n as f64) as u64 % n.max(1)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` — synthetic token
+    /// corpus generator (natural-language-ish frequency profile).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        // Inverse-CDF on the truncated continuous Zipf approximation.
+        let u = self.next_f64();
+        if (s - 1.0).abs() < 1e-9 {
+            let h = (n as f64).ln();
+            return (((u * h).exp() - 1.0).floor() as u64).min(n - 1);
+        }
+        let a = 1.0 - s;
+        let h = ((n as f64).powf(a) - 1.0) / a;
+        ((((u * h * a) + 1.0).powf(1.0 / a) - 1.0).floor() as u64).min(n - 1)
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Relative difference |a-b| / max(|a|,|b|,eps).
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng64::new(42);
+        let mut b = Rng64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_uniform_range() {
+        let mut r = Rng64::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let k = r.below(17);
+            assert!(k < 17);
+        }
+    }
+
+    #[test]
+    fn zipf_favors_low_ranks() {
+        let mut r = Rng64::new(3);
+        let mut counts = vec![0u64; 100];
+        for _ in 0..50_000 {
+            counts[r.zipf(100, 1.1) as usize] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[90]);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng64::new(11);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.normal()).collect();
+        assert!(mean(&xs).abs() < 0.03);
+        assert!((stddev(&xs) - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn stats_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+        assert!(rel_diff(1.0, 1.0) < 1e-12);
+        assert!((rel_diff(1.0, 2.0) - 0.5).abs() < 1e-12);
+    }
+}

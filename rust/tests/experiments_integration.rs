@@ -1,0 +1,83 @@
+//! Integration: every experiment regenerates, renders in all formats, and
+//! the cross-experiment invariants hold.
+
+use fsdp_bw::experiments;
+
+#[test]
+fn every_experiment_renders_text_csv_json() {
+    for id in experiments::EXPERIMENT_IDS {
+        let rep = experiments::run(id).unwrap_or_else(|e| panic!("{id}: {e}"));
+        let text = rep.to_text();
+        assert!(text.contains(&rep.id), "{id} text");
+        let json = rep.to_json();
+        let parsed = fsdp_bw::util::json::Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_str().unwrap(), *id);
+        for t in &rep.tables {
+            let csv = t.to_csv();
+            assert_eq!(csv.lines().count(), t.rows.len() + 1, "{id}/{}", t.title);
+        }
+    }
+}
+
+/// Fig 1 ↔ Fig 4 consistency: the grid-search overlay in fig4 must agree
+/// with fig1's full-checkpoint panel at 512 GPUs on the 200 Gbps cluster.
+#[test]
+fn fig1_and_fig4_overlay_agree() {
+    let fig1 = experiments::run("fig1").unwrap();
+    let fig4 = experiments::run("fig4").unwrap();
+    let panel = &fig1.tables[0]; // ZeRO-3 + full ckpt
+    let overlay = fig4
+        .tables
+        .iter()
+        .find(|t| t.title.contains("overlay"))
+        .expect("overlay table");
+    let overlay_512 = overlay.rows.iter().find(|r| r[0] == "512").unwrap();
+    // fig1 rows: model, cluster, mfu, …  (7 models × 2 clusters)
+    for (col, model) in ["1.3B", "7B", "13B"].iter().enumerate() {
+        let fig1_mfu: f64 = panel
+            .rows
+            .iter()
+            .find(|r| r[0] == *model && r[1] == "40GB-A100-200Gbps")
+            .unwrap()[2]
+            .parse()
+            .unwrap();
+        let overlay_mfu: f64 = overlay_512[col + 1].parse().unwrap();
+        assert!(
+            (fig1_mfu - overlay_mfu).abs() < 0.02,
+            "{model}: fig1 {fig1_mfu} vs fig4 overlay {overlay_mfu}"
+        );
+    }
+}
+
+/// The bandwidth ordering holds across EVERY simulated table pair
+/// (200 Gbps ≥ 100 Gbps cell-wise) in fig4.
+#[test]
+fn fig4_bandwidth_ordering_cellwise() {
+    let rep = experiments::run("fig4").unwrap();
+    let hi = &rep.tables[0]; // MFU 200Gbps
+    let lo = &rep.tables[4]; // MFU 100Gbps
+    for (a, b) in hi.rows.iter().zip(&lo.rows) {
+        for (x, y) in a[1..].iter().zip(&b[1..]) {
+            if let (Ok(x), Ok(y)) = (x.parse::<f64>(), y.parse::<f64>()) {
+                assert!(x >= y - 1e-9, "row {}: {x} < {y}", a[0]);
+            }
+        }
+    }
+}
+
+/// MFU cells are probabilities-of-peak: all within (0, 1).
+#[test]
+fn mfu_cells_in_range() {
+    for id in ["fig4", "fig8", "fig9", "fig10"] {
+        let rep = experiments::run(id).unwrap();
+        for t in rep.tables.iter().filter(|t| t.title.contains("MFU")) {
+            for row in &t.rows {
+                for cell in &row[1..] {
+                    if let Ok(v) = cell.parse::<f64>() {
+                        assert!(v > 0.0 && v < 1.0, "{id}/{}: {v}", t.title);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Randomized property tests over the whole analytical + simulation stack
+//! (hand-rolled sweeps on the in-tree deterministic RNG; no proptest in
+//! the offline build). Each property runs hundreds of random
+//! (model, cluster, config, N) points.
+
+use fsdp_bw::analysis::StepModel;
+use fsdp_bw::config::{ClusterConfig, ModelConfig, TrainingConfig};
+use fsdp_bw::simulator::{simulate_step, AllocatorModel, EfficiencyModel};
+use fsdp_bw::util::Rng64;
+
+struct Sampler {
+    rng: Rng64,
+    models: Vec<ModelConfig>,
+    clusters: Vec<ClusterConfig>,
+}
+
+impl Sampler {
+    fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng64::new(seed),
+            models: ModelConfig::presets(),
+            clusters: ClusterConfig::table3_presets(),
+        }
+    }
+
+    fn point(&mut self) -> (ModelConfig, ClusterConfig, TrainingConfig, u64) {
+        let m = self.models[self.rng.below(self.models.len() as u64) as usize].clone();
+        let c = self.clusters[self.rng.below(self.clusters.len() as u64) as usize].clone();
+        let seq = 256 * (1 + self.rng.below(128));
+        let batch = 1 + self.rng.below(16);
+        let gamma = self.rng.next_f64();
+        let n = [4u64, 8, 16, 32, 64, 128, 256, 512][self.rng.below(8) as usize];
+        let cfg = TrainingConfig::paper_default(seq, batch).with_gamma(gamma);
+        (m, c, cfg, n)
+    }
+}
+
+/// Eq 11 identity holds at every random point: α_MFU = 3/(4−γ)·α_HFU.
+#[test]
+fn mfu_hfu_identity_everywhere() {
+    let mut s = Sampler::new(1);
+    for _ in 0..300 {
+        let (m, c, cfg, n) = s.point();
+        let sm = StepModel::new(&m, &c, &cfg, n);
+        let alpha = 0.1 + 0.85 * s.rng.next_f64();
+        let met = sm.metrics(alpha);
+        let expect = 3.0 / (4.0 - cfg.gamma) * met.hfu;
+        assert!(
+            (met.mfu - expect).abs() < 1e-9,
+            "{} γ={} α={alpha}: {} vs {}",
+            m.name,
+            cfg.gamma,
+            met.mfu,
+            expect
+        );
+    }
+}
+
+/// Achieved HFU never exceeds the assumed kernel efficiency α̂ — the step
+/// model can only lose time to communication, never create compute.
+#[test]
+fn hfu_never_exceeds_alpha() {
+    let mut s = Sampler::new(2);
+    for _ in 0..300 {
+        let (m, c, cfg, n) = s.point();
+        let sm = StepModel::new(&m, &c, &cfg, n);
+        let alpha = 0.1 + 0.85 * s.rng.next_f64();
+        let met = sm.metrics(alpha);
+        assert!(met.hfu <= alpha + 1e-9, "{}: hfu {} > α̂ {alpha}", m.name, met.hfu);
+    }
+}
+
+/// Eq 15 (K ≤ M_free·S/(24Q²L²H³)) holds for every random point at memory
+/// capacity — T ≥ 2·T_transfer always under Eq 9.
+#[test]
+fn throughput_bound_universal() {
+    let mut s = Sampler::new(3);
+    for _ in 0..300 {
+        let (m, c, cfg, n) = s.point();
+        let sm = StepModel::new(&m, &c, &cfg, n);
+        let mem = sm.memory();
+        if !mem.fits() || mem.capacity_tokens < 1.0 {
+            continue;
+        }
+        let b = sm.bounds();
+        let alpha = 0.1 + 0.85 * s.rng.next_f64();
+        let bd = fsdp_bw::analysis::step::breakdown(&sm, alpha, mem.capacity_tokens);
+        let met = fsdp_bw::analysis::metrics::from_breakdown(&sm, &bd);
+        assert!(
+            met.tgs <= b.k_max * (1.0 + 1e-9),
+            "{} n={n}: K {} > bound {}",
+            m.name,
+            met.tgs,
+            b.k_max
+        );
+    }
+}
+
+/// Bandwidth monotonicity of the simulator: more Gbps never lowers MFU.
+#[test]
+fn simulator_monotone_in_bandwidth() {
+    let mut s = Sampler::new(4);
+    let eff = EfficiencyModel::default();
+    for _ in 0..120 {
+        let (m, _, cfg, n) = s.point();
+        let mk = |gbps: f64| {
+            let mut c = ClusterConfig::new("sweep", 128, 4, fsdp_bw::config::GpuSpec::a100_40gb(), gbps);
+            c.latency = 0.0;
+            simulate_step(&m, &c, &cfg, n, &eff)
+        };
+        let lo = mk(50.0);
+        let hi = mk(400.0);
+        if lo.oom || hi.oom {
+            continue;
+        }
+        assert!(
+            hi.mfu >= lo.mfu - 1e-9,
+            "{} n={n} seq={}: 400Gbps {} < 50Gbps {}",
+            m.name,
+            cfg.seq_len,
+            hi.mfu,
+            lo.mfu
+        );
+    }
+}
+
+/// Allocator monotonicity: active memory never decreases with batch,
+/// sequence length, or γ; OOM is monotone in N (more GPUs never OOM a
+/// config that fit with fewer).
+#[test]
+fn allocator_monotonicities() {
+    let mut s = Sampler::new(5);
+    for _ in 0..200 {
+        let (m, c, cfg, n) = s.point();
+        let base = AllocatorModel::new(&m, &c, &cfg, n);
+
+        let mut bigger_batch = cfg.clone();
+        bigger_batch.batch_per_gpu += 1;
+        assert!(AllocatorModel::new(&m, &c, &bigger_batch, n).active >= base.active);
+
+        let mut longer = cfg.clone();
+        longer.seq_len += 256;
+        assert!(AllocatorModel::new(&m, &c, &longer, n).active >= base.active);
+
+        let keep_more = cfg.clone().with_gamma((cfg.gamma + 0.3).min(1.0));
+        assert!(AllocatorModel::new(&m, &c, &keep_more, n).active >= base.active - 1.0);
+
+        if !base.oom() && n < 512 {
+            let more = AllocatorModel::new(&m, &c, &cfg, n * 2);
+            assert!(!more.oom(), "{} n={n}→{}: OOM appeared with more GPUs", m.name, n * 2);
+        }
+    }
+}
+
+/// Simulator sanity at every random point: finite positive step time,
+/// MFU/HFU in (0, 1.05), exposed comm ≤ step time.
+#[test]
+fn simulator_outputs_sane() {
+    let mut s = Sampler::new(6);
+    let eff = EfficiencyModel::default();
+    for _ in 0..300 {
+        let (m, c, cfg, n) = s.point();
+        let st = simulate_step(&m, &c, &cfg, n, &eff);
+        assert!(st.t_step.is_finite() && st.t_step > 0.0);
+        assert!(st.mfu > 0.0 && st.mfu < 1.05, "{}: mfu {}", m.name, st.mfu);
+        assert!(st.hfu > 0.0 && st.hfu < 1.4, "{}: hfu {}", m.name, st.hfu);
+        assert!(st.exposed_comm <= st.t_step + 1e-9);
+        assert!(st.tgs > 0.0);
+        assert!(st.active_gib > 0.0);
+        if !st.oom {
+            // Reserved saturates below capacity, so the invariant only
+            // holds for configurations that actually fit.
+            assert!(st.reserved_gib >= st.active_gib * 0.98);
+        }
+    }
+}
+
+/// Grid search best-MFU is invariant to doubling grid resolution beyond
+/// the paper's 0.01 (the optimum is not a grid artifact).
+#[test]
+fn gridsearch_resolution_stable() {
+    let m = ModelConfig::preset("13B").unwrap();
+    let c = ClusterConfig::preset("40GB-A100-200Gbps").unwrap();
+    let coarse = fsdp_bw::gridsearch::GridSearch::new(&m, &c, 64).run();
+    let mut fine = fsdp_bw::gridsearch::GridSearch::new(&m, &c, 64);
+    fine.step = 0.005;
+    let fine = fine.run();
+    let (a, b) = (coarse.best_mfu.unwrap().mfu, fine.best_mfu.unwrap().mfu);
+    assert!((a - b).abs() < 0.02, "coarse {a} vs fine {b}");
+}

@@ -1,0 +1,167 @@
+//! Integration: PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise —
+//! CI always builds artifacts first via the Makefile).
+
+use std::path::PathBuf;
+
+use fsdp_bw::runtime::{ArtifactManifest, ComputeServer, Executable, HostTensor};
+use fsdp_bw::util::Rng64;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn rand_tensor(rng: &mut Rng64, shape: &[usize]) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    HostTensor::f32(data, shape).unwrap()
+}
+
+/// The flash-attention kernel artifact and its jnp oracle artifact must
+/// produce identical numerics through the full PJRT path — the Rust-side
+/// analog of the pytest allclose check.
+#[test]
+fn kernel_matches_ref_through_pjrt() {
+    let dir = require_artifacts!();
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let (spec, kernel_path) = manifest.get("flash_attention").unwrap();
+    let (_, ref_path) = manifest.get("attention_ref").unwrap();
+
+    let mut rng = Rng64::new(42);
+    let shape = &spec.inputs[0].shape;
+    let inputs: Vec<HostTensor> = (0..3).map(|_| rand_tensor(&mut rng, shape)).collect();
+
+    let kernel = Executable::load("flash_attention", &kernel_path).unwrap();
+    let oracle = Executable::load("attention_ref", &ref_path).unwrap();
+    let a = kernel.run(&inputs).unwrap();
+    let b = oracle.run(&inputs).unwrap();
+    assert_eq!(a.len(), 1);
+    let (a, b) = (a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    assert_eq!(a.len(), b.len());
+    let max_diff = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-4, "kernel vs ref max diff {max_diff}");
+}
+
+/// Same for the fused layernorm kernel.
+#[test]
+fn layernorm_matches_ref_through_pjrt() {
+    let dir = require_artifacts!();
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let (spec, kernel_path) = manifest.get("layernorm").unwrap();
+    let (_, ref_path) = manifest.get("layernorm_ref").unwrap();
+
+    let mut rng = Rng64::new(7);
+    let x = rand_tensor(&mut rng, &spec.inputs[0].shape);
+    let scale = rand_tensor(&mut rng, &spec.inputs[1].shape);
+    let bias = rand_tensor(&mut rng, &spec.inputs[2].shape);
+    let inputs = vec![x, scale, bias];
+
+    let kernel = Executable::load("layernorm", &kernel_path).unwrap();
+    let oracle = Executable::load("layernorm_ref", &ref_path).unwrap();
+    let a = kernel.run(&inputs).unwrap();
+    let b = oracle.run(&inputs).unwrap();
+    let (a, b) = (a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    let max_diff = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "layernorm vs ref max diff {max_diff}");
+}
+
+/// The train_step artifact executes and returns (loss, grads…) with the
+/// manifest's shapes, finite values, and a loss near ln(vocab) at init.
+#[test]
+fn train_step_executes_with_sane_loss() {
+    let dir = require_artifacts!();
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let (spec, path) = manifest.get("train_step_tiny_b1").unwrap();
+
+    let param_specs: Vec<_> = spec
+        .inputs
+        .iter()
+        .filter(|s| s.name.starts_with("param."))
+        .cloned()
+        .collect();
+    let flat = fsdp_bw::coordinator::train::init_params(&param_specs, 42);
+
+    let mut inputs = Vec::new();
+    let mut off = 0;
+    for s in &param_specs {
+        inputs.push(HostTensor::f32(flat[off..off + s.elements()].to_vec(), &s.shape).unwrap());
+        off += s.elements();
+    }
+    let tok_spec = spec.inputs.iter().find(|s| s.name == "tokens").unwrap();
+    let ntok: usize = tok_spec.elements();
+    let vocab = param_specs[0].shape[0] as i32;
+    let mut rng = Rng64::new(3);
+    let toks: Vec<i32> = (0..ntok).map(|_| rng.below(vocab as u64) as i32).collect();
+    let targets: Vec<i32> = (0..ntok).map(|_| rng.below(vocab as u64) as i32).collect();
+    inputs.push(HostTensor::i32(toks, &tok_spec.shape).unwrap());
+    inputs.push(HostTensor::i32(targets, &tok_spec.shape).unwrap());
+
+    let exe = Executable::load("train_step_tiny_b1", &path).unwrap();
+    let outputs = exe.run(&inputs).unwrap();
+    assert_eq!(outputs.len(), param_specs.len() + 1);
+
+    let loss = outputs[0].as_f32().unwrap()[0];
+    assert!(loss.is_finite());
+    let expected = (vocab as f32).ln();
+    assert!((loss - expected).abs() < 0.5, "loss {loss} vs ln(vocab) {expected}");
+
+    for (out, s) in outputs[1..].iter().zip(&param_specs) {
+        assert_eq!(out.shape(), &s.shape[..], "{}", s.name);
+        assert!(out.as_f32().unwrap().iter().all(|x| x.is_finite()), "{}", s.name);
+    }
+}
+
+/// The compute server serves concurrent clients correctly.
+#[test]
+fn compute_server_concurrent_clients() {
+    let dir = require_artifacts!();
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let (spec, path) = manifest.get("layernorm").unwrap();
+    let server = ComputeServer::spawn(vec![("layernorm".to_string(), path)]).unwrap();
+
+    let shape = spec.inputs[0].shape.clone();
+    let hid = spec.inputs[1].shape[0];
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let h = server.handle();
+        let shape = shape.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng64::new(t + 1);
+            for _ in 0..5 {
+                let x = rand_tensor(&mut rng, &shape);
+                let s = HostTensor::f32(vec![1.0; hid], &[hid]).unwrap();
+                let b = HostTensor::f32(vec![0.0; hid], &[hid]).unwrap();
+                let out = h.execute("layernorm", vec![x, s, b]).unwrap();
+                assert_eq!(out[0].shape(), &shape[..]);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Unknown artifact errors cleanly rather than wedging the server.
+    let h = server.handle();
+    assert!(h.execute("nope", vec![]).is_err());
+}

@@ -1,0 +1,170 @@
+//! Integration: the full FSDP trainer over real artifacts.
+//!
+//! The centerpiece is the **parity test**: training the same model with
+//! the same global batch as (a) one rank with local batch 4 and (b) four
+//! FSDP ranks with local batch 1 must produce the same loss trajectory —
+//! the definition of correct ZeRO-3 data parallelism (gradients are mean-
+//! reduced, so the two factorizations compute the same update, modulo f32
+//! reduction order).
+
+use std::path::PathBuf;
+
+use fsdp_bw::coordinator::{FabricConfig, TrainParams, Trainer};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+fn params(artifact: &str, dir: PathBuf, ranks: usize, steps: u64) -> TrainParams {
+    let mut p = TrainParams::new(artifact, dir, ranks, steps);
+    p.fabric = FabricConfig { bandwidth: 25e9, latency: 8e-6 };
+    p.seed = 1234;
+    p
+}
+
+/// Loss decreases over a short tiny-model run on 2 FSDP ranks.
+#[test]
+fn fsdp_training_reduces_loss() {
+    let dir = require_artifacts!();
+    let report = Trainer::run(&params("train_step_tiny_b4", dir, 2, 40)).unwrap();
+    let (head, tail) = report.log.loss_drop(5).unwrap();
+    assert!(
+        tail < head - 0.15,
+        "loss must decrease: head {head:.4} -> tail {tail:.4}"
+    );
+    assert!(report.final_loss.is_finite());
+    // ln(256) ≈ 5.55 at init; must end below.
+    assert!(report.final_loss < 5.45, "final {}", report.final_loss);
+}
+
+/// FSDP parity: 1 rank × batch 4  ≡  4 ranks × batch 1 (same seed ⇒ same
+/// global batch), loss curves match to f32 reduction tolerance.
+///
+/// NOTE: the synthetic corpus indexes sequences by (step, rank, n_ranks,
+/// batch) such that the global set of sequence indices per step is
+/// {step·G .. step·G+G-1} for global batch G in both factorizations.
+#[test]
+fn fsdp_parity_one_vs_four_ranks() {
+    let dir = require_artifacts!();
+    let a = Trainer::run(&params("train_step_tiny_b4", dir.clone(), 1, 12)).unwrap();
+    let b = Trainer::run(&params("train_step_tiny_b1", dir, 4, 12)).unwrap();
+    let la = a.log.losses();
+    let lb = b.log.losses();
+    assert_eq!(la.len(), lb.len());
+    for (i, (x, y)) in la.iter().zip(&lb).enumerate() {
+        assert!(
+            (x - y).abs() < 2e-3,
+            "step {i}: 1-rank loss {x} vs 4-rank loss {y}"
+        );
+    }
+    // Final parameters agree too (schedule-invariance of the whole state).
+    assert_eq!(a.final_params.len(), b.final_params.len());
+    let max_diff = a
+        .final_params
+        .iter()
+        .zip(&b.final_params)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 5e-3, "final param max diff {max_diff}");
+}
+
+/// The fabric meters real traffic: per-step bytes equal the ring formulas
+/// (3 collectives × (n−1)/n × padded params × 4 bytes, plus the scalar
+/// all-reduces).
+#[test]
+fn measured_traffic_matches_ring_math() {
+    let dir = require_artifacts!();
+    let n = 4usize;
+    let report = Trainer::run(&params("train_step_tiny_b1", dir, n, 3)).unwrap();
+    let s = &report.log.steps[1];
+    // padded flat params
+    let total = 133_760usize;
+    let shard = total.div_ceil(n);
+    let padded = shard * n;
+    let ring = |bytes: usize| bytes * (n - 1) / n;
+    // AG params + RS grads + AG (from the final all_gather inside
+    // all_reduce of 2 scalars: negligible but counted) …
+    let expected_min = (ring(padded * 4) * 2) as u64; // params AG + grads RS
+    assert!(
+        s.bytes_tx >= expected_min,
+        "bytes {} < ring minimum {expected_min}",
+        s.bytes_tx
+    );
+    assert!(
+        s.bytes_tx < expected_min + 10_000,
+        "bytes {} far above ring minimum {expected_min}",
+        s.bytes_tx
+    );
+    // Modeled comm time consistent with bandwidth model.
+    assert!(s.t_comm_modeled > 0.0);
+    assert!(s.r_modeled().is_finite());
+}
+
+/// Different fabric bandwidths change modeled comm time proportionally
+/// (the real-path analog of the paper's bandwidth study).
+#[test]
+fn modeled_comm_scales_with_bandwidth() {
+    let dir = require_artifacts!();
+    // Zero modeled latency so the bytes/bandwidth term is isolated (the
+    // tiny model's traffic is small enough for 8 µs hops to dominate).
+    let mut hi = params("train_step_tiny_b1", dir.clone(), 2, 3);
+    hi.fabric = FabricConfig { bandwidth: 25e9, latency: 0.0 };
+    let mut lo = params("train_step_tiny_b1", dir, 2, 3);
+    lo.fabric = FabricConfig { bandwidth: 12.5e9, latency: 0.0 };
+    let a = Trainer::run(&hi).unwrap();
+    let b = Trainer::run(&lo).unwrap();
+    let ta = a.log.steps[1].t_comm_modeled;
+    let tb = b.log.steps[1].t_comm_modeled;
+    let ratio = tb / ta;
+    assert!((1.9..=2.1).contains(&ratio), "ratio {ratio} (ta={ta}, tb={tb})");
+}
+
+/// Unknown artifact name fails cleanly.
+#[test]
+fn unknown_artifact_errors() {
+    let dir = require_artifacts!();
+    let err = Trainer::run(&params("train_step_nonexistent", dir, 1, 1));
+    assert!(err.is_err());
+}
+
+/// Checkpoint/resume: 20 straight steps ≡ 10 steps + save + resume + 10
+/// steps — identical final parameters (bit-exact: same data order, same
+/// Adam state).
+#[test]
+fn checkpoint_resume_is_exact() {
+    let dir = require_artifacts!();
+    let ckpt = fsdp_bw::util::tempdir::TempDir::new().unwrap();
+
+    let straight = Trainer::run(&params("train_step_tiny_b1", dir.clone(), 2, 20)).unwrap();
+
+    let mut first = params("train_step_tiny_b1", dir.clone(), 2, 10);
+    first.checkpoint_dir = Some(ckpt.path().to_path_buf());
+    Trainer::run(&first).unwrap();
+    let mut second = params("train_step_tiny_b1", dir, 2, 10);
+    second.checkpoint_dir = Some(ckpt.path().to_path_buf());
+    let resumed = Trainer::run(&second).unwrap();
+
+    assert_eq!(straight.final_params.len(), resumed.final_params.len());
+    let max_diff = straight
+        .final_params
+        .iter()
+        .zip(&resumed.final_params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-7, "resume must be exact: max diff {max_diff}");
+    // The resumed run continued the data stream (steps 10..20).
+    assert_eq!(resumed.log.steps[0].step, 10);
+}
