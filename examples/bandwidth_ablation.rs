@@ -2,97 +2,95 @@
 //! increase training efficiency by 9% for the 7B and 13B models") swept
 //! across a bandwidth range, on BOTH stacks:
 //!
-//! 1. the calibrated cluster simulator (paper-scale models), and
+//! 1. the calibrated cluster simulator via the **sweep engine**
+//!    (`sweep.cluster.inter_node_gbps` axis, paper-scale models), and
 //! 2. the real FSDP runtime (27M model, fabric bandwidth swept) — the same
-//!    experiment executed rather than modeled, using modeled comm time on
-//!    metered real traffic.
+//!    experiment executed rather than modeled; requires `--features xla`
+//!    and `make artifacts`.
 //!
 //! ```bash
 //! cargo run --release --example bandwidth_ablation            # simulator only
 //! cargo run --release --example bandwidth_ablation -- --real  # + real runtime
 //! ```
 
-use std::path::PathBuf;
-
 use anyhow::Result;
-use fsdp_bw::config::{gbps_to_bytes_per_sec, ClusterConfig, ModelConfig, TrainingConfig};
-use fsdp_bw::coordinator::{FabricConfig, TrainParams, Trainer};
-use fsdp_bw::simulator::{simulate_step, EfficiencyModel};
+use fsdp_bw::eval::{backends_for, run_sweep, Sweep};
 use fsdp_bw::util::cli::Args;
+
+const GBPS_AXIS: &str = "25,50,100,200,400,800";
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw, &["real"])?;
     args.check_known(&["real"])?;
 
-    println!("== simulator: MFU vs per-GPU bandwidth (paper models, 8 GPUs) ==");
-    println!("{:>8} {:>10} {:>10} {:>10}", "Gbps", "7B", "13B", "30B@32");
-    let eff = EfficiencyModel::default();
-    let mut base: Option<(f64, f64, f64)> = None;
-    for gbps in [25.0, 50.0, 100.0, 200.0, 400.0, 800.0] {
-        let mut cluster = ClusterConfig::new(
-            "sweep",
-            128,
-            4,
-            fsdp_bw::config::GpuSpec::a100_40gb(),
-            gbps,
+    println!("== simulator: MFU vs per-GPU bandwidth (sweep engine) ==");
+    println!("{:>10} {:>6} {:>8} {:>10} {:>10}", "model", "GPUs", "ctx", "Gbps", "MFU");
+    let backends = backends_for("simulated")?;
+    for (model, seq, n_gpus) in [("7B", 36_864u64, 8u64), ("13B", 10_240, 8), ("30B", 12_288, 32)] {
+        let text = format!(
+            "model = {model}\nn_gpus = {n_gpus}\nseq_len = {seq}\nbatch = 1\n\
+             sweep.cluster.inter_node_gbps = {GBPS_AXIS}\n"
         );
-        cluster.latency = 0.0;
-        let m7 = simulate_step(
-            &ModelConfig::preset("7B").unwrap(),
-            &cluster,
-            &TrainingConfig::bs1_max_ctx(36_864),
-            8,
-            &eff,
-        );
-        let m13 = simulate_step(
-            &ModelConfig::preset("13B").unwrap(),
-            &cluster,
-            &TrainingConfig::bs1_max_ctx(10_240),
-            8,
-            &eff,
-        );
-        let m30 = simulate_step(
-            &ModelConfig::preset("30B").unwrap(),
-            &cluster,
-            &TrainingConfig::bs1_max_ctx(12_288),
-            32,
-            &eff,
-        );
-        println!(
-            "{gbps:>8.0} {:>10.3} {:>10.3} {:>10.3}",
-            m7.mfu, m13.mfu, m30.mfu
-        );
-        if gbps == 100.0 {
-            base = Some((m7.mfu, m13.mfu, m30.mfu));
+        let sweep = Sweep::parse(&text)?;
+        let report = run_sweep(&sweep, &backends, 4);
+        let mut at_100 = None;
+        let mut at_200 = None;
+        for p in &report.points {
+            let gbps = p.point[0].1.clone();
+            let mfu = p.evals[0].metrics.map(|m| m.mfu).unwrap_or(f64::NAN);
+            println!("{model:>10} {n_gpus:>6} {seq:>8} {gbps:>10} {mfu:>10.3}");
+            if gbps == "100" {
+                at_100 = Some(mfu);
+            }
+            if gbps == "200" {
+                at_200 = Some(mfu);
+            }
         }
-        if gbps == 200.0 {
-            let (b7, b13, b30) = base.expect("100 Gbps row first");
+        if let (Some(lo), Some(hi)) = (at_100, at_200) {
             println!(
-                "         2× gain: 7B {:+.1}%  13B {:+.1}%  30B {:+.1}%   (paper: ≈ +9%)",
-                (m7.mfu / b7 - 1.0) * 100.0,
-                (m13.mfu / b13 - 1.0) * 100.0,
-                (m30.mfu / b30 - 1.0) * 100.0
+                "{:>10} 2× bandwidth (100→200 Gbps) gain: {:+.1}%   (paper: ≈ +9%)",
+                model,
+                (hi / lo - 1.0) * 100.0
             );
         }
     }
 
     if args.flag("real") {
-        println!("\n== real FSDP runtime: modeled step time vs fabric bandwidth (27M, 4 ranks) ==");
-        println!("{:>8} {:>12} {:>12} {:>8}", "Gbps", "comm (s)", "compute (s)", "R");
-        for gbps in [10.0, 25.0, 50.0, 100.0, 200.0] {
-            let mut p = TrainParams::new("train_step_27m", PathBuf::from("artifacts"), 4, 4);
-            p.fabric = FabricConfig { bandwidth: gbps_to_bytes_per_sec(gbps), latency: 0.0 };
-            let report = Trainer::run(&p)?;
-            let s = &report.log.steps[2];
-            println!(
-                "{gbps:>8.0} {:>12.4} {:>12.4} {:>8.3}",
-                s.t_comm_modeled,
-                s.t_compute,
-                s.r_modeled()
-            );
-        }
-        println!("(R < 1 ⇒ comm hideable behind compute; R crosses 1 exactly where Eq 10 predicts)");
+        real_runtime_section()?;
     }
+    Ok(())
+}
+
+/// The same ablation executed on the real FSDP runtime: modeled comm time
+/// on metered real traffic, fabric bandwidth swept.
+#[cfg(feature = "xla")]
+fn real_runtime_section() -> Result<()> {
+    use std::path::PathBuf;
+
+    use fsdp_bw::config::gbps_to_bytes_per_sec;
+    use fsdp_bw::coordinator::{FabricConfig, TrainParams, Trainer};
+
+    println!("\n== real FSDP runtime: modeled step time vs fabric bandwidth (27M, 4 ranks) ==");
+    println!("{:>8} {:>12} {:>12} {:>8}", "Gbps", "comm (s)", "compute (s)", "R");
+    for gbps in [10.0, 25.0, 50.0, 100.0, 200.0] {
+        let mut p = TrainParams::new("train_step_27m", PathBuf::from("artifacts"), 4, 4);
+        p.fabric = FabricConfig { bandwidth: gbps_to_bytes_per_sec(gbps), latency: 0.0 };
+        let report = Trainer::run(&p)?;
+        let s = &report.log.steps[2];
+        println!(
+            "{gbps:>8.0} {:>12.4} {:>12.4} {:>8.3}",
+            s.t_comm_modeled,
+            s.t_compute,
+            s.r_modeled()
+        );
+    }
+    println!("(R < 1 ⇒ comm hideable behind compute; R crosses 1 exactly where Eq 10 predicts)");
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn real_runtime_section() -> Result<()> {
+    println!("\n--real needs the PJRT runtime: rebuild with `--features xla` (plus `make artifacts`)");
     Ok(())
 }

@@ -4,14 +4,16 @@
 //!
 //! Uses Conclusion 2 (Eq 14): α_MFU ≤ (2 + l/3H) · 3/(4LHQ²) · S·M_free/S_F
 //! — solve for the required `S_volume · M_free` product, then scan the
-//! hardware registry.
+//! hardware registry through the [`fsdp_bw::eval`] backends.
 //!
 //! ```bash
 //! cargo run --release --example cluster_planner -- 30B 0.5 4096
 //! ```
 
-use fsdp_bw::config::{ClusterConfig, ModelConfig, Precision, TrainingConfig, GIB};
-use fsdp_bw::gridsearch::{max_ctx_bs1, GridSearch};
+use fsdp_bw::config::scenario::Scenario;
+use fsdp_bw::config::{ClusterConfig, ModelConfig, Precision, TrainingConfig};
+use fsdp_bw::eval::{BoundsEval, Evaluator, Searched};
+use fsdp_bw::gridsearch::max_ctx_bs1;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -26,21 +28,22 @@ fn main() {
     // Required S_volume·M_free product from Eq 14 (per unit S_FLOPs).
     let factor = (2.0 + seq as f64 / (3.0 * h)) * 3.0 / (4.0 * l * h * q * q);
     println!("plan for {model_name} at target MFU {target_mfu} (ctx {seq}):");
-    println!(
-        "required S_volume·M_free ≥ {target_mfu}/{factor:.3e} · S_FLOPs  (Eq 14)\n"
-    );
+    println!("required S_volume·M_free ≥ {target_mfu}/{factor:.3e} · S_FLOPs  (Eq 14)\n");
 
     println!(
         "{:<22} {:>7} {:>9} {:>9} {:>10} {:>8}",
         "cluster", "GPUs", "mfu_max", "peak MFU", "max ctx", "verdict"
     );
+    let n = 512;
     for cluster in ClusterConfig::table3_presets() {
-        let n = 512;
-        let cfg = TrainingConfig::bs1_max_ctx(seq);
-        let sm = fsdp_bw::analysis::StepModel::new(&model, &cluster, &cfg, n);
-        let bound = sm.bounds().mfu_max;
-        let search = GridSearch::new(&model, &cluster, n).run();
-        let peak = search.best_mfu.map(|p| p.mfu);
+        let scn = Scenario {
+            model: model.clone(),
+            cluster: cluster.clone(),
+            training: TrainingConfig::bs1_max_ctx(seq),
+            n_gpus: n,
+        };
+        let bound = BoundsEval.evaluate(&scn).bounds.expect("bounds backend").mfu_max;
+        let peak = Searched.evaluate(&scn).metrics.map(|m| m.mfu);
         let ctx = max_ctx_bs1(&model, &cluster, n);
         let verdict = match peak {
             Some(p) if p >= target_mfu => "OK",
@@ -58,18 +61,16 @@ fn main() {
         );
     }
 
-    // Minimum-bandwidth scan on the A100-40GB cluster shape.
+    // Minimum-bandwidth scan on the A100-40GB cluster shape, expressed as
+    // scenario-dialect overrides on the default preset.
     println!("\nminimum per-GPU bandwidth on 40GB A100s @512 GPUs for MFU ≥ {target_mfu}:");
     for gbps in [25.0, 50.0, 100.0, 200.0, 400.0, 800.0] {
-        let mut cluster = ClusterConfig::new(
-            &format!("40GB-A100-{gbps:.0}Gbps"),
-            128,
-            4,
-            fsdp_bw::config::GpuSpec::a100_40gb(),
-            gbps,
+        let text = format!(
+            "model = {model_name}\nn_gpus = 512\nseq_len = {seq}\n\
+             cluster.inter_node_gbps = {gbps}\n"
         );
-        cluster.reserved_bytes = 10.0 * GIB;
-        let peak = GridSearch::new(&model, &cluster, 512).run().best_mfu.map(|p| p.mfu);
+        let scn = Scenario::parse(&text).expect("scenario");
+        let peak = Searched.evaluate(&scn).metrics.map(|m| m.mfu);
         let ok = peak.map(|p| p >= target_mfu).unwrap_or(false);
         println!(
             "  {gbps:>5.0} Gbps → peak MFU {}  {}",

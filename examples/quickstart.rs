@@ -1,53 +1,50 @@
-//! Quickstart: evaluate the paper's analytical model and run the
-//! Algorithm-1 grid search for one (model, cluster, N) point.
+//! Quickstart: one [`Scenario`] through every evaluator backend — the
+//! analytical model, the §2.7 bounds, the calibrated simulator, and the
+//! Algorithm-1 grid search.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use fsdp_bw::analysis::StepModel;
-use fsdp_bw::config::{ClusterConfig, ModelConfig, TrainingConfig, GIB};
-use fsdp_bw::gridsearch::GridSearch;
-use fsdp_bw::simulator::{simulate_step, EfficiencyModel};
+use fsdp_bw::config::scenario::Scenario;
+use fsdp_bw::eval::{Analytical, BoundsEval, Evaluator, Searched, Simulated};
 
 fn main() {
-    // 1. Pick a model and a cluster from the paper's registry.
-    let model = ModelConfig::preset("13B").expect("preset");
-    let cluster = ClusterConfig::preset("40GB-A100-200Gbps").expect("preset");
-    let n_gpus = 8;
-    let cfg = TrainingConfig::paper_default(10_240, 1); // ctx 10240, bs 1, γ=0
+    // 1. A scenario is the universal input: what to train, on what, how.
+    //    The same `key = value` dialect works from files, CLI flags or
+    //    inline strings.
+    let s = Scenario::parse(
+        "model = 13B\n\
+         cluster = 40GB-A100-200Gbps\n\
+         n_gpus = 8\n\
+         seq_len = 10240\n\
+         batch = 1\n\
+         gamma = 0.0\n",
+    )
+    .expect("scenario");
 
-    // 2. Closed-form chain (paper §2): memory, transfer, step time, metrics.
-    let sm = StepModel::new(&model, &cluster, &cfg, n_gpus);
-    let mem = sm.memory();
+    // 2. The paper's closed-form chain (§2, Eqs 1–11) at α̂=0.75, including
+    //    the §2.7 "memory × bandwidth" bounds.
     println!("== analytical model (paper §2) ==");
-    println!("M_free          : {:.1} GiB", mem.m_free / GIB);
-    println!("T_transfer      : {:.3} s   (Eq 5)", sm.t_transfer());
-    let b = sm.breakdown(0.75);
-    println!("T_fwd / T_bwd   : {:.3} / {:.3} s at α̂=0.75", b.t_fwd, b.t_bwd);
-    println!("R_fwd / R_bwd   : {:.2} / {:.2}  (Eq 10)", b.r_fwd, b.r_bwd);
-    let m = sm.metrics(0.75);
-    println!("K / HFU / MFU   : {:.0} TGS / {:.3} / {:.3}  (Eq 11)", m.tgs, m.hfu, m.mfu);
+    print!("{}", Analytical::default().evaluate(&s).to_text());
 
-    // 3. The §2.7 closed-form maxima — "memory × bandwidth" bounds.
-    let bounds = sm.bounds();
+    // 3. The bounds alone (Conclusions 1–3) — what the configuration could
+    //    at best achieve.
     println!("\n== bounds (Conclusions 1–3) ==");
-    println!("E_MAX  ≤ {:.0} tokens/GPU", bounds.e_max);
-    println!("α_MFU  ≤ {:.3}", bounds.mfu_max);
-    println!("K      ≤ {:.0} TGS", bounds.k_max);
+    print!("{}", BoundsEval.evaluate(&s).to_text());
 
     // 4. The calibrated cluster simulator — the "measured" analog.
-    let s = simulate_step(&model, &cluster, &cfg, n_gpus, &EfficiencyModel::default());
     println!("\n== calibrated simulator ==");
-    println!("MFU {:.3}  TGS {:.0}  (paper measured 0.59 / 1806)", s.mfu, s.tgs);
-
-    // 5. Algorithm 1: best feasible configuration at 512 GPUs.
-    let r = GridSearch::new(&model, &cluster, 512).run();
-    if let Some(p) = r.best_mfu {
-        println!("\n== Algorithm 1 @512 GPUs ==");
-        println!(
-            "peak MFU {:.3} at γ={:.2}, {} ({} feasible grid points)",
-            p.mfu, p.gamma, p.stage, r.feasible
-        );
+    let sim = Simulated::default().evaluate(&s);
+    print!("{}", sim.to_text());
+    if let Some(m) = &sim.metrics {
+        println!("(paper measured 0.59 MFU / 1806 TGS on this point: got {:.3} / {:.0})", m.mfu, m.tgs);
     }
+
+    // 5. Algorithm 1: best feasible configuration at 512 GPUs — same
+    //    model/cluster, larger job.
+    let s512 = Scenario::parse("model = 13B\ncluster = 40GB-A100-200Gbps\nn_gpus = 512\n")
+        .expect("scenario");
+    println!("\n== Algorithm 1 @512 GPUs ==");
+    print!("{}", Searched.evaluate(&s512).to_text());
 }

@@ -1,0 +1,46 @@
+//! Bench: the scenario-first Evaluator API and the sweep engine — single
+//! evaluations must stay in the µs range and the 160-point example grid
+//! must be sweep-able in well under a second, scaling with worker threads.
+
+use fsdp_bw::config::scenario::Scenario;
+use fsdp_bw::eval::{backends_for, run_sweep, Analytical, BoundsEval, Evaluator, Simulated, Sweep};
+use fsdp_bw::util::bench::Bench;
+
+const SWEEP_TEXT: &str = "model = 13B\nbatch = 1\n\
+                          sweep.n_gpus = 8,16,32,64\n\
+                          sweep.seq_len = 2048..32768*2\n\
+                          sweep.cluster.inter_node_gbps = 50,100,200,400\n\
+                          sweep.gamma = 0,0.5\n";
+
+fn main() {
+    let mut b = Bench::new();
+    let s = Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 10240\n").expect("scenario");
+
+    b.case("eval/analytical_single", 1.0, || {
+        std::hint::black_box(Analytical::default().evaluate(&s).feasible)
+    });
+    b.case("eval/simulated_single", 1.0, || {
+        std::hint::black_box(Simulated::default().evaluate(&s).feasible)
+    });
+    b.case("eval/bounds_single", 1.0, || {
+        std::hint::black_box(BoundsEval.evaluate(&s).bounds.unwrap().k_max)
+    });
+    b.case("eval/evaluation_to_json", 1.0, || {
+        std::hint::black_box(Analytical::default().evaluate(&s).to_json().len())
+    });
+
+    let sweep = Sweep::parse(SWEEP_TEXT).expect("sweep");
+    let backends = backends_for("both").expect("backends");
+    let n = sweep.len() as f64;
+    b.case("eval/sweep_160pt_both_1thread", n, || {
+        std::hint::black_box(run_sweep(&sweep, &backends, 1).n_points())
+    });
+    b.case("eval/sweep_160pt_both_8threads", n, || {
+        std::hint::black_box(run_sweep(&sweep, &backends, 8).n_points())
+    });
+    b.case("eval/sweep_report_json", 1.0, || {
+        std::hint::black_box(run_sweep(&sweep, &backends, 8).to_json().len())
+    });
+
+    println!("\n{}", b.dump_json());
+}

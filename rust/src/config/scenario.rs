@@ -1,5 +1,8 @@
 //! Scenario files — a flat `key = value` configuration format so users can
-//! evaluate their own model/cluster rather than the paper presets.
+//! evaluate their own model/cluster rather than the paper presets. The
+//! [`Scenario`] is the universal input of the [`crate::eval`] API: every
+//! evaluator backend (analytical, simulated, bounds, grid search) consumes
+//! one.
 //!
 //! (The offline build has no TOML crate; this dialect is the subset we
 //! need: one `key = value` per line, `#` comments, no sections.)
@@ -13,19 +16,68 @@
 //! batch        = 1
 //! gamma        = 0.0
 //! zero_stage   = 3
+//! precision    = bf16
 //! empty_cache  = false
-//! # custom-cluster overrides (optional):
-//! # cluster.inter_node_gbps = 400
-//! # cluster.gpu_mem_gib     = 80
-//! # cluster.peak_tflops     = 989
+//! # custom-model keys (instead of `model = <preset>`):
+//! #   model.name / model.layers / model.hidden / model.heads
+//! #   model.vocab / model.ffn_ratio
+//! # custom-cluster overrides (applied on top of the preset):
+//! #   cluster.nodes / cluster.gpus_per_node / cluster.inter_node_gbps
+//! #   cluster.intra_node_gbps / cluster.latency / cluster.reserved_gib
+//! #   cluster.gpu_mem_gib / cluster.peak_tflops / cluster.gpu_name
+//! #   cluster.name (label for a fully custom cluster)
 //! ```
+//!
+//! Sweep files additionally carry `sweep.<key> = <values>` axes (see
+//! [`crate::eval::sweep`]); those are rejected here — a single `Scenario`
+//! is always one point.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{ClusterConfig, ModelConfig, TrainingConfig, ZeroStage, GIB};
+use super::{ClusterConfig, ModelConfig, Precision, TrainingConfig, ZeroStage, GIB};
+
+/// The cluster assumed when a scenario names none (the paper's main
+/// empirical cluster).
+pub const DEFAULT_CLUSTER: &str = "40GB-A100-200Gbps";
+
+/// Every key the scenario dialect understands. Unknown keys are an error —
+/// silently ignoring them turns typos into wrong answers.
+pub const KNOWN_KEYS: &[&str] = &[
+    "model",
+    "cluster",
+    "n_gpus",
+    "seq_len",
+    "batch",
+    "gamma",
+    "zero_stage",
+    "precision",
+    "empty_cache",
+    "model.name",
+    "model.layers",
+    "model.hidden",
+    "model.heads",
+    "model.vocab",
+    "model.ffn_ratio",
+    "cluster.name",
+    "cluster.nodes",
+    "cluster.gpus_per_node",
+    "cluster.inter_node_gbps",
+    "cluster.intra_node_gbps",
+    "cluster.latency",
+    "cluster.reserved_gib",
+    "cluster.gpu_mem_gib",
+    "cluster.peak_tflops",
+    "cluster.gpu_name",
+];
+
+/// Is `key` a scalar key the dialect understands (sweepable by the sweep
+/// engine)?
+pub fn known_key(key: &str) -> bool {
+    KNOWN_KEYS.contains(&key)
+}
 
 /// A complete scenario: what to train, on what, and how.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,7 +89,9 @@ pub struct Scenario {
     pub n_gpus: u64,
 }
 
-/// Parse the `key = value` dialect into a map.
+/// Parse the `key = value` dialect into a map. Duplicate keys are an error
+/// (the dialect has no append semantics, so a duplicate is always a
+/// mistake).
 pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
     let mut map = BTreeMap::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -48,7 +102,10 @@ pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>> {
         let (k, v) = line
             .split_once('=')
             .with_context(|| format!("line {}: expected `key = value`", lineno + 1))?;
-        map.insert(k.trim().to_string(), v.trim().to_string());
+        let key = k.trim().to_string();
+        if map.insert(key.clone(), v.trim().to_string()).is_some() {
+            bail!("line {}: duplicate key {key:?}", lineno + 1);
+        }
     }
     Ok(map)
 }
@@ -61,15 +118,33 @@ impl Scenario {
         Self::parse(&text)
     }
 
-    /// Parse scenario text.
+    /// Parse scenario text (one point — no sweep axes).
     pub fn parse(text: &str) -> Result<Self> {
         let kv = parse_kv(text)?;
+        if let Some(k) = kv.keys().find(|k| k.starts_with("sweep.")) {
+            bail!("{k}: sweep axes are not valid in a single scenario — use `fsdp-bw sweep`");
+        }
+        Self::from_kv(&kv)
+    }
+
+    /// Build a scenario from an already-parsed key/value map. This is the
+    /// single construction path shared by scenario files, CLI flags and the
+    /// sweep engine's expanded grid points.
+    pub fn from_kv(kv: &BTreeMap<String, String>) -> Result<Self> {
+        for k in kv.keys() {
+            if !known_key(k) {
+                bail!("unknown scenario key {k:?} (known keys: {})", KNOWN_KEYS.join(", "));
+            }
+        }
         let get = |k: &str, d: &str| kv.get(k).cloned().unwrap_or_else(|| d.to_string());
 
         let mut model = match kv.get("model") {
             Some(name) => ModelConfig::lookup(name)
                 .with_context(|| format!("unknown model preset {name:?}"))?,
             None => {
+                if !kv.contains_key("model.layers") || !kv.contains_key("model.hidden") {
+                    bail!("scenario needs `model = <preset>` or `model.layers` + `model.hidden`");
+                }
                 // Fully custom model from model.* keys.
                 ModelConfig::new(
                     &get("model.name", "custom"),
@@ -79,17 +154,52 @@ impl Scenario {
                 )
             }
         };
+        // model.* overrides apply on top of a preset too (redundant but
+        // harmless when they were the constructor arguments above).
+        if let Some(v) = kv.get("model.name") {
+            model.name = v.clone();
+        }
+        if let Some(v) = kv.get("model.layers") {
+            model.layers = v.parse().context("model.layers")?;
+        }
+        if let Some(v) = kv.get("model.hidden") {
+            model.hidden = v.parse().context("model.hidden")?;
+        }
+        if let Some(v) = kv.get("model.heads") {
+            model.heads = v.parse().context("model.heads")?;
+        }
         if let Some(v) = kv.get("model.vocab") {
             model.vocab = v.parse().context("model.vocab")?;
+        }
+        if let Some(v) = kv.get("model.ffn_ratio") {
+            model.ffn_ratio = v.parse().context("model.ffn_ratio")?;
         }
 
         let mut cluster = match kv.get("cluster") {
             Some(name) => ClusterConfig::preset(name)
                 .with_context(|| format!("unknown cluster preset {name:?}"))?,
-            None => ClusterConfig::preset("40GB-A100-200Gbps").expect("default preset"),
+            None => ClusterConfig::preset(DEFAULT_CLUSTER).expect("default preset"),
         };
+        if let Some(v) = kv.get("cluster.name") {
+            cluster.name = v.clone();
+        }
+        if let Some(v) = kv.get("cluster.nodes") {
+            cluster.nodes = v.parse().context("cluster.nodes")?;
+        }
+        if let Some(v) = kv.get("cluster.gpus_per_node") {
+            cluster.gpus_per_node = v.parse().context("cluster.gpus_per_node")?;
+        }
         if let Some(v) = kv.get("cluster.inter_node_gbps") {
             cluster.inter_node_gbps = v.parse().context("cluster.inter_node_gbps")?;
+        }
+        if let Some(v) = kv.get("cluster.intra_node_gbps") {
+            cluster.intra_node_gbps = v.parse().context("cluster.intra_node_gbps")?;
+        }
+        if let Some(v) = kv.get("cluster.latency") {
+            cluster.latency = v.parse().context("cluster.latency")?;
+        }
+        if let Some(v) = kv.get("cluster.reserved_gib") {
+            cluster.reserved_bytes = v.parse::<f64>().context("cluster.reserved_gib")? * GIB;
         }
         if let Some(v) = kv.get("cluster.gpu_mem_gib") {
             cluster.gpu.mem_bytes = v.parse::<f64>().context("cluster.gpu_mem_gib")? * GIB;
@@ -97,8 +207,8 @@ impl Scenario {
         if let Some(v) = kv.get("cluster.peak_tflops") {
             cluster.gpu.peak_flops = v.parse::<f64>().context("cluster.peak_tflops")? * 1e12;
         }
-        if let Some(v) = kv.get("cluster.nodes") {
-            cluster.nodes = v.parse().context("cluster.nodes")?;
+        if let Some(v) = kv.get("cluster.gpu_name") {
+            cluster.gpu.name = v.clone();
         }
 
         let mut training = TrainingConfig::paper_default(
@@ -108,9 +218,15 @@ impl Scenario {
         training.gamma = get("gamma", "0.0").parse().context("gamma")?;
         training.empty_cache = get("empty_cache", "false").parse().context("empty_cache")?;
         training.zero_stage = match get("zero_stage", "3").as_str() {
-            "3" => ZeroStage::Stage3,
-            "1" | "2" | "12" | "1/2" => ZeroStage::Stage12,
-            other => bail!("zero_stage must be 3 or 1/2, got {other:?}"),
+            "3" | "zero-3" | "zero3" => ZeroStage::Stage3,
+            "1" | "2" | "12" | "1/2" | "zero-1/2" | "zero-12" => ZeroStage::Stage12,
+            other => bail!("zero_stage must be 3 or 1/2 (or zero-3 / zero-1/2), got {other:?}"),
+        };
+        training.precision = match get("precision", "bf16").to_ascii_lowercase().as_str() {
+            "bf16" => Precision::Bf16,
+            "fp16" | "half" => Precision::Fp16,
+            "fp32" | "float32" => Precision::Fp32,
+            other => bail!("precision must be bf16, fp16 or fp32, got {other:?}"),
         };
 
         let s = Scenario {
@@ -124,21 +240,96 @@ impl Scenario {
     }
 
     /// Serialize back to the `key = value` dialect.
+    ///
+    /// Non-preset models and clusters are emitted as `model.*` /
+    /// `cluster.*` override keys (not bare names that would fail to
+    /// re-parse), so `Scenario::parse(&s.to_text()) == s` holds for every
+    /// scenario this dialect can express.
     pub fn to_text(&self) -> String {
-        format!(
-            "model = {}\ncluster = {}\nn_gpus = {}\nseq_len = {}\nbatch = {}\ngamma = {}\nzero_stage = {}\nempty_cache = {}\n",
-            self.model.name,
-            self.cluster.name,
-            self.n_gpus,
-            self.training.seq_len,
-            self.training.batch_per_gpu,
-            self.training.gamma,
+        use std::fmt::Write as _;
+        let mut out = String::new();
+
+        match ModelConfig::lookup(&self.model.name) {
+            Some(p) if p == self.model => {
+                let _ = writeln!(out, "model = {}", self.model.name);
+            }
+            _ => {
+                let _ = writeln!(out, "model.name = {}", self.model.name);
+                let _ = writeln!(out, "model.layers = {}", self.model.layers);
+                let _ = writeln!(out, "model.hidden = {}", self.model.hidden);
+                let _ = writeln!(out, "model.heads = {}", self.model.heads);
+                let _ = writeln!(out, "model.vocab = {}", self.model.vocab);
+                if self.model.ffn_ratio != 4 {
+                    let _ = writeln!(out, "model.ffn_ratio = {}", self.model.ffn_ratio);
+                }
+            }
+        }
+
+        let preset = ClusterConfig::preset(&self.cluster.name);
+        match &preset {
+            Some(p) if *p == self.cluster => {
+                let _ = writeln!(out, "cluster = {}", self.cluster.name);
+            }
+            _ => {
+                // Diff against the named preset when the name resolves
+                // (preset + overrides), else against the parse-time default.
+                let base = match &preset {
+                    Some(p) => {
+                        let _ = writeln!(out, "cluster = {}", self.cluster.name);
+                        p.clone()
+                    }
+                    None => {
+                        let base = ClusterConfig::preset(DEFAULT_CLUSTER).expect("default preset");
+                        let _ = writeln!(out, "cluster.name = {}", self.cluster.name);
+                        base
+                    }
+                };
+                let c = &self.cluster;
+                if c.nodes != base.nodes {
+                    let _ = writeln!(out, "cluster.nodes = {}", c.nodes);
+                }
+                if c.gpus_per_node != base.gpus_per_node {
+                    let _ = writeln!(out, "cluster.gpus_per_node = {}", c.gpus_per_node);
+                }
+                if c.inter_node_gbps != base.inter_node_gbps {
+                    let _ = writeln!(out, "cluster.inter_node_gbps = {}", c.inter_node_gbps);
+                }
+                if c.intra_node_gbps != base.intra_node_gbps {
+                    let _ = writeln!(out, "cluster.intra_node_gbps = {}", c.intra_node_gbps);
+                }
+                if c.latency != base.latency {
+                    let _ = writeln!(out, "cluster.latency = {}", c.latency);
+                }
+                if c.reserved_bytes != base.reserved_bytes {
+                    let _ = writeln!(out, "cluster.reserved_gib = {}", c.reserved_bytes / GIB);
+                }
+                if c.gpu.mem_bytes != base.gpu.mem_bytes {
+                    let _ = writeln!(out, "cluster.gpu_mem_gib = {}", c.gpu.mem_bytes / GIB);
+                }
+                if c.gpu.peak_flops != base.gpu.peak_flops {
+                    let _ = writeln!(out, "cluster.peak_tflops = {}", c.gpu.peak_flops / 1e12);
+                }
+                if c.gpu.name != base.gpu.name {
+                    let _ = writeln!(out, "cluster.gpu_name = {}", c.gpu.name);
+                }
+            }
+        }
+
+        let _ = writeln!(out, "n_gpus = {}", self.n_gpus);
+        let _ = writeln!(out, "seq_len = {}", self.training.seq_len);
+        let _ = writeln!(out, "batch = {}", self.training.batch_per_gpu);
+        let _ = writeln!(out, "gamma = {}", self.training.gamma);
+        let _ = writeln!(
+            out,
+            "zero_stage = {}",
             match self.training.zero_stage {
                 ZeroStage::Stage3 => "3",
                 ZeroStage::Stage12 => "1/2",
-            },
-            self.training.empty_cache,
-        )
+            }
+        );
+        let _ = writeln!(out, "precision = {}", self.training.precision);
+        let _ = writeln!(out, "empty_cache = {}", self.training.empty_cache);
+        out
     }
 
     /// Sanity-check cross-field invariants.
@@ -194,10 +385,43 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_keys_rejected() {
+        let err = parse_kv("a = 1\na = 2\n").unwrap_err().to_string();
+        assert!(err.contains("duplicate key"), "{err}");
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let err = Scenario::parse("model = 7B\nmodle = 13B\n").unwrap_err().to_string();
+        assert!(err.contains("unknown scenario key"), "{err}");
+    }
+
+    #[test]
+    fn sweep_axes_rejected_in_single_scenario() {
+        let err = Scenario::parse("model = 7B\nsweep.n_gpus = 8,16\n").unwrap_err().to_string();
+        assert!(err.contains("sweep"), "{err}");
+    }
+
+    #[test]
     fn roundtrip_through_text() {
         let s = Scenario::parse("model = 7B\nn_gpus = 32\nseq_len = 2048\n").unwrap();
         let s2 = Scenario::parse(&s.to_text()).unwrap();
         assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn roundtrip_custom_model_and_cluster() {
+        let text = "model.name = mine\nmodel.layers = 12\nmodel.hidden = 1024\nmodel.heads = 8\n\
+                    cluster.inter_node_gbps = 400\ncluster.gpu_mem_gib = 80\ncluster.nodes = 64\n\
+                    n_gpus = 8\nseq_len = 1024\n";
+        let s = Scenario::parse(text).unwrap();
+        let s2 = Scenario::parse(&s.to_text()).unwrap();
+        assert_eq!(s, s2);
+        // The serialized form must carry the overrides, not bare names.
+        let out = s.to_text();
+        assert!(out.contains("model.layers = 12"), "{out}");
+        assert!(out.contains("cluster.nodes = 64"), "{out}");
+        assert!(out.contains("cluster.inter_node_gbps = 400"), "{out}");
     }
 
     #[test]

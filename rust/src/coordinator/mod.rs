@@ -25,6 +25,7 @@ mod fabric;
 mod metrics;
 mod optimizer;
 mod sharding;
+#[cfg(feature = "xla")]
 pub mod train;
 
 pub use checkpoint::RankCheckpoint;
@@ -34,4 +35,5 @@ pub use fabric::{Fabric, FabricConfig};
 pub use metrics::{StepMetrics, TrainLog};
 pub use optimizer::{Adam, AdamConfig};
 pub use sharding::ShardLayout;
+#[cfg(feature = "xla")]
 pub use train::{TrainParams, TrainReport, Trainer};

@@ -1,0 +1,303 @@
+//! The four evaluator backends and the name → backend factory.
+
+use anyhow::{bail, Result};
+
+use crate::analysis::{metrics, StepModel};
+use crate::config::scenario::Scenario;
+use crate::gridsearch::{GridSearch, SearchPoint};
+use crate::simulator::{simulate_step, EfficiencyModel};
+
+use super::{
+    to_gib, EvalBounds, EvalMemory, EvalMetrics, EvalSearch, EvalStep, Evaluation, Evaluator,
+    ScenarioPoint, SearchChoice, DEFAULT_ALPHA,
+};
+
+/// The paper's §2 closed-form chain (Eqs 1–11) at an assumed kernel
+/// efficiency `alpha` (α̂_HFU).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Analytical {
+    pub alpha: f64,
+}
+
+impl Default for Analytical {
+    fn default() -> Self {
+        Self { alpha: DEFAULT_ALPHA }
+    }
+}
+
+impl Evaluator for Analytical {
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+
+    fn evaluate(&self, s: &Scenario) -> Evaluation {
+        let sm = StepModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
+        let mem = sm.memory();
+        let b = sm.breakdown(self.alpha);
+        let m = metrics::from_breakdown(&sm, &b);
+        let bounds = sm.bounds();
+        let fits = mem.fits();
+        Evaluation {
+            backend: self.name(),
+            scenario: ScenarioPoint::of(s),
+            feasible: fits,
+            oom: !fits,
+            metrics: Some(EvalMetrics { mfu: m.mfu, hfu: m.hfu, tgs: m.tgs }),
+            step: Some(EvalStep {
+                t_step: b.t_step,
+                t_fwd: b.t_fwd,
+                t_bwd: b.t_bwd,
+                exposed_comm: b.exposed_comm(),
+                r_fwd: b.r_fwd,
+                r_bwd: b.r_bwd,
+            }),
+            memory: Some(EvalMemory {
+                m_free_gib: Some(to_gib(mem.m_free)),
+                active_gib: Some(to_gib(mem.total_per_gpu())),
+                reserved_gib: None,
+            }),
+            bounds: Some(EvalBounds {
+                e_max: bounds.e_max,
+                hfu_max: bounds.hfu_max,
+                mfu_max: bounds.mfu_max,
+                k_max: bounds.k_max,
+            }),
+            search: None,
+        }
+    }
+}
+
+/// The calibrated discrete-event cluster simulator — the "measured" analog
+/// of every table cell in the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Simulated {
+    pub eff: EfficiencyModel,
+}
+
+impl Evaluator for Simulated {
+    fn name(&self) -> &'static str {
+        "simulated"
+    }
+
+    fn evaluate(&self, s: &Scenario) -> Evaluation {
+        let st = simulate_step(&s.model, &s.cluster, &s.training, s.n_gpus, &self.eff);
+        Evaluation {
+            backend: self.name(),
+            scenario: ScenarioPoint::of(s),
+            feasible: !st.oom,
+            oom: st.oom,
+            metrics: Some(EvalMetrics { mfu: st.mfu, hfu: st.hfu, tgs: st.tgs }),
+            step: Some(EvalStep {
+                t_step: st.t_step,
+                t_fwd: st.t_fwd,
+                t_bwd: st.t_bwd,
+                exposed_comm: st.exposed_comm,
+                r_fwd: st.r_fwd,
+                r_bwd: st.r_bwd,
+            }),
+            memory: Some(EvalMemory {
+                m_free_gib: None,
+                active_gib: Some(st.active_gib),
+                reserved_gib: Some(st.reserved_gib),
+            }),
+            bounds: None,
+            search: None,
+        }
+    }
+}
+
+/// The §2.7 closed-form maxima (Eqs 12–15) — what the configuration could
+/// at best achieve, independent of any kernel-efficiency assumption.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct BoundsEval;
+
+impl Evaluator for BoundsEval {
+    fn name(&self) -> &'static str {
+        "bounds"
+    }
+
+    fn evaluate(&self, s: &Scenario) -> Evaluation {
+        let sm = StepModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
+        let mem = sm.memory();
+        let bounds = sm.bounds();
+        let has_memory = mem.m_free > 0.0;
+        Evaluation {
+            backend: self.name(),
+            scenario: ScenarioPoint::of(s),
+            feasible: has_memory,
+            oom: !has_memory,
+            metrics: None,
+            step: None,
+            memory: Some(EvalMemory {
+                m_free_gib: Some(to_gib(mem.m_free)),
+                active_gib: None,
+                reserved_gib: None,
+            }),
+            bounds: Some(EvalBounds {
+                e_max: bounds.e_max,
+                hfu_max: bounds.hfu_max,
+                mfu_max: bounds.mfu_max,
+                k_max: bounds.k_max,
+            }),
+            search: None,
+        }
+    }
+}
+
+/// Appendix C's Algorithm 1: exhaustive grid search over (α̂, γ, stage) in
+/// the "fill the GPU" regime. The scenario's seq/batch/γ/stage are *not*
+/// fixed — the search sweeps them; precision and (model, cluster, N) are
+/// taken from the scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Searched;
+
+impl Evaluator for Searched {
+    fn name(&self) -> &'static str {
+        "gridsearch"
+    }
+
+    fn evaluate(&self, s: &Scenario) -> Evaluation {
+        let mut gs = GridSearch::new(&s.model, &s.cluster, s.n_gpus);
+        gs.precision = s.training.precision;
+        let r = gs.run();
+        let choice = |p: SearchPoint| SearchChoice {
+            alpha_hat: p.alpha_hat,
+            gamma: p.gamma,
+            stage: p.stage.to_string(),
+            tokens: p.tokens,
+            mfu: p.mfu,
+            hfu: p.hfu,
+            tgs: p.tgs,
+        };
+        let feasible = r.feasible > 0;
+        Evaluation {
+            backend: self.name(),
+            scenario: ScenarioPoint::of(s),
+            feasible,
+            oom: !feasible,
+            metrics: r.best_mfu.map(|p| EvalMetrics { mfu: p.mfu, hfu: p.hfu, tgs: p.tgs }),
+            step: None,
+            memory: None,
+            bounds: None,
+            search: Some(EvalSearch {
+                feasible_points: r.feasible,
+                best_mfu: r.best_mfu.map(choice),
+                best_tgs: r.best_tgs.map(choice),
+            }),
+        }
+    }
+}
+
+/// Resolve one backend by name.
+pub fn backend(name: &str) -> Result<Box<dyn Evaluator>> {
+    Ok(match name {
+        "analytical" | "analysis" => Box::new(Analytical::default()),
+        "simulated" | "simulator" | "sim" => Box::new(Simulated::default()),
+        "bounds" => Box::new(BoundsEval),
+        "gridsearch" | "search" => Box::new(Searched),
+        other => bail!(
+            "unknown backend {other:?}; known: analytical, simulated, bounds, gridsearch"
+        ),
+    })
+}
+
+/// Resolve a backend spec: a single name, a comma-separated list, `both`
+/// (analytical + simulated — the sweep default) or `all` (every backend).
+pub fn backends_for(spec: &str) -> Result<Vec<Box<dyn Evaluator>>> {
+    match spec {
+        "both" => Ok(vec![Box::new(Analytical::default()), Box::new(Simulated::default())]),
+        "all" => Ok(vec![
+            Box::new(Analytical::default()),
+            Box::new(Simulated::default()),
+            Box::new(BoundsEval),
+            Box::new(Searched),
+        ]),
+        list => list.split(',').map(|n| backend(n.trim())).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scen() -> Scenario {
+        Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 10240\nbatch = 1\n").unwrap()
+    }
+
+    /// The backends are thin adapters: their numbers must equal the direct
+    /// calls they wrap, bit for bit.
+    #[test]
+    fn simulated_matches_simulate_step() {
+        let s = scen();
+        let direct = simulate_step(
+            &s.model,
+            &s.cluster,
+            &s.training,
+            s.n_gpus,
+            &EfficiencyModel::default(),
+        );
+        let e = Simulated::default().evaluate(&s);
+        let m = e.metrics.unwrap();
+        assert_eq!(m.mfu, direct.mfu);
+        assert_eq!(m.tgs, direct.tgs);
+        assert_eq!(e.step.unwrap().t_step, direct.t_step);
+        assert_eq!(e.oom, direct.oom);
+    }
+
+    #[test]
+    fn analytical_matches_step_model() {
+        let s = scen();
+        let sm = StepModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
+        let direct = sm.metrics(DEFAULT_ALPHA);
+        let e = Analytical::default().evaluate(&s);
+        let m = e.metrics.unwrap();
+        assert_eq!(m.mfu, direct.mfu);
+        assert_eq!(m.hfu, direct.hfu);
+        assert_eq!(m.tgs, direct.tgs);
+        assert!(e.feasible);
+        assert_eq!(e.bounds.unwrap().e_max, sm.bounds().e_max);
+    }
+
+    #[test]
+    fn bounds_matches_bounds() {
+        let s = scen();
+        let sm = StepModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
+        let e = BoundsEval.evaluate(&s);
+        assert_eq!(e.bounds.unwrap().k_max, sm.bounds().k_max);
+        assert!(e.metrics.is_none());
+    }
+
+    #[test]
+    fn searched_reports_best_points() {
+        let s = Scenario::parse("model = 1.3B\nn_gpus = 64\n").unwrap();
+        let e = Searched.evaluate(&s);
+        assert!(e.feasible);
+        let se = e.search.unwrap();
+        assert!(se.feasible_points > 0);
+        let best = se.best_mfu.unwrap();
+        assert!(best.mfu > 0.2 && best.mfu <= 1.0);
+        // Metrics mirror the best-MFU choice so sweep summaries work.
+        assert_eq!(e.metrics.unwrap().mfu, best.mfu);
+    }
+
+    #[test]
+    fn oom_scenarios_flagged_infeasible() {
+        let s = Scenario::parse("model = 310B\nn_gpus = 8\nseq_len = 4096\n").unwrap();
+        assert!(!Analytical::default().evaluate(&s).feasible);
+        assert!(Simulated::default().evaluate(&s).oom);
+        assert!(!Searched.evaluate(&s).feasible);
+    }
+
+    #[test]
+    fn factory_resolves_and_rejects() {
+        for n in ["analytical", "simulated", "bounds", "gridsearch"] {
+            assert_eq!(backend(n).unwrap().name(), n);
+        }
+        assert!(backend("nope").is_err());
+        assert_eq!(backends_for("both").unwrap().len(), 2);
+        assert_eq!(backends_for("all").unwrap().len(), 4);
+        let two = backends_for("bounds,gridsearch").unwrap();
+        assert_eq!(two[0].name(), "bounds");
+        assert_eq!(two[1].name(), "gridsearch");
+    }
+}

@@ -1,0 +1,399 @@
+//! Scenario-first evaluation API — the one entry point for "what does this
+//! (model, cluster, N, seq, γ) point achieve?".
+//!
+//! The paper answers that question three ways — the §2 analytical model,
+//! the Appendix C grid search, and the calibrated cluster simulator — and
+//! the §2.7 bounds cap what is achievable at all. Historically each had its
+//! own input plumbing and result type; here they are four interchangeable
+//! [`Evaluator`] backends over one input ([`crate::config::scenario::Scenario`])
+//! and one output ([`Evaluation`]):
+//!
+//! * [`backends::Analytical`] — Eqs 1–11 at an assumed kernel efficiency;
+//! * [`backends::Simulated`] — the discrete-event cluster simulator;
+//! * [`backends::BoundsEval`] — the §2.7 closed-form maxima (Eqs 12–15);
+//! * [`backends::Searched`] — Algorithm 1's best feasible configuration.
+//!
+//! [`sweep`] expands `sweep.<key> = …` axes into a Cartesian grid of
+//! scenarios and evaluates them across a worker pool; [`report`] renders
+//! the result as JSON/CSV with per-axis best-MFU/best-TGS summaries.
+
+pub mod backends;
+pub mod report;
+pub mod sweep;
+
+use crate::config::scenario::Scenario;
+use crate::config::{Precision, ZeroStage, GIB};
+use crate::util::json::Json;
+
+pub use backends::{backend, backends_for, Analytical, BoundsEval, Searched, Simulated};
+pub use report::{SweepPointResult, SweepReport};
+pub use sweep::{parse_axis_values, run_sweep, Sweep, SweepAxis};
+
+/// The kernel efficiency the analytical backend assumes when none is given
+/// (the value used throughout the paper's worked examples).
+pub const DEFAULT_ALPHA: f64 = 0.75;
+
+/// A performance-evaluation backend: consumes one [`Scenario`], produces
+/// one [`Evaluation`]. Implementations must be pure functions of the
+/// scenario (the sweep engine relies on that for deterministic parallel
+/// execution) and shareable across worker threads.
+pub trait Evaluator: Send + Sync {
+    /// Stable backend identifier (`"analytical"`, `"simulated"`, …) — the
+    /// provenance tag recorded in every [`Evaluation`].
+    fn name(&self) -> &'static str;
+
+    /// Evaluate one scenario point.
+    fn evaluate(&self, s: &Scenario) -> Evaluation;
+}
+
+/// Scenario identity echoed into every evaluation, so a result is
+/// self-describing in reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioPoint {
+    pub model: String,
+    pub cluster: String,
+    pub n_gpus: u64,
+    pub seq_len: u64,
+    pub batch: u64,
+    pub gamma: f64,
+    pub zero_stage: ZeroStage,
+    pub precision: Precision,
+    pub empty_cache: bool,
+}
+
+impl ScenarioPoint {
+    pub fn of(s: &Scenario) -> Self {
+        Self {
+            model: s.model.name.clone(),
+            cluster: s.cluster.name.clone(),
+            n_gpus: s.n_gpus,
+            seq_len: s.training.seq_len,
+            batch: s.training.batch_per_gpu,
+            gamma: s.training.gamma,
+            zero_stage: s.training.zero_stage,
+            precision: s.training.precision,
+            empty_cache: s.training.empty_cache,
+        }
+    }
+
+    /// One-line human rendering.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} on {}× {} (ctx {} × batch {}, γ={}, {}, {})",
+            self.model,
+            self.n_gpus,
+            self.cluster,
+            self.seq_len,
+            self.batch,
+            self.gamma,
+            self.zero_stage,
+            self.precision
+        )
+    }
+
+    fn json(&self) -> Json {
+        obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("cluster", Json::Str(self.cluster.clone())),
+            ("n_gpus", num(self.n_gpus as f64)),
+            ("seq_len", num(self.seq_len as f64)),
+            ("batch", num(self.batch as f64)),
+            ("gamma", num(self.gamma)),
+            ("zero_stage", Json::Str(self.zero_stage.to_string())),
+            ("precision", Json::Str(self.precision.to_string())),
+            ("empty_cache", Json::Bool(self.empty_cache)),
+            ("tokens_per_gpu", num((self.seq_len * self.batch) as f64)),
+        ])
+    }
+}
+
+/// Eq 11 metrics of one evaluated point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalMetrics {
+    pub mfu: f64,
+    pub hfu: f64,
+    pub tgs: f64,
+}
+
+/// Step-time breakdown (Eqs 7–10 or the simulated timeline).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalStep {
+    pub t_step: f64,
+    pub t_fwd: f64,
+    pub t_bwd: f64,
+    pub exposed_comm: f64,
+    pub r_fwd: f64,
+    pub r_bwd: f64,
+}
+
+/// Memory view — analytical backends report `m_free`, the simulator's
+/// allocator model reports active/reserved.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalMemory {
+    pub m_free_gib: Option<f64>,
+    pub active_gib: Option<f64>,
+    pub reserved_gib: Option<f64>,
+}
+
+/// §2.7 closed-form maxima (Eqs 12–15).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalBounds {
+    pub e_max: f64,
+    pub hfu_max: f64,
+    pub mfu_max: f64,
+    pub k_max: f64,
+}
+
+/// One winning grid point of Algorithm 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchChoice {
+    pub alpha_hat: f64,
+    pub gamma: f64,
+    pub stage: String,
+    pub tokens: f64,
+    pub mfu: f64,
+    pub hfu: f64,
+    pub tgs: f64,
+}
+
+/// Grid-search outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalSearch {
+    pub feasible_points: usize,
+    pub best_mfu: Option<SearchChoice>,
+    pub best_tgs: Option<SearchChoice>,
+}
+
+/// The unified result of evaluating one scenario with one backend. Every
+/// field group is optional — a backend fills what it computes and leaves
+/// the rest `None` — but `backend`, `scenario`, `feasible` and `oom` are
+/// always meaningful.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evaluation {
+    /// Which backend produced this (provenance).
+    pub backend: &'static str,
+    pub scenario: ScenarioPoint,
+    /// Can this configuration run at all (memory fits / ≥1 feasible grid
+    /// point)?
+    pub feasible: bool,
+    /// Out of memory at the configured batch. Metric fields may still be
+    /// populated (the paper prints the would-be numbers next to "OOM").
+    pub oom: bool,
+    pub metrics: Option<EvalMetrics>,
+    pub step: Option<EvalStep>,
+    pub memory: Option<EvalMemory>,
+    pub bounds: Option<EvalBounds>,
+    pub search: Option<EvalSearch>,
+}
+
+impl Evaluation {
+    /// Structured JSON value (omits `None` groups; non-finite numbers
+    /// become `null`).
+    pub fn json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("backend", Json::Str(self.backend.to_string())),
+            ("scenario", self.scenario.json()),
+            ("feasible", Json::Bool(self.feasible)),
+            ("oom", Json::Bool(self.oom)),
+        ];
+        if let Some(m) = &self.metrics {
+            pairs.push((
+                "metrics",
+                obj(vec![("mfu", num(m.mfu)), ("hfu", num(m.hfu)), ("tgs", num(m.tgs))]),
+            ));
+        }
+        if let Some(st) = &self.step {
+            pairs.push((
+                "step",
+                obj(vec![
+                    ("t_step", num(st.t_step)),
+                    ("t_fwd", num(st.t_fwd)),
+                    ("t_bwd", num(st.t_bwd)),
+                    ("exposed_comm", num(st.exposed_comm)),
+                    ("r_fwd", num(st.r_fwd)),
+                    ("r_bwd", num(st.r_bwd)),
+                ]),
+            ));
+        }
+        if let Some(mem) = &self.memory {
+            let mut v: Vec<(&str, Json)> = Vec::new();
+            if let Some(x) = mem.m_free_gib {
+                v.push(("m_free_gib", num(x)));
+            }
+            if let Some(x) = mem.active_gib {
+                v.push(("active_gib", num(x)));
+            }
+            if let Some(x) = mem.reserved_gib {
+                v.push(("reserved_gib", num(x)));
+            }
+            pairs.push(("memory", obj(v)));
+        }
+        if let Some(b) = &self.bounds {
+            pairs.push((
+                "bounds",
+                obj(vec![
+                    ("e_max", num(b.e_max)),
+                    ("hfu_max", num(b.hfu_max)),
+                    ("mfu_max", num(b.mfu_max)),
+                    ("k_max", num(b.k_max)),
+                ]),
+            ));
+        }
+        if let Some(se) = &self.search {
+            let choice = |c: &SearchChoice| {
+                obj(vec![
+                    ("alpha_hat", num(c.alpha_hat)),
+                    ("gamma", num(c.gamma)),
+                    ("stage", Json::Str(c.stage.clone())),
+                    ("tokens", num(c.tokens)),
+                    ("mfu", num(c.mfu)),
+                    ("hfu", num(c.hfu)),
+                    ("tgs", num(c.tgs)),
+                ])
+            };
+            let mut v: Vec<(&str, Json)> =
+                vec![("feasible_points", num(se.feasible_points as f64))];
+            if let Some(c) = &se.best_mfu {
+                v.push(("best_mfu", choice(c)));
+            }
+            if let Some(c) = &se.best_tgs {
+                v.push(("best_tgs", choice(c)));
+            }
+            pairs.push(("search", obj(v)));
+        }
+        obj(pairs)
+    }
+
+    /// Pretty-printed JSON document.
+    pub fn to_json(&self) -> String {
+        self.json().pretty()
+    }
+
+    /// Multi-line human rendering (the CLI's non-`--json` output).
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(out, "backend  : {}", self.backend);
+        let _ = writeln!(out, "scenario : {}", self.scenario.describe());
+        let _ = writeln!(
+            out,
+            "feasible : {}{}",
+            if self.feasible { "yes" } else { "no" },
+            if self.oom { "  (OOM)" } else { "" }
+        );
+        if let Some(mem) = &self.memory {
+            let mut parts = Vec::new();
+            if let Some(x) = mem.m_free_gib {
+                parts.push(format!("M_free {x:.1} GiB"));
+            }
+            if let Some(x) = mem.active_gib {
+                parts.push(format!("active {x:.1} GiB"));
+            }
+            if let Some(x) = mem.reserved_gib {
+                parts.push(format!("reserved {x:.1} GiB"));
+            }
+            let _ = writeln!(out, "memory   : {}", parts.join(", "));
+        }
+        if let Some(st) = &self.step {
+            let _ = writeln!(
+                out,
+                "step     : {:.3}s (fwd {:.3}s, bwd {:.3}s, exposed comm {:.3}s)  R_fwd {:.2}  R_bwd {:.2}",
+                st.t_step, st.t_fwd, st.t_bwd, st.exposed_comm, st.r_fwd, st.r_bwd
+            );
+        }
+        if let Some(m) = &self.metrics {
+            let _ = writeln!(
+                out,
+                "metrics  : MFU {:.3}  HFU {:.3}  TGS {:.0}",
+                m.mfu, m.hfu, m.tgs
+            );
+        }
+        if let Some(b) = &self.bounds {
+            let _ = writeln!(
+                out,
+                "bounds   : E_MAX {:.0} tok/GPU | HFU ≤ {:.3} | MFU ≤ {:.3} | K ≤ {:.0} TGS",
+                b.e_max, b.hfu_max, b.mfu_max, b.k_max
+            );
+        }
+        if let Some(se) = &self.search {
+            let _ = writeln!(out, "search   : {} feasible grid points", se.feasible_points);
+            if let Some(c) = &se.best_mfu {
+                let _ = writeln!(
+                    out,
+                    "  best MFU : {:.3} (HFU {:.3}, TGS {:.0}) at α̂={:.2} γ={:.2} {} tokens/GPU={:.0}",
+                    c.mfu, c.hfu, c.tgs, c.alpha_hat, c.gamma, c.stage, c.tokens
+                );
+            } else {
+                let _ = writeln!(out, "  best MFU : infeasible (OOM at every grid point)");
+            }
+            if let Some(c) = &se.best_tgs {
+                let _ = writeln!(
+                    out,
+                    "  best TGS : {:.0} (MFU {:.3}) at α̂={:.2} γ={:.2} {} tokens/GPU={:.0}",
+                    c.tgs, c.mfu, c.alpha_hat, c.gamma, c.stage, c.tokens
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Bytes → GiB (reports use GiB everywhere, like the paper).
+pub(crate) fn to_gib(bytes: f64) -> f64 {
+    bytes / GIB
+}
+
+/// JSON number that degrades non-finite values to `null` (JSON has no
+/// Infinity/NaN literals).
+pub(crate) fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Object literal helper preserving `&str` keys.
+pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::scenario::Scenario;
+
+    fn scen() -> Scenario {
+        Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 10240\n").unwrap()
+    }
+
+    #[test]
+    fn evaluation_json_is_valid_and_tagged() {
+        let s = scen();
+        for b in backends_for("both").unwrap() {
+            let e = b.evaluate(&s);
+            let parsed = Json::parse(&e.to_json()).unwrap();
+            assert_eq!(parsed.get("backend").unwrap().as_str().unwrap(), b.name());
+            assert_eq!(
+                parsed.get("scenario").unwrap().get("model").unwrap().as_str().unwrap(),
+                "13B"
+            );
+        }
+    }
+
+    #[test]
+    fn nonfinite_numbers_become_null() {
+        assert_eq!(num(f64::INFINITY), Json::Null);
+        assert_eq!(num(f64::NAN), Json::Null);
+        assert_eq!(num(1.5), Json::Num(1.5));
+    }
+
+    #[test]
+    fn text_rendering_mentions_backend_and_model() {
+        let s = scen();
+        let e = Analytical::default().evaluate(&s);
+        let t = e.to_text();
+        assert!(t.contains("analytical"), "{t}");
+        assert!(t.contains("13B"), "{t}");
+    }
+}

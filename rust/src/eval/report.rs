@@ -1,0 +1,395 @@
+//! Sweep reports: one JSON/CSV document for a whole grid, plus per-axis
+//! best-MFU / best-TGS summaries.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::sweep::SweepAxis;
+use super::{num, obj, EvalMetrics, Evaluation};
+
+/// One evaluated grid point: its axis assignment and one [`Evaluation`]
+/// per backend (empty, with `error` set, when the point's scenario could
+/// not be constructed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPointResult {
+    /// Position in odometer order — the report is sorted by this.
+    pub index: usize,
+    /// `(axis key, value)` in axis order.
+    pub point: Vec<(String, String)>,
+    /// One evaluation per backend, in backend order.
+    pub evals: Vec<Evaluation>,
+    pub error: Option<String>,
+}
+
+/// The full result of one sweep run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepReport {
+    pub axes: Vec<SweepAxis>,
+    /// Backend names, in evaluation order.
+    pub backends: Vec<String>,
+    /// All points, ordered by index.
+    pub points: Vec<SweepPointResult>,
+}
+
+impl SweepReport {
+    pub fn n_points(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Points whose scenario failed to construct.
+    pub fn n_errors(&self) -> usize {
+        self.points.iter().filter(|p| p.error.is_some()).count()
+    }
+
+    /// Best feasible point for backend index `bi`: metrics selected by
+    /// `sel`, ranked by `key`.
+    fn best_by(
+        &self,
+        bi: usize,
+        sel: impl Fn(&Evaluation) -> Option<EvalMetrics>,
+        key: impl Fn(&EvalMetrics) -> f64,
+    ) -> Option<(&SweepPointResult, EvalMetrics)> {
+        let mut best: Option<(&SweepPointResult, EvalMetrics)> = None;
+        for p in &self.points {
+            let Some(e) = p.evals.get(bi) else { continue };
+            if !e.feasible {
+                continue;
+            }
+            let Some(m) = sel(e) else { continue };
+            if best.as_ref().map(|(_, bm)| key(&m) > key(bm)).unwrap_or(true) {
+                best = Some((p, m));
+            }
+        }
+        best
+    }
+
+    /// Best feasible point by MFU for a backend name.
+    pub fn best_mfu(&self, backend: &str) -> Option<(&SweepPointResult, EvalMetrics)> {
+        let bi = self.backends.iter().position(|b| b == backend)?;
+        self.best_by(bi, |e| e.metrics, |m| m.mfu)
+    }
+
+    /// Best feasible point by TGS for a backend name.
+    pub fn best_tgs(&self, backend: &str) -> Option<(&SweepPointResult, EvalMetrics)> {
+        let bi = self.backends.iter().position(|b| b == backend)?;
+        self.best_by(bi, metrics_for_tgs, |m| m.tgs)
+    }
+
+    /// The whole report as a JSON value.
+    pub fn json(&self) -> Json {
+        let axes = Json::Arr(
+            self.axes
+                .iter()
+                .map(|a| {
+                    obj(vec![
+                        ("key", Json::Str(a.key.clone())),
+                        (
+                            "values",
+                            Json::Arr(a.values.iter().map(|v| scalar(v)).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+        let points = Json::Arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    let mut pairs = vec![
+                        ("index", num(p.index as f64)),
+                        ("point", point_obj(p)),
+                        ("evals", Json::Arr(p.evals.iter().map(|e| e.json()).collect())),
+                    ];
+                    if let Some(err) = &p.error {
+                        pairs.push(("error", Json::Str(err.clone())));
+                    }
+                    obj(pairs)
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("axes", axes),
+            (
+                "backends",
+                Json::Arr(self.backends.iter().map(|b| Json::Str(b.clone())).collect()),
+            ),
+            ("n_points", num(self.points.len() as f64)),
+            ("n_errors", num(self.n_errors() as f64)),
+            ("points", points),
+            ("summary", self.summary_json()),
+        ])
+    }
+
+    /// Pretty-printed JSON document.
+    pub fn to_json(&self) -> String {
+        self.json().pretty()
+    }
+
+    /// Per-backend global best and per-axis best-MFU/best-TGS summary.
+    /// One pass over the points per backend — each point contributes to
+    /// its own axis values' accumulators.
+    fn summary_json(&self) -> Json {
+        let mut backends = BTreeMap::new();
+        for (bi, bname) in self.backends.iter().enumerate() {
+            let best_entry = |best: Option<(&SweepPointResult, EvalMetrics)>| match best {
+                Some((p, m)) => obj(vec![
+                    ("point", point_obj(p)),
+                    ("mfu", num(m.mfu)),
+                    ("hfu", num(m.hfu)),
+                    ("tgs", num(m.tgs)),
+                ]),
+                None => Json::Null,
+            };
+            // acc[axis][value] = (best mfu, best tgs) over feasible points.
+            let mut acc: Vec<BTreeMap<&str, (f64, f64)>> =
+                vec![BTreeMap::new(); self.axes.len()];
+            for p in &self.points {
+                let Some(e) = p.evals.get(bi) else { continue };
+                if !e.feasible {
+                    continue;
+                }
+                let m_mfu = e.metrics;
+                let m_tgs = metrics_for_tgs(e);
+                if m_mfu.is_none() && m_tgs.is_none() {
+                    continue;
+                }
+                for (ai, (_, v)) in p.point.iter().enumerate().take(acc.len()) {
+                    let slot = acc[ai]
+                        .entry(v.as_str())
+                        .or_insert((f64::NEG_INFINITY, f64::NEG_INFINITY));
+                    if let Some(m) = m_mfu {
+                        slot.0 = slot.0.max(m.mfu);
+                    }
+                    if let Some(m) = m_tgs {
+                        slot.1 = slot.1.max(m.tgs);
+                    }
+                }
+            }
+            let mut per_axis = BTreeMap::new();
+            for (ai, ax) in self.axes.iter().enumerate() {
+                let mut by_value = BTreeMap::new();
+                for v in &ax.values {
+                    let entry = match acc[ai].get(v.as_str()) {
+                        Some(&(mfu, tgs)) => {
+                            obj(vec![("best_mfu", num(mfu)), ("best_tgs", num(tgs))])
+                        }
+                        None => Json::Null,
+                    };
+                    by_value.insert(v.clone(), entry);
+                }
+                per_axis.insert(ax.key.clone(), Json::Obj(by_value));
+            }
+            backends.insert(
+                bname.clone(),
+                obj(vec![
+                    ("best_mfu", best_entry(self.best_by(bi, |e| e.metrics, |m| m.mfu))),
+                    ("best_tgs", best_entry(self.best_by(bi, metrics_for_tgs, |m| m.tgs))),
+                    ("per_axis", Json::Obj(per_axis)),
+                ]),
+            );
+        }
+        Json::Obj(backends)
+    }
+
+    /// Flat CSV: one row per (point, backend); errored points emit one row
+    /// with the error message.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("index");
+        for a in &self.axes {
+            out.push(',');
+            out.push_str(&csv_cell(&a.key));
+        }
+        out.push_str(",backend,feasible,oom,mfu,hfu,tgs,t_step,active_gib,reserved_gib,m_free_gib,error\n");
+        for p in &self.points {
+            let prefix = {
+                let mut s = p.index.to_string();
+                for (_, v) in &p.point {
+                    s.push(',');
+                    s.push_str(&csv_cell(v));
+                }
+                s
+            };
+            if let Some(err) = &p.error {
+                out.push_str(&prefix);
+                out.push_str(",,,,,,,,,,,");
+                out.push_str(&csv_cell(err));
+                out.push('\n');
+                continue;
+            }
+            for e in &p.evals {
+                out.push_str(&prefix);
+                out.push(',');
+                out.push_str(e.backend);
+                out.push(',');
+                out.push_str(if e.feasible { "true" } else { "false" });
+                out.push(',');
+                out.push_str(if e.oom { "true" } else { "false" });
+                for v in [
+                    e.metrics.map(|m| m.mfu),
+                    e.metrics.map(|m| m.hfu),
+                    e.metrics.map(|m| m.tgs),
+                    e.step.map(|s| s.t_step),
+                    e.memory.and_then(|m| m.active_gib),
+                    e.memory.and_then(|m| m.reserved_gib),
+                    e.memory.and_then(|m| m.m_free_gib),
+                ] {
+                    out.push(',');
+                    if let Some(x) = v {
+                        if x.is_finite() {
+                            out.push_str(&format!("{x}"));
+                        }
+                    }
+                }
+                out.push_str(",\n");
+            }
+        }
+        out
+    }
+
+    /// Short human summary (the CLI's default sweep output).
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "sweep: {} points × {} backend(s) [{}]{}",
+            self.n_points(),
+            self.backends.len(),
+            self.backends.join(", "),
+            match self.n_errors() {
+                0 => String::new(),
+                k => format!("  ({k} points failed to construct)"),
+            }
+        );
+        for a in &self.axes {
+            let _ = writeln!(out, "  axis {} : {}", a.key, a.values.join(", "));
+        }
+        for b in &self.backends {
+            match self.best_mfu(b) {
+                Some((p, m)) => {
+                    let at: Vec<String> =
+                        p.point.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                    let _ = writeln!(
+                        out,
+                        "  best MFU ({b}) : {:.3} (TGS {:.0}) at {}",
+                        m.mfu,
+                        m.tgs,
+                        at.join(" ")
+                    );
+                }
+                None => {
+                    let _ = writeln!(out, "  best MFU ({b}) : no feasible point");
+                }
+            }
+            if let Some((p, m)) = self.best_tgs(b) {
+                let at: Vec<String> = p.point.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                let _ = writeln!(
+                    out,
+                    "  best TGS ({b}) : {:.0} (MFU {:.3}) at {}",
+                    m.tgs,
+                    m.mfu,
+                    at.join(" ")
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Metrics to rank by TGS. The gridsearch backend's `metrics` mirror its
+/// best-*MFU* grid point; its genuinely best-TGS choice lives in
+/// `search.best_tgs` — prefer that so TGS summaries don't understate it.
+fn metrics_for_tgs(e: &Evaluation) -> Option<EvalMetrics> {
+    if let Some(se) = &e.search {
+        if let Some(c) = &se.best_tgs {
+            return Some(EvalMetrics { mfu: c.mfu, hfu: c.hfu, tgs: c.tgs });
+        }
+    }
+    e.metrics
+}
+
+/// Axis assignment as a JSON object (numeric-looking values as numbers).
+fn point_obj(p: &SweepPointResult) -> Json {
+    Json::Obj(
+        p.point
+            .iter()
+            .map(|(k, v)| (k.clone(), scalar(v)))
+            .collect(),
+    )
+}
+
+/// A dialect value as JSON: number when it parses as one, string otherwise.
+fn scalar(v: &str) -> Json {
+    match v.parse::<f64>() {
+        Ok(n) if n.is_finite() => Json::Num(n),
+        _ => Json::Str(v.to_string()),
+    }
+}
+
+/// CSV escaping: quote cells containing separators or quotes.
+fn csv_cell(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::backends_for;
+    use crate::eval::sweep::{run_sweep, Sweep};
+
+    fn small_report() -> SweepReport {
+        let sw = Sweep::parse(
+            "model = 1.3B\nbatch = 1\nsweep.n_gpus = 4,8\nsweep.seq_len = 1024,2048\n",
+        )
+        .unwrap();
+        run_sweep(&sw, &backends_for("both").unwrap(), 2)
+    }
+
+    #[test]
+    fn json_document_is_valid_and_complete() {
+        let rep = small_report();
+        let v = Json::parse(&rep.to_json()).unwrap();
+        assert_eq!(v.get("n_points").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(v.get("points").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(v.get("backends").unwrap().as_arr().unwrap().len(), 2);
+        let summary = v.get("summary").unwrap();
+        let ana = summary.get("analytical").unwrap();
+        assert!(ana.get("best_mfu").unwrap().get("mfu").unwrap().as_f64().unwrap() > 0.0);
+        let per_axis = ana.get("per_axis").unwrap();
+        assert!(per_axis.get("n_gpus").unwrap().opt("4").is_some());
+        assert!(per_axis.get("seq_len").unwrap().opt("2048").is_some());
+    }
+
+    #[test]
+    fn csv_has_row_per_point_and_backend() {
+        let rep = small_report();
+        let csv = rep.to_csv();
+        // header + 4 points × 2 backends
+        assert_eq!(csv.lines().count(), 1 + 4 * 2, "{csv}");
+        let header = csv.lines().next().unwrap();
+        assert!(header.starts_with("index,n_gpus,seq_len,backend"), "{header}");
+    }
+
+    #[test]
+    fn text_summary_names_best_point() {
+        let rep = small_report();
+        let t = rep.to_text();
+        assert!(t.contains("best MFU (analytical)"), "{t}");
+        assert!(t.contains("n_gpus="), "{t}");
+    }
+
+    #[test]
+    fn best_tracks_monotone_axis() {
+        // MFU grows with seq_len in this regime, so the best point must
+        // sit at the largest context.
+        let rep = small_report();
+        let (p, _) = rep.best_mfu("analytical").unwrap();
+        let seq = p.point.iter().find(|(k, _)| k == "seq_len").unwrap().1.clone();
+        assert_eq!(seq, "2048");
+    }
+}

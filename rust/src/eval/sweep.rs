@@ -1,0 +1,389 @@
+//! The sweep engine: Cartesian expansion of `sweep.<key> = …` axes into
+//! scenario points, evaluated across a `std::thread` worker pool.
+//!
+//! A sweep file is a scenario file plus any number of axes:
+//!
+//! ```text
+//! model = 13B
+//! batch = 1
+//! sweep.n_gpus = 8,16,32,64                # list
+//! sweep.seq_len = 2048..32768*2            # geometric range (×2)
+//! sweep.cluster.inter_node_gbps = 50,100,200,400
+//! sweep.gamma = 0..1+0.5                   # arithmetic range (+0.5)
+//! ```
+//!
+//! Axis value dialects:
+//! * `a,b,c` — explicit list (kept verbatim, so non-numeric values like
+//!   model preset names sweep too);
+//! * `lo..hi` — arithmetic range with step 1;
+//! * `lo..hi+d` — arithmetic range with step `d`;
+//! * `lo..hi*k` — geometric range with factor `k`.
+//!
+//! Expansion order is deterministic: axes sorted by key, the **last** axis
+//! varying fastest (odometer order). Every point is evaluated by a pure
+//! [`Evaluator`], and results are collected by point index, so a sweep's
+//! report is byte-identical for any `--threads` value.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::scenario::{known_key, parse_kv, Scenario};
+use crate::util::channel::channel;
+
+use super::report::{SweepPointResult, SweepReport};
+use super::Evaluator;
+
+/// Hard cap on total grid points — a typo'd range should fail loudly, not
+/// grind for hours.
+pub const MAX_POINTS: usize = 1_000_000;
+
+/// Hard cap on values per axis.
+pub const MAX_AXIS_VALUES: usize = 100_000;
+
+/// One sweep dimension: a scenario key and its values (kept as dialect
+/// strings so arbitrary keys — including non-numeric ones — sweep).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepAxis {
+    pub key: String,
+    pub values: Vec<String>,
+}
+
+/// A parsed sweep: base scenario keys + axes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sweep {
+    /// Non-sweep keys shared by every point.
+    pub base: BTreeMap<String, String>,
+    /// Axes sorted by key; the last axis varies fastest in point order.
+    pub axes: Vec<SweepAxis>,
+}
+
+impl Sweep {
+    /// Load a sweep file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading sweep {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse sweep text: base scenario keys + `sweep.*` axes.
+    pub fn parse(text: &str) -> Result<Self> {
+        let kv = parse_kv(text)?;
+        let mut base = BTreeMap::new();
+        let mut axes = Vec::new();
+        for (k, v) in kv {
+            if let Some(key) = k.strip_prefix("sweep.") {
+                if !known_key(key) {
+                    bail!("sweep axis {k:?}: {key:?} is not a scenario key");
+                }
+                let values =
+                    parse_axis_values(&v).with_context(|| format!("sweep axis {key:?}"))?;
+                axes.push(SweepAxis { key: key.to_string(), values });
+            } else {
+                if !known_key(&k) {
+                    bail!("unknown scenario key {k:?}");
+                }
+                base.insert(k, v);
+            }
+        }
+        let mut n: usize = 1;
+        for a in &axes {
+            anyhow::ensure!(!a.values.is_empty(), "sweep axis {:?} has no values", a.key);
+            n = n
+                .checked_mul(a.values.len())
+                .filter(|&n| n <= MAX_POINTS)
+                .with_context(|| format!("sweep grid exceeds {MAX_POINTS} points"))?;
+        }
+        Ok(Sweep { base, axes })
+    }
+
+    /// Number of grid points (1 when there are no axes).
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode point `index` (odometer order, last axis fastest): the axis
+    /// assignment and the scenario it denotes. Scenario construction can
+    /// fail for individual points (e.g. a swept `n_gpus` exceeding the
+    /// cluster) — the sweep runner records those as errored points rather
+    /// than aborting the grid.
+    pub fn point(&self, index: usize) -> (Vec<(String, String)>, Result<Scenario>) {
+        let mut rem = index;
+        let mut vals = vec![String::new(); self.axes.len()];
+        for (i, ax) in self.axes.iter().enumerate().rev() {
+            vals[i] = ax.values[rem % ax.values.len()].clone();
+            rem /= ax.values.len();
+        }
+        let assignment: Vec<(String, String)> = self
+            .axes
+            .iter()
+            .zip(&vals)
+            .map(|(a, v)| (a.key.clone(), v.clone()))
+            .collect();
+        let mut kv = self.base.clone();
+        for (k, v) in &assignment {
+            kv.insert(k.clone(), v.clone());
+        }
+        (assignment, Scenario::from_kv(&kv))
+    }
+}
+
+enum Step {
+    Arith(f64),
+    Geom(f64),
+}
+
+/// Parse one axis value spec (see module docs for the dialect).
+pub fn parse_axis_values(spec: &str) -> Result<Vec<String>> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        bail!("empty axis value list");
+    }
+    if let Some((lo_s, rest)) = spec.split_once("..") {
+        let lo: f64 = lo_s.trim().parse().with_context(|| format!("range start {lo_s:?}"))?;
+        // `lo..hi` first (plain number), then `lo..hi*k` / `lo..hi+d`.
+        // Trying the plain parse first keeps scientific notation like
+        // `1e+5` working as a range end.
+        let (hi, step) = if let Ok(hi) = rest.trim().parse::<f64>() {
+            (hi, Step::Arith(1.0))
+        } else if let Some((hi_s, k_s)) = rest.split_once('*') {
+            (
+                hi_s.trim().parse().with_context(|| format!("range end {hi_s:?}"))?,
+                Step::Geom(k_s.trim().parse().with_context(|| format!("range factor {k_s:?}"))?),
+            )
+        } else if let Some((hi_s, d_s)) = rest.split_once('+') {
+            (
+                hi_s.trim().parse().with_context(|| format!("range end {hi_s:?}"))?,
+                Step::Arith(d_s.trim().parse().with_context(|| format!("range step {d_s:?}"))?),
+            )
+        } else {
+            bail!("bad range {spec:?} (use lo..hi, lo..hi+step or lo..hi*factor)");
+        };
+        anyhow::ensure!(hi >= lo, "range {spec:?}: end {hi} below start {lo}");
+        let mut out = Vec::new();
+        match step {
+            Step::Arith(d) => {
+                anyhow::ensure!(d > 0.0, "range {spec:?}: step must be > 0");
+                // Tolerance before floor(): (0.3-0.0)/0.1 is 2.999…96 in
+                // f64 and would silently drop the endpoint.
+                let steps = ((hi - lo) / d + 1e-9).floor();
+                anyhow::ensure!(
+                    steps < MAX_AXIS_VALUES as f64,
+                    "range {spec:?} expands to {steps} values (max {MAX_AXIS_VALUES})"
+                );
+                let count = steps as usize + 1;
+                for i in 0..count {
+                    let v = lo + i as f64 * d;
+                    if v <= hi * (1.0 + 1e-12) + 1e-12 {
+                        out.push(fmt_num(v));
+                    }
+                }
+            }
+            Step::Geom(k) => {
+                anyhow::ensure!(k > 1.0, "range {spec:?}: factor must be > 1");
+                anyhow::ensure!(lo > 0.0, "range {spec:?}: geometric start must be > 0");
+                let mut v = lo;
+                while v <= hi * (1.0 + 1e-9) {
+                    out.push(fmt_num(v));
+                    anyhow::ensure!(
+                        out.len() <= MAX_AXIS_VALUES,
+                        "range {spec:?} expands past {MAX_AXIS_VALUES} values"
+                    );
+                    v *= k;
+                }
+            }
+        }
+        anyhow::ensure!(!out.is_empty(), "range {spec:?} expands to no values");
+        return Ok(out);
+    }
+    if spec.contains(',') {
+        let mut out = Vec::new();
+        for item in spec.split(',') {
+            let item = item.trim();
+            anyhow::ensure!(!item.is_empty(), "empty item in axis list {spec:?}");
+            out.push(item.to_string());
+        }
+        return Ok(out);
+    }
+    Ok(vec![spec.to_string()])
+}
+
+/// Render a generated range value in the scenario dialect: integral values
+/// print without a fraction (so `n_gpus = 8`, not `8.0`).
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Evaluate every point of `sweep` with every backend on `threads` worker
+/// threads. Results are ordered by point index — the report is
+/// byte-identical for any thread count.
+pub fn run_sweep(
+    sweep: &Sweep,
+    backends: &[Box<dyn Evaluator>],
+    threads: usize,
+) -> SweepReport {
+    let n = sweep.len();
+    let threads = threads.max(1).min(n.max(1));
+    let mut results: Vec<Option<SweepPointResult>> = (0..n).map(|_| None).collect();
+
+    if threads <= 1 {
+        for (i, slot) in results.iter_mut().enumerate() {
+            *slot = Some(eval_point(sweep, backends, i));
+        }
+    } else {
+        let (job_tx, job_rx) = channel::<usize>(0);
+        let (res_tx, res_rx) = channel::<SweepPointResult>(0);
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                let job_rx = job_rx.clone();
+                let res_tx = res_tx.clone();
+                scope.spawn(move || {
+                    while let Ok(i) = job_rx.recv() {
+                        if res_tx.send(eval_point(sweep, backends, i)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            for i in 0..n {
+                let _ = job_tx.send(i);
+            }
+            drop(job_tx);
+            // Workers hold their own result-sender clones; dropping the
+            // original lets recv() observe disconnection (instead of
+            // hanging) if a worker panics without delivering its result.
+            drop(res_tx);
+            for _ in 0..n {
+                let pr = res_rx.recv().expect("sweep worker died");
+                let idx = pr.index;
+                results[idx] = Some(pr);
+            }
+        });
+    }
+
+    SweepReport {
+        axes: sweep.axes.clone(),
+        backends: backends.iter().map(|b| b.name().to_string()).collect(),
+        points: results.into_iter().map(|r| r.expect("every index evaluated")).collect(),
+    }
+}
+
+fn eval_point(sweep: &Sweep, backends: &[Box<dyn Evaluator>], index: usize) -> SweepPointResult {
+    let (point, scen) = sweep.point(index);
+    match scen {
+        Ok(s) => SweepPointResult {
+            index,
+            point,
+            evals: backends.iter().map(|b| b.evaluate(&s)).collect(),
+            error: None,
+        },
+        Err(e) => SweepPointResult { index, point, evals: Vec::new(), error: Some(format!("{e:#}")) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::backends_for;
+
+    #[test]
+    fn axis_list_kept_verbatim() {
+        assert_eq!(parse_axis_values("8, 16,32").unwrap(), vec!["8", "16", "32"]);
+        assert_eq!(parse_axis_values("7B,13B").unwrap(), vec!["7B", "13B"]);
+        assert_eq!(parse_axis_values("0.0,0.5").unwrap(), vec!["0.0", "0.5"]);
+    }
+
+    #[test]
+    fn axis_plain_range_steps_by_one() {
+        assert_eq!(parse_axis_values("3..6").unwrap(), vec!["3", "4", "5", "6"]);
+    }
+
+    #[test]
+    fn axis_arithmetic_range() {
+        assert_eq!(parse_axis_values("0..1+0.25").unwrap(), vec!["0", "0.25", "0.5", "0.75", "1"]);
+        assert_eq!(parse_axis_values("2048..8192+2048").unwrap(), vec!["2048", "4096", "6144", "8192"]);
+    }
+
+    #[test]
+    fn axis_geometric_range() {
+        assert_eq!(
+            parse_axis_values("2048..32768*2").unwrap(),
+            vec!["2048", "4096", "8192", "16384", "32768"]
+        );
+        assert_eq!(parse_axis_values("8..64*2").unwrap(), vec!["8", "16", "32", "64"]);
+    }
+
+    #[test]
+    fn axis_garbage_rejected() {
+        assert!(parse_axis_values("").is_err());
+        assert!(parse_axis_values("4..2").is_err());
+        assert!(parse_axis_values("1..8*0.5").is_err());
+        assert!(parse_axis_values("0..8*2").is_err());
+        assert!(parse_axis_values("1..x").is_err());
+        assert!(parse_axis_values("a,,b").is_err());
+    }
+
+    #[test]
+    fn sweep_expands_cartesian_in_odometer_order() {
+        let sw = Sweep::parse("model = 1.3B\nsweep.n_gpus = 4,8\nsweep.seq_len = 1024,2048\n")
+            .unwrap();
+        assert_eq!(sw.len(), 4);
+        // Axes sorted by key: n_gpus before seq_len; seq_len fastest.
+        let pts: Vec<Vec<(String, String)>> =
+            (0..4).map(|i| sw.point(i).0).collect();
+        let want = |n: &str, seq: &str| {
+            vec![
+                ("n_gpus".to_string(), n.to_string()),
+                ("seq_len".to_string(), seq.to_string()),
+            ]
+        };
+        assert_eq!(pts[0], want("4", "1024"));
+        assert_eq!(pts[1], want("4", "2048"));
+        assert_eq!(pts[2], want("8", "1024"));
+        assert_eq!(pts[3], want("8", "2048"));
+        let (_, s) = sw.point(3);
+        let s = s.unwrap();
+        assert_eq!(s.n_gpus, 8);
+        assert_eq!(s.training.seq_len, 2048);
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_axis() {
+        assert!(Sweep::parse("sweep.warp_speed = 1,2\n").is_err());
+        assert!(Sweep::parse("warp_speed = 1\n").is_err());
+    }
+
+    #[test]
+    fn infeasible_points_are_recorded_not_fatal() {
+        // 100000 GPUs exceeds every preset cluster → per-point error.
+        let sw = Sweep::parse("model = 1.3B\nsweep.n_gpus = 8,100000\n").unwrap();
+        let backends = backends_for("analytical").unwrap();
+        let rep = run_sweep(&sw, &backends, 2);
+        assert_eq!(rep.points.len(), 2);
+        assert!(rep.points[0].error.is_none());
+        assert!(rep.points[1].error.is_some());
+        assert!(rep.points[1].evals.is_empty());
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let sw = Sweep::parse(
+            "model = 1.3B\nsweep.n_gpus = 4,8,16\nsweep.seq_len = 1024..4096*2\n",
+        )
+        .unwrap();
+        let backends = backends_for("both").unwrap();
+        let serial = run_sweep(&sw, &backends, 1);
+        let parallel = run_sweep(&sw, &backends, 8);
+        assert_eq!(serial.to_json(), parallel.to_json());
+        assert_eq!(serial.to_csv(), parallel.to_csv());
+    }
+}

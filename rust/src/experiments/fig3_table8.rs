@@ -1,9 +1,13 @@
 //! Fig 3 + Table 8 — 13B model on 8 GPUs (2 nodes) on both clusters:
 //! context length sweep at ≈10240 tokens per batch, with and without
 //! `empty_cache`, reporting memory, MFU and throughput.
+//!
+//! Routed through the scenario-first [`crate::eval`] API: each cell is a
+//! [`Scenario`] evaluated by the [`Simulated`] backend.
 
+use crate::config::scenario::Scenario;
 use crate::config::{ClusterConfig, ModelConfig, TrainingConfig};
-use crate::simulator::{simulate_step, EfficiencyModel};
+use crate::eval::{Evaluator, Simulated};
 
 use super::report::{Report, Table};
 
@@ -22,7 +26,7 @@ pub const GRID: &[(u64, u64, bool)] = &[
 
 pub fn run() -> Report {
     let model = ModelConfig::preset("13B").expect("preset");
-    let eff = EfficiencyModel::default();
+    let backend = Simulated::default();
     let mut rep = Report::new("fig3", "Fig 3 + Table 8 (13B @8 GPUs, both clusters)");
     let mut cross: Vec<(f64, f64)> = Vec::new();
     for cluster_name in ["40GB-A100-200Gbps", "40GB-A100-100Gbps"] {
@@ -34,23 +38,31 @@ pub fn run() -> Report {
         for &(ctx, batch, cache) in GRID {
             let mut cfg = TrainingConfig::paper_default(ctx, batch);
             cfg.empty_cache = cache;
-            let s = simulate_step(&model, &cluster, &cfg, 8, &eff);
+            let scn = Scenario {
+                model: model.clone(),
+                cluster: cluster.clone(),
+                training: cfg,
+                n_gpus: 8,
+            };
+            let e = backend.evaluate(&scn);
+            let m = e.metrics.expect("simulated backend reports metrics");
+            let mem = e.memory.expect("simulated backend reports memory");
             if cluster_name.ends_with("200Gbps") && ctx == 10_240 && !cache {
-                cross.push((s.mfu, 0.0));
+                cross.push((m.mfu, 0.0));
             }
             if cluster_name.ends_with("100Gbps") && ctx == 10_240 && !cache {
                 if let Some(last) = cross.last_mut() {
-                    last.1 = s.mfu;
+                    last.1 = m.mfu;
                 }
             }
             t.push_row(vec![
                 ctx.to_string(),
                 batch.to_string(),
                 (ctx * batch).to_string(),
-                format!("{:.2}", s.active_gib),
-                format!("{:.2}", s.reserved_gib),
-                if s.oom { "OOM".into() } else { format!("{:.3}", s.mfu) },
-                if s.oom { "OOM".into() } else { format!("{:.0}", s.tgs) },
+                format!("{:.2}", mem.active_gib.unwrap_or(0.0)),
+                format!("{:.2}", mem.reserved_gib.unwrap_or(0.0)),
+                if e.oom { "OOM".into() } else { format!("{:.3}", m.mfu) },
+                if e.oom { "OOM".into() } else { format!("{:.0}", m.tgs) },
                 if cache { "Y".into() } else { String::new() },
             ]);
         }

@@ -45,8 +45,10 @@
 pub mod analysis;
 pub mod config;
 pub mod coordinator;
+pub mod eval;
 pub mod experiments;
 pub mod gridsearch;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod simulator;
 pub mod util;

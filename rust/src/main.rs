@@ -1,24 +1,29 @@
 //! `fsdp-bw` — CLI for the FSDP memory/bandwidth study.
 //!
-//! Subcommands map one-to-one onto the paper's artifacts:
-//! * `experiment <id>` — regenerate a table/figure (see `list`);
-//! * `gridsearch` — Algorithm 1 on one (model, cluster, N) point;
-//! * `simulate` — one simulated training step with the calibrated models;
-//! * `bounds` — the §2.7 closed-form maxima for a configuration;
-//! * `train` — run the real FSDP trainer on AOT artifacts;
+//! Every performance question is a [`Scenario`] routed through the
+//! [`fsdp_bw::eval::Evaluator`] API:
+//! * `simulate` / `bounds` / `gridsearch` — one scenario from CLI flags,
+//!   evaluated by the matching backend;
+//! * `scenario` — a `.scn` file evaluated by any/all backends;
+//! * `sweep` — a `.scn` file with `sweep.*` axes, expanded to a Cartesian
+//!   grid and evaluated in parallel;
+//! * `experiment` — regenerate a paper table/figure;
+//! * `train` — the real FSDP trainer on AOT artifacts (needs `--features
+//!   xla`);
 //! * `list` — enumerate experiments, models and clusters.
 
-use std::path::PathBuf;
+use std::collections::BTreeMap;
+use std::path::Path;
 
 use anyhow::Result;
 
-use fsdp_bw::analysis::StepModel;
-use fsdp_bw::config::{ClusterConfig, ModelConfig, TrainingConfig};
-use fsdp_bw::coordinator::{FabricConfig, TrainParams, Trainer};
+use fsdp_bw::config::scenario::Scenario;
+use fsdp_bw::config::{ClusterConfig, ModelConfig};
+use fsdp_bw::eval::{backends_for, run_sweep, BoundsEval, Searched, Simulated};
+use fsdp_bw::eval::{Evaluation, Evaluator, Sweep};
 use fsdp_bw::experiments;
-use fsdp_bw::gridsearch::GridSearch;
-use fsdp_bw::simulator::{simulate_step, EfficiencyModel};
 use fsdp_bw::util::cli::Args;
+use fsdp_bw::util::json::Json;
 
 const USAGE: &str = "\
 fsdp-bw — 'Memory and Bandwidth are All You Need for FSDP' reproduction
@@ -27,30 +32,27 @@ USAGE: fsdp-bw <command> [options]
 
 COMMANDS:
   experiment <id|all> [--json]           regenerate a paper table/figure
-  gridsearch [--model 13B] [--cluster 40GB-A100-200Gbps] [--gpus 512]
+  gridsearch [--model 13B] [--cluster 40GB-A100-200Gbps] [--gpus 512] [--json]
                                          Algorithm 1 on one point
   simulate   [--model 13B] [--cluster ...] [--gpus 8] [--seq 10240]
-             [--batch 1] [--gamma 0.0] [--empty-cache]
-                                         one simulated training step
-  bounds     [--model 13B] [--cluster ...] [--gpus 8] [--seq 10240]
+             [--batch 1] [--gamma 0.0] [--stage 3] [--precision bf16]
+             [--empty-cache] [--json]    one simulated training step
+  bounds     [--model 13B] [--cluster ...] [--gpus 8] [--seq 10240] [--json]
                                          closed-form §2.7 maxima
+  scenario   <file.scn> [--backend all] [--json]
+                                         evaluate a scenario file
+                                         (backends: analytical, simulated,
+                                          bounds, gridsearch, both, all)
+  sweep      <file.scn> [--backend both] [--threads N] [--json|--csv]
+             [--out report.json]         expand sweep.* axes to a Cartesian
+                                         grid and evaluate in parallel
   train      [--artifact train_step_27m] [--artifacts-dir artifacts]
              [--ranks 4] [--steps 100] [--bandwidth-gbps 200]
              [--seed 42] [--csv out.csv] [--quiet]
                                          real FSDP training on AOT artifacts
-  scenario   <file.scn>                  analyze + simulate a user scenario file
+                                         (requires --features xla)
   list                                   experiments, models, clusters
 ";
-
-fn lookup_model(name: &str) -> Result<ModelConfig> {
-    ModelConfig::lookup(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}; see `fsdp-bw list`"))
-}
-
-fn lookup_cluster(name: &str) -> Result<ClusterConfig> {
-    ClusterConfig::preset(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown cluster {name:?}; see `fsdp-bw list`"))
-}
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -58,20 +60,73 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
-    let args = Args::parse(&raw, &["json", "empty-cache", "quiet"])?;
-    let cmd = args.positional[0].as_str();
+    // `train` takes `--csv <path>`; everywhere else `--csv` is an output
+    // format flag. Likewise `--json` never takes a value. Key the flag
+    // table off the first non-flag token so a leading boolean flag
+    // (`fsdp-bw --quiet train …`) still selects train's table.
+    let cmd0 = raw.iter().find(|t| !t.starts_with('-')).map(String::as_str).unwrap_or("");
+    let flags: &[&str] = match cmd0 {
+        "train" => &["quiet"],
+        _ => &["json", "csv", "empty-cache", "quiet"],
+    };
+    let args = Args::parse(&raw, flags)?;
+    let cmd = match args.positional.first() {
+        Some(c) => c.as_str(),
+        None => {
+            print!("{USAGE}");
+            anyhow::bail!("missing command");
+        }
+    };
     match cmd {
         "experiment" => cmd_experiment(&args),
         "gridsearch" => cmd_gridsearch(&args),
         "simulate" => cmd_simulate(&args),
         "bounds" => cmd_bounds(&args),
-        "train" => cmd_train(&args),
         "scenario" => cmd_scenario(&args),
+        "sweep" => cmd_sweep(&args),
+        "train" => cmd_train(&args),
         "list" => cmd_list(),
         other => {
             print!("{USAGE}");
             anyhow::bail!("unknown command {other:?}");
         }
+    }
+}
+
+/// Build a scenario key/value map from the shared CLI flags, with
+/// per-subcommand defaults. CLI flags are just another front-end to the
+/// same dialect that scenario files use.
+fn kv_from_flags(args: &Args, defaults: &[(&str, &str)]) -> BTreeMap<String, String> {
+    let mut kv = BTreeMap::new();
+    for (flag, key) in [
+        ("model", "model"),
+        ("cluster", "cluster"),
+        ("gpus", "n_gpus"),
+        ("seq", "seq_len"),
+        ("batch", "batch"),
+        ("gamma", "gamma"),
+        ("stage", "zero_stage"),
+        ("precision", "precision"),
+    ] {
+        if let Some(v) = args.str_maybe(flag) {
+            kv.insert(key.to_string(), v);
+        }
+    }
+    if args.flag("empty-cache") {
+        kv.insert("empty_cache".to_string(), "true".to_string());
+    }
+    for (k, v) in defaults {
+        kv.entry(k.to_string()).or_insert_with(|| v.to_string());
+    }
+    kv
+}
+
+/// Print one evaluation as text or JSON.
+fn emit(e: &Evaluation, json: bool) {
+    if json {
+        println!("{}", e.to_json());
+    } else {
+        print!("{}", e.to_text());
     }
 }
 
@@ -98,77 +153,101 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_gridsearch(args: &Args) -> Result<()> {
-    args.check_known(&["model", "cluster", "gpus"])?;
-    let m = lookup_model(&args.str_opt("model", "13B"))?;
-    let c = lookup_cluster(&args.str_opt("cluster", "40GB-A100-200Gbps"))?;
-    let gpus = args.num_opt("gpus", 512u64)?;
-    let r = GridSearch::new(&m, &c, gpus).run();
-    println!("feasible grid points: {}", r.feasible);
-    match r.best_mfu {
-        Some(p) => println!(
-            "best MFU : {:.3} (HFU {:.3}, TGS {:.0}) at α̂={:.2} γ={:.2} {} tokens/GPU={:.0}",
-            p.mfu, p.hfu, p.tgs, p.alpha_hat, p.gamma, p.stage, p.tokens
-        ),
-        None => println!("best MFU : infeasible (OOM at every grid point)"),
-    }
-    if let Some(p) = r.best_tgs {
-        println!(
-            "best TGS : {:.0} (MFU {:.3}) at α̂={:.2} γ={:.2} {} tokens/GPU={:.0}",
-            p.tgs, p.mfu, p.alpha_hat, p.gamma, p.stage, p.tokens
-        );
-    }
+    args.check_known(&["model", "cluster", "gpus", "precision", "json"])?;
+    let s = Scenario::from_kv(&kv_from_flags(args, &[("model", "13B"), ("n_gpus", "512")]))?;
+    emit(&Searched.evaluate(&s), args.flag("json"));
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    args.check_known(&["model", "cluster", "gpus", "seq", "batch", "gamma", "empty-cache"])?;
-    let m = lookup_model(&args.str_opt("model", "13B"))?;
-    let c = lookup_cluster(&args.str_opt("cluster", "40GB-A100-200Gbps"))?;
-    let gpus = args.num_opt("gpus", 8u64)?;
-    let seq = args.num_opt("seq", 10_240u64)?;
-    let batch = args.num_opt("batch", 1u64)?;
-    let gamma = args.num_opt("gamma", 0.0f64)?;
-    let mut cfg = TrainingConfig::paper_default(seq, batch).with_gamma(gamma);
-    cfg.empty_cache = args.flag("empty-cache");
-    let s = simulate_step(&m, &c, &cfg, gpus, &EfficiencyModel::default());
-    println!("{} on {}× {}, ctx {} × batch {} (γ={}):", m.name, gpus, c.name, seq, batch, gamma);
-    if s.oom {
-        println!(
-            "  OOM (reserved {:.1} GiB > {:.1} GiB)",
-            s.reserved_gib,
-            c.m_max() / fsdp_bw::config::GIB
-        );
-    }
-    println!(
-        "  step {:.3}s  (fwd {:.3}s, bwd {:.3}s, exposed comm {:.3}s)",
-        s.t_step, s.t_fwd, s.t_bwd, s.exposed_comm
-    );
-    println!("  R_fwd {:.2}  R_bwd {:.2}", s.r_fwd, s.r_bwd);
-    println!("  MFU {:.3}  HFU {:.3}  TGS {:.0}", s.mfu, s.hfu, s.tgs);
-    println!("  memory: active {:.1} GiB, reserved {:.1} GiB", s.active_gib, s.reserved_gib);
+    args.check_known(&[
+        "model",
+        "cluster",
+        "gpus",
+        "seq",
+        "batch",
+        "gamma",
+        "stage",
+        "precision",
+        "empty-cache",
+        "json",
+    ])?;
+    let s = Scenario::from_kv(&kv_from_flags(args, &[("model", "13B"), ("seq_len", "10240")]))?;
+    emit(&Simulated::default().evaluate(&s), args.flag("json"));
     Ok(())
 }
 
 fn cmd_bounds(args: &Args) -> Result<()> {
-    args.check_known(&["model", "cluster", "gpus", "seq"])?;
-    let m = lookup_model(&args.str_opt("model", "13B"))?;
-    let c = lookup_cluster(&args.str_opt("cluster", "40GB-A100-200Gbps"))?;
-    let gpus = args.num_opt("gpus", 8u64)?;
-    let seq = args.num_opt("seq", 10_240u64)?;
-    let cfg = TrainingConfig::bs1_max_ctx(seq);
-    let sm = StepModel::new(&m, &c, &cfg, gpus);
-    let b = sm.bounds();
-    let mem = sm.memory();
-    println!("{} on {}× {} at seq {}:", m.name, gpus, c.name, seq);
-    println!("  M_free : {:.1} GiB", mem.m_free / fsdp_bw::config::GIB);
-    println!("  E_MAX  : {:.0} tokens/GPU   (Eq 12)", b.e_max);
-    println!("  α_HFU ≤ {:.3}               (Eq 13)", b.hfu_max);
-    println!("  α_MFU ≤ {:.3}               (Eq 14)", b.mfu_max);
-    println!("  K     ≤ {:.0} TGS           (Eq 15)", b.k_max);
+    args.check_known(&["model", "cluster", "gpus", "seq", "precision", "json"])?;
+    let s = Scenario::from_kv(&kv_from_flags(args, &[("model", "13B"), ("seq_len", "10240")]))?;
+    emit(&BoundsEval.evaluate(&s), args.flag("json"));
     Ok(())
 }
 
+fn cmd_scenario(args: &Args) -> Result<()> {
+    args.check_known(&["backend", "json"])?;
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("scenario needs a file path (key = value format)"))?;
+    let s = Scenario::load(Path::new(path))?;
+    let backends = backends_for(&args.str_opt("backend", "all"))?;
+    let evals: Vec<Evaluation> = backends.iter().map(|b| b.evaluate(&s)).collect();
+    if args.flag("json") {
+        let arr = Json::Arr(evals.iter().map(|e| e.json()).collect());
+        println!("{}", arr.pretty());
+    } else {
+        for (i, e) in evals.iter().enumerate() {
+            if i > 0 {
+                println!();
+            }
+            print!("{}", e.to_text());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    args.check_known(&["backend", "threads", "json", "csv", "out"])?;
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("sweep needs a file path (scenario + sweep.* axes)"))?;
+    let sweep = Sweep::load(Path::new(path))?;
+    let backends = backends_for(&args.str_opt("backend", "both"))?;
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads = args.num_opt("threads", default_threads)?;
+    let report = run_sweep(&sweep, &backends, threads);
+    let mut body = if args.flag("json") {
+        report.to_json()
+    } else if args.flag("csv") {
+        report.to_csv()
+    } else {
+        report.to_text()
+    };
+    if !body.ends_with('\n') {
+        body.push('\n');
+    }
+    match args.str_maybe("out") {
+        Some(p) => {
+            std::fs::write(&p, body.as_bytes())?;
+            println!(
+                "wrote {p} ({} points × {} backends)",
+                report.n_points(),
+                report.backends.len()
+            );
+        }
+        None => print!("{body}"),
+    }
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<()> {
+    use std::path::PathBuf;
+
+    use fsdp_bw::coordinator::{FabricConfig, TrainParams, Trainer};
+
     args.check_known(&[
         "artifact",
         "artifacts-dir",
@@ -213,36 +292,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_scenario(args: &Args) -> Result<()> {
-    args.check_known(&[])?;
-    let path = args
-        .positional
-        .get(1)
-        .ok_or_else(|| anyhow::anyhow!("scenario needs a file path (key = value format)"))?;
-    let s = fsdp_bw::config::scenario::Scenario::load(std::path::Path::new(path))?;
-    println!(
-        "scenario: {} on {}× {} (ctx {} × batch {}, γ={}, {})",
-        s.model.name,
-        s.n_gpus,
-        s.cluster.name,
-        s.training.seq_len,
-        s.training.batch_per_gpu,
-        s.training.gamma,
-        s.training.zero_stage
-    );
-    let sm = StepModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
-    let b = sm.bounds();
-    println!("bounds : E_MAX {:.0} tok/GPU | MFU ≤ {:.3} | K ≤ {:.0} TGS", b.e_max, b.mfu_max, b.k_max);
-    let st = simulate_step(&s.model, &s.cluster, &s.training, s.n_gpus, &EfficiencyModel::default());
-    if st.oom {
-        println!("simulated: OOM (reserved {:.1} GiB)", st.reserved_gib);
-    } else {
-        println!(
-            "simulated: MFU {:.3} | TGS {:.0} | step {:.3}s | R_fwd {:.2} | active {:.1} GiB",
-            st.mfu, st.tgs, st.t_step, st.r_fwd, st.active_gib
-        );
-    }
-    Ok(())
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "the `train` subcommand runs the real PJRT runtime and needs the `xla` \
+         feature: rebuild with `cargo build --release --features xla` (see Cargo.toml)"
+    )
 }
 
 fn cmd_list() -> Result<()> {

@@ -1,0 +1,186 @@
+//! Scenario-dialect edge cases and the serialization roundtrip property:
+//! `Scenario::parse(&s.to_text()) == s` for custom models, cluster
+//! overrides and every spelling the dialect accepts.
+
+use fsdp_bw::config::scenario::{parse_kv, Scenario};
+use fsdp_bw::config::{ClusterConfig, ModelConfig, Precision, TrainingConfig, ZeroStage, GIB};
+use fsdp_bw::eval::parse_axis_values;
+use fsdp_bw::util::Rng64;
+
+#[test]
+fn duplicate_keys_are_an_error() {
+    assert!(parse_kv("seq_len = 1024\nseq_len = 2048\n").is_err());
+    assert!(Scenario::parse("model = 7B\nmodel = 13B\n").is_err());
+    // Same key once is fine.
+    assert!(Scenario::parse("model = 7B\nseq_len = 2048\n").is_ok());
+}
+
+#[test]
+fn cluster_nodes_override_changes_capacity_and_roundtrips() {
+    let s = Scenario::parse("model = 7B\ncluster.nodes = 8\nn_gpus = 32\n").unwrap();
+    assert_eq!(s.cluster.total_gpus(), 32);
+    let text = s.to_text();
+    assert!(text.contains("cluster.nodes = 8"), "{text}");
+    assert_eq!(Scenario::parse(&text).unwrap(), s);
+    // A job larger than the overridden cluster must be rejected.
+    assert!(Scenario::parse("model = 7B\ncluster.nodes = 8\nn_gpus = 64\n").is_err());
+}
+
+#[test]
+fn all_zero_stage_spellings() {
+    for (spelling, want) in [
+        ("3", ZeroStage::Stage3),
+        ("zero-3", ZeroStage::Stage3),
+        ("zero3", ZeroStage::Stage3),
+        ("1", ZeroStage::Stage12),
+        ("2", ZeroStage::Stage12),
+        ("12", ZeroStage::Stage12),
+        ("1/2", ZeroStage::Stage12),
+        ("zero-1/2", ZeroStage::Stage12),
+        ("zero-12", ZeroStage::Stage12),
+    ] {
+        let s = Scenario::parse(&format!("model = 7B\nzero_stage = {spelling}\n"))
+            .unwrap_or_else(|e| panic!("{spelling}: {e}"));
+        assert_eq!(s.training.zero_stage, want, "{spelling}");
+    }
+    assert!(Scenario::parse("model = 7B\nzero_stage = 4\n").is_err());
+}
+
+#[test]
+fn precision_spellings() {
+    for (spelling, want) in [
+        ("bf16", Precision::Bf16),
+        ("fp16", Precision::Fp16),
+        ("FP32", Precision::Fp32),
+        ("float32", Precision::Fp32),
+    ] {
+        let s = Scenario::parse(&format!("model = 7B\nprecision = {spelling}\n")).unwrap();
+        assert_eq!(s.training.precision, want, "{spelling}");
+    }
+    assert!(Scenario::parse("model = 7B\nprecision = int8\n").is_err());
+}
+
+#[test]
+fn sweep_axis_value_dialects() {
+    // list
+    assert_eq!(parse_axis_values("8,16,32,64").unwrap(), vec!["8", "16", "32", "64"]);
+    // range (step 1)
+    assert_eq!(parse_axis_values("1..4").unwrap(), vec!["1", "2", "3", "4"]);
+    // range with arithmetic step
+    assert_eq!(parse_axis_values("512..2048+512").unwrap(), vec!["512", "1024", "1536", "2048"]);
+    // range with geometric factor
+    assert_eq!(
+        parse_axis_values("2048..65536*2").unwrap(),
+        vec!["2048", "4096", "8192", "16384", "32768", "65536"]
+    );
+    // fractional steps
+    assert_eq!(parse_axis_values("0..1+0.5").unwrap(), vec!["0", "0.5", "1"]);
+}
+
+/// The roundtrip fix: custom models and cluster overrides used to
+/// serialize as bare preset names (`model = mine`) that failed re-parse.
+#[test]
+fn custom_model_roundtrips() {
+    let text = "model.name = mine\nmodel.layers = 12\nmodel.hidden = 1024\nmodel.heads = 8\n\
+                model.vocab = 50000\nn_gpus = 8\nseq_len = 4096\n";
+    let s = Scenario::parse(text).unwrap();
+    assert_eq!(s.model.name, "mine");
+    assert_eq!(s.model.vocab, 50_000);
+    let out = s.to_text();
+    assert!(!out.contains("model = mine"), "bare custom name must not be emitted: {out}");
+    assert_eq!(Scenario::parse(&out).unwrap(), s);
+}
+
+#[test]
+fn preset_with_overrides_roundtrips() {
+    let text = "model = 13B\nmodel.vocab = 32000\ncluster = 40GB-A100-100Gbps\n\
+                cluster.gpu_mem_gib = 80\ncluster.peak_tflops = 989\nn_gpus = 16\n";
+    let s = Scenario::parse(text).unwrap();
+    assert_eq!(s.cluster.gpu.mem_bytes, 80.0 * GIB);
+    assert_eq!(s.cluster.gpu.peak_flops, 989e12);
+    let s2 = Scenario::parse(&s.to_text()).unwrap();
+    assert_eq!(s, s2);
+}
+
+/// Property test: 300 random scenarios — preset or custom model, random
+/// cluster overrides, every training knob — must all survive
+/// `parse(to_text())` exactly.
+#[test]
+fn random_scenarios_roundtrip_exactly() {
+    let mut rng = Rng64::new(0xF5DB);
+    let model_presets = ModelConfig::presets();
+    let cluster_presets: Vec<ClusterConfig> = ClusterConfig::table1_presets()
+        .into_iter()
+        .chain(ClusterConfig::table3_presets())
+        .collect();
+
+    for iter in 0..300 {
+        // Model: preset or custom with dialect-expressible fields.
+        let model = if rng.below(2) == 0 {
+            model_presets[rng.below(model_presets.len() as u64) as usize].clone()
+        } else {
+            let heads = 1 + rng.below(16);
+            let hidden = heads * (8 + rng.below(120));
+            let mut m = ModelConfig::new(
+                &format!("custom{}", rng.below(1000)),
+                1 + rng.below(64),
+                hidden,
+                heads,
+            );
+            if rng.below(2) == 0 {
+                m.vocab = 1000 + rng.below(100_000);
+            }
+            m
+        };
+
+        // Cluster: preset base, randomly overridden.
+        let mut cluster =
+            cluster_presets[rng.below(cluster_presets.len() as u64) as usize].clone();
+        if rng.below(2) == 0 {
+            cluster.inter_node_gbps = [25.0, 50.0, 100.0, 200.0, 400.0, 800.0]
+                [rng.below(6) as usize];
+        }
+        if rng.below(2) == 0 {
+            cluster.gpu.mem_bytes = (16 + rng.below(160)) as f64 * GIB;
+        }
+        if rng.below(2) == 0 {
+            cluster.gpu.peak_flops = (100 + rng.below(2000)) as f64 * 1e12;
+        }
+        if rng.below(2) == 0 {
+            cluster.nodes = 1 + rng.below(256);
+        }
+        if rng.below(2) == 0 {
+            cluster.gpus_per_node = 1 + rng.below(8);
+        }
+        if rng.below(2) == 0 {
+            cluster.latency = rng.below(100) as f64 * 1e-6;
+        }
+        if rng.below(2) == 0 {
+            cluster.reserved_bytes = rng.below(16) as f64 * GIB;
+        }
+        if rng.below(3) == 0 {
+            cluster.name = format!("rig{}", rng.below(100));
+        }
+
+        let mut training = TrainingConfig::paper_default(
+            128 * (1 + rng.below(512)),
+            1 + rng.below(32),
+        );
+        training.gamma = rng.below(101) as f64 / 100.0;
+        training.zero_stage =
+            if rng.below(2) == 0 { ZeroStage::Stage3 } else { ZeroStage::Stage12 };
+        training.precision = match rng.below(3) {
+            0 => Precision::Bf16,
+            1 => Precision::Fp16,
+            _ => Precision::Fp32,
+        };
+        training.empty_cache = rng.below(2) == 0;
+
+        let n_gpus = 1 + rng.below(cluster.total_gpus());
+        let s = Scenario { model, cluster, training, n_gpus };
+        let text = s.to_text();
+        let s2 = Scenario::parse(&text)
+            .unwrap_or_else(|e| panic!("iter {iter}: reparse failed: {e:#}\n---\n{text}"));
+        assert_eq!(s, s2, "iter {iter}: roundtrip mismatch\n---\n{text}");
+    }
+}
