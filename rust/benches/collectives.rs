@@ -1,10 +1,13 @@
 //! Bench: the in-process fabric and ring collectives — real data movement
 //! (no modeled sleep), measured in steady state with persistent rank
 //! threads (the trainer's actual shape), target within ~2× of the memcpy
-//! roofline per rank at 2 ranks.
+//! roofline per rank at 2 ranks. Also compares the `comm` cost model's
+//! ring / tree / hierarchical predictions across message sizes.
 
 use std::sync::Arc;
 
+use fsdp_bw::comm::{Algorithm, CommEngine};
+use fsdp_bw::config::ClusterConfig;
 use fsdp_bw::coordinator::{Communicator, Fabric, FabricConfig};
 use fsdp_bw::util::bench::Bench;
 use fsdp_bw::util::channel::{channel, Sender};
@@ -96,6 +99,34 @@ fn main() {
         dst.copy_from_slice(&src);
         std::hint::black_box(dst[0])
     });
+
+    // Modeled comparison: the comm engine's ring vs tree vs hierarchical
+    // vs auto predictions across message sizes on a 64-GPU multi-node job.
+    let cluster = ClusterConfig::preset("40GB-A100-200Gbps").unwrap();
+    let engine_for = |algo: Algorithm| {
+        let mut c = cluster.clone();
+        c.comm.collective = algo;
+        CommEngine::simulated(&c, 64)
+    };
+    println!("\nmodeled all-gather seconds (64 GPUs, 40GB-A100-200Gbps):");
+    println!(
+        "{:>12}  {:>12}  {:>12}  {:>14}  {:>12}",
+        "bytes", "ring", "tree", "hierarchical", "auto"
+    );
+    for bytes in [1e4, 1e6, 1e8, 1e9] {
+        let ts: Vec<f64> =
+            Algorithm::ALL.iter().map(|&a| engine_for(a).all_gather(bytes)).collect();
+        println!(
+            "{:>12.0}  {:>12.3e}  {:>12.3e}  {:>14.3e}  {:>12.3e}",
+            bytes, ts[0], ts[1], ts[2], ts[3]
+        );
+    }
+    for algo in Algorithm::ALL {
+        let e = engine_for(algo);
+        b.case(&format!("collectives/model_{algo}_64gpu_1GiB"), 1.0, move || {
+            std::hint::black_box(e.all_gather(1e9))
+        });
+    }
 
     println!("\n{}", b.dump_json());
 }

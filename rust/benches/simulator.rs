@@ -1,8 +1,9 @@
 //! Bench: the discrete-event step simulator — sweep-grade throughput
 //! (target ≥ 10⁵ simulated steps/s so table regeneration stays instant).
 
+use fsdp_bw::comm::CommEngine;
 use fsdp_bw::config::{ClusterConfig, ModelConfig, TrainingConfig};
-use fsdp_bw::simulator::{simulate_step, AllocatorModel, EfficiencyModel, NetworkModel};
+use fsdp_bw::simulator::{simulate_step, AllocatorModel, EfficiencyModel};
 use fsdp_bw::util::bench::Bench;
 
 fn main() {
@@ -27,8 +28,8 @@ fn main() {
     b.case("simulator/allocator_model", 1.0, || {
         std::hint::black_box(AllocatorModel::new(&m, &cluster, &cfg, 8).reserved)
     });
-    b.case("simulator/network_model_ring", 1.0, || {
-        let net = NetworkModel::new(&cluster, 512);
+    b.case("simulator/comm_engine_ring", 1.0, || {
+        let net = CommEngine::simulated(&cluster, 512);
         std::hint::black_box(net.all_gather(1e9))
     });
 

@@ -4,6 +4,11 @@
 //! The headline result: the *product* `M_free · S_volume` of free GPU
 //! memory and per-GPU bandwidth bounds every efficiency metric — "memory
 //! and bandwidth are all you need".
+//!
+//! `S_volume` here is the *effective* per-GPU bandwidth of the cluster's
+//! configured collective algorithm ([`crate::comm::CommEngine::s_effective`]
+//! — ε = 0, same engine as the rest of the chain): the flat bottleneck
+//! share for the ring, a lifted value for hierarchical collectives.
 
 use super::StepModel;
 
@@ -27,7 +32,7 @@ impl Bounds {
         let l = sm.model.layers as f64;
         let h = sm.model.hidden as f64;
         let lseq = sm.cfg.seq_len as f64;
-        let s_vol = sm.cluster.job_bandwidth(sm.n_gpus);
+        let s_vol = sm.comm().s_effective();
         let s_flops = sm.cluster.s_flops();
         let m_free = mem.m_free;
 
@@ -53,7 +58,7 @@ impl Bounds {
         let l = sm.model.layers as f64;
         let h = sm.model.hidden as f64;
         let lseq = sm.cfg.seq_len as f64;
-        let s_vol = sm.cluster.job_bandwidth(sm.n_gpus);
+        let s_vol = sm.comm().s_effective();
         let denom = (q + 15.0 * gamma * q + 2.0 * gamma) * l * h * q;
         ((2.0 + lseq / (3.0 * h)) / denom * s_vol * mem.m_free / sm.cluster.s_flops()).min(1.0)
     }
@@ -150,6 +155,19 @@ mod tests {
         assert!((eq13 - eq22).abs() < 1e-12);
         // Larger γ keeps more activations → tighter (smaller) bound.
         assert!(Bounds::hfu_max_gamma(&s, 1.0) < eq22);
+    }
+
+    /// Hierarchical collectives lift the effective bandwidth and with it
+    /// every bandwidth-bound maximum — same engine, same product form.
+    #[test]
+    fn hierarchical_lifts_kmax() {
+        use crate::comm::Algorithm;
+        let mut s = sm("13B", 2048, 32, "40GB-A100-100Gbps");
+        let ring = s.bounds();
+        s.cluster.comm.collective = Algorithm::Hierarchical;
+        let hier = s.bounds();
+        assert!(hier.k_max > 3.0 * ring.k_max, "{} vs {}", hier.k_max, ring.k_max);
+        assert!(hier.hfu_max >= ring.hfu_max);
     }
 
     /// mfu_max = (3/4)·hfu_max by construction (Eq 14 vs Eq 13).

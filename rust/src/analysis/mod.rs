@@ -5,8 +5,9 @@
 //!
 //! * [`memory`] — Eqs 1–4: model-state sharding, activation footprint under
 //!   checkpoint fraction γ, per-GPU token capacity `E`.
-//! * [`comms`] — Eq 5: parameter all-gather transfer time, plus the ring
-//!   collective volumes used by the discrete-event simulator.
+//! * Eq 5 (parameter all-gather transfer time) lives in [`crate::comm`] —
+//!   the topology-aware collective engine shared with the simulator, grid
+//!   search and trainer; [`StepModel::comm`] evaluates it at this point.
 //! * [`compute`] — Eqs 6–8: per-token FLOPs and phase durations.
 //! * [`step`] — Eq 9 (overlapped step time) and Eq 10 (comm/compute ratios).
 //! * [`metrics`] — Eq 11: throughput `K` (TGS), `α_HFU`, `α_MFU`.
@@ -16,12 +17,12 @@
 //! whole chain.
 
 pub mod bounds;
-pub mod comms;
 pub mod compute;
 pub mod memory;
 pub mod metrics;
 pub mod step;
 
+use crate::comm::CommEngine;
 use crate::config::{ClusterConfig, ModelConfig, TrainingConfig};
 
 pub use bounds::Bounds;
@@ -59,16 +60,18 @@ impl StepModel {
         MemoryModel::new(&self.model, &self.cluster, &self.cfg, self.n_gpus)
     }
 
-    /// Eq 5 transfer time for one full parameter aggregation.
+    /// The collective engine at this point, in the paper's closed-form
+    /// convention (ε as configured, no straggler jitter).
+    pub fn comm(&self) -> CommEngine {
+        CommEngine::analytical(&self.cluster, self.n_gpus)
+    }
+
+    /// Eq 5 transfer time for one full parameter aggregation (exact for
+    /// the ring algorithm; the generalized closed form for tree /
+    /// hierarchical / auto collectives).
     pub fn t_transfer(&self) -> f64 {
-        comms::t_transfer(
-            self.model.phi(),
-            self.cfg.precision.bytes(),
-            self.cluster.job_bandwidth(self.n_gpus),
-            self.model.layers,
-            self.n_gpus,
-            self.cluster.latency,
-        )
+        self.comm()
+            .t_transfer(self.model.phi(), self.cfg.precision.bytes(), self.model.layers)
     }
 
     /// Per-token forward FLOPs (Eq 6's `F_fwd`).

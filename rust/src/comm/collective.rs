@@ -1,0 +1,384 @@
+//! Collective algorithm cost models: ring, tree, two-level hierarchical,
+//! and an auto policy that picks the cheapest per message size.
+//!
+//! Each model prices one collective over a [`Topology`] in the α-β style:
+//! a per-hop latency term plus a volume term over the link the algorithm
+//! actually stresses. Two conventions coexist, mirroring how the paper
+//! uses them:
+//!
+//! * [`Collective::all_gather`] / [`Collective::reduce_scatter`] — the
+//!   *true* wall time of one collective (the `(n−1)/n` volume factor, one
+//!   latency per step). The discrete-event simulator's timeline uses this.
+//! * [`Collective::transfer_bound`] — the Eq-5-convention closed-form
+//!   upper bound (the ring's `(n−1)/n` rounded up to 1, latency counted
+//!   once per rank), which keeps the analytical chain and the §2.7 bounds
+//!   exactly as the paper writes them.
+
+use super::Topology;
+
+/// Bandwidth penalty of the tree algorithm at large messages: the
+/// long-range rounds of a binomial tree move half the payload across the
+/// bisection over links a whole node shares, costing ~2× the ring's
+/// per-byte time — which is why NCCL's tuner crosses from tree back to
+/// ring as messages grow.
+pub const TREE_BW_PENALTY: f64 = 2.0;
+
+/// A collective-algorithm cost model. Implementations must be pure
+/// functions of `(bytes, topology)`.
+pub trait Collective: Send + Sync {
+    /// Stable algorithm name (`"ring"`, `"tree"`, …).
+    fn name(&self) -> &'static str;
+
+    /// Wall time of one all-gather whose *gathered* payload is `bytes`
+    /// (each rank contributes `bytes / n`).
+    fn all_gather(&self, bytes: f64, topo: &Topology) -> f64;
+
+    /// Wall time of one reduce-scatter over `bytes` of input. Volume- and
+    /// step-symmetric with all-gather for every algorithm modelled here.
+    fn reduce_scatter(&self, bytes: f64, topo: &Topology) -> f64 {
+        self.all_gather(bytes, topo)
+    }
+
+    /// Eq-5-convention closed-form upper bound for one all-gather of
+    /// `bytes`: bottleneck-level volume factors rounded up (where the loss
+    /// is small) and per-hop latency counted once per participant (the
+    /// paper's `L·N·ε` accounting). Always ≥ [`Collective::all_gather`].
+    fn transfer_bound(&self, bytes: f64, topo: &Topology) -> f64;
+
+    /// Asymptotic per-GPU effective bandwidth: `bytes / transfer_bound`
+    /// as `bytes → ∞` with ε = 0. The `S_volume` generalization the §2.7
+    /// bounds use.
+    fn effective_bandwidth(&self, topo: &Topology) -> f64;
+}
+
+/// Flat bandwidth-optimal ring over the job's bottleneck link — the seed
+/// model's (and the paper's) collective: `n−1` steps, each rank forwarding
+/// `bytes/n` per step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Ring;
+
+impl Collective for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn all_gather(&self, bytes: f64, topo: &Topology) -> f64 {
+        let n = topo.n_gpus;
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        bytes * (nf - 1.0) / nf / topo.bottleneck_bw() + (nf - 1.0) * topo.bottleneck_latency()
+    }
+
+    fn transfer_bound(&self, bytes: f64, topo: &Topology) -> f64 {
+        if topo.n_gpus <= 1 {
+            return 0.0;
+        }
+        bytes / topo.bottleneck_bw() + topo.n_gpus as f64 * topo.bottleneck_latency()
+    }
+
+    fn effective_bandwidth(&self, topo: &Topology) -> f64 {
+        topo.bottleneck_bw()
+    }
+}
+
+/// Binomial-tree / recursive-doubling: `⌈log₂ n⌉` rounds instead of `n−1`
+/// steps — latency-optimal, but the long-range rounds congest the fabric
+/// ([`TREE_BW_PENALTY`]× the ring's per-byte cost), so it wins only on
+/// small messages, exactly like NCCL's ring/tree crossover.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Tree;
+
+/// `⌈log₂ n⌉` for `n ≥ 2`.
+fn tree_rounds(n: u64) -> f64 {
+    debug_assert!(n >= 2);
+    (u64::BITS - (n - 1).leading_zeros()) as f64
+}
+
+impl Collective for Tree {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn all_gather(&self, bytes: f64, topo: &Topology) -> f64 {
+        let n = topo.n_gpus;
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        bytes * (nf - 1.0) / nf * TREE_BW_PENALTY / topo.bottleneck_bw()
+            + tree_rounds(n) * topo.bottleneck_latency()
+    }
+
+    fn transfer_bound(&self, bytes: f64, topo: &Topology) -> f64 {
+        if topo.n_gpus <= 1 {
+            return 0.0;
+        }
+        bytes * TREE_BW_PENALTY / topo.bottleneck_bw()
+            + tree_rounds(topo.n_gpus) * topo.bottleneck_latency()
+    }
+
+    fn effective_bandwidth(&self, topo: &Topology) -> f64 {
+        topo.bottleneck_bw() / TREE_BW_PENALTY
+    }
+}
+
+/// Two-level hierarchical collective (reduce-scatter within node → ring
+/// across nodes → all-gather within node). For an all-gather: each local
+/// rank runs a cross-node ring over its stripe of the payload — all
+/// `g` inter-node NICs of a node busy on disjoint stripes in parallel —
+/// then an intra-node NVLink ring redistributes the assembled stripes.
+/// Only `~1/g` of the payload crosses each inter-node link, which is the
+/// whole point of hierarchical algorithms on fat-node clusters. On a
+/// ragged fill (job size not a multiple of `gpus_per_node`) the
+/// least-filled node has fewer NICs to spread its share over and
+/// bottlenecks the inter-node phase ([`Topology::min_node_ranks`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Hierarchical;
+
+impl Collective for Hierarchical {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn all_gather(&self, bytes: f64, topo: &Topology) -> f64 {
+        let n = topo.n_gpus;
+        if n <= 1 {
+            return 0.0;
+        }
+        if topo.single_node() {
+            return Ring.all_gather(bytes, topo);
+        }
+        let g = topo.local_ranks() as f64;
+        let m = topo.nodes() as f64;
+        // Inter-node phase: disjoint cross-node stripe rings. A node's
+        // whole share moves through its resident ranks' NICs, so the
+        // least-filled node bottlenecks the phase's parallelism (= g for
+        // an even fill, fewer for a ragged one).
+        let p = topo.min_node_ranks() as f64;
+        let inter = (bytes / p) * (m - 1.0) / m / topo.inter_bw
+            + (m - 1.0) * topo.inter_latency;
+        // Intra-node phase: NVLink ring over the assembled stripes.
+        let intra = bytes * (g - 1.0) / g / topo.intra_bw + (g - 1.0) * topo.intra_latency;
+        inter + intra
+    }
+
+    /// Unlike the ring (whose `(n−1)/n` rounds up to 1 with little loss),
+    /// the inter-node phase keeps its exact `(m−1)/m` factor: rounding it
+    /// up would double the bound at m=2 and make the closed-form chain
+    /// rank hierarchical *worse* than ring on ragged fills where the true
+    /// time says it is faster. Only the intra-phase volume and the hop
+    /// counts round up.
+    fn transfer_bound(&self, bytes: f64, topo: &Topology) -> f64 {
+        if topo.n_gpus <= 1 {
+            return 0.0;
+        }
+        if topo.single_node() {
+            return Ring.transfer_bound(bytes, topo);
+        }
+        let g = topo.local_ranks() as f64;
+        let m = topo.nodes() as f64;
+        let p = topo.min_node_ranks() as f64;
+        bytes * (m - 1.0) / m / (p * topo.inter_bw)
+            + bytes / topo.intra_bw
+            + m * topo.inter_latency
+            + g * topo.intra_latency
+    }
+
+    fn effective_bandwidth(&self, topo: &Topology) -> f64 {
+        if topo.single_node() {
+            return topo.intra_bw;
+        }
+        let m = topo.nodes() as f64;
+        let p = topo.min_node_ranks() as f64;
+        1.0 / ((m - 1.0) / m / (p * topo.inter_bw) + 1.0 / topo.intra_bw)
+    }
+}
+
+/// The fixed algorithms [`Auto`] chooses between.
+const FIXED: [&dyn Collective; 3] = [&Ring, &Tree, &Hierarchical];
+
+/// NCCL-tuner-style policy: evaluate every fixed algorithm and take the
+/// cheapest for this (message size, topology) — so it equals the best
+/// fixed algorithm pointwise and never beats it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Auto;
+
+impl Collective for Auto {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+
+    fn all_gather(&self, bytes: f64, topo: &Topology) -> f64 {
+        FIXED
+            .iter()
+            .map(|c| c.all_gather(bytes, topo))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn transfer_bound(&self, bytes: f64, topo: &Topology) -> f64 {
+        FIXED
+            .iter()
+            .map(|c| c.transfer_bound(bytes, topo))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    fn effective_bandwidth(&self, topo: &Topology) -> f64 {
+        FIXED
+            .iter()
+            .map(|c| c.effective_bandwidth(topo))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Named algorithm selection — the scenario-dialect value of
+/// `cluster.topology.collective`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Algorithm {
+    /// Flat ring (the paper's model; the default).
+    #[default]
+    Ring,
+    /// Binomial tree.
+    Tree,
+    /// Two-level intra/inter-node hierarchical.
+    Hierarchical,
+    /// Cheapest fixed algorithm per message size.
+    Auto,
+}
+
+impl Algorithm {
+    /// Every selectable algorithm, in display order.
+    pub const ALL: [Algorithm; 4] =
+        [Algorithm::Ring, Algorithm::Tree, Algorithm::Hierarchical, Algorithm::Auto];
+
+    /// The cost model this name selects.
+    pub fn collective(&self) -> &'static dyn Collective {
+        match self {
+            Algorithm::Ring => &Ring,
+            Algorithm::Tree => &Tree,
+            Algorithm::Hierarchical => &Hierarchical,
+            Algorithm::Auto => &Auto,
+        }
+    }
+
+    /// Parse a dialect spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "ring" => Algorithm::Ring,
+            "tree" => Algorithm::Tree,
+            "hierarchical" | "hier" | "2level" | "two-level" => Algorithm::Hierarchical,
+            "auto" | "nccl" => Algorithm::Auto,
+            other => anyhow::bail!(
+                "unknown collective algorithm {other:?} (ring, tree, hierarchical, auto)"
+            ),
+        })
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.collective().name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn topo(n: u64) -> Topology {
+        Topology::of(&ClusterConfig::preset("40GB-A100-200Gbps").unwrap(), n, 8e-6)
+    }
+
+    #[test]
+    fn ring_volume_factor() {
+        // (n-1)/n factor: at n=8, 7/8 of the data crosses each link.
+        let mut t = topo(8);
+        t.inter_bw = 1e9;
+        t.inter_latency = 0.0;
+        assert!((Ring.all_gather(8e9, &t) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tree_rounds_is_ceil_log2() {
+        for (n, want) in [(2u64, 1.0), (3, 2.0), (4, 2.0), (5, 3.0), (8, 3.0), (9, 4.0), (512, 9.0)]
+        {
+            assert_eq!(tree_rounds(n), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_beats_ring_on_small_messages_only() {
+        let t = topo(512);
+        // Tiny message: latency dominates, log₂(512)=9 hops beat 511.
+        assert!(Tree.all_gather(1e3, &t) < Ring.all_gather(1e3, &t));
+        // Full layer shard: bandwidth dominates, the 2× penalty loses.
+        assert!(Tree.all_gather(1e9, &t) > Ring.all_gather(1e9, &t));
+    }
+
+    #[test]
+    fn hierarchical_decomposes_into_two_phases() {
+        let t = topo(8); // 2 nodes × 4 GPUs
+        let b = 1e9;
+        let inter = (b / 4.0) * 0.5 / t.inter_bw + t.inter_latency;
+        let intra = b * 0.75 / t.intra_bw + 3.0 * t.intra_latency;
+        assert!((Hierarchical.all_gather(b, &t) - (inter + intra)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hierarchical_degenerates_to_ring_in_one_node() {
+        let t = topo(4);
+        for bytes in [0.0, 1e6, 1e9] {
+            assert_eq!(Hierarchical.all_gather(bytes, &t), Ring.all_gather(bytes, &t));
+            assert_eq!(
+                Hierarchical.transfer_bound(bytes, &t),
+                Ring.transfer_bound(bytes, &t)
+            );
+        }
+        assert_eq!(Hierarchical.effective_bandwidth(&t), t.intra_bw);
+    }
+
+    #[test]
+    fn transfer_bound_dominates_true_time() {
+        for n in [2u64, 4, 8, 64, 512] {
+            let t = topo(n);
+            for algo in Algorithm::ALL {
+                let c = algo.collective();
+                for bytes in [0.0, 1e3, 1e6, 1e9] {
+                    assert!(
+                        c.transfer_bound(bytes, &t) >= c.all_gather(bytes, &t) - 1e-15,
+                        "{} n={n} bytes={bytes}",
+                        c.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn effective_bandwidth_is_transfer_asymptote() {
+        let t = topo(64);
+        let big = 1e15;
+        for algo in Algorithm::ALL {
+            let c = algo.collective();
+            let eff = big / c.transfer_bound(big, &t);
+            assert!(
+                (eff / c.effective_bandwidth(&t) - 1.0).abs() < 1e-6,
+                "{}: {eff} vs {}",
+                c.name(),
+                c.effective_bandwidth(&t)
+            );
+        }
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for algo in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(&algo.to_string()).unwrap(), algo);
+        }
+        assert_eq!(Algorithm::parse("HIER").unwrap(), Algorithm::Hierarchical);
+        assert!(Algorithm::parse("warp").is_err());
+        assert_eq!(Algorithm::default(), Algorithm::Ring);
+    }
+}

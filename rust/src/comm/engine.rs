@@ -1,0 +1,212 @@
+//! The evaluated communication engine of one (cluster, N) point — what
+//! every consumer (analysis, bounds, grid search, simulator, trainer
+//! fabric) prices collectives through.
+
+use crate::config::ClusterConfig;
+
+use super::{Algorithm, Collective, Topology};
+
+/// One job's communication cost model: a [`Topology`], the cluster's
+/// configured [`Algorithm`], and a resolved straggler factor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommEngine {
+    pub topo: Topology,
+    pub algorithm: Algorithm,
+    /// Multiplicative straggler slowdown for this job size (1 on the
+    /// analytical path — the paper's closed forms carry no jitter).
+    pub straggler_factor: f64,
+}
+
+impl CommEngine {
+    /// The paper's closed-form convention: per-hop latency is exactly the
+    /// configured ε (0 in the paper's simulations) and no straggler tax.
+    /// The analytical chain (Eqs 5–11), the §2.7 bounds and Algorithm 1
+    /// all use this.
+    pub fn analytical(cluster: &ClusterConfig, n_gpus: u64) -> Self {
+        Self {
+            topo: Topology::of(cluster, n_gpus, cluster.latency),
+            algorithm: cluster.comm.collective,
+            straggler_factor: 1.0,
+        }
+    }
+
+    /// The discrete-event simulator's convention: a realistic per-hop NCCL
+    /// latency floor (`cluster.sim_latency`) when ε is left at 0, plus the
+    /// cluster's straggler calibration.
+    pub fn simulated(cluster: &ClusterConfig, n_gpus: u64) -> Self {
+        let eps = if cluster.latency > 0.0 { cluster.latency } else { cluster.comm.sim_latency };
+        Self {
+            topo: Topology::of(cluster, n_gpus, eps),
+            algorithm: cluster.comm.collective,
+            straggler_factor: cluster.comm.straggler.factor(n_gpus),
+        }
+    }
+
+    /// The trainer's in-process fabric: `n` peer ranks on one metered link
+    /// running the ring collectives `coordinator::collectives` implements.
+    pub fn from_fabric(bandwidth: f64, latency: f64, n_ranks: u64) -> Self {
+        Self {
+            topo: Topology::flat(n_ranks, bandwidth, latency),
+            algorithm: Algorithm::Ring,
+            straggler_factor: 1.0,
+        }
+    }
+
+    /// The configured cost model.
+    pub fn collective(&self) -> &'static dyn Collective {
+        self.algorithm.collective()
+    }
+
+    /// Wall time of one all-gather of `bytes` across the job.
+    pub fn all_gather(&self, bytes: f64) -> f64 {
+        self.collective().all_gather(bytes, &self.topo) * self.straggler_factor
+    }
+
+    /// Wall time of one reduce-scatter of `bytes` across the job.
+    pub fn reduce_scatter(&self, bytes: f64) -> f64 {
+        self.collective().reduce_scatter(bytes, &self.topo) * self.straggler_factor
+    }
+
+    /// Eq 5 generalized: the time to aggregate the full parameter set once
+    /// — `layers` per-layer collectives of `φ·Q / L` bytes each, in the
+    /// closed-form upper-bound convention. With the ring algorithm this is
+    /// exactly the paper's `φQ / S_volume + L·N·ε`.
+    pub fn t_transfer(&self, phi: f64, q: f64, layers: u64) -> f64 {
+        if self.topo.n_gpus <= 1 {
+            return 0.0; // single GPU: no parameter aggregation
+        }
+        let l = layers.max(1) as f64;
+        l * self.collective().transfer_bound(phi * q / l, &self.topo) * self.straggler_factor
+    }
+
+    /// Asymptotic per-GPU effective bandwidth of the configured algorithm
+    /// on this topology — the `S_volume` the §2.7 "memory × bandwidth"
+    /// bounds see. Equals the flat bottleneck bandwidth for the ring.
+    pub fn s_effective(&self) -> f64 {
+        self.collective().effective_bandwidth(&self.topo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterConfig {
+        ClusterConfig::preset("40GB-A100-200Gbps").unwrap()
+    }
+
+    /// Eq 5 verbatim through the engine — 13B (φ=12.58e9) in BF16 over
+    /// 200 Gbps (25e9 B/s), ε=0: T = 12.58e9·2/25e9 ≈ 1.0066 s.
+    #[test]
+    fn eq5_matches_hand_calc() {
+        let phi = 12.0 * 40.0 * 5120.0f64.powi(2);
+        let e = CommEngine::analytical(&cluster(), 8);
+        let t = e.t_transfer(phi, 2.0, 40);
+        assert!((t - phi * 2.0 / 25e9).abs() < 1e-9, "t={t}");
+        assert!((t - 1.0066).abs() < 0.01, "t={t}");
+    }
+
+    #[test]
+    fn latency_term_scales_with_l_and_n() {
+        let mut c = cluster();
+        c.latency = 1e-4;
+        let with_eps = CommEngine::analytical(&c, 8).t_transfer(1e9, 2.0, 40);
+        c.latency = 0.0;
+        let base = CommEngine::analytical(&c, 8).t_transfer(1e9, 2.0, 40);
+        assert!((with_eps - base - 40.0 * 8.0 * 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_gpu_is_free() {
+        let e = CommEngine::analytical(&cluster(), 1);
+        assert_eq!(e.t_transfer(1e9, 2.0, 40), 0.0);
+        assert_eq!(e.all_gather(1e9), 0.0);
+        assert_eq!(e.reduce_scatter(1e9), 0.0);
+    }
+
+    /// The ring model approaches Eq 5's φQ/S at large n ((n−1)/n → 1).
+    #[test]
+    fn ring_converges_to_eq5_at_large_n() {
+        let e = CommEngine::analytical(&cluster(), 512);
+        let eq5 = e.t_transfer(1e10, 2.0, 96);
+        let ring = e.all_gather(2e10);
+        assert!((ring - eq5).abs() / eq5 < 0.01);
+    }
+
+    #[test]
+    fn intra_node_jobs_are_fast() {
+        let c = cluster();
+        let n4 = CommEngine::simulated(&c, 4);
+        let n8 = CommEngine::simulated(&c, 8);
+        assert!(n4.topo.bottleneck_bw() > n8.topo.bottleneck_bw() * 10.0);
+        assert!(n4.all_gather(1e9) < n8.all_gather(1e9));
+    }
+
+    #[test]
+    fn straggler_kicks_in_above_128() {
+        let c = cluster();
+        assert_eq!(CommEngine::simulated(&c, 128).straggler_factor, 1.0);
+        let s256 = CommEngine::simulated(&c, 256).straggler_factor;
+        let s512 = CommEngine::simulated(&c, 512).straggler_factor;
+        assert!(s256 > 1.0 && s512 > s256);
+        assert!(s512 < 1.25, "tax stays modest: {s512}");
+        // The analytical convention never charges jitter.
+        assert_eq!(CommEngine::analytical(&c, 512).straggler_factor, 1.0);
+    }
+
+    /// The simulator's latency floor comes from the cluster config now —
+    /// an empty all-gather still pays (n−1) hops of latency.
+    #[test]
+    fn sim_latency_floor_applied() {
+        let e = CommEngine::simulated(&cluster(), 8);
+        assert_eq!(e.topo.inter_latency, 8e-6);
+        assert!(e.all_gather(0.0) > 0.0);
+        // An explicit ε overrides the floor uniformly.
+        let mut c = cluster();
+        c.latency = 3e-5;
+        assert_eq!(CommEngine::simulated(&c, 8).topo.inter_latency, 3e-5);
+        assert_eq!(CommEngine::analytical(&c, 8).topo.inter_latency, 3e-5);
+        // And so does a raised floor.
+        let mut c = cluster();
+        c.comm.sim_latency = 5e-5;
+        assert_eq!(CommEngine::simulated(&c, 8).topo.inter_latency, 5e-5);
+        assert_eq!(CommEngine::analytical(&c, 8).topo.inter_latency, 0.0);
+    }
+
+    #[test]
+    fn bandwidth_scales_between_clusters() {
+        let hi = CommEngine::simulated(&ClusterConfig::preset("40GB-A100-200Gbps").unwrap(), 8);
+        let lo = CommEngine::simulated(&ClusterConfig::preset("40GB-A100-100Gbps").unwrap(), 8);
+        let t_hi = hi.all_gather(25e9);
+        let t_lo = lo.all_gather(25e9);
+        assert!((t_lo / t_hi - 2.0).abs() < 0.01, "{}", t_lo / t_hi);
+    }
+
+    #[test]
+    fn s_effective_matches_job_bandwidth_for_ring() {
+        let c = cluster();
+        for n in [1u64, 4, 8, 512] {
+            assert_eq!(CommEngine::analytical(&c, n).s_effective(), c.job_bandwidth(n));
+        }
+    }
+
+    #[test]
+    fn hierarchical_lifts_effective_bandwidth_multinode() {
+        let mut c = cluster();
+        c.comm.collective = Algorithm::Hierarchical;
+        let hier = CommEngine::analytical(&c, 32);
+        c.comm.collective = Algorithm::Ring;
+        let ring = CommEngine::analytical(&c, 32);
+        assert!(hier.s_effective() > 3.0 * ring.s_effective());
+        assert!(hier.t_transfer(12.58e9, 2.0, 40) < ring.t_transfer(12.58e9, 2.0, 40));
+    }
+
+    #[test]
+    fn fabric_engine_prices_flat_ring() {
+        let e = CommEngine::from_fabric(1e9, 1e-6, 4);
+        // Ring all-gather of n·shard bytes: (n−1)·(shard/bw + eps) per rank.
+        let shard = 1e6;
+        let want = 3.0 * (shard / 1e9 + 1e-6);
+        assert!((e.all_gather(4.0 * shard) - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,93 @@
+//! Topology-aware collective cost engine — the single source of truth for
+//! communication time across the whole crate.
+//!
+//! Historically the crate carried two parallel communication models: the
+//! paper's Eq 5 closed form in `analysis::comms` and a flat-ring
+//! `NetworkModel` in `simulator::network`, each reducing the fabric to one
+//! bottleneck link. Real NCCL switches algorithms (ring / tree / two-level
+//! hierarchical) by message size and topology (arXiv:2408.10197), and the
+//! intra-node/inter-node split dominates scaling behaviour
+//! (arXiv:2411.13055). This module replaces both with one engine:
+//!
+//! * [`Topology`] — the physical shape an `n`-GPU job runs on: GPUs per
+//!   node, per-GPU NVLink and inter-node bandwidth shares, per-hop
+//!   latencies. Derived from [`crate::config::ClusterConfig`]; overridable
+//!   through `cluster.topology.*` scenario keys.
+//! * [`Collective`] — the algorithm cost model: [`Ring`], [`Tree`],
+//!   [`Hierarchical`] (reduce-scatter within node → ring across nodes →
+//!   all-gather within node) and [`Auto`] (cheapest per message size, like
+//!   NCCL's tuner). Selected per cluster via [`Algorithm`].
+//! * [`Straggler`] — the large-job jitter calibration (formerly inline
+//!   constants in `simulator::network`), configurable through
+//!   `cluster.straggler.*` scenario keys.
+//! * [`CommEngine`] — one evaluated (cluster, N) point. The analytical
+//!   chain, the §2.7 bounds, Algorithm 1's grid search, the discrete-event
+//!   simulator and the trainer's fabric all price collectives through it.
+//!
+//! Two constructors encode the two modelling conventions the paper uses:
+//! [`CommEngine::analytical`] (ε exactly as configured — 0 in the paper's
+//! simulations — and no straggler tax) and [`CommEngine::simulated`]
+//! (realistic per-hop latency floor, straggler tax at scale).
+
+mod collective;
+mod engine;
+mod straggler;
+mod topology;
+
+pub use collective::{Algorithm, Auto, Collective, Hierarchical, Ring, Tree, TREE_BW_PENALTY};
+pub use engine::CommEngine;
+pub use straggler::Straggler;
+pub use topology::Topology;
+
+/// Per-cluster communication configuration: which collective algorithm the
+/// fabric runs, optional per-hop latency overrides, the simulator's
+/// default per-hop latency (applied when the paper's ε is left at 0), and
+/// the straggler calibration. Stored on [`crate::config::ClusterConfig`]
+/// and set from `cluster.topology.*` / `cluster.straggler.*` /
+/// `cluster.sim_latency` scenario keys.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommConfig {
+    /// Collective algorithm the job's process group uses. `Ring` is the
+    /// paper's (and the seed model's) assumption; `Auto` picks the
+    /// cheapest per message size like NCCL.
+    pub collective: Algorithm,
+    /// Per-hop latency override for intra-node (NVLink) hops; the
+    /// cluster-wide ε when `None`.
+    pub intra_latency: Option<f64>,
+    /// Per-hop latency override for inter-node hops; the cluster-wide ε
+    /// when `None`.
+    pub inter_latency: Option<f64>,
+    /// The simulator's per-hop latency when the cluster's ε is 0 (the
+    /// paper's closed forms use ε = 0; a real NCCL hop costs ~8 µs).
+    /// Formerly an inline `8e-6` fallback in `NetworkModel::new`.
+    pub sim_latency: f64,
+    /// Large-job straggler calibration (simulated backends only).
+    pub straggler: Straggler,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        Self {
+            collective: Algorithm::Ring,
+            intra_latency: None,
+            inter_latency: None,
+            sim_latency: 8e-6,
+            straggler: Straggler::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_comm_config_is_seed_behaviour() {
+        let c = CommConfig::default();
+        assert_eq!(c.collective, Algorithm::Ring);
+        assert_eq!(c.sim_latency, 8e-6);
+        assert_eq!(c.intra_latency, None);
+        assert_eq!(c.inter_latency, None);
+        assert_eq!(c.straggler, Straggler::default());
+    }
+}

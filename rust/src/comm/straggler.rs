@@ -1,0 +1,73 @@
+//! Large-job straggler calibration.
+//!
+//! Models the paper's observed efficiency step from 128 → 256/512 GPUs
+//! ("escalated inter-node communication overhead", §3.2.2): with hundreds
+//! of ranks each collective completes at the pace of the slowest rank,
+//! which grows with ln N. Formerly two inline constants in
+//! `simulator::network`; now a calibration type configurable per cluster
+//! through the `cluster.straggler.*` scenario keys.
+
+/// Multiplicative collective-time tax: 1 up to `knee` GPUs, then growing
+/// as `1 + slope·ln(N / knee)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Straggler {
+    /// Job size (GPUs) up to which no jitter is charged (≤128 in the
+    /// paper's data).
+    pub knee: f64,
+    /// Logarithmic growth rate past the knee.
+    pub slope: f64,
+}
+
+impl Default for Straggler {
+    fn default() -> Self {
+        Self { knee: 128.0, slope: 0.085 }
+    }
+}
+
+impl Straggler {
+    /// A calibration that never charges jitter (the analytical chain and
+    /// ablations).
+    pub const OFF: Straggler = Straggler { knee: f64::INFINITY, slope: 0.0 };
+
+    /// The slowdown factor for an `n_gpus` job.
+    pub fn factor(&self, n_gpus: u64) -> f64 {
+        let n = n_gpus as f64;
+        if self.slope > 0.0 && self.knee > 0.0 && n > self.knee {
+            1.0 + self.slope * (n / self.knee).ln()
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kicks_in_above_the_knee() {
+        let s = Straggler::default();
+        assert_eq!(s.factor(4), 1.0);
+        assert_eq!(s.factor(128), 1.0);
+        let f256 = s.factor(256);
+        let f512 = s.factor(512);
+        assert!(f256 > 1.0 && f512 > f256);
+        assert!(f512 < 1.25, "tax stays modest: {f512}");
+    }
+
+    #[test]
+    fn off_is_always_one() {
+        for n in [1u64, 128, 512, 4096] {
+            assert_eq!(Straggler::OFF.factor(n), 1.0);
+        }
+    }
+
+    #[test]
+    fn calibration_is_tunable() {
+        let s = Straggler { knee: 32.0, slope: 0.2 };
+        assert_eq!(s.factor(32), 1.0);
+        assert!((s.factor(64) - (1.0 + 0.2 * 2.0f64.ln())).abs() < 1e-12);
+        // slope = 0 disables the tax entirely.
+        assert_eq!(Straggler { knee: 32.0, slope: 0.0 }.factor(4096), 1.0);
+    }
+}

@@ -1,0 +1,168 @@
+//! The physical shape of the fabric an `n`-GPU job runs on.
+//!
+//! Bandwidth convention follows the paper: `inter_bw` is the *average
+//! per-GPU share* of the node's inter-node link (`S_volume`), `intra_bw`
+//! the per-GPU NVLink bandwidth. Both in bytes/s.
+
+use crate::config::ClusterConfig;
+
+/// Evaluated topology of one job: how many GPUs, how they group into
+/// nodes, and what each hop costs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Topology {
+    /// GPUs in the job (the paper's `N`).
+    pub n_gpus: u64,
+    /// GPUs sharing one NVLink domain (node).
+    pub gpus_per_node: u64,
+    /// Per-GPU intra-node (NVLink) bandwidth, bytes/s.
+    pub intra_bw: f64,
+    /// Per-GPU inter-node bandwidth share (`S_volume`), bytes/s.
+    pub inter_bw: f64,
+    /// Per-hop latency of an intra-node hop (s).
+    pub intra_latency: f64,
+    /// Per-hop latency of an inter-node hop (s).
+    pub inter_latency: f64,
+}
+
+impl Topology {
+    /// Topology of an `n_gpus` job on `cluster`, with `eps` as the per-hop
+    /// latency wherever the cluster configures no explicit
+    /// `cluster.topology.{intra,inter}_latency` override.
+    pub fn of(cluster: &ClusterConfig, n_gpus: u64, eps: f64) -> Self {
+        Self {
+            n_gpus,
+            gpus_per_node: cluster.gpus_per_node.max(1),
+            intra_bw: cluster.s_intra(),
+            inter_bw: cluster.s_volume(),
+            intra_latency: cluster.comm.intra_latency.unwrap_or(eps),
+            inter_latency: cluster.comm.inter_latency.unwrap_or(eps),
+        }
+    }
+
+    /// A degenerate one-level topology: `n` ranks on one link of bandwidth
+    /// `bw` and per-message latency `eps` — the trainer's in-process
+    /// fabric, where every rank is a peer on the same metered channel.
+    pub fn flat(n: u64, bw: f64, eps: f64) -> Self {
+        Self {
+            n_gpus: n,
+            gpus_per_node: n.max(1),
+            intra_bw: bw,
+            inter_bw: bw,
+            intra_latency: eps,
+            inter_latency: eps,
+        }
+    }
+
+    /// Nodes the job spans.
+    pub fn nodes(&self) -> u64 {
+        self.n_gpus.div_ceil(self.gpus_per_node).max(1)
+    }
+
+    /// Does the whole job ride NVLink?
+    pub fn single_node(&self) -> bool {
+        self.n_gpus <= self.gpus_per_node
+    }
+
+    /// Ranks co-located on one node (≤ `gpus_per_node` for small jobs).
+    pub fn local_ranks(&self) -> u64 {
+        self.n_gpus.min(self.gpus_per_node)
+    }
+
+    /// Ranks on the job's least-filled node (= `gpus_per_node` when the
+    /// job fills nodes evenly). A node's share of a hierarchical
+    /// collective moves through its resident ranks' inter-node links, so
+    /// this is the NIC parallelism the inter-node phase can count on.
+    pub fn min_node_ranks(&self) -> u64 {
+        if self.single_node() {
+            return self.n_gpus.max(1);
+        }
+        let rem = self.n_gpus % self.gpus_per_node;
+        if rem == 0 {
+            self.gpus_per_node
+        } else {
+            rem
+        }
+    }
+
+    /// The flat bottleneck bandwidth of the job — NVLink when it fits in
+    /// one node, the per-GPU inter-node share otherwise. This is exactly
+    /// the pre-topology model's `ClusterConfig::job_bandwidth`.
+    pub fn bottleneck_bw(&self) -> f64 {
+        if self.single_node() {
+            self.intra_bw
+        } else {
+            self.inter_bw
+        }
+    }
+
+    /// Per-hop latency of the job's bottleneck level.
+    pub fn bottleneck_latency(&self) -> f64 {
+        if self.single_node() {
+            self.intra_latency
+        } else {
+            self.inter_latency
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> ClusterConfig {
+        ClusterConfig::preset("40GB-A100-200Gbps").unwrap()
+    }
+
+    #[test]
+    fn derives_cluster_shape() {
+        let t = Topology::of(&cluster(), 8, 0.0);
+        assert_eq!(t.gpus_per_node, 4);
+        assert_eq!(t.nodes(), 2);
+        assert!(!t.single_node());
+        assert_eq!(t.local_ranks(), 4);
+        assert_eq!(t.inter_bw, 25e9);
+        assert!(t.intra_bw > t.inter_bw * 10.0);
+    }
+
+    #[test]
+    fn bottleneck_matches_job_bandwidth() {
+        let c = cluster();
+        for n in [1u64, 2, 4, 5, 8, 64, 512] {
+            let t = Topology::of(&c, n, 0.0);
+            assert_eq!(t.bottleneck_bw(), c.job_bandwidth(n), "n={n}");
+            assert_eq!(t.nodes(), c.job_nodes(n).max(1), "n={n}");
+        }
+    }
+
+    #[test]
+    fn min_node_ranks_tracks_ragged_fills() {
+        let c = cluster(); // 4 GPUs per node
+        for (n, want) in [(1u64, 1u64), (3, 3), (4, 4), (5, 1), (6, 2), (8, 4), (9, 1), (12, 4)] {
+            assert_eq!(Topology::of(&c, n, 0.0).min_node_ranks(), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn latency_overrides_split_levels() {
+        let mut c = cluster();
+        c.comm.intra_latency = Some(1e-6);
+        c.comm.inter_latency = Some(1e-5);
+        let t = Topology::of(&c, 8, 8e-6);
+        assert_eq!(t.intra_latency, 1e-6);
+        assert_eq!(t.inter_latency, 1e-5);
+        // Without overrides both fall back to eps.
+        c.comm.intra_latency = None;
+        c.comm.inter_latency = None;
+        let t = Topology::of(&c, 8, 8e-6);
+        assert_eq!(t.intra_latency, 8e-6);
+        assert_eq!(t.inter_latency, 8e-6);
+    }
+
+    #[test]
+    fn flat_topology_is_single_node() {
+        let t = Topology::flat(4, 25e9, 8e-6);
+        assert!(t.single_node());
+        assert_eq!(t.bottleneck_bw(), 25e9);
+        assert_eq!(t.nodes(), 1);
+    }
+}

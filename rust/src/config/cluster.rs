@@ -7,6 +7,7 @@
 
 
 use super::{gbps_to_bytes_per_sec, GIB};
+use crate::comm::CommConfig;
 
 /// A GPU model: device memory and peak dense half-precision throughput.
 #[derive(Debug, Clone, PartialEq)]
@@ -56,10 +57,16 @@ pub struct ClusterConfig {
     /// NVLink3 ≈ 600 GB/s = 4800 Gbps per GPU.
     pub intra_node_gbps: f64,
     /// Per-hop communication latency overhead (the paper's `ε`, seconds).
+    /// 0 in the paper's closed forms; the simulated backends fall back to
+    /// `comm.sim_latency` when this is 0.
     pub latency: f64,
     /// Memory the framework/driver reserves and FSDP cannot use
     /// (the paper assumes 10 GB in simulations).
     pub reserved_bytes: f64,
+    /// Communication configuration: collective algorithm, per-hop latency
+    /// overrides, the simulator's latency floor and the straggler
+    /// calibration (see [`crate::comm`]).
+    pub comm: CommConfig,
 }
 
 impl ClusterConfig {
@@ -75,6 +82,7 @@ impl ClusterConfig {
             intra_node_gbps: 4800.0,
             latency: 0.0,
             reserved_bytes: 10.0 * GIB,
+            comm: CommConfig::default(),
         }
     }
 
@@ -192,6 +200,13 @@ mod tests {
     fn usable_memory_subtracts_reserve() {
         let c = ClusterConfig::preset("40GB-A100-100Gbps").unwrap();
         assert_eq!(c.m_usable(), 30.0 * GIB);
+    }
+
+    #[test]
+    fn presets_default_to_ring_comm() {
+        let c = ClusterConfig::preset("40GB-A100-200Gbps").unwrap();
+        assert_eq!(c.comm, CommConfig::default());
+        assert_eq!(c.comm.sim_latency, 8e-6);
     }
 
     #[test]

@@ -26,6 +26,11 @@
 //! #   cluster.intra_node_gbps / cluster.latency / cluster.reserved_gib
 //! #   cluster.gpu_mem_gib / cluster.peak_tflops / cluster.gpu_name
 //! #   cluster.name (label for a fully custom cluster)
+//! # topology / collective-engine overrides (see `crate::comm`):
+//! #   cluster.topology.collective    (ring | tree | hierarchical | auto)
+//! #   cluster.topology.intra_latency / cluster.topology.inter_latency
+//! #   cluster.sim_latency            (simulator per-hop floor when ε = 0)
+//! #   cluster.straggler.knee / cluster.straggler.slope
 //! ```
 //!
 //! Sweep files additionally carry `sweep.<key> = <values>` axes (see
@@ -71,6 +76,12 @@ pub const KNOWN_KEYS: &[&str] = &[
     "cluster.gpu_mem_gib",
     "cluster.peak_tflops",
     "cluster.gpu_name",
+    "cluster.topology.collective",
+    "cluster.topology.intra_latency",
+    "cluster.topology.inter_latency",
+    "cluster.sim_latency",
+    "cluster.straggler.knee",
+    "cluster.straggler.slope",
 ];
 
 /// Is `key` a scalar key the dialect understands (sweepable by the sweep
@@ -210,6 +221,27 @@ impl Scenario {
         if let Some(v) = kv.get("cluster.gpu_name") {
             cluster.gpu.name = v.clone();
         }
+        if let Some(v) = kv.get("cluster.topology.collective") {
+            cluster.comm.collective =
+                crate::comm::Algorithm::parse(v).context("cluster.topology.collective")?;
+        }
+        if let Some(v) = kv.get("cluster.topology.intra_latency") {
+            cluster.comm.intra_latency =
+                Some(v.parse().context("cluster.topology.intra_latency")?);
+        }
+        if let Some(v) = kv.get("cluster.topology.inter_latency") {
+            cluster.comm.inter_latency =
+                Some(v.parse().context("cluster.topology.inter_latency")?);
+        }
+        if let Some(v) = kv.get("cluster.sim_latency") {
+            cluster.comm.sim_latency = v.parse().context("cluster.sim_latency")?;
+        }
+        if let Some(v) = kv.get("cluster.straggler.knee") {
+            cluster.comm.straggler.knee = v.parse().context("cluster.straggler.knee")?;
+        }
+        if let Some(v) = kv.get("cluster.straggler.slope") {
+            cluster.comm.straggler.slope = v.parse().context("cluster.straggler.slope")?;
+        }
 
         let mut training = TrainingConfig::paper_default(
             get("seq_len", "2048").parse().context("seq_len")?,
@@ -312,6 +344,28 @@ impl Scenario {
                 if c.gpu.name != base.gpu.name {
                     let _ = writeln!(out, "cluster.gpu_name = {}", c.gpu.name);
                 }
+                if c.comm.collective != base.comm.collective {
+                    let _ = writeln!(out, "cluster.topology.collective = {}", c.comm.collective);
+                }
+                if c.comm.intra_latency != base.comm.intra_latency {
+                    if let Some(v) = c.comm.intra_latency {
+                        let _ = writeln!(out, "cluster.topology.intra_latency = {v}");
+                    }
+                }
+                if c.comm.inter_latency != base.comm.inter_latency {
+                    if let Some(v) = c.comm.inter_latency {
+                        let _ = writeln!(out, "cluster.topology.inter_latency = {v}");
+                    }
+                }
+                if c.comm.sim_latency != base.comm.sim_latency {
+                    let _ = writeln!(out, "cluster.sim_latency = {}", c.comm.sim_latency);
+                }
+                if c.comm.straggler.knee != base.comm.straggler.knee {
+                    let _ = writeln!(out, "cluster.straggler.knee = {}", c.comm.straggler.knee);
+                }
+                if c.comm.straggler.slope != base.comm.straggler.slope {
+                    let _ = writeln!(out, "cluster.straggler.slope = {}", c.comm.straggler.slope);
+                }
             }
         }
 
@@ -344,6 +398,18 @@ impl Scenario {
         );
         anyhow::ensure!(self.model.hidden % self.model.heads == 0, "hidden % heads != 0");
         anyhow::ensure!((0.0..=1.0).contains(&self.training.gamma), "gamma must be in [0,1]");
+        let comm = &self.cluster.comm;
+        anyhow::ensure!(comm.sim_latency >= 0.0, "cluster.sim_latency must be ≥ 0");
+        anyhow::ensure!(
+            comm.intra_latency.unwrap_or(0.0) >= 0.0
+                && comm.inter_latency.unwrap_or(0.0) >= 0.0,
+            "cluster.topology.*_latency must be ≥ 0"
+        );
+        anyhow::ensure!(comm.straggler.knee > 0.0, "cluster.straggler.knee must be > 0");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&comm.straggler.slope),
+            "cluster.straggler.slope must be in [0,1]"
+        );
         Ok(())
     }
 }
@@ -422,6 +488,42 @@ mod tests {
         assert!(out.contains("model.layers = 12"), "{out}");
         assert!(out.contains("cluster.nodes = 64"), "{out}");
         assert!(out.contains("cluster.inter_node_gbps = 400"), "{out}");
+    }
+
+    #[test]
+    fn topology_and_straggler_keys_parse() {
+        let s = Scenario::parse(
+            "model = 13B\nn_gpus = 32\ncluster.topology.collective = hierarchical\n\
+             cluster.topology.inter_latency = 1e-5\ncluster.sim_latency = 4e-6\n\
+             cluster.straggler.knee = 64\ncluster.straggler.slope = 0.1\n",
+        )
+        .unwrap();
+        assert_eq!(s.cluster.comm.collective, crate::comm::Algorithm::Hierarchical);
+        assert_eq!(s.cluster.comm.inter_latency, Some(1e-5));
+        assert_eq!(s.cluster.comm.intra_latency, None);
+        assert_eq!(s.cluster.comm.sim_latency, 4e-6);
+        assert_eq!(s.cluster.comm.straggler.knee, 64.0);
+        assert_eq!(s.cluster.comm.straggler.slope, 0.1);
+        assert!(Scenario::parse("model = 7B\ncluster.topology.collective = warp\n").is_err());
+    }
+
+    #[test]
+    fn topology_keys_roundtrip_through_text() {
+        let text = "model = 13B\nn_gpus = 32\ncluster.topology.collective = auto\n\
+                    cluster.topology.intra_latency = 2e-6\ncluster.straggler.slope = 0.05\n";
+        let s = Scenario::parse(text).unwrap();
+        let out = s.to_text();
+        assert!(out.contains("cluster.topology.collective = auto"), "{out}");
+        assert!(out.contains("cluster.topology.intra_latency = 0.000002"), "{out}");
+        assert!(out.contains("cluster.straggler.slope = 0.05"), "{out}");
+        assert_eq!(Scenario::parse(&out).unwrap(), s);
+    }
+
+    #[test]
+    fn straggler_calibration_is_validated() {
+        assert!(Scenario::parse("model = 7B\ncluster.straggler.knee = 0\n").is_err());
+        assert!(Scenario::parse("model = 7B\ncluster.straggler.slope = 2\n").is_err());
+        assert!(Scenario::parse("model = 7B\ncluster.sim_latency = -1\n").is_err());
     }
 
     #[test]

@@ -4,11 +4,17 @@
 //! Standard (bandwidth-optimal) ring algorithms: `n−1` steps, each rank
 //! sending one chunk to its successor per step — exactly the volume model
 //! (`(n−1)/n · total`) the analysis layer assumes, so measured and modeled
-//! traffic agree by construction.
+//! traffic agree by construction. [`Communicator::engine`] exposes the same
+//! [`crate::comm::CommEngine`] the analysis and simulator layers price
+//! collectives with, so the trainer can report *predicted* collective time
+//! next to the fabric's byte-metered *modeled* time through one type — and
+//! for the ring the two agree exactly.
 
 use std::sync::Arc;
 
 use anyhow::Result;
+
+use crate::comm::CommEngine;
 
 use super::fabric::Fabric;
 
@@ -42,6 +48,28 @@ impl Communicator {
 
     fn prev(&self) -> usize {
         (self.rank + self.n_ranks() - 1) % self.n_ranks()
+    }
+
+    /// The comm-engine view of this fabric: a flat ring over the fabric's
+    /// modeled bandwidth/latency — the same cost model the analysis and
+    /// simulator layers use.
+    pub fn engine(&self) -> CommEngine {
+        let cfg = self.fabric.config();
+        CommEngine::from_fabric(cfg.bandwidth, cfg.latency, self.n_ranks() as u64)
+    }
+
+    /// Predicted wall time of [`Communicator::all_gather`] with per-rank
+    /// shards of `shard_len` f32s. Matches the fabric's accumulated
+    /// modeled time exactly: each rank forwards `n−1` messages of one
+    /// shard each.
+    pub fn predict_all_gather(&self, shard_len: usize) -> f64 {
+        self.engine().all_gather((shard_len * self.n_ranks() * 4) as f64)
+    }
+
+    /// Predicted wall time of [`Communicator::reduce_scatter_mean`] over
+    /// `full_len` f32s of input (`n−1` messages of `full_len / n` each).
+    pub fn predict_reduce_scatter(&self, full_len: usize) -> f64 {
+        self.engine().reduce_scatter((full_len * 4) as f64)
     }
 
     /// Ring all-gather: every rank contributes `shard` (equal lengths) and
@@ -221,6 +249,41 @@ mod tests {
         let outs = run_ranks(4, move |c| c.broadcast(2, &[c.rank() as f32 * 5.0]).unwrap());
         for o in outs {
             assert_eq!(o, vec![10.0]);
+        }
+    }
+
+    /// The cost-model prediction and the fabric's byte-metered modeled
+    /// time agree exactly for the ring algorithms this module implements:
+    /// per rank, `n−1` messages of one chunk each.
+    #[test]
+    fn predicted_time_matches_fabric_metering() {
+        let n = 4usize;
+        let len = 256usize;
+        let fabric = Arc::new(Fabric::new(n, FabricConfig { bandwidth: 1e9, latency: 1e-6 }));
+        let f2 = fabric.clone();
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let fabric = fabric.clone();
+                std::thread::spawn(move || {
+                    let c = Communicator::new(fabric, rank);
+                    let shard = vec![rank as f32; len];
+                    let gathered = c.all_gather(&shard).unwrap();
+                    let pred_ag = c.predict_all_gather(len);
+                    let pred_rs = c.predict_reduce_scatter(gathered.len());
+                    c.reduce_scatter_mean(&gathered).unwrap();
+                    (pred_ag, pred_rs)
+                })
+            })
+            .collect();
+        let preds: Vec<(f64, f64)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (rank, &(pred_ag, pred_rs)) in preds.iter().enumerate() {
+            // Metered modeled seconds cover both collectives.
+            let metered = f2.modeled_secs(rank);
+            let predicted = pred_ag + pred_rs;
+            assert!(
+                (metered - predicted).abs() < 1e-6,
+                "rank {rank}: metered {metered} vs predicted {predicted}"
+            );
         }
     }
 

@@ -59,6 +59,9 @@ pub struct ScenarioPoint {
     pub zero_stage: ZeroStage,
     pub precision: Precision,
     pub empty_cache: bool,
+    /// Collective algorithm the cluster's fabric runs (`"ring"` unless
+    /// overridden via `cluster.topology.collective`).
+    pub collective: String,
 }
 
 impl ScenarioPoint {
@@ -73,13 +76,14 @@ impl ScenarioPoint {
             zero_stage: s.training.zero_stage,
             precision: s.training.precision,
             empty_cache: s.training.empty_cache,
+            collective: s.cluster.comm.collective.to_string(),
         }
     }
 
     /// One-line human rendering.
     pub fn describe(&self) -> String {
         format!(
-            "{} on {}× {} (ctx {} × batch {}, γ={}, {}, {})",
+            "{} on {}× {} (ctx {} × batch {}, γ={}, {}, {}, {} collectives)",
             self.model,
             self.n_gpus,
             self.cluster,
@@ -87,7 +91,8 @@ impl ScenarioPoint {
             self.batch,
             self.gamma,
             self.zero_stage,
-            self.precision
+            self.precision,
+            self.collective
         )
     }
 
@@ -102,6 +107,7 @@ impl ScenarioPoint {
             ("zero_stage", Json::Str(self.zero_stage.to_string())),
             ("precision", Json::Str(self.precision.to_string())),
             ("empty_cache", Json::Bool(self.empty_cache)),
+            ("collective", Json::Str(self.collective.clone())),
             ("tokens_per_gpu", num((self.seq_len * self.batch) as f64)),
         ])
     }

@@ -16,13 +16,14 @@ pub mod figs_ctx;
 pub mod paper_configs;
 pub mod report;
 pub mod tables456;
+pub mod topology;
 
 pub use report::{Report, Table};
 
 /// All experiment ids, in paper order.
 pub const EXPERIMENT_IDS: &[&str] = &[
     "table2", "fig1", "tables456", "fig2", "fig3", "fig4", "fig6", "fig8", "fig9", "fig10",
-    "claims", "ablation",
+    "claims", "ablation", "topology",
 ];
 
 /// Run one experiment by id.
@@ -40,6 +41,7 @@ pub fn run(id: &str) -> anyhow::Result<Report> {
         "fig10" => Ok(figs_ctx::run_fig10()),
         "claims" => Ok(claims::run()),
         "ablation" => Ok(ablation::run()),
+        "topology" => Ok(topology::run()),
         other => anyhow::bail!("unknown experiment {other:?}; known: {EXPERIMENT_IDS:?}"),
     }
 }

@@ -9,7 +9,8 @@
 //! `α̂_HFU`; the best feasible point by MFU and by throughput is reported.
 
 
-use crate::analysis::{comms, compute, memory};
+use crate::analysis::{compute, memory};
+use crate::comm::CommEngine;
 use crate::config::{ClusterConfig, ModelConfig, Precision, TrainingConfig, ZeroStage};
 
 /// One feasible grid point with its achieved metrics.
@@ -106,7 +107,7 @@ impl GridSearch {
         let f_bwd = compute::f_bwd_per_token(&self.model, seq, gamma);
         let f_total = compute::f_total_per_token(&self.model, seq, gamma);
         let s_flops = self.cluster.s_flops();
-        let bw = self.cluster.job_bandwidth(self.n_gpus);
+        let engine = CommEngine::analytical(&self.cluster, self.n_gpus);
 
         let t_fwd = compute::phase_time(f_fwd, tokens, alpha_hat, s_flops);
         let t_bwd = compute::phase_time(f_bwd, tokens, alpha_hat, s_flops);
@@ -115,19 +116,12 @@ impl GridSearch {
         // overlapped with the backward phase.
         let (t_comm_fwd, t_comm_bwd) = match stage {
             ZeroStage::Stage3 => {
-                let t = comms::t_transfer(
-                    self.model.phi(),
-                    q,
-                    bw,
-                    self.model.layers,
-                    self.n_gpus,
-                    self.cluster.latency,
-                );
+                let t = engine.t_transfer(self.model.phi(), q, self.model.layers);
                 (t, t)
             }
             ZeroStage::Stage12 => {
                 let t = if self.n_gpus > 1 {
-                    2.0 * self.model.phi() * q / bw
+                    2.0 * self.model.phi() * q / engine.s_effective()
                 } else {
                     0.0
                 };

@@ -11,6 +11,11 @@
 //!   checkpointing, parameter all-gather transfer time, fwd/bwd FLOPs and
 //!   times, the overlapped step-time model, and the closed-form maxima of
 //!   §2.7 / Appendix B (Conclusions 1–3).
+//! * [`comm`] — the topology-aware collective engine every layer prices
+//!   communication through: ring / tree / two-level hierarchical
+//!   algorithms over an intra-/inter-node topology, plus the straggler
+//!   calibration (`cluster.topology.*` / `cluster.straggler.*` scenario
+//!   keys).
 //! * [`gridsearch`] — Appendix C's Algorithm 1 grid-search simulator plus
 //!   the configuration search that generates the paper's Tables 4–6.
 //! * [`simulator`] — a discrete-event FSDP *cluster* simulator (network ring
@@ -43,6 +48,7 @@
 //! ```
 
 pub mod analysis;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod eval;

@@ -21,6 +21,7 @@
 //! small-batch MFU droop of Table 7.
 
 use crate::analysis::compute;
+use crate::comm::Straggler;
 use crate::config::ModelConfig;
 
 /// Calibration constants (fit on Tables 7 and 8; see DESIGN.md §7).
@@ -94,14 +95,17 @@ impl EfficiencyModel {
     }
 
     /// Per-step straggler slowdown for very large jobs (the paper's
-    /// 128 → 256/512 GPU efficiency step, §3.2.2).
-    pub fn straggler(&self, n_gpus: u64) -> f64 {
-        if !self.straggler_enabled {
+    /// 128 → 256/512 GPU efficiency step, §3.2.2). The knee and the
+    /// on/off switch come from the cluster's [`Straggler`] calibration
+    /// (`cluster.straggler.*` scenario keys) so one knob governs all
+    /// >knee jitter; the step/log constants are this model's own fit.
+    pub fn straggler(&self, n_gpus: u64, cal: &Straggler) -> f64 {
+        if !self.straggler_enabled || cal.slope <= 0.0 {
             return 1.0;
         }
         let n = n_gpus as f64;
-        if n > 128.0 {
-            1.0 + 0.08 + 0.025 * (n / 256.0).max(1.0).ln()
+        if n > cal.knee {
+            1.0 + 0.08 + 0.025 * (n / (2.0 * cal.knee)).max(1.0).ln()
         } else {
             1.0
         }
@@ -152,11 +156,24 @@ mod tests {
     #[test]
     fn straggler_shape() {
         let e = EfficiencyModel::default();
-        assert_eq!(e.straggler(4), 1.0);
-        assert_eq!(e.straggler(128), 1.0);
-        assert!(e.straggler(256) > 1.05);
-        assert!(e.straggler(512) > e.straggler(256));
-        assert!(e.straggler(512) < 1.15);
+        let cal = Straggler::default();
+        assert_eq!(e.straggler(4, &cal), 1.0);
+        assert_eq!(e.straggler(128, &cal), 1.0);
+        assert!(e.straggler(256, &cal) > 1.05);
+        assert!(e.straggler(512, &cal) > e.straggler(256, &cal));
+        assert!(e.straggler(512, &cal) < 1.15);
+    }
+
+    /// One calibration governs all >knee jitter: the cluster's straggler
+    /// knee moves the per-step tax too, and disabling the calibration
+    /// (slope 0 / `Straggler::OFF`) turns it off entirely.
+    #[test]
+    fn straggler_follows_cluster_calibration() {
+        let e = EfficiencyModel::default();
+        let early = Straggler { knee: 32.0, slope: 0.085 };
+        assert!(e.straggler(64, &early) > 1.05);
+        assert_eq!(e.straggler(512, &Straggler::OFF), 1.0);
+        assert_eq!(e.straggler(512, &Straggler { knee: 128.0, slope: 0.0 }), 1.0);
     }
 
     #[test]

@@ -11,13 +11,16 @@
 //!   reduce-scatter that block's gradients. All-gather and reduce-scatter
 //!   share the comm channel.
 //!
-//! The efficiency, allocator and network models provide calibrated
-//! constants; this function produces the simulated analog of every
-//! "measured" MFU/TGS/memory cell in the paper's Tables 7–20.
+//! The efficiency and allocator models provide calibrated constants and
+//! the [`crate::comm`] engine prices every collective (ring by default;
+//! tree / hierarchical / auto via `cluster.topology.collective`); this
+//! function produces the simulated analog of every "measured"
+//! MFU/TGS/memory cell in the paper's Tables 7–20.
 
 
-use super::{AllocatorModel, EfficiencyModel, NetworkModel};
+use super::{AllocatorModel, EfficiencyModel};
 use crate::analysis::compute;
+use crate::comm::CommEngine;
 use crate::config::{ClusterConfig, ModelConfig, TrainingConfig, GIB};
 
 /// Simulated result of one training step on one configuration.
@@ -73,7 +76,7 @@ pub fn simulate_step(
     eff: &EfficiencyModel,
 ) -> StepStats {
     let q = cfg.precision.bytes();
-    let net = NetworkModel::new(cluster, n_gpus);
+    let net = CommEngine::simulated(cluster, n_gpus);
     let alloc = AllocatorModel::new(model, cluster, cfg, n_gpus);
     let l = model.layers as usize;
     let tokens = cfg.tokens_per_gpu() as f64;
@@ -115,7 +118,7 @@ pub fn simulate_step(
     // Whole-step multipliers: fixed host overhead, straggler jitter at
     // scale, allocator penalties.
     let mut t_step = t_fwd + t_bwd + eff.t_fixed(model);
-    t_step *= eff.straggler(n_gpus);
+    t_step *= eff.straggler(n_gpus, &cluster.comm.straggler);
     if cfg.empty_cache {
         t_step *= eff.empty_cache_penalty;
         // Allocator churn under near-full memory: re-allocation after each
@@ -244,6 +247,21 @@ mod tests {
     fn oom_reported() {
         let s = sim("310B", "40GB-A100-200Gbps", 2048, 1, 128, false);
         assert!(s.oom);
+    }
+
+    /// Switching the cluster to hierarchical collectives can only help a
+    /// multi-node job, and it helps most where comm is exposed.
+    #[test]
+    fn hierarchical_collectives_lift_comm_bound_jobs() {
+        let m = ModelConfig::preset("13B").unwrap();
+        let mut c = ClusterConfig::preset("40GB-A100-100Gbps").unwrap();
+        let cfg = TrainingConfig::paper_default(2048, 1);
+        let ring = simulate_step(&m, &c, &cfg, 8, &EfficiencyModel::default());
+        c.comm.collective = crate::comm::Algorithm::Hierarchical;
+        let hier = simulate_step(&m, &c, &cfg, 8, &EfficiencyModel::default());
+        assert!(hier.t_step < ring.t_step, "{} vs {}", hier.t_step, ring.t_step);
+        assert!(hier.mfu > ring.mfu);
+        assert!(hier.exposed_comm <= ring.exposed_comm + 1e-12);
     }
 
     /// ZeRO-1/2 vs ZeRO-3: stage 3 pays all-gathers but frees memory; on a

@@ -2,19 +2,18 @@
 //! the paper's two JUWELS A100 clusters.
 //!
 //! Where [`crate::analysis`] evaluates the paper's closed-form model, this
-//! module *simulates* a training step layer by layer: ring all-gathers of
-//! each block's parameters overlapped with the previous block's compute, a
-//! calibrated GPU kernel-efficiency model, a CUDA-caching-allocator model
-//! (active vs reserved memory, `empty_cache` penalty), large-job straggler
-//! jitter, and OOM detection. Its outputs regenerate the paper's
+//! module *simulates* a training step layer by layer: per-block collectives
+//! priced by the topology-aware [`crate::comm`] engine (ring / tree /
+//! hierarchical, straggler jitter at scale) overlapped with the previous
+//! block's compute, a calibrated GPU kernel-efficiency model, and a
+//! CUDA-caching-allocator model (active vs reserved memory, `empty_cache`
+//! penalty) with OOM detection. Its outputs regenerate the paper's
 //! "empirical" Tables 7–20 and Figures 2–4 and 7–10.
 
 mod allocator;
 mod efficiency;
 mod fsdp;
-mod network;
 
 pub use allocator::AllocatorModel;
 pub use efficiency::EfficiencyModel;
 pub use fsdp::{simulate_step, StepStats};
-pub use network::NetworkModel;

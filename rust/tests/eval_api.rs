@@ -107,6 +107,24 @@ fn model_name_axis_sweeps() {
     assert_eq!(models, vec!["1.3B", "7B", "13B"]);
 }
 
+/// The collective-algorithm axis sweeps end to end, records its value in
+/// the evaluation's provenance, and topology-aware collectives strictly
+/// beat the flat ring on a comm-bound multi-node job.
+#[test]
+fn collective_axis_sweeps() {
+    let sw = Sweep::parse(
+        "model = 13B\nn_gpus = 32\nseq_len = 2048\n\
+         sweep.cluster.topology.collective = ring,hierarchical\n",
+    )
+    .unwrap();
+    let rep = run_sweep(&sw, &backends_for("simulated").unwrap(), 2);
+    assert_eq!(rep.points.len(), 2);
+    let mfu = |i: usize| rep.points[i].evals[0].metrics.unwrap().mfu;
+    assert_eq!(rep.points[0].evals[0].scenario.collective, "ring");
+    assert_eq!(rep.points[1].evals[0].scenario.collective, "hierarchical");
+    assert!(mfu(1) > mfu(0), "hierarchical {} must beat ring {}", mfu(1), mfu(0));
+}
+
 /// Every backend handles the same scenario file text.
 #[test]
 fn all_backends_evaluate_one_scenario() {
