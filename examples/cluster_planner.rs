@@ -1,84 +1,59 @@
-//! Cluster planner — the paper's "guidance for practitioners" use case
-//! inverted: given a model and a target MFU, what memory/bandwidth must
-//! the cluster provide, and which registry cluster is the cheapest fit?
+//! Cluster planner — the paper's "guidance for practitioners" use case as
+//! one declarative [`fsdp_bw::query::Query`]: *which cluster (and how much
+//! per-GPU bandwidth) reaches a target MFU for this model?*
 //!
-//! Uses Conclusion 2 (Eq 14): α_MFU ≤ (2 + l/3H) · 3/(4LHQ²) · S·M_free/S_F
-//! — solve for the required `S_volume · M_free` product, then scan the
-//! hardware registry through the [`fsdp_bw::eval`] backends.
+//! The Planner does the Eq 12–15 work the old hand-rolled version spelled
+//! out: infeasible clusters are pruned by the closed-form bounds, the
+//! `where.mfu` constraint keeps only sufficient configurations, and the
+//! frontier ranks what remains.
 //!
 //! ```bash
 //! cargo run --release --example cluster_planner -- 30B 0.5 4096
 //! ```
 
-use fsdp_bw::config::scenario::Scenario;
-use fsdp_bw::config::{ClusterConfig, ModelConfig, Precision, TrainingConfig};
-use fsdp_bw::eval::{BoundsEval, Evaluator, Searched};
-use fsdp_bw::gridsearch::max_ctx_bs1;
+use anyhow::{Context, Result};
+use fsdp_bw::config::ClusterConfig;
+use fsdp_bw::query::{Planner, Query};
 
-fn main() {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let model_name = args.first().map(String::as_str).unwrap_or("30B");
-    let target_mfu: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.5);
-    let seq: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4096);
-
-    let model = ModelConfig::preset(model_name).expect("unknown model preset");
-    let q = Precision::Bf16.bytes();
-    let (l, h) = (model.layers as f64, model.hidden as f64);
-
-    // Required S_volume·M_free product from Eq 14 (per unit S_FLOPs).
-    let factor = (2.0 + seq as f64 / (3.0 * h)) * 3.0 / (4.0 * l * h * q * q);
-    println!("plan for {model_name} at target MFU {target_mfu} (ctx {seq}):");
-    println!("required S_volume·M_free ≥ {target_mfu}/{factor:.3e} · S_FLOPs  (Eq 14)\n");
-
-    println!(
-        "{:<22} {:>7} {:>9} {:>9} {:>10} {:>8}",
-        "cluster", "GPUs", "mfu_max", "peak MFU", "max ctx", "verdict"
-    );
-    let n = 512;
-    for cluster in ClusterConfig::table3_presets() {
-        let scn = Scenario {
-            model: model.clone(),
-            cluster: cluster.clone(),
-            training: TrainingConfig::bs1_max_ctx(seq),
-            n_gpus: n,
-        };
-        let bound = BoundsEval.evaluate(&scn).bounds.expect("bounds backend").mfu_max;
-        let peak = Searched.evaluate(&scn).metrics.map(|m| m.mfu);
-        let ctx = max_ctx_bs1(&model, &cluster, n);
-        let verdict = match peak {
-            Some(p) if p >= target_mfu => "OK",
-            Some(_) => "too slow",
-            None => "OOM",
-        };
-        println!(
-            "{:<22} {:>7} {:>9.3} {:>9} {:>10} {:>8}",
-            cluster.name,
-            n,
-            bound,
-            peak.map(|p| format!("{p:.3}")).unwrap_or_else(|| "-".into()),
-            ctx.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
-            verdict
-        );
+    if args.len() > 3 || args.first().map(String::as_str) == Some("--help") {
+        anyhow::bail!("usage: cluster_planner [model=30B] [target_mfu=0.5] [seq_len=4096]");
     }
+    let model = args.first().cloned().unwrap_or_else(|| "30B".to_string());
+    let target: f64 = match args.get(1) {
+        Some(s) => s.parse().with_context(|| format!("target_mfu {s:?} is not a number"))?,
+        None => 0.5,
+    };
+    let seq: u64 = match args.get(2) {
+        Some(s) => s.parse().with_context(|| format!("seq_len {s:?} is not an integer"))?,
+        None => 4096,
+    };
 
-    // Minimum-bandwidth scan on the A100-40GB cluster shape, expressed as
-    // scenario-dialect overrides on the default preset.
-    println!("\nminimum per-GPU bandwidth on 40GB A100s @512 GPUs for MFU ≥ {target_mfu}:");
-    for gbps in [25.0, 50.0, 100.0, 200.0, 400.0, 800.0] {
-        let text = format!(
-            "model = {model_name}\nn_gpus = 512\nseq_len = {seq}\n\
-             cluster.inter_node_gbps = {gbps}\n"
-        );
-        let scn = Scenario::parse(&text).expect("scenario");
-        let peak = Searched.evaluate(&scn).metrics.map(|m| m.mfu);
-        let ok = peak.map(|p| p >= target_mfu).unwrap_or(false);
-        println!(
-            "  {gbps:>5.0} Gbps → peak MFU {}  {}",
-            peak.map(|p| format!("{p:.3}")).unwrap_or_else(|| "OOM ".into()),
-            if ok { "✓ sufficient" } else { "" }
-        );
-        if ok {
-            break;
-        }
-    }
+    // Which registry cluster reaches the target? Algorithm 1 (`gridsearch`
+    // backend) finds each cluster's peak; `where.mfu` keeps the sufficient
+    // ones; infeasible clusters are pruned via Eqs 12–15. 128 GPUs exist on
+    // every preset (the 100 Gbps Table-1 cluster tops out there).
+    let clusters: Vec<String> =
+        ClusterConfig::table3_presets().into_iter().map(|c| c.name).collect();
+    let q = Query::parse(&format!(
+        "model = {model}\nn_gpus = 128\nseq_len = {seq}\n\
+         sweep.cluster = {}\n\
+         where.mfu = >= {target}\n\
+         query.backend = gridsearch\nquery.objective = max_mfu\nquery.top_k = all\n",
+        clusters.join(",")
+    ))?;
+    println!("clusters reaching MFU ≥ {target} for {model} @128 GPUs (ctx {seq}):\n");
+    print!("{}", Planner::auto().run(&q)?.to_text());
+
+    // Minimum sufficient per-GPU bandwidth on the 40 GB A100 shape.
+    let q = Query::parse(&format!(
+        "model = {model}\nn_gpus = 512\nseq_len = {seq}\n\
+         sweep.cluster.inter_node_gbps = 25,50,100,200,400,800\n\
+         where.mfu = >= {target}\n\
+         query.backend = gridsearch\nquery.objective = report_all\n",
+    ))?;
+    println!("\nsufficient per-GPU bandwidths on 40GB A100s @512 GPUs:\n");
+    print!("{}", Planner::auto().run(&q)?.to_text());
+    Ok(())
 }

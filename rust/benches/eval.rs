@@ -1,9 +1,12 @@
-//! Bench: the scenario-first Evaluator API and the sweep engine — single
-//! evaluations must stay in the µs range and the 160-point example grid
-//! must be sweep-able in well under a second, scaling with worker threads.
+//! Bench: the scenario-first Evaluator API, the sweep engine, and the
+//! query Planner — single evaluations must stay in the µs range, the
+//! 160-point example grid must be sweep-able in well under a second, and
+//! §2.7 bounds pruning must beat brute force on an infeasibility-heavy
+//! grid (quantified by the 594-point pruned-vs-unpruned pair).
 
 use fsdp_bw::config::scenario::Scenario;
 use fsdp_bw::eval::{backends_for, run_sweep, Analytical, BoundsEval, Evaluator, Simulated, Sweep};
+use fsdp_bw::query::{Planner, Query};
 use fsdp_bw::util::bench::Bench;
 
 const SWEEP_TEXT: &str = "model = 13B\nbatch = 1\n\
@@ -11,6 +14,16 @@ const SWEEP_TEXT: &str = "model = 13B\nbatch = 1\n\
                           sweep.seq_len = 2048..32768*2\n\
                           sweep.cluster.inter_node_gbps = 50,100,200,400\n\
                           sweep.gamma = 0,0.5\n";
+
+/// ≥500-point planner grid on 65B: small GPU counts OOM outright (Eq 12)
+/// and long contexts OOM at high γ (Eq 4), so a large share of the grid is
+/// prunable without evaluation.
+const PLAN_TEXT: &str = "model = 65B\nbatch = 1\n\
+                         sweep.n_gpus = 16,32,64\n\
+                         sweep.seq_len = 1024..32768*2\n\
+                         sweep.gamma = 0..1+0.1\n\
+                         sweep.cluster.inter_node_gbps = 50,100,200\n\
+                         query.backend = simulated\n";
 
 fn main() {
     let mut b = Bench::new();
@@ -40,6 +53,29 @@ fn main() {
     });
     b.case("eval/sweep_report_json", 1.0, || {
         std::hint::black_box(run_sweep(&sweep, &backends, 8).to_json().len())
+    });
+
+    // Planner: §2.7 bounds pruning vs brute force on a 594-point grid with
+    // many infeasible corners — the pruned run must win, and both must
+    // agree (asserted here so the bench cannot silently drift).
+    let mut pruned_q = Query::parse(PLAN_TEXT).expect("plan text");
+    pruned_q.prune = true;
+    let mut brute_q = pruned_q.clone();
+    brute_q.prune = false;
+    let planner = Planner::new(8);
+    let n = pruned_q.space.len() as f64;
+    assert!(n >= 500.0, "grid must stay >= 500 points");
+    {
+        let p = planner.run(&pruned_q).expect("pruned plan");
+        let b = planner.run(&brute_q).expect("brute plan");
+        assert_eq!(p.ranked_json().pretty(), b.ranked_json().pretty(), "prune parity");
+        assert!(p.counters.evaluated < b.counters.evaluated, "pruning must skip work");
+    }
+    b.case("query/plan_594pt_simulated_pruned", n, || {
+        std::hint::black_box(planner.run(&pruned_q).expect("plan").counters.evaluated)
+    });
+    b.case("query/plan_594pt_simulated_brute", n, || {
+        std::hint::black_box(planner.run(&brute_q).expect("plan").counters.evaluated)
     });
 
     println!("\n{}", b.dump_json());

@@ -18,6 +18,7 @@
 //! zero_stage   = 3
 //! precision    = bf16
 //! empty_cache  = false
+//! # alpha      = 0.75        # assumed kernel efficiency α̂_HFU (analytical)
 //! # custom-model keys (instead of `model = <preset>`):
 //! #   model.name / model.layers / model.hidden / model.heads
 //! #   model.vocab / model.ffn_ratio
@@ -60,6 +61,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "zero_stage",
     "precision",
     "empty_cache",
+    "alpha",
     "model.name",
     "model.layers",
     "model.hidden",
@@ -98,6 +100,11 @@ pub struct Scenario {
     pub training: TrainingConfig,
     /// GPUs to use for the job (≤ cluster.total_gpus()).
     pub n_gpus: u64,
+    /// Assumed kernel efficiency α̂_HFU for the analytical backends
+    /// (`alpha` key). `None` leaves the backend's own default in force;
+    /// setting it makes α̂ sweepable — the axis Algorithm 1's canned query
+    /// runs over.
+    pub alpha: Option<f64>,
 }
 
 /// Parse the `key = value` dialect into a map. Duplicate keys are an error
@@ -261,11 +268,17 @@ impl Scenario {
             other => bail!("precision must be bf16, fp16 or fp32, got {other:?}"),
         };
 
+        let alpha = match kv.get("alpha") {
+            Some(v) => Some(v.parse::<f64>().context("alpha")?),
+            None => None,
+        };
+
         let s = Scenario {
             model,
             cluster,
             training,
             n_gpus: get("n_gpus", "8").parse().context("n_gpus")?,
+            alpha,
         };
         s.validate()?;
         Ok(s)
@@ -383,6 +396,9 @@ impl Scenario {
         );
         let _ = writeln!(out, "precision = {}", self.training.precision);
         let _ = writeln!(out, "empty_cache = {}", self.training.empty_cache);
+        if let Some(a) = self.alpha {
+            let _ = writeln!(out, "alpha = {a}");
+        }
         out
     }
 
@@ -398,6 +414,9 @@ impl Scenario {
         );
         anyhow::ensure!(self.model.hidden % self.model.heads == 0, "hidden % heads != 0");
         anyhow::ensure!((0.0..=1.0).contains(&self.training.gamma), "gamma must be in [0,1]");
+        if let Some(a) = self.alpha {
+            anyhow::ensure!(a > 0.0 && a <= 1.0, "alpha must be in (0,1]");
+        }
         let comm = &self.cluster.comm;
         anyhow::ensure!(comm.sim_latency >= 0.0, "cluster.sim_latency must be ≥ 0");
         anyhow::ensure!(
@@ -524,6 +543,19 @@ mod tests {
         assert!(Scenario::parse("model = 7B\ncluster.straggler.knee = 0\n").is_err());
         assert!(Scenario::parse("model = 7B\ncluster.straggler.slope = 2\n").is_err());
         assert!(Scenario::parse("model = 7B\ncluster.sim_latency = -1\n").is_err());
+    }
+
+    #[test]
+    fn alpha_key_parses_validates_and_roundtrips() {
+        let s = Scenario::parse("model = 7B\nn_gpus = 8\nalpha = 0.6\n").unwrap();
+        assert_eq!(s.alpha, Some(0.6));
+        let out = s.to_text();
+        assert!(out.contains("alpha = 0.6"), "{out}");
+        assert_eq!(Scenario::parse(&out).unwrap(), s);
+        // Absent by default; out-of-range rejected.
+        assert_eq!(Scenario::parse("model = 7B\n").unwrap().alpha, None);
+        assert!(Scenario::parse("model = 7B\nalpha = 0\n").is_err());
+        assert!(Scenario::parse("model = 7B\nalpha = 1.5\n").is_err());
     }
 
     #[test]

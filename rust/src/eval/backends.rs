@@ -1,11 +1,14 @@
-//! The four evaluator backends and the name → backend factory.
+//! The evaluator backends (analytical, simulated, bounds, gridsearch and
+//! the per-grid-point `alg1`) and the name → backend factory.
 
 use anyhow::{bail, Result};
 
+use crate::analysis::memory::MemoryModel;
 use crate::analysis::{metrics, StepModel};
 use crate::config::scenario::Scenario;
+use crate::config::TrainingConfig;
 use crate::gridsearch::{GridSearch, SearchPoint};
-use crate::simulator::{simulate_step, EfficiencyModel};
+use crate::simulator::{simulate_step, AllocatorModel, EfficiencyModel};
 
 use super::{
     to_gib, EvalBounds, EvalMemory, EvalMetrics, EvalSearch, EvalStep, Evaluation, Evaluator,
@@ -13,7 +16,8 @@ use super::{
 };
 
 /// The paper's §2 closed-form chain (Eqs 1–11) at an assumed kernel
-/// efficiency `alpha` (α̂_HFU).
+/// efficiency `alpha` (α̂_HFU). A scenario's own `alpha` key, when set,
+/// overrides this default.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Analytical {
     pub alpha: f64,
@@ -33,7 +37,7 @@ impl Evaluator for Analytical {
     fn evaluate(&self, s: &Scenario) -> Evaluation {
         let sm = StepModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
         let mem = sm.memory();
-        let b = sm.breakdown(self.alpha);
+        let b = sm.breakdown(s.alpha.unwrap_or(self.alpha));
         let m = metrics::from_breakdown(&sm, &b);
         let bounds = sm.bounds();
         let fits = mem.fits();
@@ -65,6 +69,40 @@ impl Evaluator for Analytical {
             search: None,
         }
     }
+
+    fn prune_by_bounds(&self, s: &Scenario) -> Option<String> {
+        // This backend's feasibility is exactly the Eq 1–4 memory chain, so
+        // the closed-form check is both sound and complete: pruning removes
+        // precisely the points `evaluate` would flag infeasible.
+        eq12_memory_prune(s)
+    }
+
+    fn constraint_bounds(&self, s: &Scenario) -> Option<EvalBounds> {
+        // Sound for this backend: with `t_step >= 2·t_transfer` always and
+        // feasible points holding `E <= capacity`, the achieved Eq-11
+        // metrics at the configured context never exceed the Eqs 13–15
+        // maxima evaluated at that same context.
+        let b = StepModel::new(&s.model, &s.cluster, &s.training, s.n_gpus).bounds();
+        Some(EvalBounds { e_max: b.e_max, hfu_max: b.hfu_max, mfu_max: b.mfu_max, k_max: b.k_max })
+    }
+}
+
+/// Eq 12 / Eq 4 memory pre-screen shared by the analytical-family backends:
+/// `Some(reason)` when the configured point cannot fit in `M_free`.
+fn eq12_memory_prune(s: &Scenario) -> Option<String> {
+    let mem = MemoryModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
+    if mem.m_free <= 0.0 {
+        return Some("Eq 12: M_free <= 0 — model states alone exceed usable memory".to_string());
+    }
+    if !mem.fits() {
+        return Some(format!(
+            "Eq 4: activations for {} tokens/GPU need {:.1} GiB > M_free {:.1} GiB",
+            s.training.tokens_per_gpu(),
+            to_gib(mem.act_bytes),
+            to_gib(mem.m_free)
+        ));
+    }
+    None
 }
 
 /// The calibrated discrete-event cluster simulator — the "measured" analog
@@ -104,6 +142,21 @@ impl Evaluator for Simulated {
             search: None,
         }
     }
+
+    fn prune_by_bounds(&self, s: &Scenario) -> Option<String> {
+        // The simulator's OOM verdict *is* the closed-form allocator model
+        // (`StepStats::oom = AllocatorModel::oom()`), so this pre-screen is
+        // sound and complete without running the event timeline.
+        let alloc = AllocatorModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
+        if alloc.oom() {
+            return Some(format!(
+                "allocator model (Eq 12 family): active {:.1} GiB exceeds device capacity {:.1} GiB",
+                to_gib(alloc.active),
+                to_gib(alloc.capacity)
+            ));
+        }
+        None
+    }
 }
 
 /// The §2.7 closed-form maxima (Eqs 12–15) — what the configuration could
@@ -142,6 +195,16 @@ impl Evaluator for BoundsEval {
             search: None,
         }
     }
+
+    fn prune_by_bounds(&self, s: &Scenario) -> Option<String> {
+        let mem = MemoryModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
+        if mem.m_free <= 0.0 {
+            return Some(
+                "Eq 12: M_free <= 0 — model states alone exceed usable memory".to_string(),
+            );
+        }
+        None
+    }
 }
 
 /// Appendix C's Algorithm 1: exhaustive grid search over (α̂, γ, stage) in
@@ -159,7 +222,10 @@ impl Evaluator for Searched {
     fn evaluate(&self, s: &Scenario) -> Evaluation {
         let mut gs = GridSearch::new(&s.model, &s.cluster, s.n_gpus);
         gs.precision = s.training.precision;
-        let r = gs.run();
+        // Serial inner planner: this evaluator usually runs on an outer
+        // worker pool already (sweeps, plans); a nested per-core pool per
+        // point would multiply threads without speedup.
+        let r = gs.run_threaded(1);
         let choice = |p: SearchPoint| SearchChoice {
             alpha_hat: p.alpha_hat,
             gamma: p.gamma,
@@ -186,6 +252,127 @@ impl Evaluator for Searched {
             }),
         }
     }
+
+    fn cache_key(&self, s: &Scenario) -> String {
+        // The search sweeps seq/γ/stage/α itself: only (model, cluster, N,
+        // precision) matter. Projecting the key makes grid points that
+        // differ elsewhere cache hits under the Planner.
+        let mut cfg = TrainingConfig::paper_default(1, 1);
+        cfg.precision = s.training.precision;
+        let p = Scenario {
+            model: s.model.clone(),
+            cluster: s.cluster.clone(),
+            training: cfg,
+            n_gpus: s.n_gpus,
+            alpha: None,
+        };
+        p.to_text()
+    }
+
+    fn prune_by_bounds(&self, s: &Scenario) -> Option<String> {
+        // Eq 12 in the search's most favorable regime (ZeRO-3, γ=0): if not
+        // even one token fits there, no (α̂, γ, stage) grid point is
+        // feasible, because every other stage/γ only shrinks capacity.
+        let mut cfg = TrainingConfig::paper_default(1, 1);
+        cfg.precision = s.training.precision;
+        let mem = MemoryModel::new(&s.model, &s.cluster, &cfg, s.n_gpus);
+        if mem.capacity_tokens < 1.0 {
+            return Some(format!(
+                "Eq 12: E_MAX = {:.2} < 1 token/GPU at γ=0/ZeRO-3 — no feasible grid point",
+                mem.capacity_tokens
+            ));
+        }
+        None
+    }
+}
+
+/// One grid point of Appendix C's Algorithm 1: evaluate the scenario's own
+/// (α̂ = `alpha`, γ, ZeRO stage) in the fill-the-GPU regime (sequence length
+/// = memory capacity, batch 1) with Algorithm 1's acceptance rule
+/// (achieved α_HFU ≤ α̂). [`GridSearch::run`] is exactly a [`crate::query`]
+/// Query fanning this backend out over the (α̂, γ, stage) axes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Alg1Point {
+    /// Cap on per-GPU tokens, like [`GridSearch::tokens_cap`].
+    pub tokens_cap: f64,
+}
+
+impl Default for Alg1Point {
+    fn default() -> Self {
+        Self { tokens_cap: f64::INFINITY }
+    }
+}
+
+impl Evaluator for Alg1Point {
+    fn name(&self) -> &'static str {
+        "alg1"
+    }
+
+    fn evaluate(&self, s: &Scenario) -> Evaluation {
+        let mut gs = GridSearch::new(&s.model, &s.cluster, s.n_gpus);
+        gs.precision = s.training.precision;
+        gs.tokens_cap = self.tokens_cap;
+        let alpha = s.alpha.unwrap_or(DEFAULT_ALPHA);
+        match gs.eval_point(alpha, s.training.gamma, s.training.zero_stage) {
+            Some(p) => {
+                let choice = SearchChoice {
+                    alpha_hat: p.alpha_hat,
+                    gamma: p.gamma,
+                    stage: p.stage.to_string(),
+                    tokens: p.tokens,
+                    mfu: p.mfu,
+                    hfu: p.hfu,
+                    tgs: p.tgs,
+                };
+                Evaluation {
+                    backend: self.name(),
+                    scenario: ScenarioPoint::of(s),
+                    feasible: true,
+                    oom: false,
+                    metrics: Some(EvalMetrics { mfu: p.mfu, hfu: p.hfu, tgs: p.tgs }),
+                    step: None,
+                    memory: None,
+                    bounds: None,
+                    search: Some(EvalSearch {
+                        feasible_points: 1,
+                        best_mfu: Some(choice.clone()),
+                        best_tgs: Some(choice),
+                    }),
+                }
+            }
+            // Infeasible: OOM at one token, or Algorithm 1's acceptance
+            // rule rejected the point — `oom` stays false because the two
+            // are indistinguishable here and only `feasible` is ranked on.
+            None => Evaluation {
+                backend: self.name(),
+                scenario: ScenarioPoint::of(s),
+                feasible: false,
+                oom: false,
+                metrics: None,
+                step: None,
+                memory: None,
+                bounds: None,
+                search: Some(EvalSearch { feasible_points: 0, best_mfu: None, best_tgs: None }),
+            },
+        }
+    }
+
+    fn prune_by_bounds(&self, s: &Scenario) -> Option<String> {
+        // Eq 12 at this point's stage with γ=0 (the loosest γ): capacity at
+        // the point's own γ can only be smaller, so < 1 token here means
+        // `eval_point` must return None.
+        let mut cfg = TrainingConfig::paper_default(1, 1);
+        cfg.precision = s.training.precision;
+        cfg.zero_stage = s.training.zero_stage;
+        let mem = MemoryModel::new(&s.model, &s.cluster, &cfg, s.n_gpus);
+        if mem.capacity_tokens < 1.0 {
+            return Some(format!(
+                "Eq 12: E_MAX = {:.2} < 1 token/GPU — infeasible at any γ",
+                mem.capacity_tokens
+            ));
+        }
+        None
+    }
 }
 
 /// Resolve one backend by name.
@@ -195,8 +382,9 @@ pub fn backend(name: &str) -> Result<Box<dyn Evaluator>> {
         "simulated" | "simulator" | "sim" => Box::new(Simulated::default()),
         "bounds" => Box::new(BoundsEval),
         "gridsearch" | "search" => Box::new(Searched),
+        "alg1" => Box::new(Alg1Point::default()),
         other => bail!(
-            "unknown backend {other:?}; known: analytical, simulated, bounds, gridsearch"
+            "unknown backend {other:?}; known: analytical, simulated, bounds, gridsearch, alg1"
         ),
     })
 }
@@ -281,6 +469,54 @@ mod tests {
     }
 
     #[test]
+    fn scenario_alpha_overrides_backend_default() {
+        let lo = Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 10240\nalpha = 0.4\n").unwrap();
+        let hi = Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 10240\nalpha = 0.9\n").unwrap();
+        let b = Analytical::default();
+        let (ml, mh) = (b.evaluate(&lo).metrics.unwrap(), b.evaluate(&hi).metrics.unwrap());
+        assert!(mh.mfu > ml.mfu, "higher assumed α̂ must raise MFU: {} vs {}", mh.mfu, ml.mfu);
+        assert_eq!(b.evaluate(&lo).scenario.alpha, Some(0.4));
+    }
+
+    /// A `prune_by_bounds` verdict must imply `evaluate` reports
+    /// infeasible — the Planner's pruning guarantee rests on this.
+    #[test]
+    fn prune_by_bounds_is_sound_for_every_backend() {
+        let fit = scen();
+        let oom = Scenario::parse("model = 310B\nn_gpus = 8\nseq_len = 4096\n").unwrap();
+        for name in ["analytical", "simulated", "bounds", "gridsearch", "alg1"] {
+            let b = backend(name).unwrap();
+            if let Some(reason) = b.prune_by_bounds(&fit) {
+                assert!(
+                    !b.evaluate(&fit).feasible,
+                    "{name}: pruned a feasible point ({reason})"
+                );
+            }
+            // 310B@8: model states alone exceed memory — every backend both
+            // prunes it and (without pruning) reports it infeasible.
+            assert!(!b.evaluate(&oom).feasible, "{name}: 310B@8 must be infeasible");
+            assert!(b.prune_by_bounds(&oom).is_some(), "{name}: 310B@8 must be prunable");
+        }
+    }
+
+    /// The alg1 backend is GridSearch::eval_point, bit for bit.
+    #[test]
+    fn alg1_matches_grid_point() {
+        let s = Scenario::parse("model = 1.3B\nn_gpus = 64\ngamma = 0.5\nalpha = 0.6\n").unwrap();
+        let mut gs = GridSearch::new(&s.model, &s.cluster, s.n_gpus);
+        gs.precision = s.training.precision;
+        let direct = gs.eval_point(0.6, 0.5, crate::config::ZeroStage::Stage3).unwrap();
+        let e = Alg1Point::default().evaluate(&s);
+        assert!(e.feasible);
+        let m = e.metrics.unwrap();
+        assert_eq!(m.mfu, direct.mfu);
+        assert_eq!(m.tgs, direct.tgs);
+        let c = e.search.unwrap().best_mfu.unwrap();
+        assert_eq!(c.tokens, direct.tokens);
+        assert_eq!(c.alpha_hat, 0.6);
+    }
+
+    #[test]
     fn oom_scenarios_flagged_infeasible() {
         let s = Scenario::parse("model = 310B\nn_gpus = 8\nseq_len = 4096\n").unwrap();
         assert!(!Analytical::default().evaluate(&s).feasible);
@@ -290,7 +526,7 @@ mod tests {
 
     #[test]
     fn factory_resolves_and_rejects() {
-        for n in ["analytical", "simulated", "bounds", "gridsearch"] {
+        for n in ["analytical", "simulated", "bounds", "gridsearch", "alg1"] {
             assert_eq!(backend(n).unwrap().name(), n);
         }
         assert!(backend("nope").is_err());

@@ -8,14 +8,21 @@
 //! [`Evaluator`] backends over one input ([`crate::config::scenario::Scenario`])
 //! and one output ([`Evaluation`]):
 //!
-//! * [`backends::Analytical`] — Eqs 1–11 at an assumed kernel efficiency;
+//! * [`backends::Analytical`] — Eqs 1–11 at an assumed kernel efficiency
+//!   (the scenario's `alpha` key, when set, overrides the default);
 //! * [`backends::Simulated`] — the discrete-event cluster simulator;
 //! * [`backends::BoundsEval`] — the §2.7 closed-form maxima (Eqs 12–15);
-//! * [`backends::Searched`] — Algorithm 1's best feasible configuration.
+//! * [`backends::Searched`] — Algorithm 1's best feasible configuration;
+//! * [`backends::Alg1Point`] — one Algorithm 1 grid point (α̂, γ, stage
+//!   from the scenario) — the unit the [`crate::query`] Planner fans out.
 //!
 //! [`sweep`] expands `sweep.<key> = …` axes into a Cartesian grid of
 //! scenarios and evaluates them across a worker pool; [`report`] renders
-//! the result as JSON/CSV with per-axis best-MFU/best-TGS summaries.
+//! the result as JSON/CSV with per-axis best-MFU/best-TGS summaries. Both
+//! ride the declarative [`crate::query`] Planner: a sweep is a Query with
+//! no constraints and a `report_all` objective, and every backend can
+//! pre-screen points via [`Evaluator::prune_by_bounds`] / memoize via
+//! [`Evaluator::cache_key`].
 
 pub mod backends;
 pub mod report;
@@ -25,7 +32,7 @@ use crate::config::scenario::Scenario;
 use crate::config::{Precision, ZeroStage, GIB};
 use crate::util::json::Json;
 
-pub use backends::{backend, backends_for, Analytical, BoundsEval, Searched, Simulated};
+pub use backends::{backend, backends_for, Alg1Point, Analytical, BoundsEval, Searched, Simulated};
 pub use report::{SweepPointResult, SweepReport};
 pub use sweep::{parse_axis_values, run_sweep, Sweep, SweepAxis};
 
@@ -44,6 +51,37 @@ pub trait Evaluator: Send + Sync {
 
     /// Evaluate one scenario point.
     fn evaluate(&self, s: &Scenario) -> Evaluation;
+
+    /// Memoization key for [`crate::query::Planner`]'s evaluation cache:
+    /// two scenarios with the same key **must** evaluate identically under
+    /// this backend. The default is the full canonical scenario text;
+    /// backends that ignore parts of the scenario (e.g. the grid search,
+    /// which sweeps seq/γ/stage itself) override this with a projection so
+    /// redundant grid points become cache hits.
+    fn cache_key(&self, s: &Scenario) -> String {
+        s.to_text()
+    }
+
+    /// §2.7 closed-form pre-screen (Eqs 12–15): returning `Some(reason)`
+    /// **guarantees** that [`Self::evaluate`] would report this scenario
+    /// infeasible, so the [`crate::query::Planner`] may skip the (possibly
+    /// expensive) evaluation and mark the point `pruned_by_bounds` without
+    /// changing any feasible result. The default prunes nothing.
+    fn prune_by_bounds(&self, _s: &Scenario) -> Option<String> {
+        None
+    }
+
+    /// Eqs 13–15 maxima valid for **this backend's evaluation regime**, or
+    /// `None` when no sound closed-form cap exists. When `Some`, the
+    /// Planner prunes points whose bound already misses a `where.*`
+    /// lower-bound constraint — so the contract is that the metrics
+    /// [`Self::evaluate`] reports can never exceed these values. Backends
+    /// that evaluate a different regime than the configured scenario (e.g.
+    /// the fill-the-GPU grid search, whose achieved MFU can exceed the
+    /// configured-context bound) must keep the default `None`.
+    fn constraint_bounds(&self, _s: &Scenario) -> Option<EvalBounds> {
+        None
+    }
 }
 
 /// Scenario identity echoed into every evaluation, so a result is
@@ -62,6 +100,9 @@ pub struct ScenarioPoint {
     /// Collective algorithm the cluster's fabric runs (`"ring"` unless
     /// overridden via `cluster.topology.collective`).
     pub collective: String,
+    /// Assumed kernel efficiency α̂_HFU, when the scenario pins one
+    /// (`alpha` key) — provenance for analytical evaluations.
+    pub alpha: Option<f64>,
 }
 
 impl ScenarioPoint {
@@ -77,6 +118,7 @@ impl ScenarioPoint {
             precision: s.training.precision,
             empty_cache: s.training.empty_cache,
             collective: s.cluster.comm.collective.to_string(),
+            alpha: s.alpha,
         }
     }
 
@@ -97,7 +139,7 @@ impl ScenarioPoint {
     }
 
     fn json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("model", Json::Str(self.model.clone())),
             ("cluster", Json::Str(self.cluster.clone())),
             ("n_gpus", num(self.n_gpus as f64)),
@@ -109,7 +151,11 @@ impl ScenarioPoint {
             ("empty_cache", Json::Bool(self.empty_cache)),
             ("collective", Json::Str(self.collective.clone())),
             ("tokens_per_gpu", num((self.seq_len * self.batch) as f64)),
-        ])
+        ];
+        if let Some(a) = self.alpha {
+            pairs.push(("alpha", num(a)));
+        }
+        obj(pairs)
     }
 }
 

@@ -193,9 +193,16 @@ impl SweepReport {
     }
 
     /// Flat CSV: one row per (point, backend); errored points emit one row
-    /// with the error message.
+    /// with the error message. Two `#`-prefixed header lines surface the
+    /// point and error counts (skippable via `comment='#'` in most CSV
+    /// readers).
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("index");
+        let mut out = format!(
+            "# n_points,{}\n# n_errors,{}\n",
+            self.n_points(),
+            self.n_errors()
+        );
+        out.push_str("index");
         for a in &self.axes {
             out.push(',');
             out.push_str(&csv_cell(&a.key));
@@ -253,13 +260,14 @@ impl SweepReport {
         let mut out = String::new();
         let _ = writeln!(
             out,
-            "sweep: {} points × {} backend(s) [{}]{}",
+            "sweep: {} points × {} backend(s) [{}], {} error(s){}",
             self.n_points(),
             self.backends.len(),
             self.backends.join(", "),
+            self.n_errors(),
             match self.n_errors() {
                 0 => String::new(),
-                k => format!("  ({k} points failed to construct)"),
+                _ => "  (errored points failed to construct a scenario)".to_string(),
             }
         );
         for a in &self.axes {
@@ -300,7 +308,8 @@ impl SweepReport {
 /// Metrics to rank by TGS. The gridsearch backend's `metrics` mirror its
 /// best-*MFU* grid point; its genuinely best-TGS choice lives in
 /// `search.best_tgs` — prefer that so TGS summaries don't understate it.
-fn metrics_for_tgs(e: &Evaluation) -> Option<EvalMetrics> {
+/// (Shared with [`crate::query`]'s `max_tgs` objective and pareto axis.)
+pub(crate) fn metrics_for_tgs(e: &Evaluation) -> Option<EvalMetrics> {
     if let Some(se) = &e.search {
         if let Some(c) = &se.best_tgs {
             return Some(EvalMetrics { mfu: c.mfu, hfu: c.hfu, tgs: c.tgs });
@@ -320,7 +329,8 @@ fn point_obj(p: &SweepPointResult) -> Json {
 }
 
 /// A dialect value as JSON: number when it parses as one, string otherwise.
-fn scalar(v: &str) -> Json {
+/// (Shared with [`crate::query`]'s frontier rendering.)
+pub(crate) fn scalar(v: &str) -> Json {
     match v.parse::<f64>() {
         Ok(n) if n.is_finite() => Json::Num(n),
         _ => Json::Str(v.to_string()),
@@ -328,7 +338,8 @@ fn scalar(v: &str) -> Json {
 }
 
 /// CSV escaping: quote cells containing separators or quotes.
-fn csv_cell(s: &str) -> String {
+/// (Shared with [`crate::query`]'s frontier CSV.)
+pub(crate) fn csv_cell(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {
@@ -369,10 +380,21 @@ mod tests {
     fn csv_has_row_per_point_and_backend() {
         let rep = small_report();
         let csv = rep.to_csv();
-        // header + 4 points × 2 backends
-        assert_eq!(csv.lines().count(), 1 + 4 * 2, "{csv}");
-        let header = csv.lines().next().unwrap();
+        // 2 comment lines + header + 4 points × 2 backends
+        assert_eq!(csv.lines().count(), 3 + 4 * 2, "{csv}");
+        assert!(csv.starts_with("# n_points,4\n# n_errors,0\n"), "{csv}");
+        let header = csv.lines().nth(2).unwrap();
         assert!(header.starts_with("index,n_gpus,seq_len,backend"), "{header}");
+    }
+
+    #[test]
+    fn error_count_surfaces_in_text_and_csv() {
+        // One of the two points cannot construct (n_gpus beyond cluster).
+        let sw = Sweep::parse("model = 1.3B\nsweep.n_gpus = 8,100000\n").unwrap();
+        let rep = run_sweep(&sw, &backends_for("analytical").unwrap(), 2);
+        assert_eq!(rep.n_errors(), 1);
+        assert!(rep.to_text().contains("1 error(s)"), "{}", rep.to_text());
+        assert!(rep.to_csv().starts_with("# n_points,2\n# n_errors,1\n"), "{}", rep.to_csv());
     }
 
     #[test]

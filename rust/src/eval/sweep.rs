@@ -30,9 +30,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::config::scenario::{known_key, parse_kv, Scenario};
-use crate::util::channel::channel;
 
-use super::report::{SweepPointResult, SweepReport};
+use super::report::SweepReport;
 use super::Evaluator;
 
 /// Hard cap on total grid points — a typo'd range should fail loudly, not
@@ -48,6 +47,18 @@ pub const MAX_AXIS_VALUES: usize = 100_000;
 pub struct SweepAxis {
     pub key: String,
     pub values: Vec<String>,
+}
+
+impl SweepAxis {
+    /// Parse one axis from its scenario key and value spec, validating the
+    /// key against the scenario dialect.
+    pub fn parse(key: &str, spec: &str) -> Result<SweepAxis> {
+        if !known_key(key) {
+            bail!("sweep axis \"sweep.{key}\": {key:?} is not a scenario key");
+        }
+        let values = parse_axis_values(spec).with_context(|| format!("sweep axis {key:?}"))?;
+        Ok(SweepAxis { key: key.to_string(), values })
+    }
 }
 
 /// A parsed sweep: base scenario keys + axes.
@@ -74,17 +85,21 @@ impl Sweep {
         let mut axes = Vec::new();
         for (k, v) in kv {
             if let Some(key) = k.strip_prefix("sweep.") {
-                if !known_key(key) {
-                    bail!("sweep axis {k:?}: {key:?} is not a scenario key");
-                }
-                let values =
-                    parse_axis_values(&v).with_context(|| format!("sweep axis {key:?}"))?;
-                axes.push(SweepAxis { key: key.to_string(), values });
+                axes.push(SweepAxis::parse(key, &v)?);
             } else {
-                if !known_key(&k) {
-                    bail!("unknown scenario key {k:?}");
-                }
                 base.insert(k, v);
+            }
+        }
+        Self::from_parts(base, axes)
+    }
+
+    /// Assemble a point space from already-split parts, validating base
+    /// keys and the grid-size caps. Shared by sweep files and
+    /// [`crate::query::Query`] parsing.
+    pub fn from_parts(base: BTreeMap<String, String>, axes: Vec<SweepAxis>) -> Result<Self> {
+        for k in base.keys() {
+            if !known_key(k) {
+                bail!("unknown scenario key {k:?}");
             }
         }
         let mut n: usize = 1;
@@ -226,68 +241,16 @@ fn fmt_num(v: f64) -> String {
 /// Evaluate every point of `sweep` with every backend on `threads` worker
 /// threads. Results are ordered by point index — the report is
 /// byte-identical for any thread count.
-pub fn run_sweep(
-    sweep: &Sweep,
-    backends: &[Box<dyn Evaluator>],
-    threads: usize,
-) -> SweepReport {
-    let n = sweep.len();
-    let threads = threads.max(1).min(n.max(1));
-    let mut results: Vec<Option<SweepPointResult>> = (0..n).map(|_| None).collect();
-
-    if threads <= 1 {
-        for (i, slot) in results.iter_mut().enumerate() {
-            *slot = Some(eval_point(sweep, backends, i));
-        }
-    } else {
-        let (job_tx, job_rx) = channel::<usize>(0);
-        let (res_tx, res_rx) = channel::<SweepPointResult>(0);
-        std::thread::scope(|scope| {
-            for _ in 0..threads {
-                let job_rx = job_rx.clone();
-                let res_tx = res_tx.clone();
-                scope.spawn(move || {
-                    while let Ok(i) = job_rx.recv() {
-                        if res_tx.send(eval_point(sweep, backends, i)).is_err() {
-                            break;
-                        }
-                    }
-                });
-            }
-            for i in 0..n {
-                let _ = job_tx.send(i);
-            }
-            drop(job_tx);
-            // Workers hold their own result-sender clones; dropping the
-            // original lets recv() observe disconnection (instead of
-            // hanging) if a worker panics without delivering its result.
-            drop(res_tx);
-            for _ in 0..n {
-                let pr = res_rx.recv().expect("sweep worker died");
-                let idx = pr.index;
-                results[idx] = Some(pr);
-            }
-        });
-    }
-
-    SweepReport {
-        axes: sweep.axes.clone(),
-        backends: backends.iter().map(|b| b.name().to_string()).collect(),
-        points: results.into_iter().map(|r| r.expect("every index evaluated")).collect(),
-    }
-}
-
-fn eval_point(sweep: &Sweep, backends: &[Box<dyn Evaluator>], index: usize) -> SweepPointResult {
-    let (point, scen) = sweep.point(index);
-    match scen {
-        Ok(s) => SweepPointResult {
-            index,
-            point,
-            evals: backends.iter().map(|b| b.evaluate(&s)).collect(),
-            error: None,
-        },
-        Err(e) => SweepPointResult { index, point, evals: Vec::new(), error: Some(format!("{e:#}")) },
-    }
+///
+/// This is a canned [`crate::query::Query`] (no constraints, `report_all`,
+/// no pruning — sweep semantics evaluate every point, including infeasible
+/// ones) executed by the [`crate::query::Planner`], whose memoization makes
+/// redundant grid points (e.g. a swept key the backend ignores) cache hits.
+pub fn run_sweep(sweep: &Sweep, backends: &[Box<dyn Evaluator>], threads: usize) -> SweepReport {
+    // run_with takes the backend boxes directly; the spec is not re-resolved.
+    let query = crate::query::Query::from_sweep(sweep.clone(), "");
+    let frontier = crate::query::Planner::new(threads).run_with(&query, backends);
+    frontier.into_sweep_report()
 }
 
 #[cfg(test)]

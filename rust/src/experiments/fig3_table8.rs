@@ -43,6 +43,7 @@ pub fn run() -> Report {
                 cluster: cluster.clone(),
                 training: cfg,
                 n_gpus: 8,
+                alpha: None,
             };
             let e = backend.evaluate(&scn);
             let m = e.metrics.expect("simulated backend reports metrics");

@@ -34,6 +34,7 @@ fn search_with(name: &str, algo: Algorithm) -> EvalSearch {
         cluster: cluster_with(name, algo),
         training: TrainingConfig::paper_default(2048, 1),
         n_gpus: N_GPUS,
+        alpha: None,
     };
     Searched.evaluate(&scn).search.expect("gridsearch reports search results")
 }
@@ -57,6 +58,7 @@ pub fn run() -> Report {
                 cluster: cluster_with(cluster_name, algo),
                 training: TrainingConfig::paper_default(2048, 1),
                 n_gpus: N_GPUS,
+                alpha: None,
             };
             let e = Simulated::default().evaluate(&scn);
             let m = e.metrics.expect("simulated backend reports metrics");

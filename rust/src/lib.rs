@@ -18,6 +18,10 @@
 //!   keys).
 //! * [`gridsearch`] — Appendix C's Algorithm 1 grid-search simulator plus
 //!   the configuration search that generates the paper's Tables 4–6.
+//! * [`query`] — the declarative Query/Planner API: objectives, `where.*`
+//!   constraints, §2.7 bounds-pruned search (Eqs 12–15) and memoized
+//!   parallel execution — the one way every front-end (CLI `plan`, sweeps,
+//!   grid search, examples) asks a performance question.
 //! * [`simulator`] — a discrete-event FSDP *cluster* simulator (network ring
 //!   collectives, GPU kernel-efficiency model, CUDA-allocator model) that
 //!   substitutes for the paper's two JUWELS A100 clusters and regenerates
@@ -54,6 +58,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod experiments;
 pub mod gridsearch;
+pub mod query;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod simulator;

@@ -7,6 +7,9 @@
 //! * `scenario` — a `.scn` file evaluated by any/all backends;
 //! * `sweep` — a `.scn` file with `sweep.*` axes, expanded to a Cartesian
 //!   grid and evaluated in parallel;
+//! * `plan` — a declarative [`fsdp_bw::query::Query`] file (axes +
+//!   `where.*` constraints + `query.*` objective), bounds-pruned and
+//!   ranked into a frontier;
 //! * `experiment` — regenerate a paper table/figure;
 //! * `train` — the real FSDP trainer on AOT artifacts (needs `--features
 //!   xla`);
@@ -22,6 +25,7 @@ use fsdp_bw::config::{ClusterConfig, ModelConfig};
 use fsdp_bw::eval::{backends_for, run_sweep, BoundsEval, Searched, Simulated};
 use fsdp_bw::eval::{Evaluation, Evaluator, Sweep};
 use fsdp_bw::experiments;
+use fsdp_bw::query::{Planner, Query};
 use fsdp_bw::util::cli::Args;
 use fsdp_bw::util::json::Json;
 
@@ -46,6 +50,12 @@ COMMANDS:
   sweep      <file.scn> [--backend both] [--threads N] [--json|--csv]
              [--out report.json]         expand sweep.* axes to a Cartesian
                                          grid and evaluate in parallel
+  plan       <file.scn> [--backend analytical] [--threads N] [--top-k K]
+             [--no-prune] [--check-prune] [--json|--csv] [--out path]
+                                         declarative query: sweep.* axes +
+                                         where.* constraints + query.*
+                                         objective, §2.7 bounds-pruned,
+                                         ranked frontier (see README)
   train      [--artifact train_step_27m] [--artifacts-dir artifacts]
              [--ranks 4] [--steps 100] [--bandwidth-gbps 200]
              [--seed 42] [--csv out.csv] [--quiet]
@@ -67,7 +77,7 @@ fn main() -> Result<()> {
     let cmd0 = raw.iter().find(|t| !t.starts_with('-')).map(String::as_str).unwrap_or("");
     let flags: &[&str] = match cmd0 {
         "train" => &["quiet"],
-        _ => &["json", "csv", "empty-cache", "quiet"],
+        _ => &["json", "csv", "empty-cache", "quiet", "no-prune", "check-prune"],
     };
     let args = Args::parse(&raw, flags)?;
     let cmd = match args.positional.first() {
@@ -84,6 +94,7 @@ fn main() -> Result<()> {
         "bounds" => cmd_bounds(&args),
         "scenario" => cmd_scenario(&args),
         "sweep" => cmd_sweep(&args),
+        "plan" => cmd_plan(&args),
         "train" => cmd_train(&args),
         "list" => cmd_list(),
         other => {
@@ -232,12 +243,108 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         Some(p) => {
             std::fs::write(&p, body.as_bytes())?;
             println!(
-                "wrote {p} ({} points × {} backends)",
+                "wrote {p} ({} points × {} backends, {} errors)",
                 report.n_points(),
-                report.backends.len()
+                report.backends.len(),
+                report.n_errors()
             );
         }
         None => print!("{body}"),
+    }
+    if report.n_points() > 0 && report.n_errors() == report.n_points() {
+        anyhow::bail!(
+            "all {} sweep points failed to construct a scenario — check the axes",
+            report.n_points()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "backend",
+        "threads",
+        "top-k",
+        "no-prune",
+        "check-prune",
+        "json",
+        "csv",
+        "out",
+    ])?;
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("plan needs a file path (scenario + sweep.*/where.*/query.* keys)"))?;
+    let mut query = Query::load(Path::new(path))?;
+    if let Some(b) = args.str_maybe("backend") {
+        query.backend_spec = b;
+    }
+    query.top_k = args.num_opt("top-k", query.top_k)?;
+    if args.flag("no-prune") {
+        query.prune = false;
+    }
+    let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let planner = Planner::new(args.num_opt("threads", default_threads)?);
+
+    if args.flag("check-prune") {
+        // Parity harness: the §2.7-pruned plan must return the byte-identical
+        // frontier to brute force, evaluating no more points.
+        let mut pruned_q = query.clone();
+        pruned_q.prune = true;
+        let mut brute_q = query.clone();
+        brute_q.prune = false;
+        let pruned = planner.run(&pruned_q)?;
+        let brute = planner.run(&brute_q)?;
+        anyhow::ensure!(
+            pruned.ranked_json().pretty() == brute.ranked_json().pretty(),
+            "pruned and brute-force frontiers disagree — §2.7 pruning is unsound here"
+        );
+        anyhow::ensure!(
+            pruned.counters.evaluated <= brute.counters.evaluated,
+            "pruned plan evaluated more points ({}) than brute force ({})",
+            pruned.counters.evaluated,
+            brute.counters.evaluated
+        );
+        println!(
+            "prune parity OK: identical {}-point frontier; evaluated {} (pruned: {} by bounds) \
+             vs {} (brute force)",
+            pruned.ranked.len(),
+            pruned.counters.evaluated,
+            pruned.counters.pruned_by_bounds,
+            brute.counters.evaluated
+        );
+        return Ok(());
+    }
+
+    let frontier = planner.run(&query)?;
+    let mut body = if args.flag("json") {
+        frontier.to_json()
+    } else if args.flag("csv") {
+        frontier.to_csv()
+    } else {
+        frontier.to_text()
+    };
+    if !body.ends_with('\n') {
+        body.push('\n');
+    }
+    match args.str_maybe("out") {
+        Some(p) => {
+            std::fs::write(&p, body.as_bytes())?;
+            println!(
+                "wrote {p} ({} ranked of {} points, {} errors)",
+                frontier.ranked.len(),
+                frontier.counters.points,
+                frontier.counters.errors
+            );
+        }
+        None => print!("{body}"),
+    }
+    let c = &frontier.counters;
+    if c.points > 0 && c.errors == c.points {
+        anyhow::bail!(
+            "all {} plan points failed to construct a scenario — check the axes",
+            c.points
+        );
     }
     Ok(())
 }

@@ -1,0 +1,367 @@
+//! `where.*` constraints — the declarative filter half of a [`super::Query`].
+//!
+//! A constraint line reads `where.<metric> = <op> <value>`, e.g.
+//!
+//! ```text
+//! where.mem_headroom_gib = >= 2
+//! where.comm_ratio       = <= 0.3
+//! where.n_gpus           = <= 64
+//! where.mfu              = >= 0.45
+//! ```
+//!
+//! Metrics fall into three tiers, and the [`super::Planner`] exploits the
+//! tiering to reject points as early (and as cheaply) as possible:
+//!
+//! 1. **scenario** metrics (`n_gpus`, `seq_len`, `batch`, `gamma`,
+//!    `tokens_per_gpu`) — decided from the point alone, before anything is
+//!    computed;
+//! 2. **memory** metrics (`m_free_gib`, `mem_headroom_gib`) — decided by
+//!    the closed-form Eq 1–4 memory model, still no evaluation needed;
+//! 3. **evaluated** metrics (`mfu`, `hfu`, `tgs`, `t_step`, `exposed_comm`,
+//!    `comm_ratio`) — need a backend evaluation; lower-bound constraints on
+//!    `mfu`/`hfu`/`tgs` are additionally *pruned* up front via the §2.7
+//!    closed-form maxima (Eqs 13–15) when the bound already rules the
+//!    point out.
+
+use anyhow::{bail, Result};
+
+use crate::analysis::memory::MemoryModel;
+use crate::config::scenario::Scenario;
+use crate::config::GIB;
+use crate::eval::report::metrics_for_tgs;
+use crate::eval::{EvalBounds, Evaluation};
+
+/// Comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Lt,
+    Ge,
+    Gt,
+    Eq,
+    Ne,
+}
+
+impl Cmp {
+    fn parse(tok: &str) -> Option<Cmp> {
+        Some(match tok {
+            "<=" => Cmp::Le,
+            "<" => Cmp::Lt,
+            ">=" => Cmp::Ge,
+            ">" => Cmp::Gt,
+            "=" | "==" => Cmp::Eq,
+            "!=" => Cmp::Ne,
+            _ => return None,
+        })
+    }
+
+    fn apply(self, lhs: f64, rhs: f64) -> bool {
+        match self {
+            Cmp::Le => lhs <= rhs,
+            Cmp::Lt => lhs < rhs,
+            Cmp::Ge => lhs >= rhs,
+            Cmp::Gt => lhs > rhs,
+            Cmp::Eq => lhs == rhs,
+            Cmp::Ne => lhs != rhs,
+        }
+    }
+
+    fn symbol(self) -> &'static str {
+        match self {
+            Cmp::Le => "<=",
+            Cmp::Lt => "<",
+            Cmp::Ge => ">=",
+            Cmp::Gt => ">",
+            Cmp::Eq => "==",
+            Cmp::Ne => "!=",
+        }
+    }
+}
+
+/// Constraint left-hand sides the dialect understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    // Tier 1 — scenario.
+    NGpus,
+    SeqLen,
+    Batch,
+    Gamma,
+    TokensPerGpu,
+    // Tier 2 — closed-form memory (Eqs 1–4).
+    MFreeGib,
+    MemHeadroomGib,
+    // Tier 3 — evaluated.
+    Mfu,
+    Hfu,
+    Tgs,
+    TStep,
+    ExposedComm,
+    CommRatio,
+}
+
+/// Every metric name, for error messages.
+pub const METRIC_NAMES: &[&str] = &[
+    "n_gpus",
+    "seq_len",
+    "batch",
+    "gamma",
+    "tokens_per_gpu",
+    "m_free_gib",
+    "mem_headroom_gib",
+    "mfu",
+    "hfu",
+    "tgs",
+    "t_step",
+    "exposed_comm",
+    "comm_ratio",
+];
+
+impl Metric {
+    fn parse(name: &str) -> Option<Metric> {
+        Some(match name {
+            "n_gpus" => Metric::NGpus,
+            "seq_len" => Metric::SeqLen,
+            "batch" => Metric::Batch,
+            "gamma" => Metric::Gamma,
+            "tokens_per_gpu" => Metric::TokensPerGpu,
+            "m_free_gib" => Metric::MFreeGib,
+            "mem_headroom_gib" => Metric::MemHeadroomGib,
+            "mfu" => Metric::Mfu,
+            "hfu" => Metric::Hfu,
+            "tgs" => Metric::Tgs,
+            "t_step" => Metric::TStep,
+            "exposed_comm" => Metric::ExposedComm,
+            "comm_ratio" => Metric::CommRatio,
+            _ => return None,
+        })
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Metric::NGpus => "n_gpus",
+            Metric::SeqLen => "seq_len",
+            Metric::Batch => "batch",
+            Metric::Gamma => "gamma",
+            Metric::TokensPerGpu => "tokens_per_gpu",
+            Metric::MFreeGib => "m_free_gib",
+            Metric::MemHeadroomGib => "mem_headroom_gib",
+            Metric::Mfu => "mfu",
+            Metric::Hfu => "hfu",
+            Metric::Tgs => "tgs",
+            Metric::TStep => "t_step",
+            Metric::ExposedComm => "exposed_comm",
+            Metric::CommRatio => "comm_ratio",
+        }
+    }
+
+    /// Is this metric decidable from the scenario alone (tiers 1–2)?
+    fn pre_evaluation(self) -> bool {
+        !matches!(
+            self,
+            Metric::Mfu
+                | Metric::Hfu
+                | Metric::Tgs
+                | Metric::TStep
+                | Metric::ExposedComm
+                | Metric::CommRatio
+        )
+    }
+}
+
+/// One parsed `where.*` constraint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Constraint {
+    pub metric: Metric,
+    pub cmp: Cmp,
+    pub value: f64,
+}
+
+impl Constraint {
+    /// Parse the `where.<metric>` key suffix plus its `<op> <value>` value.
+    pub fn parse(metric: &str, spec: &str) -> Result<Constraint> {
+        let Some(m) = Metric::parse(metric) else {
+            bail!(
+                "unknown constraint metric {metric:?} (syntax: `where.<metric> = <op> <value>`, \
+                 metrics: {})",
+                METRIC_NAMES.join(", ")
+            );
+        };
+        let spec = spec.trim();
+        let (op, rest) = match spec.split_once(char::is_whitespace) {
+            Some((op, rest)) => (op, rest.trim()),
+            None => {
+                // Allow the compact form `>=2`.
+                let split = spec
+                    .find(|c: char| c.is_ascii_digit() || c == '-' || c == '.')
+                    .unwrap_or(spec.len());
+                (spec[..split].trim(), spec[split..].trim())
+            }
+        };
+        let Some(cmp) = Cmp::parse(op) else {
+            bail!(
+                "constraint where.{metric} = {spec:?}: bad operator {op:?} \
+                 (use <=, <, >=, >, ==, !=)"
+            );
+        };
+        let value: f64 = rest
+            .parse()
+            .map_err(|e| anyhow::anyhow!("constraint where.{metric} = {spec:?}: bad value: {e}"))?;
+        anyhow::ensure!(value.is_finite(), "constraint where.{metric}: value must be finite");
+        Ok(Constraint { metric: m, cmp, value })
+    }
+
+    /// Canonical rendering, used as provenance (`rejected_by`).
+    pub fn render(&self) -> String {
+        format!("{} {} {}", self.metric.name(), self.cmp.symbol(), self.value)
+    }
+
+    /// Decide the constraint from the scenario alone when possible (tier
+    /// 1–2 metrics); `None` means an evaluation is required.
+    pub fn eval_pre(&self, s: &Scenario) -> Option<bool> {
+        if !self.metric.pre_evaluation() {
+            return None;
+        }
+        let lhs = match self.metric {
+            Metric::NGpus => s.n_gpus as f64,
+            Metric::SeqLen => s.training.seq_len as f64,
+            Metric::Batch => s.training.batch_per_gpu as f64,
+            Metric::Gamma => s.training.gamma,
+            Metric::TokensPerGpu => s.training.tokens_per_gpu() as f64,
+            Metric::MFreeGib | Metric::MemHeadroomGib => {
+                let mem = MemoryModel::new(&s.model, &s.cluster, &s.training, s.n_gpus);
+                match self.metric {
+                    Metric::MFreeGib => mem.m_free / GIB,
+                    _ => (mem.m_free - mem.act_bytes) / GIB,
+                }
+            }
+            _ => unreachable!("pre_evaluation() gated"),
+        };
+        Some(self.cmp.apply(lhs, self.value))
+    }
+
+    /// Decide the constraint against one evaluation (tier-3 metrics; tier
+    /// 1–2 metrics were already decided and pass trivially here). A metric
+    /// the backend did not report fails the constraint — an unverifiable
+    /// requirement is not satisfied.
+    pub fn eval_post(&self, e: &Evaluation) -> bool {
+        if self.metric.pre_evaluation() {
+            return true;
+        }
+        let lhs = match self.metric {
+            Metric::Mfu => e.metrics.map(|m| m.mfu),
+            Metric::Hfu => e.metrics.map(|m| m.hfu),
+            // Same reading the `max_tgs` objective ranks by: for the grid
+            // search that is its genuine best-TGS grid point, not the
+            // best-MFU point's TGS.
+            Metric::Tgs => metrics_for_tgs(e).map(|m| m.tgs),
+            Metric::TStep => e.step.map(|st| st.t_step),
+            Metric::ExposedComm => e.step.map(|st| st.exposed_comm),
+            Metric::CommRatio => e.step.and_then(|st| {
+                if st.t_step > 0.0 {
+                    Some(st.exposed_comm / st.t_step)
+                } else {
+                    None
+                }
+            }),
+            _ => unreachable!("pre_evaluation() gated"),
+        };
+        match lhs {
+            Some(v) if v.is_finite() => self.cmp.apply(v, self.value),
+            _ => false,
+        }
+    }
+
+    /// §2.7 bound check (Eqs 13–15): `Some(reason)` when the closed-form
+    /// maximum already rules out ever satisfying this lower-bound
+    /// constraint — the Planner prunes such points before evaluation.
+    pub fn bound_excludes(&self, b: &EvalBounds) -> Option<String> {
+        let (bound, eq) = match self.metric {
+            Metric::Hfu => (b.hfu_max, "Eq 13"),
+            Metric::Mfu => (b.mfu_max, "Eq 14"),
+            Metric::Tgs => (b.k_max, "Eq 15"),
+            _ => return None,
+        };
+        let excluded = match self.cmp {
+            Cmp::Ge | Cmp::Eq => bound < self.value,
+            Cmp::Gt => bound <= self.value,
+            _ => false,
+        };
+        if excluded {
+            Some(format!(
+                "{eq}: {} <= {bound:.4} cannot satisfy `{}`",
+                self.metric.name(),
+                self.render()
+            ))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scen() -> Scenario {
+        Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 10240\n").unwrap()
+    }
+
+    #[test]
+    fn parses_ops_and_compact_form() {
+        let c = Constraint::parse("mfu", ">= 0.4").unwrap();
+        assert_eq!(c.cmp, Cmp::Ge);
+        assert_eq!(c.value, 0.4);
+        assert_eq!(c.render(), "mfu >= 0.4");
+        assert_eq!(Constraint::parse("n_gpus", "<=64").unwrap().cmp, Cmp::Le);
+        assert_eq!(Constraint::parse("gamma", "!= 0.5").unwrap().cmp, Cmp::Ne);
+        assert_eq!(Constraint::parse("gamma", "= 0.5").unwrap().cmp, Cmp::Eq);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Constraint::parse("warp", ">= 1").is_err());
+        assert!(Constraint::parse("mfu", "~ 1").is_err());
+        assert!(Constraint::parse("mfu", ">=").is_err());
+        assert!(Constraint::parse("mfu", ">= banana").is_err());
+        let err = Constraint::parse("mfu >", " 0.4").unwrap_err().to_string();
+        assert!(err.contains("where.<metric> = <op> <value>"), "{err}");
+    }
+
+    #[test]
+    fn pre_tier_decides_without_evaluation() {
+        let s = scen();
+        assert_eq!(Constraint::parse("n_gpus", "<= 64").unwrap().eval_pre(&s), Some(true));
+        assert_eq!(Constraint::parse("n_gpus", "> 8").unwrap().eval_pre(&s), Some(false));
+        assert_eq!(Constraint::parse("seq_len", "== 10240").unwrap().eval_pre(&s), Some(true));
+        // Memory tier: 13B@8×40GB has a few GiB of headroom at ctx 10240.
+        let head = Constraint::parse("mem_headroom_gib", ">= 0").unwrap();
+        assert_eq!(head.eval_pre(&s), Some(true));
+        // Evaluated tier defers.
+        assert_eq!(Constraint::parse("mfu", ">= 0.1").unwrap().eval_pre(&s), None);
+    }
+
+    #[test]
+    fn post_tier_reads_the_evaluation() {
+        use crate::eval::{Analytical, Evaluator};
+        let e = Analytical::default().evaluate(&scen());
+        assert!(Constraint::parse("mfu", "> 0").unwrap().eval_post(&e));
+        assert!(!Constraint::parse("mfu", "> 1").unwrap().eval_post(&e));
+        assert!(Constraint::parse("comm_ratio", "<= 1").unwrap().eval_post(&e));
+        // Metric absent from the backend's report → not satisfied.
+        use crate::eval::BoundsEval;
+        let eb = BoundsEval.evaluate(&scen());
+        assert!(!Constraint::parse("mfu", "> 0").unwrap().eval_post(&eb));
+    }
+
+    #[test]
+    fn bounds_exclude_unreachable_targets() {
+        let b = EvalBounds { e_max: 1e4, hfu_max: 0.6, mfu_max: 0.45, k_max: 1500.0 };
+        assert!(Constraint::parse("mfu", ">= 0.5").unwrap().bound_excludes(&b).is_some());
+        assert!(Constraint::parse("mfu", ">= 0.4").unwrap().bound_excludes(&b).is_none());
+        assert!(Constraint::parse("tgs", "> 1500").unwrap().bound_excludes(&b).is_some());
+        assert!(Constraint::parse("tgs", ">= 1500").unwrap().bound_excludes(&b).is_none());
+        // Upper-bound constraints are never excluded by a maximum.
+        assert!(Constraint::parse("mfu", "<= 0.1").unwrap().bound_excludes(&b).is_none());
+        assert!(Constraint::parse("gamma", ">= 0.5").unwrap().bound_excludes(&b).is_none());
+    }
+}

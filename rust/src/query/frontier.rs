@@ -1,0 +1,553 @@
+//! The [`Frontier`]: a ranked answer with per-point provenance.
+//!
+//! A frontier carries every grid point's fate — evaluated (with a
+//! deterministic `cache_hit` flag), `pruned_by_bounds` (with the Eq 12–15
+//! reason), rejected (with the constraint that rejected it), or errored —
+//! plus the ranked result: top-k for scalar objectives, the Pareto-optimal
+//! set for `pareto(...)`, or every feasible point for `report_all`.
+//!
+//! Ranked entries expose only the *primary* backend's evaluation, which is
+//! what makes pruned and brute-force frontiers byte-comparable: pruning
+//! never touches a feasible point, so the primary evaluations of ranked
+//! points are identical either way.
+
+use std::cmp::Ordering;
+
+use crate::eval::report::{csv_cell, scalar, SweepPointResult, SweepReport};
+use crate::eval::sweep::SweepAxis;
+use crate::eval::{num, obj, Evaluation};
+use crate::util::json::Json;
+
+use super::Objective;
+
+/// Per-backend outcome of one grid point.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PointEval {
+    /// Evaluated (or served from the memoization table — `cache_hit`).
+    Done { eval: Evaluation, cache_hit: bool },
+    /// Skipped: the §2.7 bounds guarantee infeasibility.
+    Pruned { reason: String },
+}
+
+/// One grid point with full plan provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedPoint {
+    /// Odometer index in the grid.
+    pub index: usize,
+    /// `(axis key, value)` assignment, in axis order.
+    pub point: Vec<(String, String)>,
+    /// Scenario construction failure (point skipped, not fatal).
+    pub error: Option<String>,
+    /// The constraint that rejected this point (pre- or post-evaluation).
+    pub rejected_by: Option<String>,
+    /// One outcome per backend, in backend order; empty on error/rejection
+    /// before evaluation.
+    pub evals: Vec<PointEval>,
+    /// Scalar objective score under the primary backend (candidates only).
+    /// Internal ranking value, higher = better — renderings convert to
+    /// user-facing units via `Objective::report_score`.
+    pub score: Option<f64>,
+}
+
+impl PlannedPoint {
+    /// The primary backend's evaluation, when one was executed.
+    pub fn primary_eval(&self) -> Option<&Evaluation> {
+        match self.evals.first() {
+            Some(PointEval::Done { eval, .. }) => Some(eval),
+            _ => None,
+        }
+    }
+
+    /// Is this point in the candidate pool (feasible, unrejected)?
+    pub fn is_candidate(&self) -> bool {
+        self.error.is_none()
+            && self.rejected_by.is_none()
+            && self.primary_eval().map(|e| e.feasible).unwrap_or(false)
+    }
+
+    /// One-word provenance tag.
+    pub fn status(&self) -> &'static str {
+        if self.error.is_some() {
+            "error"
+        } else if self.rejected_by.is_some() {
+            "rejected"
+        } else if matches!(self.evals.first(), Some(PointEval::Pruned { .. })) {
+            "pruned"
+        } else if self.is_candidate() {
+            "ok"
+        } else {
+            "infeasible"
+        }
+    }
+}
+
+/// Plan execution counters — the provenance summary.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PlanCounters {
+    /// Grid points in the query's space.
+    pub points: usize,
+    /// Evaluations actually executed (unique jobs after pruning + dedup).
+    pub evaluated: usize,
+    /// Backend slots skipped via the §2.7 bounds (Eqs 12–15).
+    pub pruned_by_bounds: usize,
+    /// Slots served from the memoization table.
+    pub cache_hits: usize,
+    /// Points rejected by a constraint — before evaluation, after it, or
+    /// via a constraint-vs-bound prune (so this count matches the
+    /// brute-force run of the same query).
+    pub rejected: usize,
+    /// Points infeasible outright: evaluated infeasible, or pruned by the
+    /// Eq 12/4 memory bounds.
+    pub infeasible: usize,
+    /// Candidate points (feasible and unrejected) — the ranking pool.
+    pub feasible: usize,
+    /// Points whose scenario failed to construct.
+    pub errors: usize,
+}
+
+impl PlanCounters {
+    fn json(&self) -> Json {
+        obj(vec![
+            ("points", num(self.points as f64)),
+            ("evaluated", num(self.evaluated as f64)),
+            ("pruned_by_bounds", num(self.pruned_by_bounds as f64)),
+            ("cache_hits", num(self.cache_hits as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("infeasible", num(self.infeasible as f64)),
+            ("feasible", num(self.feasible as f64)),
+            ("errors", num(self.errors as f64)),
+        ])
+    }
+}
+
+/// Rank the candidate pool under an objective. Returns point indices:
+/// top-k by score for scalar objectives (ties broken by grid order), the
+/// Pareto-optimal set (first axis descending) for `pareto`, every candidate
+/// in grid order for `report_all`.
+pub(crate) fn rank(objective: &Objective, points: &[PlannedPoint], top_k: usize) -> Vec<usize> {
+    match objective {
+        Objective::ReportAll => {
+            points.iter().filter(|p| p.is_candidate()).map(|p| p.index).collect()
+        }
+        Objective::Pareto(a, b) => {
+            let mut pts: Vec<(usize, f64, f64)> = points
+                .iter()
+                .filter(|p| p.is_candidate())
+                .filter_map(|p| {
+                    let e = p.primary_eval()?;
+                    let (va, vb) = (a.value(e)?, b.value(e)?);
+                    (va.is_finite() && vb.is_finite()).then_some((p.index, va, vb))
+                })
+                .collect();
+            pts.sort_by(|x, y| {
+                y.1.partial_cmp(&x.1)
+                    .unwrap_or(Ordering::Equal)
+                    .then(y.2.partial_cmp(&x.2).unwrap_or(Ordering::Equal))
+                    .then(x.0.cmp(&y.0))
+            });
+            // Sweep over groups of equal first-axis value: a group member is
+            // Pareto-optimal iff it has the group's max second-axis value
+            // and strictly beats every higher-first-axis point on it.
+            let mut front = Vec::new();
+            let mut best_vb = f64::NEG_INFINITY;
+            let mut i = 0;
+            while i < pts.len() {
+                let va = pts[i].1;
+                let mut j = i;
+                let mut group_max = f64::NEG_INFINITY;
+                while j < pts.len() && pts[j].1 == va {
+                    group_max = group_max.max(pts[j].2);
+                    j += 1;
+                }
+                if group_max > best_vb {
+                    for p in &pts[i..j] {
+                        if p.2 == group_max {
+                            front.push(p.0);
+                        }
+                    }
+                    best_vb = group_max;
+                }
+                i = j;
+            }
+            front
+        }
+        _ => {
+            let mut scored: Vec<(usize, f64)> = points
+                .iter()
+                .filter_map(|p| p.score.filter(|s| s.is_finite()).map(|s| (p.index, s)))
+                .collect();
+            scored.sort_by(|x, y| {
+                y.1.partial_cmp(&x.1).unwrap_or(Ordering::Equal).then(x.0.cmp(&y.0))
+            });
+            if top_k > 0 {
+                scored.truncate(top_k);
+            }
+            scored.into_iter().map(|(i, _)| i).collect()
+        }
+    }
+}
+
+/// The result of planning and executing one query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frontier {
+    pub objective: Objective,
+    /// Backend names, primary first.
+    pub backends: Vec<String>,
+    pub axes: Vec<SweepAxis>,
+    /// Constraint renderings, in query order.
+    pub constraints: Vec<String>,
+    pub top_k: usize,
+    /// Was §2.7 bounds pruning enabled?
+    pub prune: bool,
+    pub counters: PlanCounters,
+    /// Ranked point indices (see [`rank`]).
+    pub ranked: Vec<usize>,
+    /// Every grid point, by index, with provenance.
+    pub points: Vec<PlannedPoint>,
+}
+
+impl Frontier {
+    /// The best-ranked point, when any candidate survived.
+    pub fn best(&self) -> Option<&PlannedPoint> {
+        self.ranked.first().map(|&i| &self.points[i])
+    }
+
+    /// The ranked entries as JSON — primary-backend evaluations only, so
+    /// pruned and brute-force runs of the same query serialize
+    /// byte-identically (the parity `--check-prune` compares exactly this).
+    pub fn ranked_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .ranked
+            .iter()
+            .enumerate()
+            .map(|(r, &i)| {
+                let p = &self.points[i];
+                let mut pairs = vec![
+                    ("rank", num((r + 1) as f64)),
+                    ("index", num(i as f64)),
+                    ("point", point_obj(&p.point)),
+                ];
+                if let Some(s) = p.score {
+                    pairs.push(("score", num(self.objective.report_score(s))));
+                }
+                if let (Objective::Pareto(a, b), Some(e)) = (&self.objective, p.primary_eval()) {
+                    if let (Some(va), Some(vb)) = (a.report(e), b.report(e)) {
+                        pairs.push(("pareto", obj(vec![(a.name(), num(va)), (b.name(), num(vb))])));
+                    }
+                }
+                if let Some(e) = p.primary_eval() {
+                    pairs.push(("eval", e.json()));
+                }
+                obj(pairs)
+            })
+            .collect();
+        Json::Arr(entries)
+    }
+
+    /// The whole frontier as a JSON value: query echo, counters, ranked
+    /// entries, and per-point provenance.
+    pub fn json(&self) -> Json {
+        let axes = Json::Arr(
+            self.axes
+                .iter()
+                .map(|a| {
+                    obj(vec![
+                        ("key", Json::Str(a.key.clone())),
+                        ("values", Json::Arr(a.values.iter().map(|v| scalar(v)).collect())),
+                    ])
+                })
+                .collect(),
+        );
+        let provenance = Json::Arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    let mut pairs = vec![
+                        ("index", num(p.index as f64)),
+                        ("point", point_obj(&p.point)),
+                        ("status", Json::Str(p.status().to_string())),
+                    ];
+                    if let Some(e) = &p.error {
+                        pairs.push(("error", Json::Str(e.clone())));
+                    }
+                    if let Some(c) = &p.rejected_by {
+                        pairs.push(("rejected_by", Json::Str(c.clone())));
+                    }
+                    if let Some(PointEval::Pruned { reason }) = p.evals.first() {
+                        pairs.push(("pruned_by_bounds", Json::Str(reason.clone())));
+                    }
+                    if let Some(PointEval::Done { cache_hit, .. }) = p.evals.first() {
+                        pairs.push(("cache_hit", Json::Bool(*cache_hit)));
+                    }
+                    obj(pairs)
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("objective", Json::Str(self.objective.render())),
+            (
+                "backends",
+                Json::Arr(self.backends.iter().map(|b| Json::Str(b.clone())).collect()),
+            ),
+            ("top_k", num(self.top_k as f64)),
+            ("prune", Json::Bool(self.prune)),
+            ("axes", axes),
+            (
+                "constraints",
+                Json::Arr(self.constraints.iter().map(|c| Json::Str(c.clone())).collect()),
+            ),
+            ("counters", self.counters.json()),
+            ("frontier", self.ranked_json()),
+            ("points", provenance),
+        ])
+    }
+
+    /// Pretty-printed JSON document.
+    pub fn to_json(&self) -> String {
+        self.json().pretty()
+    }
+
+    /// Human rendering (the `plan` subcommand's default output).
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let c = &self.counters;
+        let _ = writeln!(
+            out,
+            "plan     : {} points × {} backend(s) [{}] — objective {}{}",
+            c.points,
+            self.backends.len(),
+            self.backends.join(", "),
+            self.objective.render(),
+            if self.prune { "" } else { "  (pruning off)" }
+        );
+        for a in &self.axes {
+            let _ = writeln!(out, "  axis {} : {}", a.key, a.values.join(", "));
+        }
+        for w in &self.constraints {
+            let _ = writeln!(out, "  where {w}");
+        }
+        let _ = writeln!(
+            out,
+            "executed : {} evaluated ({} cache hits), {} pruned by §2.7 bounds, \
+             {} rejected by constraints, {} infeasible, {} errors",
+            c.evaluated, c.cache_hits, c.pruned_by_bounds, c.rejected, c.infeasible, c.errors
+        );
+        let shown = match self.objective {
+            Objective::ReportAll => self.ranked.len().min(20),
+            _ => self.ranked.len(),
+        };
+        let _ = writeln!(
+            out,
+            "frontier : {} of {} feasible point(s){}",
+            self.ranked.len(),
+            c.feasible,
+            if shown < self.ranked.len() { format!("  (showing {shown})") } else { String::new() }
+        );
+        for (r, &i) in self.ranked.iter().take(shown).enumerate() {
+            let p = &self.points[i];
+            let at: Vec<String> = p.point.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            let mut cols = Vec::new();
+            if let Some(e) = p.primary_eval() {
+                if let Some(m) = &e.metrics {
+                    cols.push(format!("MFU {:.3}", m.mfu));
+                    cols.push(format!("TGS {:.0}", m.tgs));
+                }
+                if let Some(st) = &e.step {
+                    cols.push(format!("t_step {:.3}s", st.t_step));
+                }
+            }
+            if let Objective::Pareto(a, b) = &self.objective {
+                if let Some(e) = p.primary_eval() {
+                    if let (Some(va), Some(vb)) = (a.report(e), b.report(e)) {
+                        cols.push(format!("{}={va:.4} {}={vb:.4}", a.name(), b.name()));
+                    }
+                }
+            }
+            let _ = writeln!(
+                out,
+                "  #{:<3} {}  at {}",
+                r + 1,
+                cols.join("  "),
+                if at.is_empty() { "(base scenario)".to_string() } else { at.join(" ") }
+            );
+        }
+        out
+    }
+
+    /// Ranked entries as CSV, with `#`-prefixed provenance-counter header
+    /// lines (skippable via `comment='#'` in most CSV readers).
+    pub fn to_csv(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let c = &self.counters;
+        let _ = writeln!(out, "# objective,{}", self.objective.render());
+        let _ = writeln!(out, "# points,{}", c.points);
+        let _ = writeln!(out, "# evaluated,{}", c.evaluated);
+        let _ = writeln!(out, "# pruned_by_bounds,{}", c.pruned_by_bounds);
+        let _ = writeln!(out, "# cache_hits,{}", c.cache_hits);
+        let _ = writeln!(out, "# rejected,{}", c.rejected);
+        let _ = writeln!(out, "# n_errors,{}", c.errors);
+        out.push_str("rank,index");
+        for a in &self.axes {
+            out.push(',');
+            out.push_str(&csv_cell(&a.key));
+        }
+        out.push_str(",score,mfu,hfu,tgs,t_step\n");
+        for (r, &i) in self.ranked.iter().enumerate() {
+            let p = &self.points[i];
+            let _ = write!(out, "{},{}", r + 1, i);
+            for (_, v) in &p.point {
+                out.push(',');
+                out.push_str(&csv_cell(v));
+            }
+            let e = p.primary_eval();
+            for v in [
+                p.score.map(|s| self.objective.report_score(s)),
+                e.and_then(|e| e.metrics.map(|m| m.mfu)),
+                e.and_then(|e| e.metrics.map(|m| m.hfu)),
+                e.and_then(|e| e.metrics.map(|m| m.tgs)),
+                e.and_then(|e| e.step.map(|st| st.t_step)),
+            ] {
+                out.push(',');
+                if let Some(x) = v {
+                    if x.is_finite() {
+                        let _ = write!(out, "{x}");
+                    }
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Convert a `report_all`, unpruned frontier (the sweep-as-query form)
+    /// into the classic [`SweepReport`].
+    pub(crate) fn into_sweep_report(self) -> SweepReport {
+        let points = self
+            .points
+            .into_iter()
+            .map(|p| SweepPointResult {
+                index: p.index,
+                point: p.point,
+                evals: p
+                    .evals
+                    .into_iter()
+                    .map(|pe| match pe {
+                        PointEval::Done { eval, .. } => eval,
+                        PointEval::Pruned { .. } => {
+                            unreachable!("sweep queries run unpruned")
+                        }
+                    })
+                    .collect(),
+                error: p.error,
+            })
+            .collect();
+        SweepReport { axes: self.axes, backends: self.backends, points }
+    }
+}
+
+/// Axis assignment as a JSON object (numeric-looking values as numbers).
+fn point_obj(point: &[(String, String)]) -> Json {
+    Json::Obj(point.iter().map(|(k, v)| (k.clone(), scalar(v))).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::{Planner, Query};
+
+    fn plan(text: &str) -> Frontier {
+        Planner::new(2).run(&Query::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn scalar_ranking_orders_by_score_desc() {
+        let f = plan(
+            "model = 13B\nbatch = 1\nsweep.seq_len = 2048,4096,8192\nquery.top_k = 2\n",
+        );
+        assert_eq!(f.ranked.len(), 2);
+        // MFU grows with context in this regime → 8192 first.
+        let top = &f.points[f.ranked[0]];
+        assert_eq!(top.point[0].1, "8192");
+        let scores: Vec<f64> = f.ranked.iter().map(|&i| f.points[i].score.unwrap()).collect();
+        assert!(scores[0] >= scores[1]);
+        assert_eq!(f.best().unwrap().index, f.ranked[0]);
+    }
+
+    #[test]
+    fn min_step_time_ranks_ascending_t_step() {
+        let f = plan(
+            "model = 13B\nbatch = 1\nsweep.seq_len = 2048,8192\n\
+             query.objective = min_step_time\n",
+        );
+        let t = |r: usize| {
+            f.points[f.ranked[r]].primary_eval().unwrap().step.unwrap().t_step
+        };
+        assert!(t(0) <= t(1), "shortest step first: {} vs {}", t(0), t(1));
+        // Reported score is the positive step time (ranking negates
+        // internally); it must match the eval's own t_step.
+        let v = Json::parse(&f.to_json()).unwrap();
+        let s0 = v.get("frontier").unwrap().as_arr().unwrap()[0]
+            .get("score")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!((s0 - t(0)).abs() < 1e-12, "score {s0} vs t_step {}", t(0));
+    }
+
+    #[test]
+    fn pareto_front_is_mutually_nondominated() {
+        let f = plan(
+            "model = 13B\nbatch = 1\nsweep.n_gpus = 8,16,32\nsweep.gamma = 0,0.5,1\n\
+             query.objective = pareto(mfu, tgs_per_gpu)\n",
+        );
+        assert!(!f.ranked.is_empty());
+        let coords: Vec<(f64, f64)> = f
+            .ranked
+            .iter()
+            .map(|&i| {
+                let e = f.points[i].primary_eval().unwrap();
+                let m = e.metrics.unwrap();
+                (m.mfu, m.tgs)
+            })
+            .collect();
+        for (i, a) in coords.iter().enumerate() {
+            for (j, b) in coords.iter().enumerate() {
+                if i != j {
+                    let dominates =
+                        b.0 >= a.0 && b.1 >= a.1 && (b.0 > a.0 || b.1 > a.1);
+                    assert!(!dominates, "front member {i} dominated by {j}: {a:?} vs {b:?}");
+                }
+            }
+        }
+        // Every candidate is dominated by or equal to some front member.
+        for p in f.points.iter().filter(|p| p.is_candidate()) {
+            let m = p.primary_eval().unwrap().metrics.unwrap();
+            assert!(
+                coords.iter().any(|c| c.0 >= m.mfu && c.1 >= m.tgs),
+                "candidate {} not covered by the front",
+                p.index
+            );
+        }
+    }
+
+    #[test]
+    fn json_and_csv_render_valid_documents() {
+        let f = plan("model = 13B\nbatch = 1\nsweep.seq_len = 2048,4096\n");
+        let v = Json::parse(&f.to_json()).unwrap();
+        assert_eq!(v.get("objective").unwrap().as_str().unwrap(), "max_mfu");
+        assert_eq!(v.get("counters").unwrap().get("points").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.get("points").unwrap().as_arr().unwrap().len(), 2);
+        let front = v.get("frontier").unwrap().as_arr().unwrap();
+        assert!(!front.is_empty());
+        assert_eq!(front[0].get("rank").unwrap().as_usize().unwrap(), 1);
+        assert!(front[0].get("eval").is_ok());
+        let csv = f.to_csv();
+        assert!(csv.contains("# points,2"), "{csv}");
+        assert!(csv.lines().any(|l| l.starts_with("rank,index,seq_len")), "{csv}");
+        let text = f.to_text();
+        assert!(text.contains("objective max_mfu"), "{text}");
+        assert!(text.contains("#1"), "{text}");
+    }
+}

@@ -1,0 +1,356 @@
+//! The declarative Query/Planner API — **the one way to ask this codebase a
+//! question**.
+//!
+//! The paper's deliverable is guidance: *find the hardware-optimal FSDP
+//! configuration subject to your memory and bandwidth limits*. A [`Query`]
+//! states that question declaratively —
+//!
+//! * **free axes** reuse the sweep dialect (`sweep.<scenario key> = …`,
+//!   see [`crate::eval::sweep`]);
+//! * **constraints** are `where.<metric> = <op> <value>` lines
+//!   ([`constraint::Constraint`]), e.g. `where.mem_headroom_gib = >= 2`,
+//!   `where.comm_ratio = <= 0.3`, `where.n_gpus = <= 64`;
+//! * an **objective** (`query.objective`): `max_mfu`, `max_tgs`,
+//!   `min_step_time`, `report_all`, or `pareto(mfu, tgs_per_gpu)`;
+//! * a **backend** choice (`query.backend`, any [`crate::eval`] backend
+//!   spec), plus `query.top_k` and `query.prune`.
+//!
+//! — and the [`Planner`] compiles it into an execution plan:
+//!
+//! 1. expand the axes into a Cartesian grid (odometer order, like sweeps);
+//! 2. reject points failing scenario-/memory-tier constraints before any
+//!    evaluation;
+//! 3. **prune infeasible points up front with the §2.7 closed-form bounds
+//!    (Eqs 12–15)**: Eq 12 (`E_MAX = M_free/LHQ`) and the Eq 1–4 memory
+//!    chain rule out points no backend could run, and Eqs 13–15
+//!    (`HFU ≤ …`, `MFU ≤ …`, `K ≤ M_free·S_volume/24Q²L²H³`) rule out
+//!    points whose closed-form maxima already miss a lower-bound
+//!    constraint (applied only for backends whose
+//!    [`crate::eval::Evaluator::constraint_bounds`] vouches the bounds cap
+//!    their regime) — all *before* any expensive simulated evaluation, and
+//!    provably without changing the result (each backend's
+//!    [`crate::eval::Evaluator::prune_by_bounds`] is sound by contract);
+//! 4. memoize repeated `(scenario key, backend)` evaluations — duplicates
+//!    are detected up front so cache-hit provenance is deterministic for
+//!    any thread count;
+//! 5. execute the surviving evaluations on the worker pool; and
+//! 6. return a ranked [`Frontier`]: top-k for scalar objectives, the
+//!    Pareto-optimal set for `pareto(...)`, with per-point provenance
+//!    (`pruned_by_bounds` reason, `cache_hit`, the constraint that
+//!    rejected a point).
+//!
+//! Every front-end routes through here: `fsdp-bw plan` runs query files,
+//! `fsdp-bw sweep` / [`crate::eval::run_sweep`] is a Query with no
+//! constraints and a `report_all` objective, and Algorithm 1
+//! ([`crate::gridsearch::GridSearch::run`]) is a canned Query over the
+//! (α̂, γ, stage) axes with the `alg1` point backend.
+
+pub mod constraint;
+pub mod frontier;
+pub mod planner;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::scenario::parse_kv;
+use crate::eval::report::metrics_for_tgs;
+use crate::eval::sweep::{Sweep, SweepAxis};
+use crate::eval::Evaluation;
+
+pub use constraint::{Cmp, Constraint, Metric};
+pub use frontier::{Frontier, PlanCounters, PlannedPoint, PointEval};
+pub use planner::Planner;
+
+/// Ranked points a scalar-objective frontier keeps by default.
+pub const DEFAULT_TOP_K: usize = 10;
+
+/// One axis of a `pareto(a, b)` objective, oriented so larger is better.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParetoAxis {
+    Mfu,
+    Hfu,
+    /// Tokens/GPU/s (the paper's `K`; spelled `tgs` or `tgs_per_gpu`).
+    Tgs,
+    /// Step time, negated internally so maximization applies uniformly.
+    StepTime,
+}
+
+impl ParetoAxis {
+    fn parse(name: &str) -> Result<ParetoAxis> {
+        Ok(match name.trim() {
+            "mfu" => ParetoAxis::Mfu,
+            "hfu" => ParetoAxis::Hfu,
+            "tgs" | "tgs_per_gpu" => ParetoAxis::Tgs,
+            "step_time" | "t_step" => ParetoAxis::StepTime,
+            other => bail!(
+                "unknown pareto axis {other:?} (known: mfu, hfu, tgs, tgs_per_gpu, step_time)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ParetoAxis::Mfu => "mfu",
+            ParetoAxis::Hfu => "hfu",
+            ParetoAxis::Tgs => "tgs_per_gpu",
+            ParetoAxis::StepTime => "step_time",
+        }
+    }
+
+    /// The axis value of one evaluation, maximization-oriented (step time
+    /// is negated). `None` when the backend did not report the metric.
+    /// Internal ranking value — use [`Self::report`] for user-facing output.
+    pub fn value(self, e: &Evaluation) -> Option<f64> {
+        match self {
+            ParetoAxis::Mfu => e.metrics.map(|m| m.mfu),
+            ParetoAxis::Hfu => e.metrics.map(|m| m.hfu),
+            ParetoAxis::Tgs => metrics_for_tgs(e).map(|m| m.tgs),
+            ParetoAxis::StepTime => e.step.map(|st| -st.t_step),
+        }
+    }
+
+    /// The axis value as reported to users: step time in positive seconds,
+    /// everything else as [`Self::value`].
+    pub fn report(self, e: &Evaluation) -> Option<f64> {
+        match self {
+            ParetoAxis::StepTime => e.step.map(|st| st.t_step),
+            _ => self.value(e),
+        }
+    }
+}
+
+/// What a query optimizes for.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Objective {
+    /// Highest model-FLOPs utilization (the paper's headline metric).
+    MaxMfu,
+    /// Highest per-GPU token throughput `K` (for the grid-search backend:
+    /// its genuine best-TGS grid point, not the best-MFU point's TGS).
+    MaxTgs,
+    /// Lowest step time.
+    MinStepTime,
+    /// No ranking — every feasible point, in grid order (sweep semantics).
+    ReportAll,
+    /// The 2-D Pareto-optimal set over two axes, e.g.
+    /// `pareto(mfu, tgs_per_gpu)`.
+    Pareto(ParetoAxis, ParetoAxis),
+}
+
+impl Objective {
+    pub fn parse(spec: &str) -> Result<Objective> {
+        let spec = spec.trim();
+        Ok(match spec {
+            "max_mfu" => Objective::MaxMfu,
+            "max_tgs" => Objective::MaxTgs,
+            "min_step_time" => Objective::MinStepTime,
+            "report_all" => Objective::ReportAll,
+            _ => {
+                let Some(inner) =
+                    spec.strip_prefix("pareto(").and_then(|r| r.strip_suffix(')'))
+                else {
+                    bail!(
+                        "unknown objective {spec:?} (known: max_mfu, max_tgs, min_step_time, \
+                         report_all, pareto(<axis>, <axis>))"
+                    );
+                };
+                let parts: Vec<&str> = inner.split(',').collect();
+                anyhow::ensure!(
+                    parts.len() == 2,
+                    "pareto objective needs exactly two axes, got {spec:?}"
+                );
+                let (a, b) = (ParetoAxis::parse(parts[0])?, ParetoAxis::parse(parts[1])?);
+                anyhow::ensure!(a != b, "pareto axes must differ, got {spec:?}");
+                Objective::Pareto(a, b)
+            }
+        })
+    }
+
+    /// Canonical rendering (parses back to the same objective).
+    pub fn render(&self) -> String {
+        match self {
+            Objective::MaxMfu => "max_mfu".to_string(),
+            Objective::MaxTgs => "max_tgs".to_string(),
+            Objective::MinStepTime => "min_step_time".to_string(),
+            Objective::ReportAll => "report_all".to_string(),
+            Objective::Pareto(a, b) => format!("pareto({}, {})", a.name(), b.name()),
+        }
+    }
+
+    /// Scalar ranking score (higher = better); `None` for `report_all` and
+    /// `pareto` (ranked structurally) or when the backend lacks the metric.
+    /// `min_step_time` scores are negated seconds — renderings convert back
+    /// via [`Self::report_score`].
+    pub fn score(&self, e: &Evaluation) -> Option<f64> {
+        match self {
+            Objective::MaxMfu => e.metrics.map(|m| m.mfu),
+            Objective::MaxTgs => metrics_for_tgs(e).map(|m| m.tgs),
+            Objective::MinStepTime => e.step.map(|st| -st.t_step),
+            Objective::ReportAll | Objective::Pareto(..) => None,
+        }
+    }
+
+    /// A stored ranking score in user-facing units (positive seconds for
+    /// `min_step_time`, identity otherwise).
+    pub fn report_score(&self, score: f64) -> f64 {
+        match self {
+            Objective::MinStepTime => -score,
+            _ => score,
+        }
+    }
+}
+
+/// A declarative question: free axes, constraints, an objective, a backend.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Query {
+    /// Base scenario keys + free axes (the sweep dialect's point space).
+    pub space: Sweep,
+    /// `where.*` constraints; a point must satisfy all of them.
+    pub constraints: Vec<Constraint>,
+    pub objective: Objective,
+    /// Backend spec for [`crate::eval::backends_for`]; the first backend is
+    /// the *primary* one — constraints and ranking read its evaluations.
+    pub backend_spec: String,
+    /// Ranked points to keep for scalar objectives (0 = all).
+    pub top_k: usize,
+    /// Apply the §2.7 bounds pruning (Eqs 12–15). Off = brute force; the
+    /// frontier is identical either way, pruning only skips evaluations
+    /// that provably cannot enter it.
+    pub prune: bool,
+}
+
+impl Query {
+    /// Load a query file (scenario keys + `sweep.*` + `where.*` + `query.*`).
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading query {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse query text. A plain scenario file is a valid query over a
+    /// single point; a sweep file is a valid query with default objective.
+    pub fn parse(text: &str) -> Result<Self> {
+        let kv = parse_kv(text)?;
+        let mut base = BTreeMap::new();
+        let mut axes = Vec::new();
+        let mut constraints = Vec::new();
+        let mut objective = Objective::MaxMfu;
+        let mut backend_spec = "analytical".to_string();
+        let mut top_k = DEFAULT_TOP_K;
+        let mut prune = true;
+        for (k, v) in kv {
+            if let Some(key) = k.strip_prefix("sweep.") {
+                axes.push(SweepAxis::parse(key, &v)?);
+            } else if let Some(metric) = k.strip_prefix("where.") {
+                constraints.push(Constraint::parse(metric, &v)?);
+            } else if k == "query.objective" {
+                objective = Objective::parse(&v)?;
+            } else if k == "query.backend" {
+                backend_spec = v;
+            } else if k == "query.top_k" {
+                top_k = if v == "all" { 0 } else { v.parse().context("query.top_k")? };
+            } else if k == "query.prune" {
+                prune = v.parse().context("query.prune")?;
+            } else if k.starts_with("query.") {
+                bail!(
+                    "unknown query key {k:?} (known: query.objective, query.backend, \
+                     query.top_k, query.prune)"
+                );
+            } else {
+                base.insert(k, v);
+            }
+        }
+        let space = Sweep::from_parts(base, axes)?;
+        Ok(Query { space, constraints, objective, backend_spec, top_k, prune })
+    }
+
+    /// A canned query over a pre-built point space: no constraints,
+    /// `report_all`, pruning on — the form [`crate::gridsearch`] compiles
+    /// Algorithm 1 into. Internally generated grids bypass the sweep-file
+    /// typo caps ([`crate::eval::sweep::MAX_POINTS`]): a very fine grid
+    /// step is legitimate, if slow, and must not abort mid-`run`.
+    pub fn canned(
+        base: BTreeMap<String, String>,
+        axes: Vec<SweepAxis>,
+        backend_spec: &str,
+    ) -> Query {
+        Query {
+            space: Sweep { base, axes },
+            constraints: Vec::new(),
+            objective: Objective::ReportAll,
+            backend_spec: backend_spec.to_string(),
+            top_k: 0,
+            prune: true,
+        }
+    }
+
+    /// A sweep as a query: no constraints, `report_all`, **no pruning** —
+    /// sweep semantics are "evaluate every point", including infeasible
+    /// ones (the paper prints would-be numbers next to "OOM").
+    pub fn from_sweep(space: Sweep, backend_spec: &str) -> Query {
+        Query {
+            space,
+            constraints: Vec::new(),
+            objective: Objective::ReportAll,
+            backend_spec: backend_spec.to_string(),
+            top_k: 0,
+            prune: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_dialect_roundtrips() {
+        for spec in ["max_mfu", "max_tgs", "min_step_time", "report_all", "pareto(mfu, tgs_per_gpu)"] {
+            let o = Objective::parse(spec).unwrap();
+            assert_eq!(o.render(), spec);
+            assert_eq!(Objective::parse(&o.render()).unwrap(), o);
+        }
+        assert_eq!(Objective::parse("pareto(tgs, step_time)").unwrap().render(), "pareto(tgs_per_gpu, step_time)");
+        assert!(Objective::parse("max_speed").is_err());
+        assert!(Objective::parse("pareto(mfu)").is_err());
+        assert!(Objective::parse("pareto(mfu, mfu)").is_err());
+        assert!(Objective::parse("pareto(mfu, warp)").is_err());
+    }
+
+    #[test]
+    fn query_file_parses_all_sections() {
+        let q = Query::parse(
+            "model = 13B\nbatch = 1\n\
+             sweep.n_gpus = 8,16\nsweep.gamma = 0,0.5\n\
+             where.mem_headroom_gib = >= 2\nwhere.n_gpus = <= 64\n\
+             query.objective = max_tgs\nquery.backend = simulated\n\
+             query.top_k = 3\nquery.prune = false\n",
+        )
+        .unwrap();
+        assert_eq!(q.space.len(), 4);
+        assert_eq!(q.constraints.len(), 2);
+        assert_eq!(q.objective, Objective::MaxTgs);
+        assert_eq!(q.backend_spec, "simulated");
+        assert_eq!(q.top_k, 3);
+        assert!(!q.prune);
+    }
+
+    #[test]
+    fn query_defaults_and_errors() {
+        let q = Query::parse("model = 7B\n").unwrap();
+        assert_eq!(q.space.len(), 1);
+        assert_eq!(q.objective, Objective::MaxMfu);
+        assert_eq!(q.backend_spec, "analytical");
+        assert_eq!(q.top_k, DEFAULT_TOP_K);
+        assert!(q.prune);
+        assert_eq!(Query::parse("model = 7B\nquery.top_k = all\n").unwrap().top_k, 0);
+        assert!(Query::parse("model = 7B\nquery.objektive = max_mfu\n").is_err());
+        assert!(Query::parse("model = 7B\nwhere.mfu = ~ 1\n").is_err());
+        assert!(Query::parse("model = 7B\nsweep.warp = 1,2\n").is_err());
+        assert!(Query::parse("modle = 7B\n").is_err());
+        // The classic syntax mistake gets the syntax hint.
+        let err = Query::parse("model = 7B\nwhere.mfu >= 0.4\n").unwrap_err().to_string();
+        assert!(err.contains("where.<metric> = <op> <value>"), "{err}");
+    }
+}

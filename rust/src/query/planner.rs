@@ -1,0 +1,434 @@
+//! The Planner: compiles a [`Query`] into an execution plan and runs it.
+//!
+//! The plan has four deterministic phases:
+//!
+//! * **decode** (parallel) — expand each grid index into a scenario, decide
+//!   scenario-/memory-tier constraints, and apply the §2.7 bounds pruning
+//!   (Eqs 12–15): per-backend [`Evaluator::prune_by_bounds`], plus
+//!   constraint-vs-bound exclusion ([`super::Constraint::bound_excludes`])
+//!   for backends whose [`Evaluator::constraint_bounds`] vouches the
+//!   bounds cap their evaluation regime;
+//! * **dedup** (serial, cheap) — group surviving `(backend, cache key)`
+//!   slots; the first grid index with a key becomes its representative, so
+//!   cache-hit provenance is identical for any thread count;
+//! * **evaluate** (parallel) — run exactly one evaluation per unique key on
+//!   the worker pool;
+//! * **assemble** (serial) — fan results back out, decide evaluated-tier
+//!   constraints against the primary backend, score, and rank the
+//!   [`Frontier`].
+//!
+//! Pruning is *sound by contract*: a pruned slot is one whose backend would
+//! have reported the point infeasible, so the pruned and brute-force plans
+//! return byte-identical frontiers — the pruned one just evaluates fewer
+//! points (both facts are asserted in tests and by `fsdp-bw plan
+//! --check-prune`).
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::scenario::Scenario;
+use crate::eval::{backends_for, Evaluation, Evaluator};
+use crate::util::channel::channel;
+
+use super::frontier::{rank, Frontier, PlanCounters, PlannedPoint, PointEval};
+use super::Query;
+
+/// Parallel index map on a scoped worker pool: `out[i] = f(i)`, order
+/// preserved, deterministic for any thread count.
+fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let (job_tx, job_rx) = channel::<usize>(0);
+    let (res_tx, res_rx) = channel::<(usize, T)>(0);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let job_rx = job_rx.clone();
+            let res_tx = res_tx.clone();
+            scope.spawn(move || {
+                while let Ok(i) = job_rx.recv() {
+                    if res_tx.send((i, f(i))).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        for i in 0..n {
+            let _ = job_tx.send(i);
+        }
+        drop(job_tx);
+        // Workers hold their own sender clones; dropping the original lets
+        // recv() observe disconnection instead of hanging if a worker
+        // panics without delivering its result.
+        drop(res_tx);
+        for _ in 0..n {
+            let (i, v) = res_rx.recv().expect("planner worker died");
+            out[i] = Some(v);
+        }
+    });
+    out.into_iter().map(|v| v.expect("every index computed")).collect()
+}
+
+/// Outcome of the decode phase for one grid point.
+struct Pre {
+    point: Vec<(String, String)>,
+    kind: PreKind,
+}
+
+enum PreKind {
+    /// Scenario construction failed (e.g. swept `n_gpus` exceeds the
+    /// cluster) — recorded, not fatal.
+    Error(String),
+    /// A scenario-/memory-tier constraint failed before any evaluation.
+    Rejected(String),
+    Ready { scenario: Scenario, slots: Vec<Slot> },
+}
+
+/// Per-backend decode outcome of a ready point.
+enum Slot {
+    /// §2.7 bounds rule the point out for this backend — no evaluation.
+    /// `by_constraint` carries the violated `where.*` rendering when the
+    /// prune came from a constraint-vs-bound exclusion (the point itself is
+    /// runnable), `None` when the point is infeasible outright (Eq 12/4).
+    Pruned { reason: String, by_constraint: Option<String> },
+    /// Evaluate (or reuse) under this memoization key.
+    Eval(String),
+}
+
+fn pre_point(q: &Query, backends: &[Box<dyn Evaluator>], index: usize) -> Pre {
+    let (point, scen) = q.space.point(index);
+    let s = match scen {
+        Ok(s) => s,
+        Err(e) => return Pre { point, kind: PreKind::Error(format!("{e:#}")) },
+    };
+    for c in &q.constraints {
+        if c.eval_pre(&s) == Some(false) {
+            return Pre { point, kind: PreKind::Rejected(c.render()) };
+        }
+    }
+    let slots = backends
+        .iter()
+        .map(|bk| {
+            if q.prune {
+                if let Some(r) = bk.prune_by_bounds(&s) {
+                    return Slot::Pruned { reason: r, by_constraint: None };
+                }
+                // Eqs 13–15 vs lower-bound constraints — only for backends
+                // whose evaluation regime the bounds provably cap
+                // (Evaluator::constraint_bounds contract).
+                if !q.constraints.is_empty() {
+                    if let Some(eb) = bk.constraint_bounds(&s) {
+                        for c in &q.constraints {
+                            if let Some(r) = c.bound_excludes(&eb) {
+                                return Slot::Pruned {
+                                    reason: r,
+                                    by_constraint: Some(c.render()),
+                                };
+                            }
+                        }
+                    }
+                }
+            }
+            Slot::Eval(bk.cache_key(&s))
+        })
+        .collect();
+    Pre { point, kind: PreKind::Ready { scenario: s, slots } }
+}
+
+/// Executes [`Query`]s. Stateless apart from the thread count; each run
+/// builds its own memoization table (evaluator instances differ between
+/// runs, so a cross-run cache could alias differently-configured backends).
+#[derive(Debug, Clone, Copy)]
+pub struct Planner {
+    pub threads: usize,
+}
+
+impl Planner {
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        Self::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+    }
+
+    /// Resolve the query's `backend_spec` and run.
+    pub fn run(&self, q: &Query) -> Result<Frontier> {
+        let backends = backends_for(&q.backend_spec)?;
+        Ok(self.run_with(q, &backends))
+    }
+
+    /// Run with explicit backend instances (`q.backend_spec` is not
+    /// re-resolved). The first backend is the primary one: constraints and
+    /// ranking read its evaluations.
+    pub fn run_with(&self, q: &Query, backends: &[Box<dyn Evaluator>]) -> Frontier {
+        let n = q.space.len();
+
+        // Phase 1 — decode, constrain, prune (parallel).
+        let pres: Vec<Pre> = par_map(n, self.threads, |i| pre_point(q, backends, i));
+
+        // Phase 2 — dedup evaluable slots into unique jobs (serial).
+        let mut key_to_job: HashMap<(usize, &str), usize> = HashMap::new();
+        let mut jobs: Vec<(usize, usize)> = Vec::new(); // (point, backend)
+        let mut assigned: Vec<Vec<Option<(usize, bool)>>> = Vec::with_capacity(n);
+        for (i, pre) in pres.iter().enumerate() {
+            let row = match &pre.kind {
+                PreKind::Ready { slots, .. } => slots
+                    .iter()
+                    .enumerate()
+                    .map(|(bi, slot)| match slot {
+                        Slot::Pruned { .. } => None,
+                        Slot::Eval(key) => Some(match key_to_job.entry((bi, key.as_str())) {
+                            Entry::Occupied(e) => (*e.get(), true),
+                            Entry::Vacant(e) => {
+                                let id = jobs.len();
+                                jobs.push((i, bi));
+                                e.insert(id);
+                                (id, false)
+                            }
+                        }),
+                    })
+                    .collect(),
+                _ => Vec::new(),
+            };
+            assigned.push(row);
+        }
+        drop(key_to_job);
+
+        // Phase 3 — evaluate unique jobs (parallel).
+        let job_results: Vec<Evaluation> = par_map(jobs.len(), self.threads, |j| {
+            let (pi, bi) = jobs[j];
+            match &pres[pi].kind {
+                PreKind::Ready { scenario, .. } => backends[bi].evaluate(scenario),
+                _ => unreachable!("jobs reference ready points"),
+            }
+        });
+
+        // Phase 4 — assemble, post-constrain, score (serial).
+        let mut counters = PlanCounters { points: n, evaluated: jobs.len(), ..Default::default() };
+        let mut points: Vec<PlannedPoint> = Vec::with_capacity(n);
+        for (i, (pre, row)) in pres.into_iter().zip(assigned).enumerate() {
+            let kind = pre.kind;
+            let planned = match kind {
+                PreKind::Error(msg) => {
+                    counters.errors += 1;
+                    PlannedPoint {
+                        index: i,
+                        point: pre.point,
+                        error: Some(msg),
+                        rejected_by: None,
+                        evals: Vec::new(),
+                        score: None,
+                    }
+                }
+                PreKind::Rejected(c) => {
+                    counters.rejected += 1;
+                    PlannedPoint {
+                        index: i,
+                        point: pre.point,
+                        error: None,
+                        rejected_by: Some(c),
+                        evals: Vec::new(),
+                        score: None,
+                    }
+                }
+                PreKind::Ready { scenario, slots } => {
+                    let mut evs: Vec<PointEval> = Vec::with_capacity(slots.len());
+                    let mut primary_pruned_constraint: Option<String> = None;
+                    for (bi, slot) in slots.into_iter().enumerate() {
+                        match slot {
+                            Slot::Pruned { reason, by_constraint } => {
+                                counters.pruned_by_bounds += 1;
+                                if bi == 0 {
+                                    primary_pruned_constraint = by_constraint;
+                                }
+                                evs.push(PointEval::Pruned { reason });
+                            }
+                            Slot::Eval(_) => {
+                                let (job, hit) = row[bi].expect("eval slot has a job");
+                                let mut eval = job_results[job].clone();
+                                if hit {
+                                    counters.cache_hits += 1;
+                                    // The shared result came from a key-equal
+                                    // representative; re-stamp the scenario
+                                    // echo so provenance names *this* point
+                                    // (matters for projected cache keys).
+                                    eval.scenario = crate::eval::ScenarioPoint::of(&scenario);
+                                }
+                                evs.push(PointEval::Done { eval, cache_hit: hit });
+                            }
+                        }
+                    }
+                    let mut rejected_by = None;
+                    let mut score = None;
+                    match evs.first() {
+                        Some(PointEval::Done { eval, .. }) => {
+                            if !eval.feasible {
+                                counters.infeasible += 1;
+                            } else if let Some(c) =
+                                q.constraints.iter().find(|c| !c.eval_post(eval))
+                            {
+                                rejected_by = Some(c.render());
+                                counters.rejected += 1;
+                            } else {
+                                counters.feasible += 1;
+                                score = q.objective.score(eval);
+                            }
+                        }
+                        // A constraint-vs-bound prune is a rejection of a
+                        // runnable point — counted like the brute-force run
+                        // counts it; an Eq 12/4 prune is a genuinely
+                        // infeasible point.
+                        Some(PointEval::Pruned { .. }) => {
+                            if let Some(cr) = primary_pruned_constraint {
+                                rejected_by = Some(cr);
+                                counters.rejected += 1;
+                            } else {
+                                counters.infeasible += 1;
+                            }
+                        }
+                        None => {}
+                    }
+                    PlannedPoint {
+                        index: i,
+                        point: pre.point,
+                        error: None,
+                        rejected_by,
+                        evals: evs,
+                        score,
+                    }
+                }
+            };
+            points.push(planned);
+        }
+
+        let ranked = rank(&q.objective, &points, q.top_k);
+        Frontier {
+            objective: q.objective.clone(),
+            backends: backends.iter().map(|b| b.name().to_string()).collect(),
+            axes: q.space.axes.clone(),
+            constraints: q.constraints.iter().map(|c| c.render()).collect(),
+            top_k: q.top_k,
+            prune: q.prune,
+            counters,
+            ranked,
+            points,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial_for_any_thread_count() {
+        let f = |i: usize| i * i + 1;
+        let want: Vec<usize> = (0..57).map(f).collect();
+        for t in [1, 2, 8, 64] {
+            assert_eq!(par_map(57, t, f), want, "threads={t}");
+        }
+        assert_eq!(par_map(0, 8, f), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn planner_single_point_no_axes() {
+        let q = Query::parse("model = 13B\nn_gpus = 8\nseq_len = 10240\n").unwrap();
+        let f = Planner::new(2).run(&q).unwrap();
+        assert_eq!(f.counters.points, 1);
+        assert_eq!(f.counters.feasible, 1);
+        assert_eq!(f.counters.evaluated, 1);
+        assert_eq!(f.ranked, vec![0]);
+        assert!(f.points[0].score.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn pre_constraints_reject_before_evaluation() {
+        let q = Query::parse(
+            "model = 13B\nseq_len = 4096\nsweep.n_gpus = 8,16,32\nwhere.n_gpus = <= 16\n",
+        )
+        .unwrap();
+        let f = Planner::new(2).run(&q).unwrap();
+        assert_eq!(f.counters.points, 3);
+        assert_eq!(f.counters.rejected, 1);
+        // The rejected point was never evaluated.
+        assert_eq!(f.counters.evaluated, 2);
+        assert_eq!(f.points[2].rejected_by.as_deref(), Some("n_gpus <= 16"));
+        assert!(f.points[2].evals.is_empty());
+    }
+
+    #[test]
+    fn bounds_pruning_skips_infeasible_points_without_changing_the_frontier() {
+        // 13B at 4 GPUs OOMs (Table 4 frontier); at 8+ it fits.
+        let text = "model = 13B\nseq_len = 4096\nsweep.n_gpus = 4,8,16\n";
+        let mut q = Query::parse(text).unwrap();
+        let pruned = Planner::new(2).run(&q).unwrap();
+        q.prune = false;
+        let brute = Planner::new(2).run(&q).unwrap();
+        assert_eq!(pruned.ranked_json().pretty(), brute.ranked_json().pretty());
+        assert!(pruned.counters.evaluated < brute.counters.evaluated);
+        assert_eq!(pruned.counters.pruned_by_bounds, 1);
+        assert_eq!(brute.counters.pruned_by_bounds, 0);
+        // Provenance names the pruned point.
+        let p = &pruned.points[0];
+        assert!(matches!(p.evals.first(), Some(PointEval::Pruned { .. })), "4-GPU point pruned");
+    }
+
+    #[test]
+    fn constraint_bound_pruning_uses_eq14() {
+        // 65B on the 100 Gbps cluster is bandwidth-capped well below MFU
+        // 0.999 (Eq 14: mfu_max ≈ 0.4–0.6 at 64–128 GPUs), yet both points
+        // fit in memory — only the constraint-vs-bound prune can skip them.
+        let q = Query::parse(
+            "model = 65B\ncluster = 40GB-A100-100Gbps\nseq_len = 4096\n\
+             sweep.n_gpus = 64,128\nwhere.mfu = >= 0.999\n",
+        )
+        .unwrap();
+        let f = Planner::new(1).run(&q).unwrap();
+        assert_eq!(f.counters.points, 2);
+        assert_eq!(f.counters.evaluated, 0, "{:?}", f.counters);
+        assert_eq!(f.counters.pruned_by_bounds, 2);
+        // Constraint-vs-bound prunes count as rejections (the points are
+        // runnable), keeping counters comparable with brute force.
+        assert_eq!(f.counters.rejected, 2);
+        assert_eq!(f.counters.infeasible, 0);
+        assert!(f.ranked.is_empty());
+        assert_eq!(f.points[0].rejected_by.as_deref(), Some("mfu >= 0.999"));
+        // Brute force agrees the frontier is empty (bound pruning is sound).
+        let mut qb = q.clone();
+        qb.prune = false;
+        let b = Planner::new(1).run(&qb).unwrap();
+        assert_eq!(b.counters.evaluated, 2);
+        assert_eq!(b.counters.rejected, 2);
+        assert!(b.ranked.is_empty());
+    }
+
+    #[test]
+    fn memoization_dedups_and_is_deterministic() {
+        // The gridsearch backend ignores seq_len, so a seq_len axis is pure
+        // duplication: 3 points, 1 evaluation, 2 deterministic cache hits.
+        let q = Query::parse(
+            "model = 1.3B\nn_gpus = 64\nsweep.seq_len = 1024,2048,4096\n\
+             query.backend = gridsearch\n",
+        )
+        .unwrap();
+        let a = Planner::new(1).run(&q).unwrap();
+        let b = Planner::new(8).run(&q).unwrap();
+        assert_eq!(a.counters.evaluated, 1);
+        assert_eq!(a.counters.cache_hits, 2);
+        assert_eq!(a.to_json(), b.to_json(), "plan output must not depend on thread count");
+        // The representative is the first index; later points are hits.
+        assert!(matches!(a.points[0].evals[0], PointEval::Done { cache_hit: false, .. }));
+        assert!(matches!(a.points[1].evals[0], PointEval::Done { cache_hit: true, .. }));
+    }
+}

@@ -177,7 +177,7 @@ fn random_scenarios_roundtrip_exactly() {
         training.empty_cache = rng.below(2) == 0;
 
         let n_gpus = 1 + rng.below(cluster.total_gpus());
-        let s = Scenario { model, cluster, training, n_gpus };
+        let s = Scenario { model, cluster, training, n_gpus, alpha: None };
         let text = s.to_text();
         let s2 = Scenario::parse(&text)
             .unwrap_or_else(|e| panic!("iter {iter}: reparse failed: {e:#}\n---\n{text}"));
