@@ -1,0 +1,50 @@
+//! Planner-as-a-service in one screen: start an in-process server, ask
+//! the same question twice, and watch the shared evaluation cache turn
+//! the repeat into a warm-path answer.
+//!
+//! Run: `cargo run --release --example serve_client`
+
+use fsdp_bw::serve::{client, ServeConfig, Server};
+
+fn main() -> anyhow::Result<()> {
+    // An ephemeral-port server, exactly like `fsdp-bw serve` runs.
+    let server = Server::start(ServeConfig::default())?;
+    let addr = server.addr().to_string();
+    println!("serving on http://{addr}\n");
+
+    // The paper's capacity-planning question, as a query: which (N, seq)
+    // points on the 200 Gbps cluster keep 2 GiB of headroom, ranked by
+    // MFU under the simulated backend.
+    let question = "model = 13B\nbatch = 1\n\
+                    sweep.n_gpus = 8,16,32\nsweep.seq_len = 4096,8192\n\
+                    where.mem_headroom_gib = >= 2\n\
+                    query.backend = simulated\nquery.objective = max_mfu\n";
+
+    for attempt in ["cold", "warm"] {
+        let t0 = std::time::Instant::now();
+        let r = client::post(&addr, "/v1/plan", question)?;
+        let dt = t0.elapsed();
+        anyhow::ensure!(r.status == 200, "plan failed: {}", r.body);
+        let stats = server.cache().stats();
+        println!(
+            "{attempt:>4} request: {:>8.2?}  (cache: {} hits, {} misses, {} entries)",
+            dt, stats.hits, stats.misses, stats.entries
+        );
+    }
+
+    // The second pass hit the cache for every point the first computed.
+    let stats = server.cache().stats();
+    anyhow::ensure!(stats.hits > 0, "expected cache hits on the repeat");
+    println!("\nevaluations performed : {}", stats.misses);
+    println!("served from cache     : {}", stats.hits);
+
+    // The same counters, as the service exports them.
+    let metrics = client::get(&addr, "/metrics")?.body;
+    println!("\n/metrics excerpt:");
+    for line in metrics.lines().filter(|l| l.starts_with("fsdp_bw_eval_cache")) {
+        println!("  {line}");
+    }
+
+    server.shutdown();
+    Ok(())
+}

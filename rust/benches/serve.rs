@@ -1,0 +1,94 @@
+//! Load generator for the planner service: end-to-end request latency and
+//! throughput over real sockets, comparing the three serving regimes the
+//! shared evaluation cache creates:
+//!
+//! * **cold** — every request recomputes its points (cache cleared first);
+//! * **warm** — every point served from the cross-request cache;
+//! * **coalesced** — N identical requests in flight at once share one
+//!   evaluation per point.
+//!
+//! Run: `cargo bench --bench serve` (`FSDP_BW_BENCH_QUICK=1` for CI).
+
+use fsdp_bw::serve::{client, ServeConfig, Server};
+use fsdp_bw::util::bench::Bench;
+
+const PLAN: &str = "model = 13B\nbatch = 1\nsweep.seq_len = 2048,4096,8192,16384\n\
+                    query.backend = simulated\n";
+const POINTS: f64 = 4.0;
+const FANOUT: usize = 8;
+
+fn main() {
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: FANOUT,
+        queue: 4 * FANOUT,
+        ..ServeConfig::default()
+    })
+    .expect("ephemeral server");
+    let addr = server.addr().to_string();
+
+    let mut b = Bench::new();
+
+    b.case("serve: GET /healthz (socket + framing floor)", 1.0, || {
+        assert_eq!(client::get(&addr, "/healthz").unwrap().status, 200);
+    });
+
+    let cold_ns = b
+        .case("serve: POST /v1/plan, cold cache (4 simulated points)", POINTS, || {
+            server.cache().clear();
+            let r = client::post(&addr, "/v1/plan", PLAN).unwrap();
+            assert_eq!(r.status, 200, "{}", r.body);
+        })
+        .median_ns;
+
+    // Pre-warm once, then measure the pure cache-served path.
+    assert_eq!(client::post(&addr, "/v1/plan", PLAN).unwrap().status, 200);
+    let warm_ns = b
+        .case("serve: POST /v1/plan, warm cache (same 4 points)", POINTS, || {
+            let r = client::post(&addr, "/v1/plan", PLAN).unwrap();
+            assert_eq!(r.status, 200, "{}", r.body);
+        })
+        .median_ns;
+
+    let coalesced_ns = b
+        .case(
+            "serve: 8 concurrent identical plans, cold cache (coalesced)",
+            POINTS * FANOUT as f64,
+            || {
+                server.cache().clear();
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..FANOUT)
+                        .map(|_| {
+                            s.spawn(|| client::post(&addr, "/v1/plan", PLAN).unwrap().status)
+                        })
+                        .collect();
+                    for h in handles {
+                        assert_eq!(h.join().unwrap(), 200);
+                    }
+                });
+            },
+        )
+        .median_ns;
+
+    let stats = server.cache().stats();
+    println!();
+    println!(
+        "warm vs cold: {:.1}× faster per request ({:.2} ms → {:.2} ms)",
+        cold_ns / warm_ns,
+        cold_ns / 1e6,
+        warm_ns / 1e6
+    );
+    println!(
+        "coalesced fan-out: {FANOUT} requests in {:.2} ms (vs {:.2} ms × {FANOUT} uncoalesced cold)",
+        coalesced_ns / 1e6,
+        cold_ns / 1e6
+    );
+    println!(
+        "cache lifetime: {} hits, {} misses (evaluations), {} coalesced waits, {} evictions",
+        stats.hits, stats.misses, stats.coalesced, stats.evictions
+    );
+    if std::env::args().any(|a| a == "--json") {
+        println!("{}", b.dump_json());
+    }
+    server.shutdown();
+}

@@ -153,12 +153,16 @@ impl ClusterConfig {
         ]
     }
 
+    /// Every preset cluster (Table 1 ∪ Table 3) — the one registry that
+    /// `preset`, `fsdp-bw list`, and the serve `/v1/presets` endpoint all
+    /// present, so they can never diverge.
+    pub fn presets() -> Vec<ClusterConfig> {
+        Self::table1_presets().into_iter().chain(Self::table3_presets()).collect()
+    }
+
     /// Resolve a preset by name from Table 1 ∪ Table 3.
     pub fn preset(name: &str) -> Option<ClusterConfig> {
-        Self::table1_presets()
-            .into_iter()
-            .chain(Self::table3_presets())
-            .find(|c| c.name == name)
+        Self::presets().into_iter().find(|c| c.name == name)
     }
 }
 

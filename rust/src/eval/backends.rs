@@ -70,6 +70,12 @@ impl Evaluator for Analytical {
         }
     }
 
+    fn cache_namespace(&self) -> String {
+        // The assumed α̂ changes every metric; differently-configured
+        // instances must not share cache entries.
+        format!("analytical:alpha={}", self.alpha)
+    }
+
     fn prune_by_bounds(&self, s: &Scenario) -> Option<String> {
         // This backend's feasibility is exactly the Eq 1–4 memory chain, so
         // the closed-form check is both sound and complete: pruning removes
@@ -140,6 +146,16 @@ impl Evaluator for Simulated {
             }),
             bounds: None,
             search: None,
+        }
+    }
+
+    fn cache_namespace(&self) -> String {
+        if self.eff == EfficiencyModel::default() {
+            "simulated".to_string()
+        } else {
+            // A calibrated efficiency model changes every simulated number;
+            // its full parameterization becomes part of the identity.
+            format!("simulated:{:?}", self.eff)
         }
     }
 
@@ -357,6 +373,10 @@ impl Evaluator for Alg1Point {
         }
     }
 
+    fn cache_namespace(&self) -> String {
+        format!("alg1:cap={}", self.tokens_cap)
+    }
+
     fn prune_by_bounds(&self, s: &Scenario) -> Option<String> {
         // Eq 12 at this point's stage with γ=0 (the loosest γ): capacity at
         // the point's own γ can only be smaller, so < 1 token here means
@@ -375,6 +395,10 @@ impl Evaluator for Alg1Point {
     }
 }
 
+/// Canonical backend names, in factory order — the one list the CLI
+/// usage, error messages, and the serve `/v1/presets` endpoint share.
+pub const BACKEND_NAMES: &[&str] = &["analytical", "simulated", "bounds", "gridsearch", "alg1"];
+
 /// Resolve one backend by name.
 pub fn backend(name: &str) -> Result<Box<dyn Evaluator>> {
     Ok(match name {
@@ -383,9 +407,7 @@ pub fn backend(name: &str) -> Result<Box<dyn Evaluator>> {
         "bounds" => Box::new(BoundsEval),
         "gridsearch" | "search" => Box::new(Searched),
         "alg1" => Box::new(Alg1Point::default()),
-        other => bail!(
-            "unknown backend {other:?}; known: analytical, simulated, bounds, gridsearch, alg1"
-        ),
+        other => bail!("unknown backend {other:?}; known: {}", BACKEND_NAMES.join(", ")),
     })
 }
 

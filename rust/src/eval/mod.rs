@@ -32,9 +32,11 @@ use crate::config::scenario::Scenario;
 use crate::config::{Precision, ZeroStage, GIB};
 use crate::util::json::Json;
 
-pub use backends::{backend, backends_for, Alg1Point, Analytical, BoundsEval, Searched, Simulated};
+pub use backends::{
+    backend, backends_for, Alg1Point, Analytical, BoundsEval, Searched, Simulated, BACKEND_NAMES,
+};
 pub use report::{SweepPointResult, SweepReport};
-pub use sweep::{parse_axis_values, run_sweep, Sweep, SweepAxis};
+pub use sweep::{parse_axis_values, run_sweep, run_sweep_cached, Sweep, SweepAxis};
 
 /// The kernel efficiency the analytical backend assumes when none is given
 /// (the value used throughout the paper's worked examples).
@@ -60,6 +62,19 @@ pub trait Evaluator: Send + Sync {
     /// redundant grid points become cache hits.
     fn cache_key(&self, s: &Scenario) -> String {
         s.to_text()
+    }
+
+    /// Identity of this backend *instance* for the shared cross-run
+    /// evaluation cache ([`crate::query::cache::EvalCache`]), which keys
+    /// entries by `(namespace, cache_key)`. The contract extends
+    /// [`Self::cache_key`] across instances: any two instances reporting
+    /// the same namespace **must** evaluate key-equal scenarios
+    /// identically. The default — the bare backend name — is correct for
+    /// configuration-free backends; backends with tunable state (an
+    /// assumed α̂, a token cap, a custom efficiency model) must fold it
+    /// into the namespace so differently-configured instances never alias.
+    fn cache_namespace(&self) -> String {
+        self.name().to_string()
     }
 
     /// §2.7 closed-form pre-screen (Eqs 12–15): returning `Some(reason)`

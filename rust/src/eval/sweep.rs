@@ -247,9 +247,26 @@ fn fmt_num(v: f64) -> String {
 /// ones) executed by the [`crate::query::Planner`], whose memoization makes
 /// redundant grid points (e.g. a swept key the backend ignores) cache hits.
 pub fn run_sweep(sweep: &Sweep, backends: &[Box<dyn Evaluator>], threads: usize) -> SweepReport {
+    run_sweep_cached(sweep, backends, threads, None)
+}
+
+/// [`run_sweep`] with an optional shared cross-run evaluation cache —
+/// repeated sweeps (or a sweep overlapping earlier plans/requests) skip
+/// recomputation of key-equal points. Results are byte-identical with or
+/// without the cache.
+pub fn run_sweep_cached(
+    sweep: &Sweep,
+    backends: &[Box<dyn Evaluator>],
+    threads: usize,
+    cache: Option<std::sync::Arc<crate::query::EvalCache>>,
+) -> SweepReport {
     // run_with takes the backend boxes directly; the spec is not re-resolved.
     let query = crate::query::Query::from_sweep(sweep.clone(), "");
-    let frontier = crate::query::Planner::new(threads).run_with(&query, backends);
+    let mut planner = crate::query::Planner::new(threads);
+    if let Some(cache) = cache {
+        planner = planner.with_cache(cache);
+    }
+    let frontier = planner.run_with(&query, backends);
     frontier.into_sweep_report()
 }
 

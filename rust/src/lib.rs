@@ -21,7 +21,13 @@
 //! * [`query`] — the declarative Query/Planner API: objectives, `where.*`
 //!   constraints, §2.7 bounds-pruned search (Eqs 12–15) and memoized
 //!   parallel execution — the one way every front-end (CLI `plan`, sweeps,
-//!   grid search, examples) asks a performance question.
+//!   grid search, examples) asks a performance question — plus the shared
+//!   cross-run [`query::cache::EvalCache`] (bounded LRU + in-flight
+//!   coalescing) that makes repeated questions cheap.
+//! * [`serve`] — planner-as-a-service: a dependency-light HTTP front-end
+//!   (`POST /v1/plan`, `GET /v1/presets`, `/healthz`, Prometheus
+//!   `/metrics`) over one cross-request evaluation cache, with bounded
+//!   accept-queue backpressure and graceful shutdown.
 //! * [`simulator`] — a discrete-event FSDP *cluster* simulator (network ring
 //!   collectives, GPU kernel-efficiency model, CUDA-allocator model) that
 //!   substitutes for the paper's two JUWELS A100 clusters and regenerates
@@ -61,6 +67,7 @@ pub mod gridsearch;
 pub mod query;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod util;
 

@@ -10,10 +10,16 @@
 //! * `plan` — a declarative [`fsdp_bw::query::Query`] file (axes +
 //!   `where.*` constraints + `query.*` objective), bounds-pruned and
 //!   ranked into a frontier;
+//! * `serve` — the same Planner as a long-running HTTP service with a
+//!   shared cross-request evaluation cache (see [`fsdp_bw::serve`]);
 //! * `experiment` — regenerate a paper table/figure;
 //! * `train` — the real FSDP trainer on AOT artifacts (needs `--features
 //!   xla`);
 //! * `list` — enumerate experiments, models and clusters.
+//!
+//! Each subcommand's accepted flags live in one table ([`CMD_SPECS`]);
+//! anything outside it — including a flag another subcommand accepts — is
+//! rejected rather than silently ignored.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -22,10 +28,10 @@ use anyhow::Result;
 
 use fsdp_bw::config::scenario::Scenario;
 use fsdp_bw::config::{ClusterConfig, ModelConfig};
-use fsdp_bw::eval::{backends_for, run_sweep, BoundsEval, Searched, Simulated};
+use fsdp_bw::eval::{backends_for, run_sweep_cached, BoundsEval, Searched, Simulated};
 use fsdp_bw::eval::{Evaluation, Evaluator, Sweep};
 use fsdp_bw::experiments;
-use fsdp_bw::query::{Planner, Query};
+use fsdp_bw::query::{EvalCache, Planner, Query};
 use fsdp_bw::util::cli::Args;
 use fsdp_bw::util::json::Json;
 
@@ -56,6 +62,13 @@ COMMANDS:
                                          where.* constraints + query.*
                                          objective, §2.7 bounds-pruned,
                                          ranked frontier (see README)
+  serve      [--addr 127.0.0.1:8787] [--threads 4] [--queue 64]
+             [--timeout-ms 30000] [--cache-capacity 4096]
+             [--planner-threads 1]       the Planner as an HTTP service:
+                                         POST /v1/plan, GET /v1/presets,
+                                         GET /healthz, GET /metrics, with a
+                                         shared cross-request evaluation
+                                         cache and request coalescing
   train      [--artifact train_step_27m] [--artifacts-dir artifacts]
              [--ranks 4] [--steps 100] [--bandwidth-gbps 200]
              [--seed 42] [--csv out.csv] [--quiet]
@@ -64,30 +77,125 @@ COMMANDS:
   list                                   experiments, models, clusters
 ";
 
+/// One subcommand's complete CLI surface. [`main`] enforces it before
+/// dispatch: options outside `flags` ∪ `opts` and positionals beyond
+/// `positionals` are errors, so no subcommand silently ignores input.
+struct CmdSpec {
+    name: &'static str,
+    /// Boolean options (take no value).
+    flags: &'static [&'static str],
+    /// Options that consume a value.
+    opts: &'static [&'static str],
+    /// Positional arguments after the command name itself.
+    positionals: usize,
+}
+
+const CMD_SPECS: &[CmdSpec] = &[
+    CmdSpec { name: "experiment", flags: &["json"], opts: &[], positionals: 1 },
+    CmdSpec {
+        name: "gridsearch",
+        flags: &["json"],
+        opts: &["model", "cluster", "gpus", "precision"],
+        positionals: 0,
+    },
+    CmdSpec {
+        name: "simulate",
+        flags: &["json", "empty-cache"],
+        opts: &["model", "cluster", "gpus", "seq", "batch", "gamma", "stage", "precision"],
+        positionals: 0,
+    },
+    CmdSpec {
+        name: "bounds",
+        flags: &["json"],
+        opts: &["model", "cluster", "gpus", "seq", "precision"],
+        positionals: 0,
+    },
+    CmdSpec { name: "scenario", flags: &["json"], opts: &["backend"], positionals: 1 },
+    CmdSpec {
+        name: "sweep",
+        flags: &["json", "csv"],
+        opts: &["backend", "threads", "out"],
+        positionals: 1,
+    },
+    CmdSpec {
+        name: "plan",
+        flags: &["json", "csv", "no-prune", "check-prune"],
+        opts: &["backend", "threads", "top-k", "out"],
+        positionals: 1,
+    },
+    CmdSpec {
+        name: "serve",
+        flags: &[],
+        opts: &["addr", "threads", "queue", "timeout-ms", "cache-capacity", "planner-threads"],
+        positionals: 0,
+    },
+    CmdSpec {
+        name: "train",
+        flags: &["quiet"],
+        opts: &["artifact", "artifacts-dir", "ranks", "steps", "bandwidth-gbps", "seed", "csv"],
+        positionals: 0,
+    },
+    CmdSpec { name: "list", flags: &[], opts: &[], positionals: 0 },
+];
+
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     if raw.is_empty() || raw[0] == "--help" || raw[0] == "-h" {
         print!("{USAGE}");
         return Ok(());
     }
-    // `train` takes `--csv <path>`; everywhere else `--csv` is an output
-    // format flag. Likewise `--json` never takes a value. Key the flag
-    // table off the first non-flag token so a leading boolean flag
-    // (`fsdp-bw --quiet train …`) still selects train's table.
-    let cmd0 = raw.iter().find(|t| !t.starts_with('-')).map(String::as_str).unwrap_or("");
-    let flags: &[&str] = match cmd0 {
-        "train" => &["quiet"],
-        _ => &["json", "csv", "empty-cache", "quiet", "no-prune", "check-prune"],
-    };
-    let args = Args::parse(&raw, flags)?;
-    let cmd = match args.positional.first() {
-        Some(c) => c.as_str(),
-        None => {
-            print!("{USAGE}");
+    // Key the spec off the first token naming a known command — not the
+    // first non-flag token, which may be a leading option's value
+    // (`fsdp-bw --threads 8 sweep f.scn` must select sweep's table, not
+    // fail on "8"). Leading boolean flags (`fsdp-bw --quiet train …`)
+    // resolve the same way.
+    let cmd0 = raw
+        .iter()
+        .find(|t| CMD_SPECS.iter().any(|s| s.name == t.as_str()))
+        .or_else(|| raw.iter().find(|t| !t.starts_with('-')))
+        .map(String::as_str)
+        .unwrap_or("");
+    let Some(spec) = CMD_SPECS.iter().find(|s| s.name == cmd0) else {
+        print!("{USAGE}");
+        if cmd0.is_empty() {
             anyhow::bail!("missing command");
         }
+        anyhow::bail!("unknown command {cmd0:?}");
     };
-    match cmd {
+    // Tokenize with every subcommand's boolean flags (derived from the
+    // table, so it cannot drift), minus any name *this* subcommand treats
+    // as a value option (`train --csv <path>`). A boolean flag given to
+    // the wrong subcommand is then reported as unknown rather than
+    // swallowing the next token as its value.
+    let parse_flags: Vec<&str> = CMD_SPECS
+        .iter()
+        .flat_map(|s| s.flags.iter().copied())
+        .filter(|f| !spec.opts.contains(f))
+        .collect();
+    let args = Args::parse(&raw, &parse_flags)?;
+    // The command itself must be the first positional: `fsdp-bw x.scn plan`
+    // is an unknown command "x.scn", not a plan over "plan".
+    if args.positional.first().map(String::as_str) != Some(spec.name) {
+        print!("{USAGE}");
+        anyhow::bail!(
+            "unknown command {:?}",
+            args.positional.first().map(String::as_str).unwrap_or("")
+        );
+    }
+
+    // Enforce the table: no subcommand ignores an option or a positional.
+    let known: Vec<&str> = spec.flags.iter().chain(spec.opts.iter()).copied().collect();
+    args.check_known(&known)?;
+    if args.positional.len() > 1 + spec.positionals {
+        anyhow::bail!(
+            "unexpected argument {:?}: `fsdp-bw {}` takes {} positional argument(s)",
+            args.positional[1 + spec.positionals],
+            spec.name,
+            spec.positionals
+        );
+    }
+
+    match spec.name {
         "experiment" => cmd_experiment(&args),
         "gridsearch" => cmd_gridsearch(&args),
         "simulate" => cmd_simulate(&args),
@@ -95,12 +203,10 @@ fn main() -> Result<()> {
         "scenario" => cmd_scenario(&args),
         "sweep" => cmd_sweep(&args),
         "plan" => cmd_plan(&args),
+        "serve" => cmd_serve(&args),
         "train" => cmd_train(&args),
         "list" => cmd_list(),
-        other => {
-            print!("{USAGE}");
-            anyhow::bail!("unknown command {other:?}");
-        }
+        other => unreachable!("unspecced command {other:?}"),
     }
 }
 
@@ -142,7 +248,6 @@ fn emit(e: &Evaluation, json: bool) {
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
-    args.check_known(&["json"])?;
     let id = args
         .positional
         .get(1)
@@ -164,39 +269,24 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_gridsearch(args: &Args) -> Result<()> {
-    args.check_known(&["model", "cluster", "gpus", "precision", "json"])?;
     let s = Scenario::from_kv(&kv_from_flags(args, &[("model", "13B"), ("n_gpus", "512")]))?;
     emit(&Searched.evaluate(&s), args.flag("json"));
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    args.check_known(&[
-        "model",
-        "cluster",
-        "gpus",
-        "seq",
-        "batch",
-        "gamma",
-        "stage",
-        "precision",
-        "empty-cache",
-        "json",
-    ])?;
     let s = Scenario::from_kv(&kv_from_flags(args, &[("model", "13B"), ("seq_len", "10240")]))?;
     emit(&Simulated::default().evaluate(&s), args.flag("json"));
     Ok(())
 }
 
 fn cmd_bounds(args: &Args) -> Result<()> {
-    args.check_known(&["model", "cluster", "gpus", "seq", "precision", "json"])?;
     let s = Scenario::from_kv(&kv_from_flags(args, &[("model", "13B"), ("seq_len", "10240")]))?;
     emit(&BoundsEval.evaluate(&s), args.flag("json"));
     Ok(())
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
-    args.check_known(&["backend", "json"])?;
     let path = args
         .positional
         .get(1)
@@ -219,7 +309,6 @@ fn cmd_scenario(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    args.check_known(&["backend", "threads", "json", "csv", "out"])?;
     let path = args
         .positional
         .get(1)
@@ -228,7 +317,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let backends = backends_for(&args.str_opt("backend", "both"))?;
     let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let threads = args.num_opt("threads", default_threads)?;
-    let report = run_sweep(&sweep, &backends, threads);
+    // Route through the same shared-cache machinery the server uses. A
+    // single CLI invocation gains nothing over the planner's own dedup
+    // (the cache is per-process), but the CLI exercising the serve path
+    // keeps the two front-ends behaviorally identical; `empty_cache`
+    // stays a scenario key (part of the cache key), not a cache control.
+    let report = run_sweep_cached(&sweep, &backends, threads, Some(EvalCache::shared()));
     let mut body = if args.flag("json") {
         report.to_json()
     } else if args.flag("csv") {
@@ -261,16 +355,6 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
-    args.check_known(&[
-        "backend",
-        "threads",
-        "top-k",
-        "no-prune",
-        "check-prune",
-        "json",
-        "csv",
-        "out",
-    ])?;
     let path = args
         .positional
         .get(1)
@@ -284,11 +368,13 @@ fn cmd_plan(args: &Args) -> Result<()> {
         query.prune = false;
     }
     let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let planner = Planner::new(args.num_opt("threads", default_threads)?);
+    let threads = args.num_opt("threads", default_threads)?;
 
     if args.flag("check-prune") {
         // Parity harness: the §2.7-pruned plan must return the byte-identical
-        // frontier to brute force, evaluating no more points.
+        // frontier to brute force, evaluating no more points. Runs without a
+        // shared cache so the two executions stay fully independent.
+        let planner = Planner::new(threads);
         let mut pruned_q = query.clone();
         pruned_q.prune = true;
         let mut brute_q = query.clone();
@@ -316,6 +402,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // Per-process cache instance of the serve path (see cmd_sweep) — the
+    // frontier is identical with or without it.
+    let planner = Planner::new(threads).with_cache(EvalCache::shared());
     let frontier = planner.run(&query)?;
     let mut body = if args.flag("json") {
         frontier.to_json()
@@ -349,22 +438,35 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    use fsdp_bw::serve::{ServeConfig, Server};
+
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        addr: args.str_opt("addr", "127.0.0.1:8787"),
+        threads: args.num_opt("threads", defaults.threads)?,
+        queue: args.num_opt("queue", defaults.queue)?,
+        timeout: std::time::Duration::from_millis(args.num_opt("timeout-ms", 30_000u64)?),
+        cache_capacity: args.num_opt("cache-capacity", defaults.cache_capacity)?,
+        planner_threads: args.num_opt("planner-threads", defaults.planner_threads)?,
+    };
+    let threads = cfg.threads;
+    let queue = cfg.queue;
+    let cache_capacity = cfg.cache_capacity;
+    let server = Server::start(cfg)?;
+    println!("fsdp-bw serve: listening on http://{}", server.addr());
+    println!("  endpoints : POST /v1/plan · GET /v1/presets · GET /healthz · GET /metrics");
+    println!("  workers {threads} · accept queue {queue} · eval cache capacity {cache_capacity}");
+    server.join();
+    Ok(())
+}
+
 #[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<()> {
     use std::path::PathBuf;
 
     use fsdp_bw::coordinator::{FabricConfig, TrainParams, Trainer};
 
-    args.check_known(&[
-        "artifact",
-        "artifacts-dir",
-        "ranks",
-        "steps",
-        "bandwidth-gbps",
-        "seed",
-        "csv",
-        "quiet",
-    ])?;
     let artifact = args.str_opt("artifact", "train_step_27m");
     let artifacts_dir = PathBuf::from(args.str_opt("artifacts-dir", "artifacts"));
     let ranks = args.num_opt("ranks", 4usize)?;
@@ -421,7 +523,7 @@ fn cmd_list() -> Result<()> {
         );
     }
     println!("\nclusters:");
-    for c in ClusterConfig::table1_presets().into_iter().chain(ClusterConfig::table3_presets()) {
+    for c in ClusterConfig::presets() {
         println!(
             "  {:<22} {:>4} GPUs  {:>3.0} Gbps/GPU  {:>5.0} GiB",
             c.name,

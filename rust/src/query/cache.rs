@@ -1,0 +1,464 @@
+//! The shared cross-run evaluation cache — the [`super::Planner`]'s
+//! memoization, promoted to a process-wide substrate.
+//!
+//! The Planner always deduplicated repeated `(backend, cache key)`
+//! evaluations *within* one run; an [`EvalCache`] extends that across runs
+//! and across threads, which is what makes a long-running service cheap:
+//! users ask overlapping questions, and an answer computed for one request
+//! is served from memory to the next. Three properties matter:
+//!
+//! * **bounded** — a capacity-limited LRU (sharded to keep lock contention
+//!   off the worker pool's hot path), so a service that has seen millions
+//!   of scenarios holds only the most recently useful ones;
+//! * **coalescing** — when two requests race on the *same* key, the second
+//!   waits for the first evaluation instead of repeating it
+//!   ([`EvalCache::get_or_compute`]); N identical concurrent requests cost
+//!   one evaluation, not N;
+//! * **observable** — hit/miss/eviction/coalesce counters
+//!   ([`CacheStats`]), exported by the server's `/metrics` endpoint and
+//!   printable from the CLI.
+//!
+//! Keys pair an [`crate::eval::Evaluator::cache_namespace`] (the backend's
+//! identity, including any non-default configuration) with its
+//! [`crate::eval::Evaluator::cache_key`] scenario projection, so two
+//! backends — or two differently-configured instances of one backend —
+//! never alias. Within one Planner run, determinism is unaffected: the
+//! per-run dedup (and its `cache_hit` provenance) still happens first, and
+//! evaluators are pure functions of the scenario, so a cached result is
+//! byte-identical to a recomputed one.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeMap, HashMap};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::eval::Evaluation;
+
+/// Default entry capacity: comfortably holds a large sweep's unique points
+/// while bounding a service's residency to tens of MB.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Shards for the default constructor. Must be a power of two.
+const DEFAULT_SHARDS: usize = 16;
+
+/// Monotonic counters describing a cache's lifetime behavior. Snapshot via
+/// [`EvalCache::stats`]; all counts are cumulative since construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Lookups served from a stored entry.
+    pub hits: u64,
+    /// Lookups that found nothing and computed the value themselves.
+    pub misses: u64,
+    /// Lookups that found another thread computing the same key and waited
+    /// for its result instead of re-evaluating.
+    pub coalesced: u64,
+    /// Entries discarded to respect the capacity bound.
+    pub evictions: u64,
+    /// Entries currently stored (gauge, not cumulative).
+    pub entries: u64,
+    /// The configured capacity bound (gauge).
+    pub capacity: u64,
+}
+
+impl CacheStats {
+    /// Evaluations actually executed through this cache — the number the
+    /// coalescing acceptance test compares against N × points.
+    pub fn computed(&self) -> u64 {
+        self.misses
+    }
+}
+
+/// What an in-flight computation left behind for its waiters.
+enum FlightState {
+    Pending,
+    Done(Evaluation),
+    /// The computing thread panicked; waiters must retry themselves.
+    Poisoned,
+}
+
+struct Flight {
+    state: Mutex<FlightState>,
+    done: Condvar,
+}
+
+/// One shard: an LRU map plus the keys currently being computed.
+///
+/// LRU bookkeeping is a `tick → key` ordered index next to the main map —
+/// O(log n) touch/evict without unsafe linked lists.
+struct Shard {
+    entries: HashMap<Key, (u64, Evaluation)>,
+    order: BTreeMap<u64, Key>,
+    tick: u64,
+    inflight: HashMap<Key, Arc<Flight>>,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Self {
+            entries: HashMap::new(),
+            order: BTreeMap::new(),
+            tick: 0,
+            inflight: HashMap::new(),
+        }
+    }
+
+    /// Look up and LRU-touch a key.
+    fn get(&mut self, key: &Key) -> Option<Evaluation> {
+        let tick = self.tick;
+        let (stored_tick, eval) = self.entries.get_mut(key)?;
+        let old_tick = *stored_tick;
+        *stored_tick = tick;
+        let eval = eval.clone();
+        self.order.remove(&old_tick);
+        self.order.insert(tick, key.clone());
+        self.tick += 1;
+        Some(eval)
+    }
+
+    /// Insert a freshly computed value, evicting down to `capacity`.
+    /// Returns how many entries were evicted.
+    fn insert(&mut self, key: Key, eval: Evaluation, capacity: usize) -> u64 {
+        let tick = self.tick;
+        self.tick += 1;
+        if let Some((old_tick, _)) = self.entries.insert(key.clone(), (tick, eval)) {
+            self.order.remove(&old_tick);
+        }
+        self.order.insert(tick, key);
+        let mut evicted = 0;
+        while self.entries.len() > capacity {
+            let (&oldest, _) = self.order.iter().next().expect("order tracks entries");
+            let victim = self.order.remove(&oldest).expect("just read");
+            self.entries.remove(&victim);
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+/// Cache key: backend identity (namespace) + scenario projection.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Key {
+    namespace: String,
+    key: String,
+}
+
+/// A capacity-bounded, sharded, coalescing evaluation cache, shareable
+/// across Planner runs, worker threads, and server requests.
+pub struct EvalCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard capacity (total capacity split evenly).
+    shard_capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl std::fmt::Debug for EvalCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EvalCache").field("stats", &self.stats()).finish()
+    }
+}
+
+impl Default for EvalCache {
+    fn default() -> Self {
+        Self::new(DEFAULT_CAPACITY)
+    }
+}
+
+impl EvalCache {
+    /// A cache bounded to ~`capacity` entries (rounded up to the shard
+    /// count; a zero capacity still stores one entry per shard so
+    /// coalescing keeps working).
+    pub fn new(capacity: usize) -> Self {
+        Self::with_shards(capacity, DEFAULT_SHARDS)
+    }
+
+    /// Like [`Self::new`] with an explicit shard count (1 shard gives a
+    /// globally exact LRU — useful for tests; more shards trade LRU
+    /// exactness for less lock contention).
+    pub fn with_shards(capacity: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let shard_capacity = capacity.div_ceil(shards).max(1);
+        Self {
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Convenience: a default-capacity cache behind an [`Arc`].
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    fn shard_for(&self, key: &Key) -> &Mutex<Shard> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// The cached evaluation for `(namespace, key)`, or compute it with
+    /// `f`, store it, and return it. Concurrent callers with the same key
+    /// coalesce: exactly one runs `f`, the rest block until its result is
+    /// stored (if the computing thread panics, one waiter takes over).
+    pub fn get_or_compute(
+        &self,
+        namespace: &str,
+        key: &str,
+        f: impl Fn() -> Evaluation,
+    ) -> Evaluation {
+        let key = Key { namespace: namespace.to_string(), key: key.to_string() };
+        loop {
+            let flight = {
+                let mut shard = self.shard_for(&key).lock().expect("cache shard poisoned");
+                if let Some(eval) = shard.get(&key) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return eval;
+                }
+                match shard.inflight.get(&key) {
+                    Some(flight) => {
+                        self.coalesced.fetch_add(1, Ordering::Relaxed);
+                        Some(flight.clone())
+                    }
+                    None => {
+                        let flight = Arc::new(Flight {
+                            state: Mutex::new(FlightState::Pending),
+                            done: Condvar::new(),
+                        });
+                        shard.inflight.insert(key.clone(), flight);
+                        None
+                    }
+                }
+            };
+
+            match flight {
+                Some(flight) => {
+                    // Another thread is evaluating this key — wait for it.
+                    let mut state = flight.state.lock().expect("flight poisoned");
+                    loop {
+                        match &*state {
+                            FlightState::Done(eval) => return eval.clone(),
+                            // The computer panicked: retry the whole lookup
+                            // (the inflight slot was cleared by its guard).
+                            FlightState::Poisoned => break,
+                            FlightState::Pending => {
+                                state = flight.done.wait(state).expect("flight poisoned");
+                            }
+                        }
+                    }
+                }
+                None => {
+                    // This thread owns the computation. The guard publishes
+                    // Poisoned if `f` unwinds, so waiters never hang.
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    let guard = FlightGuard { cache: self, key: &key, completed: false };
+                    let eval = f();
+                    guard.complete(eval.clone());
+                    return eval;
+                }
+            }
+        }
+    }
+
+    /// Store (or refresh) an entry and resolve any in-flight waiters.
+    fn finish(&self, key: &Key, outcome: FlightState) {
+        let mut shard = self.shard_for(key).lock().expect("cache shard poisoned");
+        if let FlightState::Done(eval) = &outcome {
+            let evicted = shard.insert(key.clone(), eval.clone(), self.shard_capacity);
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        if let Some(flight) = shard.inflight.remove(key) {
+            *flight.state.lock().expect("flight poisoned") = outcome;
+            flight.done.notify_all();
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len() as u64,
+            capacity: (self.shard_capacity * self.shards.len()) as u64,
+        }
+    }
+
+    /// Entries currently stored across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("cache shard poisoned").entries.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every stored entry (counters are preserved — they are lifetime
+    /// totals). In-flight computations are unaffected.
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            let mut shard = shard.lock().expect("cache shard poisoned");
+            shard.entries.clear();
+            shard.order.clear();
+        }
+    }
+}
+
+/// Ensures a registered in-flight computation is always resolved, even if
+/// the evaluator panics — waiters observe `Poisoned` and retry.
+struct FlightGuard<'a> {
+    cache: &'a EvalCache,
+    key: &'a Key,
+    completed: bool,
+}
+
+impl FlightGuard<'_> {
+    fn complete(mut self, eval: Evaluation) {
+        self.completed = true;
+        self.cache.finish(self.key, FlightState::Done(eval));
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.completed {
+            self.cache.finish(self.key, FlightState::Poisoned);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::AtomicUsize;
+
+    use super::*;
+    use crate::config::scenario::Scenario;
+    use crate::eval::{Analytical, Evaluator};
+
+    fn eval_fixture(seq: u64) -> Evaluation {
+        let s = Scenario::parse(&format!("model = 13B\nn_gpus = 8\nseq_len = {seq}\n")).unwrap();
+        Analytical::default().evaluate(&s)
+    }
+
+    #[test]
+    fn hit_after_miss_returns_identical_value() {
+        let cache = EvalCache::new(64);
+        let calls = AtomicUsize::new(0);
+        let f = || {
+            calls.fetch_add(1, Ordering::SeqCst);
+            eval_fixture(2048)
+        };
+        let a = cache.get_or_compute("analytical", "k1", f);
+        let b = cache.get_or_compute("analytical", "k1", f);
+        assert_eq!(a, b);
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses, st.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn namespaces_do_not_alias() {
+        let cache = EvalCache::new(64);
+        let a = cache.get_or_compute("ns-a", "k", || eval_fixture(2048));
+        let b = cache.get_or_compute("ns-b", "k", || eval_fixture(4096));
+        assert_ne!(a.scenario.seq_len, b.scenario.seq_len);
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_lru() {
+        // Single-entry shards: every shard holds exactly one entry, so
+        // re-inserting distinct keys that land on the same shard evicts.
+        let cache = EvalCache::new(0);
+        assert_eq!(cache.shard_capacity, 1);
+        // Enough distinct keys to guarantee shard collisions.
+        for i in 0..200 {
+            cache.get_or_compute("ns", &format!("k{i}"), || eval_fixture(2048));
+        }
+        let st = cache.stats();
+        assert!(st.entries <= DEFAULT_SHARDS as u64, "entries {}", st.entries);
+        assert!(st.evictions > 0);
+        assert_eq!(st.misses, 200);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        // One shard → globally exact LRU, capacity 2.
+        let cache = EvalCache::with_shards(2, 1);
+        cache.get_or_compute("ns", "a", || eval_fixture(2048));
+        cache.get_or_compute("ns", "b", || eval_fixture(4096));
+        cache.get_or_compute("ns", "a", || eval_fixture(2048)); // touch a
+        cache.get_or_compute("ns", "c", || eval_fixture(8192)); // evicts b
+        assert_eq!(cache.stats().evictions, 1);
+        let misses_before = cache.stats().misses;
+        cache.get_or_compute("ns", "a", || eval_fixture(2048)); // still resident
+        assert_eq!(cache.stats().misses, misses_before, "a survived the eviction");
+        cache.get_or_compute("ns", "b", || eval_fixture(4096)); // recomputes
+        assert_eq!(cache.stats().misses, misses_before + 1, "b was the LRU victim");
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_counters() {
+        let cache = EvalCache::new(64);
+        cache.get_or_compute("ns", "k", || eval_fixture(2048));
+        cache.clear();
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats().misses, 1);
+        cache.get_or_compute("ns", "k", || eval_fixture(2048));
+        assert_eq!(cache.stats().misses, 2, "cleared entry recomputes");
+    }
+
+    #[test]
+    fn concurrent_identical_keys_coalesce_to_one_computation() {
+        let cache = Arc::new(EvalCache::new(64));
+        let calls = Arc::new(AtomicUsize::new(0));
+        let n = 8;
+        let mut handles = Vec::new();
+        for _ in 0..n {
+            let cache = cache.clone();
+            let calls = calls.clone();
+            handles.push(std::thread::spawn(move || {
+                cache.get_or_compute("ns", "hot", || {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    // Widen the race window so waiters really queue up.
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                    eval_fixture(2048)
+                })
+            }));
+        }
+        let results: Vec<Evaluation> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "one evaluation for {n} callers");
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+        let st = cache.stats();
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.hits + st.coalesced, n - 1, "{st:?}");
+    }
+
+    #[test]
+    fn panicking_computation_poisons_only_itself() {
+        let cache = Arc::new(EvalCache::new(64));
+        let c2 = cache.clone();
+        let panicker = std::thread::spawn(move || {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                c2.get_or_compute("ns", "bad", || panic!("evaluator died"));
+            }));
+        });
+        panicker.join().unwrap();
+        // The key is not cached and not stuck in-flight: a later caller
+        // computes it cleanly.
+        let e = cache.get_or_compute("ns", "bad", || eval_fixture(2048));
+        assert_eq!(e.scenario.seq_len, 2048);
+    }
+}

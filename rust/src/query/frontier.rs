@@ -86,7 +86,10 @@ impl PlannedPoint {
 pub struct PlanCounters {
     /// Grid points in the query's space.
     pub points: usize,
-    /// Evaluations actually executed (unique jobs after pruning + dedup).
+    /// Unique evaluation jobs this plan needed (after pruning + dedup).
+    /// Deterministic per query; a shared [`crate::query::cache::EvalCache`]
+    /// may serve some of these without recomputation — its own stats count
+    /// actual evaluator executions.
     pub evaluated: usize,
     /// Backend slots skipped via the §2.7 bounds (Eqs 12–15).
     pub pruned_by_bounds: usize,

@@ -45,6 +45,7 @@
 //! ([`crate::gridsearch::GridSearch::run`]) is a canned Query over the
 //! (α̂, γ, stage) axes with the `alg1` point backend.
 
+pub mod cache;
 pub mod constraint;
 pub mod frontier;
 pub mod planner;
@@ -59,6 +60,7 @@ use crate::eval::report::metrics_for_tgs;
 use crate::eval::sweep::{Sweep, SweepAxis};
 use crate::eval::Evaluation;
 
+pub use cache::{CacheStats, EvalCache};
 pub use constraint::{Cmp, Constraint, Metric};
 pub use frontier::{Frontier, PlanCounters, PlannedPoint, PointEval};
 pub use planner::Planner;

@@ -25,6 +25,7 @@
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -32,6 +33,7 @@ use crate::config::scenario::Scenario;
 use crate::eval::{backends_for, Evaluation, Evaluator};
 use crate::util::channel::channel;
 
+use super::cache::EvalCache;
 use super::frontier::{rank, Frontier, PlanCounters, PlannedPoint, PointEval};
 use super::Query;
 
@@ -144,22 +146,40 @@ fn pre_point(q: &Query, backends: &[Box<dyn Evaluator>], index: usize) -> Pre {
     Pre { point, kind: PreKind::Ready { scenario: s, slots } }
 }
 
-/// Executes [`Query`]s. Stateless apart from the thread count; each run
-/// builds its own memoization table (evaluator instances differ between
-/// runs, so a cross-run cache could alias differently-configured backends).
-#[derive(Debug, Clone, Copy)]
+/// Executes [`Query`]s. Each run dedups its own repeated `(backend, cache
+/// key)` evaluations; attaching a shared [`EvalCache`]
+/// ([`Self::with_cache`]) additionally memoizes across runs and coalesces
+/// identical concurrent evaluations — safe across differently-configured
+/// backend instances because entries are namespaced by
+/// [`Evaluator::cache_namespace`].
+#[derive(Debug, Clone)]
 pub struct Planner {
     pub threads: usize,
+    cache: Option<Arc<EvalCache>>,
 }
 
 impl Planner {
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1) }
+        Self { threads: threads.max(1), cache: None }
     }
 
     /// One worker per available core.
     pub fn auto() -> Self {
         Self::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+    }
+
+    /// Attach a shared cross-run evaluation cache. Results are unchanged
+    /// (evaluators are pure functions of the scenario); repeated queries
+    /// skip recomputation and concurrent identical queries share one
+    /// evaluation.
+    pub fn with_cache(mut self, cache: Arc<EvalCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The attached shared cache, if any.
+    pub fn cache(&self) -> Option<&Arc<EvalCache>> {
+        self.cache.as_ref()
     }
 
     /// Resolve the query's `backend_spec` and run.
@@ -205,11 +225,21 @@ impl Planner {
         }
         drop(key_to_job);
 
-        // Phase 3 — evaluate unique jobs (parallel).
+        // Phase 3 — evaluate unique jobs (parallel). With a shared cache
+        // attached, each job first consults it (and registers in-flight, so
+        // an identical job racing in another Planner run coalesces onto
+        // this evaluation instead of repeating it).
         let job_results: Vec<Evaluation> = par_map(jobs.len(), self.threads, |j| {
             let (pi, bi) = jobs[j];
             match &pres[pi].kind {
-                PreKind::Ready { scenario, .. } => backends[bi].evaluate(scenario),
+                PreKind::Ready { scenario, slots } => match (&self.cache, &slots[bi]) {
+                    (Some(cache), Slot::Eval(key)) => cache.get_or_compute(
+                        &backends[bi].cache_namespace(),
+                        key,
+                        || backends[bi].evaluate(scenario),
+                    ),
+                    _ => backends[bi].evaluate(scenario),
+                },
                 _ => unreachable!("jobs reference ready points"),
             }
         });
@@ -259,12 +289,13 @@ impl Planner {
                                 let mut eval = job_results[job].clone();
                                 if hit {
                                     counters.cache_hits += 1;
-                                    // The shared result came from a key-equal
-                                    // representative; re-stamp the scenario
-                                    // echo so provenance names *this* point
-                                    // (matters for projected cache keys).
-                                    eval.scenario = crate::eval::ScenarioPoint::of(&scenario);
                                 }
+                                // The result may come from a key-equal
+                                // representative — in this run (dedup) or a
+                                // previous one (shared cache); re-stamp the
+                                // scenario echo so provenance names *this*
+                                // point (matters for projected cache keys).
+                                eval.scenario = crate::eval::ScenarioPoint::of(&scenario);
                                 evs.push(PointEval::Done { eval, cache_hit: hit });
                             }
                         }
@@ -411,6 +442,54 @@ mod tests {
         assert_eq!(b.counters.evaluated, 2);
         assert_eq!(b.counters.rejected, 2);
         assert!(b.ranked.is_empty());
+    }
+
+    #[test]
+    fn shared_cache_preserves_results_across_runs() {
+        let q = Query::parse(
+            "model = 13B\nn_gpus = 8\nbatch = 1\nsweep.seq_len = 2048,4096,8192\n",
+        )
+        .unwrap();
+        let cold = Planner::new(2).run(&q).unwrap();
+        let cache = std::sync::Arc::new(super::EvalCache::new(64));
+        let planner = Planner::new(2).with_cache(cache.clone());
+        let first = planner.run(&q).unwrap();
+        let warm = planner.run(&q).unwrap();
+        // Cacheless, cache-miss and cache-hit runs all serialize identically.
+        assert_eq!(cold.to_json(), first.to_json());
+        assert_eq!(first.to_json(), warm.to_json());
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 3, "{stats:?}");
+        assert_eq!(stats.hits, 3, "warm run served entirely from cache: {stats:?}");
+    }
+
+    #[test]
+    fn shared_cache_restamps_scenarios_for_projected_keys() {
+        // The gridsearch backend projects seq_len out of its cache key, so
+        // two *different* queries share one evaluation across runs; each
+        // frontier must still echo its own scenario, not the first run's.
+        let cache = std::sync::Arc::new(super::EvalCache::new(64));
+        let planner = Planner::new(1).with_cache(cache.clone());
+        let qa = Query::parse(
+            "model = 1.3B\nn_gpus = 64\nseq_len = 1024\nquery.backend = gridsearch\n",
+        )
+        .unwrap();
+        let qb = Query::parse(
+            "model = 1.3B\nn_gpus = 64\nseq_len = 2048\nquery.backend = gridsearch\n",
+        )
+        .unwrap();
+        let a = planner.run(&qa).unwrap();
+        let b = planner.run(&qb).unwrap();
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1, "projected key shared across runs: {stats:?}");
+        assert_eq!(stats.hits, 1, "{stats:?}");
+        let seq = |f: &Frontier| f.points[0].primary_eval().unwrap().scenario.seq_len;
+        assert_eq!(seq(&a), 1024);
+        assert_eq!(seq(&b), 2048, "cached result must be re-stamped with this run's scenario");
+        // Everything except the scenario echo is the shared evaluation.
+        let (ea, eb) = (a.points[0].primary_eval().unwrap(), b.points[0].primary_eval().unwrap());
+        assert_eq!(ea.search, eb.search);
+        assert_eq!(ea.metrics, eb.metrics);
     }
 
     #[test]

@@ -1,0 +1,49 @@
+//! A minimal blocking HTTP/1.1 client for tests, benches, and examples —
+//! just enough to exercise the planner service without external tooling
+//! (curl is the documented interface for humans; this is the in-process
+//! one).
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::http::{read_response, Response};
+
+/// Default per-call socket timeout. Generous: a cold plan over a large
+/// grid is real work.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// `GET` a path from `addr` (`host:port`).
+pub fn get(addr: &str, path: &str) -> Result<Response> {
+    request(addr, "GET", path, None, DEFAULT_TIMEOUT)
+}
+
+/// `POST` a body to a path on `addr`.
+pub fn post(addr: &str, path: &str, body: &str) -> Result<Response> {
+    request(addr, "POST", path, Some(body), DEFAULT_TIMEOUT)
+}
+
+/// Issue one request with an explicit timeout (applied to connect, read
+/// and write independently).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<Response> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    read_response(&mut stream)
+}

@@ -1,0 +1,297 @@
+//! Minimal HTTP/1.1 framing over `std::net` (no hyper offline): request
+//! parsing and response writing, shared by the server and the blocking
+//! test client. One request per connection (`Connection: close`) — the
+//! planner service's requests are few and heavy, so keep-alive buys
+//! nothing and connection-per-request keeps the server loop trivial.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Largest accepted header block (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Largest accepted request body. Query files are a few KB; anything near
+/// this limit is a mistake or abuse.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    /// Path only (any `?query=` suffix is split off into `query`).
+    pub path: String,
+    /// Raw query string after `?`, empty when absent.
+    pub query: String,
+    /// Header `(name, value)` pairs; names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Request {
+    /// First value of a (lowercase) header name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read and parse one request from a stream. IO timeouts are the caller's
+/// responsibility (set on the socket); this returns an error on malformed
+/// framing, oversized head/body, or EOF mid-request.
+pub fn read_request(stream: &mut impl Read) -> Result<Request> {
+    // Accumulate until the blank line ending the header block.
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            bail!("request head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            bail!("connection closed mid-request ({} bytes read)", buf.len());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| anyhow!("request head is not UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| anyhow!("request line lacks a path"))?;
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol {version:?}");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) =
+            line.split_once(':').ok_or_else(|| anyhow!("malformed header line {line:?}"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let content_length: usize = match headers.iter().find(|(n, _)| n == "content-length") {
+        Some((_, v)) => v.parse().map_err(|_| anyhow!("bad content-length {v:?}"))?,
+        None => 0,
+    };
+    if content_length > MAX_BODY_BYTES {
+        bail!("request body of {content_length} bytes exceeds {MAX_BODY_BYTES}");
+    }
+
+    // Body: whatever followed the head in the buffer, then read the rest.
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            bail!("connection closed mid-body ({} of {content_length} bytes)", body.len());
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let body = String::from_utf8(body).map_err(|_| anyhow!("request body is not UTF-8"))?;
+
+    Ok(Request { method, path, query, headers, body })
+}
+
+/// Position of the `\r\n\r\n` terminating the header block.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// One parsed HTTP response (the client side of the framing above).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub status: u16,
+    /// Header `(name, value)` pairs; names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Response {
+    /// First value of a (lowercase) header name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read and parse one response. The body is delimited by `Content-Length`
+/// when present, read-to-EOF otherwise (this server always closes).
+pub fn read_response(stream: &mut impl Read) -> Result<Response> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            bail!("response head exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            bail!("connection closed mid-response ({} bytes read)", buf.len());
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| anyhow!("response head is not UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let mut parts = status_line.split_whitespace();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol in status line {status_line:?}");
+    }
+    let status: u16 = parts
+        .next()
+        .ok_or_else(|| anyhow!("status line lacks a code: {status_line:?}"))?
+        .parse()
+        .map_err(|_| anyhow!("bad status code in {status_line:?}"))?;
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) =
+            line.split_once(':').ok_or_else(|| anyhow!("malformed header line {line:?}"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let content_length: Option<usize> = match headers.iter().find(|(n, _)| n == "content-length") {
+        Some((_, v)) => Some(v.parse().map_err(|_| anyhow!("bad content-length {v:?}"))?),
+        None => None,
+    };
+
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    match content_length {
+        Some(len) => {
+            while body.len() < len {
+                let n = stream.read(&mut chunk)?;
+                if n == 0 {
+                    bail!("connection closed mid-body ({} of {len} bytes)", body.len());
+                }
+                body.extend_from_slice(&chunk[..n]);
+            }
+            body.truncate(len);
+        }
+        None => loop {
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                break;
+            }
+            body.extend_from_slice(&chunk[..n]);
+        },
+    }
+    let body = String::from_utf8(body).map_err(|_| anyhow!("response body is not UTF-8"))?;
+    Ok(Response { status, headers, body })
+}
+
+/// Canonical reason phrase for the status codes this service emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete response and flush. Always `Connection: close`.
+pub fn write_response(
+    stream: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/plan HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\nmodel = 13B";
+        let r = read_request(&mut &raw[..]).unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/plan");
+        assert_eq!(r.body, "model = 13B");
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(r.header("content-length"), Some("11"));
+    }
+
+    #[test]
+    fn parses_get_with_query_string() {
+        let raw = b"GET /v1/presets?kind=models HTTP/1.1\r\n\r\n";
+        let r = read_request(&mut &raw[..]).unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/presets");
+        assert_eq!(r.query, "kind=models");
+        assert_eq!(r.body, "");
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],                                  // no path
+            &b"GET /x SPDY/3\r\n\r\n"[..],                            // bad protocol
+            &b"GET /x HTTP/1.1\r\nbroken header\r\n\r\n"[..],         // no colon
+            &b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..], // bad length
+            &b"POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort"[..], // EOF mid-body
+            &b""[..],                                                 // EOF immediately
+        ] {
+            assert!(read_request(&mut &raw[..]).is_err(), "{:?}", String::from_utf8_lossy(raw));
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_body_declaration() {
+        let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(read_request(&mut raw.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_through_request_parser_shape() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", "{\"ok\":true}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("{\"ok\":true}"), "{text}");
+    }
+
+    #[test]
+    fn reason_phrases_cover_service_codes() {
+        for code in [200, 400, 404, 405, 408, 413, 500, 503] {
+            assert_ne!(reason(code), "Unknown", "code {code}");
+        }
+        assert_eq!(reason(299), "Unknown");
+    }
+}

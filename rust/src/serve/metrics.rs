@@ -1,0 +1,205 @@
+//! Server observability: request counters, a latency histogram, and an
+//! in-flight gauge, rendered as Prometheus text exposition (v0.0.4)
+//! together with the shared evaluation cache's counters.
+//!
+//! Everything is lock-free atomics except the per-`(endpoint, status)`
+//! request counts, which sit behind a mutexed `BTreeMap` — the map is
+//! touched once per request and its ordering makes `/metrics` output
+//! deterministic.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::query::cache::CacheStats;
+
+/// Histogram bucket upper bounds, in seconds. Spans sub-millisecond cache
+/// hits to multi-second cold grid searches.
+pub const LATENCY_BUCKETS: [f64; 11] =
+    [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5];
+
+/// Metric name prefix — every exported series starts with this.
+pub const PREFIX: &str = "fsdp_bw";
+
+/// Counters for one server instance. Shared via `Arc` between the accept
+/// loop, the workers, and the `/metrics` handler.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// `(endpoint label, status code)` → request count.
+    requests: Mutex<BTreeMap<(String, u16), u64>>,
+    /// Cumulative request latency histogram (all endpoints).
+    bucket_counts: [AtomicU64; LATENCY_BUCKETS.len()],
+    latency_count: AtomicU64,
+    /// Sum in microseconds (an atomic f64 is unavailable; µs granularity
+    /// keeps rounding error irrelevant at service latencies).
+    latency_sum_us: AtomicU64,
+    /// Requests currently being handled by a worker.
+    inflight: AtomicU64,
+    /// Connections rejected at the accept queue (backpressure 503s).
+    rejected: AtomicU64,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one handled request.
+    pub fn observe(&self, endpoint: &str, status: u16, seconds: f64) {
+        {
+            let mut req = self.requests.lock().expect("metrics poisoned");
+            *req.entry((endpoint.to_string(), status)).or_insert(0) += 1;
+        }
+        for (i, le) in LATENCY_BUCKETS.iter().enumerate() {
+            if seconds <= *le {
+                self.bucket_counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.latency_count.fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// RAII in-flight gauge: increments now, decrements on drop.
+    pub fn inflight_guard(&self) -> InflightGuard<'_> {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        InflightGuard { metrics: self }
+    }
+
+    /// Count one connection shed by accept-queue backpressure.
+    pub fn count_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total requests shed by backpressure so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Total requests recorded for `(endpoint, status)`.
+    pub fn requests_for(&self, endpoint: &str, status: u16) -> u64 {
+        let req = self.requests.lock().expect("metrics poisoned");
+        req.get(&(endpoint.to_string(), status)).copied().unwrap_or(0)
+    }
+
+    /// Render the Prometheus text exposition, combining the server's own
+    /// series with the shared evaluation cache's counters.
+    pub fn render(&self, cache: &CacheStats) -> String {
+        let mut out = String::new();
+
+        let _ = writeln!(out, "# HELP {PREFIX}_http_requests_total Requests handled, by endpoint and status code.");
+        let _ = writeln!(out, "# TYPE {PREFIX}_http_requests_total counter");
+        {
+            let req = self.requests.lock().expect("metrics poisoned");
+            for ((endpoint, status), count) in req.iter() {
+                let _ = writeln!(
+                    out,
+                    "{PREFIX}_http_requests_total{{endpoint=\"{endpoint}\",code=\"{status}\"}} {count}"
+                );
+            }
+        }
+
+        let _ = writeln!(out, "# HELP {PREFIX}_http_request_seconds Request latency histogram.");
+        let _ = writeln!(out, "# TYPE {PREFIX}_http_request_seconds histogram");
+        for (i, le) in LATENCY_BUCKETS.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "{PREFIX}_http_request_seconds_bucket{{le=\"{le}\"}} {}",
+                self.bucket_counts[i].load(Ordering::Relaxed)
+            );
+        }
+        let count = self.latency_count.load(Ordering::Relaxed);
+        let _ = writeln!(out, "{PREFIX}_http_request_seconds_bucket{{le=\"+Inf\"}} {count}");
+        let _ = writeln!(
+            out,
+            "{PREFIX}_http_request_seconds_sum {}",
+            self.latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6
+        );
+        let _ = writeln!(out, "{PREFIX}_http_request_seconds_count {count}");
+
+        let _ = writeln!(out, "# HELP {PREFIX}_http_inflight Requests currently being handled.");
+        let _ = writeln!(out, "# TYPE {PREFIX}_http_inflight gauge");
+        let _ = writeln!(out, "{PREFIX}_http_inflight {}", self.inflight.load(Ordering::Relaxed));
+
+        let _ = writeln!(out, "# HELP {PREFIX}_http_rejected_total Connections shed by accept-queue backpressure (503).");
+        let _ = writeln!(out, "# TYPE {PREFIX}_http_rejected_total counter");
+        let _ = writeln!(out, "{PREFIX}_http_rejected_total {}", self.rejected());
+
+        for (name, help, value, gauge) in [
+            ("eval_cache_hits_total", "Evaluations served from the shared cache.", cache.hits, false),
+            ("eval_cache_misses_total", "Evaluations computed (cache misses).", cache.misses, false),
+            ("eval_cache_coalesced_total", "Evaluations that waited on an identical in-flight computation.", cache.coalesced, false),
+            ("eval_cache_evictions_total", "Entries evicted by the capacity bound.", cache.evictions, false),
+            ("eval_cache_entries", "Entries currently cached.", cache.entries, true),
+            ("eval_cache_capacity", "Configured cache capacity bound.", cache.capacity, true),
+        ] {
+            let _ = writeln!(out, "# HELP {PREFIX}_{name} {help}");
+            let _ = writeln!(out, "# TYPE {PREFIX}_{name} {}", if gauge { "gauge" } else { "counter" });
+            let _ = writeln!(out, "{PREFIX}_{name} {value}");
+        }
+        out
+    }
+}
+
+/// Decrements the in-flight gauge when dropped.
+pub struct InflightGuard<'a> {
+    metrics: &'a ServeMetrics,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.metrics.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_accumulates_counts_and_buckets() {
+        let m = ServeMetrics::new();
+        m.observe("plan", 200, 0.002);
+        m.observe("plan", 200, 0.2);
+        m.observe("plan", 400, 0.0005);
+        assert_eq!(m.requests_for("plan", 200), 2);
+        assert_eq!(m.requests_for("plan", 400), 1);
+        assert_eq!(m.requests_for("healthz", 200), 0);
+        let text = m.render(&CacheStats::default());
+        assert!(text.contains("fsdp_bw_http_requests_total{endpoint=\"plan\",code=\"200\"} 2"), "{text}");
+        assert!(text.contains("fsdp_bw_http_request_seconds_count 3"), "{text}");
+        // 0.0005 lands in every bucket; 0.2 only in le>=0.25.
+        assert!(text.contains("fsdp_bw_http_request_seconds_bucket{le=\"0.001\"} 1"), "{text}");
+        assert!(text.contains("fsdp_bw_http_request_seconds_bucket{le=\"+Inf\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn inflight_guard_tracks_nesting() {
+        let m = ServeMetrics::new();
+        {
+            let _a = m.inflight_guard();
+            let _b = m.inflight_guard();
+            assert!(m.render(&CacheStats::default()).contains("fsdp_bw_http_inflight 2"));
+        }
+        assert!(m.render(&CacheStats::default()).contains("fsdp_bw_http_inflight 0"));
+    }
+
+    #[test]
+    fn cache_counters_exported() {
+        let m = ServeMetrics::new();
+        let stats = CacheStats { hits: 7, misses: 3, coalesced: 2, evictions: 1, entries: 3, capacity: 64 };
+        let text = m.render(&stats);
+        for line in [
+            "fsdp_bw_eval_cache_hits_total 7",
+            "fsdp_bw_eval_cache_misses_total 3",
+            "fsdp_bw_eval_cache_coalesced_total 2",
+            "fsdp_bw_eval_cache_evictions_total 1",
+            "fsdp_bw_eval_cache_entries 3",
+            "fsdp_bw_eval_cache_capacity 64",
+        ] {
+            assert!(text.contains(line), "missing {line:?} in:\n{text}");
+        }
+        m.count_rejected();
+        assert_eq!(m.rejected(), 1);
+    }
+}

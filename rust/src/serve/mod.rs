@@ -1,0 +1,462 @@
+//! Planner-as-a-service: an HTTP/1.1 front-end for the [`crate::query`]
+//! Query/Planner API, sharing one cross-request evaluation cache.
+//!
+//! The paper's question — *what FSDP configuration fits my hardware?* —
+//! is asked repeatedly with overlapping scenarios, which is exactly what a
+//! long-running service exploits: the [`crate::query::EvalCache`] answers
+//! repeated points from memory and coalesces identical concurrent
+//! evaluations, so a warm service answers in microseconds what a cold CLI
+//! run recomputes from scratch.
+//!
+//! Dependency-light by construction: `std::net::TcpListener`, the
+//! in-tree [`crate::util::channel`] worker pool, and the in-tree JSON —
+//! no async runtime, no hyper. The serving model is
+//! connection-per-request (`Connection: close`), a bounded accept queue
+//! with 503 shedding when saturated, per-request socket timeouts, and
+//! graceful shutdown (in-flight and queued requests finish first).
+//!
+//! Endpoints:
+//!
+//! | route             | method | answer                                          |
+//! |-------------------|--------|-------------------------------------------------|
+//! | `/v1/plan`        | POST   | the [`crate::query::Frontier`] of the posted query (dialect text or a flat JSON object of the same keys) |
+//! | `/v1/presets`     | GET    | model/cluster presets + backends + dialect keys |
+//! | `/healthz`        | GET    | liveness                                        |
+//! | `/metrics`        | GET    | Prometheus text: request/latency/in-flight/backpressure + evaluation-cache counters |
+//!
+//! Start one with [`Server::start`] (binds, spawns, returns immediately);
+//! `fsdp-bw serve` is the CLI front-end, [`client`] the in-process one.
+
+pub mod client;
+pub mod http;
+pub mod metrics;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::scenario::KNOWN_KEYS;
+use crate::config::{ClusterConfig, ModelConfig};
+use crate::query::cache::{EvalCache, DEFAULT_CAPACITY};
+use crate::query::{Planner, Query};
+use crate::util::channel::{channel, Receiver, TrySendError};
+use crate::util::json::Json;
+
+use http::{read_request, write_response, Request};
+use metrics::ServeMetrics;
+
+const JSON: &str = "application/json";
+const PROMETHEUS: &str = "text/plain; version=0.0.4";
+
+/// Server tuning. The defaults suit tests and single-host deployments;
+/// every knob is surfaced by `fsdp-bw serve`.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests, benches).
+    pub addr: String,
+    /// Worker threads handling requests.
+    pub threads: usize,
+    /// Accepted connections queued ahead of the workers; beyond this the
+    /// accept loop sheds load with 503 instead of queueing unboundedly.
+    pub queue: usize,
+    /// Per-request socket read/write timeout.
+    pub timeout: Duration,
+    /// Shared evaluation-cache capacity (entries).
+    pub cache_capacity: usize,
+    /// Worker threads *inside* one plan's evaluation. Requests already
+    /// parallelize across server workers, so the default avoids
+    /// multiplying thread counts; raise it for a lightly-loaded server
+    /// answering huge single queries.
+    pub planner_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 4,
+            queue: 64,
+            timeout: Duration::from_secs(30),
+            cache_capacity: DEFAULT_CAPACITY,
+            planner_threads: 1,
+        }
+    }
+}
+
+/// A running planner service. Dropping (or [`Self::shutdown`]) stops the
+/// accept loop, lets queued and in-flight requests finish, and joins every
+/// thread.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    metrics: Arc<ServeMetrics>,
+    cache: Arc<EvalCache>,
+}
+
+impl Server {
+    /// Bind, spawn the accept loop + worker pool, and return immediately.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let metrics = Arc::new(ServeMetrics::new());
+        let cache = Arc::new(EvalCache::new(cfg.cache_capacity));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let (job_tx, job_rx) = channel::<TcpStream>(cfg.queue.max(1));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.threads.max(1) {
+            let rx: Receiver<TcpStream> = job_rx.clone();
+            let handler = Handler {
+                metrics: metrics.clone(),
+                cache: cache.clone(),
+                planner_threads: cfg.planner_threads.max(1),
+                timeout: cfg.timeout,
+            };
+            workers.push(std::thread::spawn(move || {
+                while let Ok(stream) = rx.recv() {
+                    // A panicking handler (e.g. an evaluator bug) must cost
+                    // one connection, not this worker thread — otherwise
+                    // `threads` bad requests silently kill the service.
+                    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || handler.handle_connection(stream),
+                    ));
+                    if caught.is_err() {
+                        handler.metrics.observe("panicked", 500, 0.0);
+                    }
+                }
+            }));
+        }
+        drop(job_rx);
+
+        let accept = {
+            let shutdown = shutdown.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        // Transient (ECONNABORTED) and persistent (EMFILE)
+                        // accept errors both land here; back off briefly so
+                        // a persistent one cannot busy-spin this core.
+                        Err(_) => {
+                            std::thread::sleep(Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    match job_tx.try_send(stream) {
+                        Ok(()) => {}
+                        // Backpressure: the queue is full — shed the
+                        // connection with 503 rather than let the backlog
+                        // (and every client's latency) grow without bound.
+                        // The write happens off-thread: a client that
+                        // won't read must not stall acceptance for the
+                        // healthy ones (the thread lives ≤ 1s). Builder
+                        // spawn, not thread::spawn: if thread creation
+                        // itself fails under extreme load, the connection
+                        // is dropped unanswered instead of panicking the
+                        // accept loop.
+                        Err(TrySendError::Full(mut stream)) => {
+                            metrics.count_rejected();
+                            let _ = std::thread::Builder::new()
+                                .name("serve-shed".to_string())
+                                .spawn(move || {
+                                    let _ = stream
+                                        .set_write_timeout(Some(Duration::from_secs(1)));
+                                    let _ = write_response(
+                                        &mut stream,
+                                        503,
+                                        JSON,
+                                        &error_body("server saturated; retry later"),
+                                    );
+                                });
+                        }
+                        Err(TrySendError::Disconnected(_)) => break,
+                    }
+                }
+                // job_tx drops here: workers drain the queue, then exit.
+            })
+        };
+
+        Ok(Server { addr, shutdown, accept: Some(accept), workers, metrics, cache })
+    }
+
+    /// The bound address (resolves the ephemeral port of `addr: …:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The server's metrics registry.
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
+    }
+
+    /// The shared cross-request evaluation cache.
+    pub fn cache(&self) -> &Arc<EvalCache> {
+        &self.cache
+    }
+
+    /// Stop accepting, finish queued + in-flight requests, join all
+    /// threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    /// Block until the server stops (it only stops via another handle
+    /// calling shutdown — or never, for the CLI foreground mode).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn stop(&mut self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the accept loop: it re-checks the flag per connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Per-worker request handling state.
+struct Handler {
+    metrics: Arc<ServeMetrics>,
+    cache: Arc<EvalCache>,
+    planner_threads: usize,
+    timeout: Duration,
+}
+
+impl Handler {
+    fn handle_connection(&self, mut stream: TcpStream) {
+        let _inflight = self.metrics.inflight_guard();
+        let start = Instant::now();
+        let _ = stream.set_read_timeout(Some(self.timeout));
+        let _ = stream.set_write_timeout(Some(self.timeout));
+        let req = match read_request(&mut stream) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ =
+                    write_response(&mut stream, 400, JSON, &error_body(&format!("{e:#}")));
+                self.metrics.observe("malformed", 400, start.elapsed().as_secs_f64());
+                return;
+            }
+        };
+        let (endpoint, status, content_type, body) = self.route(&req);
+        let _ = write_response(&mut stream, status, content_type, &body);
+        self.metrics.observe(endpoint, status, start.elapsed().as_secs_f64());
+    }
+
+    /// Dispatch one request: `(endpoint label, status, content type, body)`.
+    fn route(&self, req: &Request) -> (&'static str, u16, &'static str, String) {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                ("healthz", 200, JSON, "{\"status\": \"ok\"}".to_string())
+            }
+            ("GET", "/metrics") => {
+                ("metrics", 200, PROMETHEUS, self.metrics.render(&self.cache.stats()))
+            }
+            ("GET", "/v1/presets") => ("presets", 200, JSON, presets_json().pretty()),
+            ("POST", "/v1/plan") => match self.handle_plan(&req.body) {
+                Ok(body) => ("plan", 200, JSON, body),
+                Err(e) => ("plan", 400, JSON, error_body(&format!("{e:#}"))),
+            },
+            (_, "/healthz" | "/metrics" | "/v1/presets") => (
+                "method_not_allowed",
+                405,
+                JSON,
+                error_body(&format!("{} is GET-only", req.path)),
+            ),
+            (_, "/v1/plan") => {
+                ("method_not_allowed", 405, JSON, error_body("POST a query to /v1/plan"))
+            }
+            _ => (
+                "not_found",
+                404,
+                JSON,
+                error_body(&format!("no route for {} {}", req.method, req.path)),
+            ),
+        }
+    }
+
+    /// `POST /v1/plan`: body is query-dialect text or a flat JSON object
+    /// of the same keys; the response is the full Frontier JSON. Identical
+    /// queries hit the shared cache; identical *concurrent* queries
+    /// coalesce onto one evaluation per point.
+    fn handle_plan(&self, body: &str) -> Result<String> {
+        let text = plan_body_to_dialect(body)?;
+        let query = Query::parse(&text)?;
+        let planner = Planner::new(self.planner_threads).with_cache(self.cache.clone());
+        let frontier = planner.run(&query)?;
+        Ok(frontier.to_json())
+    }
+}
+
+/// Normalize a `/v1/plan` body to query-dialect text. JSON bodies are a
+/// flat object whose keys are exactly the dialect's keys (`model`,
+/// `sweep.seq_len`, `where.mfu`, `query.objective`, …) with scalar values.
+pub fn plan_body_to_dialect(body: &str) -> Result<String> {
+    if !body.trim_start().starts_with('{') {
+        return Ok(body.to_string());
+    }
+    let v = Json::parse(body).context("parsing JSON plan body")?;
+    let obj = v.as_obj().context("plan JSON body must be an object")?;
+    let mut out = String::new();
+    for (k, v) in obj {
+        let value = match v {
+            Json::Str(s) => s.clone(),
+            Json::Num(_) | Json::Bool(_) => v.dump(),
+            Json::Null | Json::Arr(_) | Json::Obj(_) => {
+                bail!("plan key {k:?} must have a scalar value (string, number or bool)")
+            }
+        };
+        ensure!(
+            !k.contains('\n') && !k.contains('#') && !k.contains('='),
+            "plan key {k:?} contains dialect delimiters"
+        );
+        ensure!(
+            !value.contains('\n') && !value.contains('#'),
+            "plan value for {k:?} contains dialect delimiters"
+        );
+        out.push_str(k);
+        out.push_str(" = ");
+        out.push_str(&value);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// `GET /v1/presets`: the registry a client needs to phrase queries —
+/// model/cluster presets, backend names, and every scenario-dialect key.
+pub fn presets_json() -> Json {
+    let models = Json::Arr(
+        ModelConfig::presets()
+            .into_iter()
+            .map(|m| {
+                Json::Obj(
+                    [
+                        ("name".to_string(), Json::Str(m.name.clone())),
+                        ("layers".to_string(), Json::Num(m.layers as f64)),
+                        ("hidden".to_string(), Json::Num(m.hidden as f64)),
+                        ("heads".to_string(), Json::Num(m.heads as f64)),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect(),
+    );
+    let clusters = Json::Arr(
+        ClusterConfig::presets()
+            .into_iter()
+            .map(|c| {
+                Json::Obj(
+                    [
+                        ("name".to_string(), Json::Str(c.name.clone())),
+                        ("total_gpus".to_string(), Json::Num(c.total_gpus() as f64)),
+                        ("inter_node_gbps".to_string(), Json::Num(c.inter_node_gbps)),
+                        (
+                            "gpu_mem_gib".to_string(),
+                            Json::Num(c.m_max() / crate::config::GIB),
+                        ),
+                    ]
+                    .into_iter()
+                    .collect(),
+                )
+            })
+            .collect(),
+    );
+    let backends = Json::Arr(
+        crate::eval::BACKEND_NAMES.iter().map(|b| Json::Str(b.to_string())).collect(),
+    );
+    let keys =
+        Json::Arr(KNOWN_KEYS.iter().map(|k| Json::Str(k.to_string())).collect());
+    Json::Obj(
+        [
+            ("models".to_string(), models),
+            ("clusters".to_string(), clusters),
+            ("backends".to_string(), backends),
+            ("scenario_keys".to_string(), keys),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+/// JSON error body (the only non-200 payload shape this service emits).
+fn error_body(message: &str) -> String {
+    Json::Obj([("error".to_string(), Json::Str(message.to_string()))].into_iter().collect())
+        .dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_plan_body_becomes_dialect_text() {
+        let text = plan_body_to_dialect(
+            r#"{"model": "13B", "batch": 1, "sweep.seq_len": "2048,4096",
+                "where.mfu": ">= 0.3", "query.prune": true}"#,
+        )
+        .unwrap();
+        let q = Query::parse(&text).unwrap();
+        assert_eq!(q.space.len(), 2);
+        assert_eq!(q.constraints.len(), 1);
+        assert!(q.prune);
+        // Dialect text passes through untouched.
+        assert_eq!(plan_body_to_dialect("model = 13B\n").unwrap(), "model = 13B\n");
+    }
+
+    #[test]
+    fn json_plan_body_rejects_non_scalars_and_delimiters() {
+        assert!(plan_body_to_dialect(r#"{"model": ["13B"]}"#).is_err());
+        assert!(plan_body_to_dialect(r#"{"model": null}"#).is_err());
+        assert!(plan_body_to_dialect(r#"{"model": {"a": 1}}"#).is_err());
+        assert!(plan_body_to_dialect("{\"model\": \"13B\\n_gpus = 9\"}").is_err());
+        assert!(plan_body_to_dialect(r#"{"model": "13B # sneaky"}"#).is_err());
+        assert!(plan_body_to_dialect("{not json").is_err());
+        // Duplicate keys error like the dialect does, instead of last-wins.
+        assert!(plan_body_to_dialect(r#"{"n_gpus": 8, "n_gpus": 64}"#).is_err());
+    }
+
+    #[test]
+    fn presets_document_models_clusters_backends_keys() {
+        let v = presets_json();
+        assert!(!v.get("models").unwrap().as_arr().unwrap().is_empty());
+        assert!(!v.get("clusters").unwrap().as_arr().unwrap().is_empty());
+        assert_eq!(v.get("backends").unwrap().as_arr().unwrap().len(), 5);
+        let keys = v.get("scenario_keys").unwrap().as_arr().unwrap();
+        assert!(keys.iter().any(|k| k.as_str().unwrap() == "model"));
+    }
+
+    #[test]
+    fn error_body_is_json() {
+        let v = Json::parse(&error_body("boom \"quoted\"")).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "boom \"quoted\"");
+    }
+}

@@ -33,6 +33,15 @@ pub struct SendError;
 #[derive(Debug, PartialEq, Eq)]
 pub struct RecvError;
 
+/// Why a [`Sender::try_send`] returned the item instead of queueing it.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    /// The channel is at capacity right now (only possible when bounded).
+    Full(T),
+    /// Every receiver is gone; the item can never be delivered.
+    Disconnected(T),
+}
+
 /// Create a channel; `capacity = 0` means unbounded.
 pub fn channel<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
     let inner = Arc::new(Inner {
@@ -59,6 +68,22 @@ impl<T> Sender<T> {
             }
             st = self.0.not_full.wait(st).expect("channel poisoned");
         }
+    }
+
+    /// Non-blocking send: queues the item or returns it immediately with
+    /// the reason. The backpressure primitive — a server's accept loop
+    /// sheds load on [`TrySendError::Full`] instead of stalling.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.0.queue.lock().expect("channel poisoned");
+        if st.receivers == 0 {
+            return Err(TrySendError::Disconnected(item));
+        }
+        if self.0.capacity != 0 && st.items.len() >= self.0.capacity {
+            return Err(TrySendError::Full(item));
+        }
+        st.items.push_back(item);
+        self.0.not_empty.notify_one();
+        Ok(())
     }
 }
 
@@ -174,6 +199,115 @@ mod tests {
         let (tx, rx) = channel::<u8>(0);
         drop(tx);
         assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn try_send_full_and_disconnected() {
+        let (tx, rx) = channel::<u8>(1);
+        assert_eq!(tx.try_send(1), Ok(()));
+        assert_eq!(tx.try_send(2), Err(TrySendError::Full(2)));
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(tx.try_send(3), Ok(()));
+        drop(rx);
+        assert_eq!(tx.try_send(4), Err(TrySendError::Disconnected(4)));
+        // Unbounded channels are never Full.
+        let (tx, rx) = channel::<u8>(0);
+        for i in 0..1000 {
+            assert_eq!(tx.try_send(i as u8), Ok(()));
+        }
+        drop(rx);
+        assert_eq!(tx.try_send(0), Err(TrySendError::Disconnected(0)));
+    }
+
+    /// Many producers × many consumers over a tiny bounded buffer: every
+    /// item is delivered exactly once, with senders and receivers blocking
+    /// against each other the whole way — the server's accept-queue and
+    /// worker-pool contention pattern.
+    #[test]
+    fn contended_many_producers_many_consumers_bounded() {
+        const PRODUCERS: usize = 8;
+        const CONSUMERS: usize = 8;
+        const PER_PRODUCER: usize = 500;
+        let (tx, rx) = channel::<usize>(2);
+        let mut producers = Vec::new();
+        for p in 0..PRODUCERS {
+            let tx = tx.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..PER_PRODUCER {
+                    tx.send(p * PER_PRODUCER + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut consumers = Vec::new();
+        for _ in 0..CONSUMERS {
+            let rx = rx.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for h in producers {
+            h.join().unwrap();
+        }
+        let mut all: Vec<usize> = Vec::new();
+        for h in consumers {
+            all.extend(h.join().unwrap());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..PRODUCERS * PER_PRODUCER).collect::<Vec<_>>());
+    }
+
+    /// Dropping the last sender while consumers are parked in recv() must
+    /// wake all of them with RecvError, after the queue drains.
+    #[test]
+    fn sender_drop_wakes_blocked_receivers() {
+        let (tx, rx) = channel::<usize>(0);
+        tx.send(7).unwrap();
+        let mut consumers = Vec::new();
+        for _ in 0..4 {
+            let rx = rx.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        // Give consumers time to park (at most one holds the queued item).
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(tx);
+        let mut all = Vec::new();
+        for h in consumers {
+            all.extend(h.join().unwrap());
+        }
+        assert_eq!(all, vec![7], "exactly one consumer got the item; all exited");
+    }
+
+    /// Dropping the last receiver while senders are parked on a full
+    /// bounded buffer must wake all of them with SendError.
+    #[test]
+    fn receiver_drop_wakes_blocked_senders() {
+        let (tx, rx) = channel::<usize>(1);
+        tx.send(0).unwrap(); // fill the buffer
+        let mut senders = Vec::new();
+        for i in 0..4 {
+            let tx = tx.clone();
+            senders.push(std::thread::spawn(move || tx.send(i)));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(rx);
+        let results: Vec<Result<(), SendError>> =
+            senders.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(
+            results.iter().all(|r| *r == Err(SendError)),
+            "every parked sender must observe disconnection: {results:?}"
+        );
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! Minimal JSON: a value type, a recursive-descent parser, and an emitter.
 //!
 //! The offline build has no serde, so the artifact manifest
-//! (`artifacts/manifest.json`, written by `python/compile/aot.py`) and the
-//! experiment reports are handled by this ~300-line substrate. It supports
-//! the full JSON grammar except `\uXXXX` surrogate pairs beyond the BMP.
+//! (`artifacts/manifest.json`, written by `python/compile/aot.py`), the
+//! experiment reports, and the `serve` HTTP bodies are handled by this
+//! small substrate. It supports the full JSON grammar: `\uXXXX` escapes
+//! include surrogate pairs beyond the BMP (lone surrogates are rejected),
+//! and non-BMP characters are emitted as surrogate-pair escapes, so any
+//! JSON client can parse the output. One deliberate strictness: duplicate
+//! object keys are an error, not last-wins — a dropped key is almost
+//! always a caller's mistake.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -205,6 +210,13 @@ fn write_escaped(out: &mut String, s: &str) {
             c if (c as u32) < 0x20 => {
                 let _ = write!(out, "\\u{:04x}", c as u32);
             }
+            // Non-BMP: emit the UTF-16 surrogate pair, which every JSON
+            // parser must accept (raw UTF-8 beyond the BMP trips up
+            // ASCII-only transports).
+            c if (c as u32) > 0xFFFF => {
+                let v = c as u32 - 0x10000;
+                let _ = write!(out, "\\u{:04x}\\u{:04x}", 0xD800 + (v >> 10), 0xDC00 + (v & 0x3FF));
+            }
             c => out.push(c),
         }
     }
@@ -273,6 +285,12 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.expect(b':')?;
             let val = self.value()?;
+            // Last-wins would silently drop data (RFC 8259 only says keys
+            // SHOULD be unique); like the scenario dialect, we treat a
+            // duplicate as the mistake it almost certainly is.
+            if map.contains_key(&key) {
+                bail!("duplicate object key {key:?}");
+            }
             map.insert(key, val);
             self.skip_ws();
             match self.peek() {
@@ -330,13 +348,33 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            let hex = self
-                                .bytes
-                                .get(self.pos + 1..self.pos + 5)
-                                .ok_or_else(|| anyhow!("truncated \\u escape"))?;
-                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
-                            s.push(char::from_u32(code).ok_or_else(|| anyhow!("bad \\u escape"))?);
+                            let hi = self.hex4(self.pos + 1)?;
                             self.pos += 4;
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: the low half must follow
+                                // immediately as another \uXXXX escape.
+                                if self.bytes.get(self.pos + 1).copied() != Some(b'\\')
+                                    || self.bytes.get(self.pos + 2).copied() != Some(b'u')
+                                {
+                                    bail!(
+                                        "unpaired high surrogate \\u{hi:04x} at offset {}",
+                                        self.pos
+                                    );
+                                }
+                                let lo = self.hex4(self.pos + 3)?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!(
+                                        "\\u{hi:04x} must be followed by a low surrogate, got \\u{lo:04x}"
+                                    );
+                                }
+                                self.pos += 6;
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                bail!("unpaired low surrogate \\u{hi:04x} at offset {}", self.pos)
+                            } else {
+                                hi
+                            };
+                            s.push(char::from_u32(code).ok_or_else(|| anyhow!("bad \\u escape"))?);
                         }
                         other => bail!("bad escape {other:?}"),
                     }
@@ -351,6 +389,16 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits at byte offset `at` (one half of a `\uXXXX` escape).
+    fn hex4(&self, at: usize) -> Result<u32> {
+        let hex =
+            self.bytes.get(at..at + 4).ok_or_else(|| anyhow!("truncated \\u escape"))?;
+        if !hex.iter().all(|b| b.is_ascii_hexdigit()) {
+            bail!("bad \\u escape digits at offset {at}");
+        }
+        Ok(u32::from_str_radix(std::str::from_utf8(hex)?, 16)?)
     }
 
     fn number(&mut self) -> Result<Json> {
@@ -408,6 +456,14 @@ mod tests {
     }
 
     #[test]
+    fn rejects_duplicate_object_keys() {
+        let err = Json::parse(r#"{"a": 1, "b": 2, "a": 3}"#).unwrap_err().to_string();
+        assert!(err.contains("duplicate object key \"a\""), "{err}");
+        // Same key in sibling objects is fine.
+        assert!(Json::parse(r#"{"x": {"a": 1}, "y": {"a": 2}}"#).is_ok());
+    }
+
+    #[test]
     fn unicode_and_escapes() {
         let v = Json::parse(r#""héllo \"q\" \\ /""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "héllo \"q\" \\ /");
@@ -428,5 +484,58 @@ mod tests {
     fn integers_emit_without_fraction() {
         assert_eq!(Json::Num(3.0).dump(), "3");
         assert_eq!(Json::Num(3.25).dump(), "3.25");
+    }
+
+    #[test]
+    fn bmp_u_escapes_decode() {
+        assert_eq!(
+            Json::parse(r#""\u0041\u00e9\u2603""#).unwrap(),
+            Json::Str("A\u{e9}\u{2603}".into())
+        );
+        // Uppercase hex digits are fine.
+        assert_eq!(Json::parse(r#""\u00E9""#).unwrap(), Json::Str("\u{e9}".into()));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_beyond_the_bmp() {
+        // U+1F600 and U+1F0A1, spelled as UTF-16 surrogate pairs.
+        assert_eq!(Json::parse(r#""\ud83d\ude00""#).unwrap(), Json::Str("\u{1F600}".into()));
+        assert_eq!(
+            Json::parse(r#""x\ud83c\udca1y""#).unwrap(),
+            Json::Str("x\u{1F0A1}y".into())
+        );
+        // The extremes of the supplementary planes.
+        assert_eq!(Json::parse(r#""\ud800\udc00""#).unwrap(), Json::Str("\u{10000}".into()));
+        assert_eq!(Json::parse(r#""\udbff\udfff""#).unwrap(), Json::Str("\u{10FFFF}".into()));
+    }
+
+    #[test]
+    fn lone_or_malformed_surrogates_rejected() {
+        for src in [
+            r#""\ud83d""#,         // lone high at end of string
+            r#""\ud83d rest""#,    // high followed by plain text
+            r#""\ud83d\n""#,       // high followed by a non-\u escape
+            r#""\ud83dA""#,   // high followed by a plain character
+            r#""\ude00""#,         // lone low
+            r#""\ud83d\ud83d""#,   // high followed by another high
+            r#""\uZZZZ""#,         // not hex
+            r#""\u00""#,           // truncated
+        ] {
+            assert!(Json::parse(src).is_err(), "must reject {src}");
+        }
+    }
+
+    #[test]
+    fn non_bmp_emits_as_surrogate_pairs_and_roundtrips() {
+        let s = Json::Str("a\u{1F600}b\u{10FFFF}".into());
+        let dumped = s.dump();
+        assert_eq!(dumped, r#""a\ud83d\ude00b\udbff\udfff""#);
+        assert!(dumped.is_ascii(), "non-BMP output is escape-only: {dumped}");
+        assert_eq!(Json::parse(&dumped).unwrap(), s);
+        // BMP non-ASCII still passes through raw (compact, valid JSON).
+        assert_eq!(Json::Str("héllo ☃".into()).dump(), "\"héllo ☃\"");
+        // Raw non-BMP input also roundtrips through parse → dump → parse.
+        let raw = Json::parse("\"direct 🂡 utf8\"").unwrap();
+        assert_eq!(Json::parse(&raw.dump()).unwrap(), raw);
     }
 }

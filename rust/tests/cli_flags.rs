@@ -1,0 +1,96 @@
+//! The per-subcommand flag table in `main.rs` must *reject* anything it
+//! would otherwise silently ignore: flags belonging to other subcommands,
+//! misspelled flags, options on `list`, and stray positional arguments.
+//! Each case asserts both the nonzero exit and the message.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_fsdp-bw"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+/// `args` must fail, mentioning `needle` on stderr.
+fn assert_rejected(args: &[&str], needle: &str) {
+    let (ok, _out, err) = run(args);
+    assert!(!ok, "`fsdp-bw {}` must exit nonzero", args.join(" "));
+    assert!(
+        err.contains(needle),
+        "`fsdp-bw {}` stderr must mention {needle:?}, got:\n{err}",
+        args.join(" ")
+    );
+}
+
+#[test]
+fn foreign_flags_are_rejected_not_ignored() {
+    // The ISSUE's motivating cases: plan-only flags on bounds/simulate.
+    assert_rejected(&["bounds", "--no-prune"], "unknown option --no-prune");
+    assert_rejected(&["bounds", "--check-prune"], "unknown option --check-prune");
+    assert_rejected(&["simulate", "--no-prune"], "unknown option --no-prune");
+    assert_rejected(&["simulate", "--check-prune"], "unknown option --check-prune");
+    // And a few more cross-subcommand strays.
+    assert_rejected(&["gridsearch", "--empty-cache"], "unknown option --empty-cache");
+    assert_rejected(&["bounds", "--batch", "2"], "unknown option --batch");
+    assert_rejected(&["experiment", "fig1", "--csv"], "unknown option --csv");
+    assert_rejected(&["scenario", "x.scn", "--threads", "4"], "unknown option --threads");
+}
+
+#[test]
+fn list_rejects_any_option() {
+    assert_rejected(&["list", "--json"], "unknown option --json");
+    assert_rejected(&["list", "--verbose"], "unknown option --verbose");
+}
+
+#[test]
+fn misspelled_flags_are_rejected() {
+    assert_rejected(&["simulate", "--modle", "13B"], "unknown option --modle");
+    assert_rejected(&["plan", "x.scn", "--top_k", "3"], "unknown option --top_k");
+    assert_rejected(&["serve", "--adress", "127.0.0.1:0"], "unknown option --adress");
+}
+
+#[test]
+fn stray_positionals_are_rejected() {
+    assert_rejected(&["bounds", "extra"], "unexpected argument");
+    assert_rejected(&["list", "everything"], "unexpected argument");
+    assert_rejected(&["sweep", "a.scn", "b.scn"], "unexpected argument");
+    assert_rejected(&["experiment", "fig1", "fig2"], "unexpected argument");
+}
+
+#[test]
+fn unknown_command_and_missing_args_still_error() {
+    assert_rejected(&["warp"], "unknown command");
+    assert_rejected(&["plan"], "plan needs a file path");
+    assert_rejected(&["scenario"], "scenario needs a file path");
+    assert_rejected(&["experiment"], "experiment needs an id");
+}
+
+#[test]
+fn leading_options_still_select_the_command() {
+    // The command is found by name, not by "first non-flag token" — a
+    // leading option's value must not be mistaken for the command.
+    let (ok, out, err) = run(&["--model", "13B", "bounds", "--gpus", "8"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("backend  : bounds"), "{out}");
+    // But a stray positional ahead of the command is not a command.
+    assert_rejected(&["x.scn", "plan"], "unknown command \"x.scn\"");
+}
+
+#[test]
+fn valid_invocations_still_pass() {
+    let (ok, out, err) = run(&["bounds", "--model", "13B", "--gpus", "8", "--json"]);
+    assert!(ok, "stderr: {err}");
+    assert!(out.contains("\"bounds\""), "{out}");
+    let (ok, out, _) = run(&["simulate", "--model", "1.3B", "--gpus", "8", "--empty-cache"]);
+    assert!(ok);
+    assert!(out.contains("backend  : simulated"), "{out}");
+    let (ok, out, _) = run(&["list"]);
+    assert!(ok);
+    assert!(out.contains("clusters:"), "{out}");
+}

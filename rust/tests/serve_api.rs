@@ -1,0 +1,219 @@
+//! End-to-end tests of the planner service: a real server on an ephemeral
+//! port, exercised through real sockets via [`fsdp_bw::serve::client`].
+//!
+//! The acceptance properties of the serving subsystem live here:
+//! * identical sequential plans → byte-identical Frontier JSON, the second
+//!   served from the shared evaluation cache;
+//! * identical *concurrent* plans → coalesced (evaluations performed stay
+//!   at one per unique point, not N×);
+//! * backpressure → 503 instead of unbounded queueing;
+//! * graceful shutdown → queued work finishes, every thread joins.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use fsdp_bw::serve::{client, ServeConfig, Server};
+use fsdp_bw::util::json::Json;
+
+fn start(threads: usize, queue: usize, timeout_ms: u64) -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads,
+        queue,
+        timeout: Duration::from_millis(timeout_ms),
+        ..ServeConfig::default()
+    })
+    .expect("server starts on an ephemeral port")
+}
+
+/// A small but non-trivial query: three unique simulated points.
+const PLAN: &str = "model = 13B\nbatch = 1\nsweep.seq_len = 2048,4096,8192\n\
+                    query.backend = simulated\n";
+
+/// Value of a `name value` line in Prometheus text output.
+fn metric(text: &str, name: &str) -> f64 {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Some(v) = rest.strip_prefix(' ') {
+                return v.trim().parse().unwrap_or(f64::NAN);
+            }
+        }
+    }
+    panic!("metric {name} not found in:\n{text}");
+}
+
+#[test]
+fn healthz_presets_and_error_routes() {
+    let server = start(2, 16, 10_000);
+    let addr = server.addr().to_string();
+
+    let health = client::get(&addr, "/healthz").unwrap();
+    assert_eq!(health.status, 200);
+    assert_eq!(
+        Json::parse(&health.body).unwrap().get("status").unwrap().as_str().unwrap(),
+        "ok"
+    );
+
+    let presets = client::get(&addr, "/v1/presets").unwrap();
+    assert_eq!(presets.status, 200);
+    assert_eq!(presets.header("content-type"), Some("application/json"));
+    let v = Json::parse(&presets.body).unwrap();
+    assert!(!v.get("models").unwrap().as_arr().unwrap().is_empty());
+    assert!(!v.get("clusters").unwrap().as_arr().unwrap().is_empty());
+    assert!(v
+        .get("scenario_keys")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .any(|k| k.as_str().unwrap() == "n_gpus"));
+
+    // Unknown route, wrong methods, malformed body: structured errors.
+    assert_eq!(client::get(&addr, "/nope").unwrap().status, 404);
+    assert_eq!(client::post(&addr, "/healthz", "").unwrap().status, 405);
+    assert_eq!(client::get(&addr, "/v1/plan").unwrap().status, 405);
+    let bad = client::post(&addr, "/v1/plan", "modle = 13B\n").unwrap();
+    assert_eq!(bad.status, 400);
+    let err = Json::parse(&bad.body).unwrap();
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("modle"));
+
+    // Every route above is visible in /metrics.
+    let m = client::get(&addr, "/metrics").unwrap();
+    assert_eq!(m.status, 200);
+    assert!(m.header("content-type").unwrap().starts_with("text/plain"), "{:?}", m.headers);
+    assert!(metric(&m.body, "fsdp_bw_http_requests_total{endpoint=\"healthz\",code=\"200\"}") >= 1.0);
+    assert!(metric(&m.body, "fsdp_bw_http_requests_total{endpoint=\"plan\",code=\"400\"}") >= 1.0);
+    assert!(metric(&m.body, "fsdp_bw_http_requests_total{endpoint=\"not_found\",code=\"404\"}") >= 1.0);
+    let inflight = metric(&m.body, "fsdp_bw_http_inflight");
+    assert!(inflight >= 1.0, "the /metrics request itself is in flight: {inflight}");
+
+    server.shutdown();
+}
+
+#[test]
+fn identical_sequential_plans_are_byte_identical_and_cache_served() {
+    let server = start(2, 16, 30_000);
+    let addr = server.addr().to_string();
+
+    let r1 = client::post(&addr, "/v1/plan", PLAN).unwrap();
+    assert_eq!(r1.status, 200, "{}", r1.body);
+    let stats1 = server.cache().stats();
+    assert_eq!(stats1.misses, 3, "three unique points evaluated: {stats1:?}");
+    assert_eq!(stats1.hits, 0, "{stats1:?}");
+
+    let r2 = client::post(&addr, "/v1/plan", PLAN).unwrap();
+    assert_eq!(r2.status, 200);
+    assert_eq!(r1.body, r2.body, "identical queries must serialize byte-identically");
+    let stats2 = server.cache().stats();
+    assert_eq!(stats2.misses, 3, "no new evaluations for the repeat: {stats2:?}");
+    assert_eq!(stats2.hits, 3, "every repeated point served from the shared cache");
+
+    // The frontier is well-formed and carries the provenance counters.
+    let v = Json::parse(&r1.body).unwrap();
+    assert_eq!(v.get("counters").unwrap().get("points").unwrap().as_usize().unwrap(), 3);
+    assert!(!v.get("frontier").unwrap().as_arr().unwrap().is_empty());
+
+    // And /metrics reports the cache's view of the same story.
+    let m = client::get(&addr, "/metrics").unwrap().body;
+    assert_eq!(metric(&m, "fsdp_bw_eval_cache_hits_total"), 3.0, "{m}");
+    assert_eq!(metric(&m, "fsdp_bw_eval_cache_misses_total"), 3.0, "{m}");
+    assert_eq!(metric(&m, "fsdp_bw_eval_cache_entries"), 3.0, "{m}");
+
+    server.shutdown();
+}
+
+#[test]
+fn json_body_is_equivalent_to_dialect_body() {
+    let server = start(2, 16, 30_000);
+    let addr = server.addr().to_string();
+
+    let dialect = client::post(&addr, "/v1/plan", PLAN).unwrap();
+    let json_body = r#"{
+        "model": "13B", "batch": 1,
+        "sweep.seq_len": "2048,4096,8192",
+        "query.backend": "simulated"
+    }"#;
+    let json = client::post(&addr, "/v1/plan", json_body).unwrap();
+    assert_eq!(dialect.status, 200, "{}", dialect.body);
+    assert_eq!(json.status, 200, "{}", json.body);
+    assert_eq!(dialect.body, json.body, "one query, two spellings, one answer");
+
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_identical_plans_coalesce_evaluations() {
+    let n = 6;
+    let server = start(n, 2 * n, 30_000);
+    let addr = server.addr().to_string();
+
+    let bodies: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let r = client::post(&addr, "/v1/plan", PLAN).unwrap();
+                    assert_eq!(r.status, 200, "{}", r.body);
+                    r.body
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for b in &bodies[1..] {
+        assert_eq!(b, &bodies[0], "coalesced responses must be byte-identical");
+    }
+    let stats = server.cache().stats();
+    // The acceptance bound: N identical concurrent requests perform fewer
+    // evaluations than N × points — in fact exactly one per unique point.
+    assert_eq!(stats.misses, 3, "evaluations performed: {stats:?}");
+    assert_eq!(
+        stats.hits + stats.coalesced,
+        (n as u64 - 1) * 3,
+        "every other lookup was served or coalesced: {stats:?}"
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn saturated_accept_queue_sheds_with_503() {
+    // One worker, one queue slot, short IO timeout.
+    let server = start(1, 1, 500);
+    let addr = server.addr().to_string();
+
+    // Occupy the worker: a request that never finishes arriving.
+    let mut stall = TcpStream::connect(&addr).unwrap();
+    stall
+        .write_all(b"POST /v1/plan HTTP/1.1\r\nContent-Length: 100\r\n\r\n")
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(150));
+
+    // Fill the single queue slot with a real (unread) request.
+    let mut queued = TcpStream::connect(&addr).unwrap();
+    queued.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+
+    // The next connection must be shed immediately by the accept loop.
+    let shed = client::get(&addr, "/healthz").unwrap();
+    assert_eq!(shed.status, 503, "{}", shed.body);
+    assert!(server.metrics().rejected() >= 1);
+
+    drop(stall);
+    drop(queued);
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_joins_and_stops_accepting() {
+    let server = start(2, 8, 5_000);
+    let addr = server.addr().to_string();
+    assert_eq!(client::get(&addr, "/healthz").unwrap().status, 200);
+
+    server.shutdown(); // joins accept loop + workers; hangs = test failure
+
+    // The listener is gone: connecting or speaking HTTP now fails.
+    assert!(client::get(&addr, "/healthz").is_err());
+}
