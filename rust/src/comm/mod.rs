@@ -28,6 +28,18 @@
 //! [`CommEngine::analytical`] (ε exactly as configured — 0 in the paper's
 //! simulations — and no straggler tax) and [`CommEngine::simulated`]
 //! (realistic per-hop latency floor, straggler tax at scale).
+//!
+//! **Paper-equation map.** [`Collective::transfer_bound`] is the paper's
+//! **Eq 5** (parameter all-gather transfer time
+//! `T_transfer = (N−1)/N · P·b / S_volume`), generalized per algorithm:
+//! ring reproduces Eq 5 exactly, tree and hierarchical replace the
+//! `(N−1)/N` hop structure with their own. The effective per-GPU
+//! bandwidth `S_volume` that Eq 5 divides by is [`Topology`]'s
+//! bottleneck-link share, and everything downstream inherits the
+//! numbering: the Eq 9 overlapped step time and Eq 10 comm/compute ratios
+//! ([`crate::analysis::step`]) and the Eq 13–15 bandwidth-capped maxima
+//! ([`crate::analysis::bounds`]) all price communication through
+//! [`CommEngine`].
 
 mod collective;
 mod engine;

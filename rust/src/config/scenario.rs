@@ -92,6 +92,48 @@ pub fn known_key(key: &str) -> bool {
     KNOWN_KEYS.contains(&key)
 }
 
+/// One-line documentation for every scenario key, in [`KNOWN_KEYS`] order —
+/// the reference manual (`fsdp-bw docs`) renders this table, and a test
+/// asserts it covers exactly the known keys, so documentation cannot drift
+/// from the dialect.
+pub const KEY_DOCS: &[(&str, &str)] = &[
+    ("model", "Model preset name (`fsdp-bw list` prints them), e.g. `13B`"),
+    ("cluster", "Cluster preset name; defaults to `40GB-A100-200Gbps`"),
+    ("n_gpus", "GPUs the job uses (≤ the cluster's total); default 8"),
+    ("seq_len", "Context length in tokens; default 2048"),
+    ("batch", "Per-GPU micro-batch size; default 1"),
+    ("gamma", "Activation-checkpointing fraction γ ∈ [0, 1]; default 0"),
+    ("zero_stage", "Sharding stage: `3` or `1/2` (also `zero-3` / `zero-1/2`); default 3"),
+    ("precision", "`bf16`, `fp16` or `fp32`; default bf16"),
+    ("empty_cache", "Empty the allocator cache each step (`true`/`false`); default false"),
+    ("alpha", "Assumed kernel efficiency α̂_HFU ∈ (0, 1] for analytical backends"),
+    ("model.name", "Custom model label (with `model.layers` + `model.hidden`)"),
+    ("model.layers", "Custom model: transformer layer count L"),
+    ("model.hidden", "Custom model: hidden size H"),
+    ("model.heads", "Custom model: attention heads (must divide hidden); default 8"),
+    ("model.vocab", "Custom model: vocabulary size"),
+    ("model.ffn_ratio", "Custom model: FFN expansion ratio; default 4"),
+    ("cluster.name", "Label for a fully custom cluster"),
+    ("cluster.nodes", "Override: node count"),
+    ("cluster.gpus_per_node", "Override: GPUs per node"),
+    ("cluster.inter_node_gbps", "Override: per-GPU inter-node bandwidth, Gbps"),
+    ("cluster.intra_node_gbps", "Override: per-GPU intra-node bandwidth, Gbps"),
+    ("cluster.latency", "Override: base network latency, seconds"),
+    ("cluster.reserved_gib", "Override: per-GPU memory reserved by the framework, GiB"),
+    ("cluster.gpu_mem_gib", "Override: GPU memory capacity, GiB"),
+    ("cluster.peak_tflops", "Override: GPU peak compute, TFLOP/s"),
+    ("cluster.gpu_name", "Override: GPU model label"),
+    (
+        "cluster.topology.collective",
+        "Collective algorithm: `ring`, `tree`, `hierarchical` or `auto` (min-cost)",
+    ),
+    ("cluster.topology.intra_latency", "Per-hop intra-node latency, seconds"),
+    ("cluster.topology.inter_latency", "Per-hop inter-node latency, seconds"),
+    ("cluster.sim_latency", "Simulator per-hop latency floor when ε = 0, seconds"),
+    ("cluster.straggler.knee", "Straggler calibration: GPU count where slowdown starts"),
+    ("cluster.straggler.slope", "Straggler calibration: slowdown slope ∈ [0, 1] per decade"),
+];
+
 /// A complete scenario: what to train, on what, and how.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
@@ -473,6 +515,16 @@ mod tests {
     fn duplicate_keys_rejected() {
         let err = parse_kv("a = 1\na = 2\n").unwrap_err().to_string();
         assert!(err.contains("duplicate key"), "{err}");
+    }
+
+    #[test]
+    fn key_docs_cover_exactly_the_known_keys() {
+        let documented: Vec<&str> = KEY_DOCS.iter().map(|(k, _)| *k).collect();
+        assert_eq!(documented, KNOWN_KEYS, "KEY_DOCS must list KNOWN_KEYS, in order");
+        for (k, doc) in KEY_DOCS {
+            assert!(!doc.is_empty(), "key {k:?} lacks documentation");
+            assert!(!doc.contains('|'), "key {k:?} doc breaks the markdown table");
+        }
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! The generated reference manual: `fsdp-bw docs` renders
+//! `docs/REFERENCE.md` from the binary's own registries, so the manual can
+//! never drift from the code — CI regenerates it and fails on any diff.
+//!
+//! Single sources of truth consumed here:
+//!
+//! * [`CMD_SPECS`] — every subcommand's complete CLI surface (this table
+//!   also *enforces* the CLI: `main` rejects flags outside it);
+//! * [`crate::config::scenario::KEY_DOCS`] — the scenario dialect;
+//! * [`crate::eval::sweep`]'s axis grammar and caps;
+//! * [`crate::query::QUERY_KEY_DOCS`] / [`crate::query::OBJECTIVE_DOCS`] /
+//!   [`crate::query::constraint::METRIC_DOCS`] — the query dialect;
+//! * [`crate::eval::backends::BACKEND_DOCS`] — the evaluator backends;
+//! * [`crate::serve::ENDPOINTS`] — the HTTP API;
+//! * [`crate::serve::metrics::SERIES`] — every `/metrics` series.
+//!
+//! Each of those tables carries a test pinning it to the code it
+//! documents, so the chain `code → table → manual` is drift-checked at
+//! both links.
+
+use crate::config::scenario::KEY_DOCS;
+use crate::eval::backends::BACKEND_DOCS;
+use crate::eval::sweep::{MAX_AXIS_VALUES, MAX_POINTS};
+use crate::query::constraint::METRIC_DOCS;
+use crate::query::stream::DEFAULT_CHUNK;
+use crate::query::{OBJECTIVE_DOCS, QUERY_KEY_DOCS};
+use crate::serve::metrics::{PREFIX, SERIES};
+use crate::serve::ENDPOINTS;
+
+/// One subcommand's complete CLI surface. `main` enforces it before
+/// dispatch: options outside `flags` ∪ `opts` and positionals beyond
+/// `positionals` are errors, so no subcommand silently ignores input —
+/// and the reference manual renders exactly what is enforced.
+pub struct CmdSpec {
+    pub name: &'static str,
+    /// One-line description (manual section lead).
+    pub summary: &'static str,
+    /// Positional-argument rendering, e.g. `<file.scn>` (empty when none).
+    pub args: &'static str,
+    /// Boolean options (take no value): `(name, description)`.
+    pub flags: &'static [(&'static str, &'static str)],
+    /// Options that consume a value: `(name, description)`.
+    pub opts: &'static [(&'static str, &'static str)],
+    /// Positional arguments after the command name itself.
+    pub positionals: usize,
+}
+
+pub const CMD_SPECS: &[CmdSpec] = &[
+    CmdSpec {
+        name: "experiment",
+        summary: "Regenerate a paper table/figure (`fsdp-bw list` names them).",
+        args: "<id|all>",
+        flags: &[("json", "Emit the report as JSON instead of text")],
+        opts: &[],
+        positionals: 1,
+    },
+    CmdSpec {
+        name: "gridsearch",
+        summary: "Algorithm 1 (Appendix C) on one point: best feasible (α̂, γ, stage).",
+        args: "",
+        flags: &[("json", "Emit the evaluation as JSON instead of text")],
+        opts: &[
+            ("model", "Model preset; default 13B"),
+            ("cluster", "Cluster preset; default 40GB-A100-200Gbps"),
+            ("gpus", "GPU count; default 512"),
+            ("precision", "bf16, fp16 or fp32; default bf16"),
+        ],
+        positionals: 0,
+    },
+    CmdSpec {
+        name: "simulate",
+        summary: "One simulated training step on the discrete-event cluster simulator.",
+        args: "",
+        flags: &[
+            ("json", "Emit the evaluation as JSON instead of text"),
+            ("empty-cache", "Empty the allocator cache each step"),
+        ],
+        opts: &[
+            ("model", "Model preset; default 13B"),
+            ("cluster", "Cluster preset; default 40GB-A100-200Gbps"),
+            ("gpus", "GPU count; default 8"),
+            ("seq", "Context length; default 10240"),
+            ("batch", "Per-GPU micro-batch; default 1"),
+            ("gamma", "Activation-checkpointing fraction; default 0.0"),
+            ("stage", "Sharding stage 3 or 1/2; default 3"),
+            ("precision", "bf16, fp16 or fp32; default bf16"),
+        ],
+        positionals: 0,
+    },
+    CmdSpec {
+        name: "bounds",
+        summary: "The closed-form §2.7 maxima (Eqs 12–15) for one point.",
+        args: "",
+        flags: &[("json", "Emit the evaluation as JSON instead of text")],
+        opts: &[
+            ("model", "Model preset; default 13B"),
+            ("cluster", "Cluster preset; default 40GB-A100-200Gbps"),
+            ("gpus", "GPU count; default 8"),
+            ("seq", "Context length; default 10240"),
+            ("precision", "bf16, fp16 or fp32; default bf16"),
+        ],
+        positionals: 0,
+    },
+    CmdSpec {
+        name: "scenario",
+        summary: "Evaluate a scenario file with any or all backends.",
+        args: "<file.scn>",
+        flags: &[("json", "Emit the evaluations as JSON instead of text")],
+        opts: &[("backend", "Backend spec (see the backends table); default all")],
+        positionals: 1,
+    },
+    CmdSpec {
+        name: "sweep",
+        summary: "Expand sweep.* axes into a grid and evaluate it — streamed in \
+                  bounded-memory chunks, checkpointable and resumable.",
+        args: "<file.scn>",
+        flags: &[
+            ("json", "Full JSON report (all points + summary) instead of the text summary"),
+            ("csv", "Flat CSV report (one row per point × backend)"),
+            ("resume", "Re-enter at the last completed chunk of --checkpoint"),
+        ],
+        opts: &[
+            ("backend", "Backend spec; default both (analytical + simulated)"),
+            ("threads", "Worker threads; default: available cores"),
+            ("out", "Stream the report into a file (assembly stays O(chunk)) instead of stdout"),
+            ("chunk", "Grid points per chunk (bounds resident memory); default 65536"),
+            ("checkpoint", "Checkpoint file; rows spill to <path>.rows"),
+            ("max-chunks", "Stop (checkpointed, resumable) after N chunks"),
+        ],
+        positionals: 1,
+    },
+    CmdSpec {
+        name: "plan",
+        summary: "Run a declarative query file: sweep.* axes + where.* constraints + \
+                  query.* objective, §2.7 bounds-pruned, ranked into a frontier.",
+        args: "<file.scn>",
+        flags: &[
+            ("json", "Full frontier JSON instead of the text summary"),
+            ("csv", "Ranked entries as CSV"),
+            ("no-prune", "Disable §2.7 bounds pruning (brute force; identical frontier)"),
+            ("check-prune", "Assert pruned and brute-force frontiers are byte-identical"),
+        ],
+        opts: &[
+            ("backend", "Backend spec; overrides the file's query.backend"),
+            ("threads", "Worker threads; default: available cores"),
+            ("top-k", "Ranked points to keep; overrides the file's query.top_k"),
+            ("out", "Write the report to a file instead of stdout"),
+            ("chunk", "Execute in chunks of N points (progress-observable); default: whole grid"),
+        ],
+        positionals: 1,
+    },
+    CmdSpec {
+        name: "serve",
+        summary: "The Planner as an HTTP service: synchronous plans, async jobs, \
+                  presets, health and Prometheus metrics over one shared \
+                  evaluation cache.",
+        args: "",
+        flags: &[],
+        opts: &[
+            ("addr", "Bind address; default 127.0.0.1:8787"),
+            ("threads", "Request worker threads; default 4"),
+            ("queue", "Accepted-connection queue; beyond it requests shed 503; default 64"),
+            ("timeout-ms", "Per-request socket timeout; default 30000"),
+            ("cache-capacity", "Shared evaluation-cache entries; default 4096"),
+            ("planner-threads", "Worker threads inside one plan's evaluation; default 1"),
+            ("job-workers", "Background-job executor threads; default 2"),
+            ("job-queue", "Queued jobs bound; beyond it submissions shed 503; default 32"),
+            ("job-chunk", "Grid points per job chunk (progress granularity); default 4096"),
+            ("job-records", "Finished job records retained; default 256"),
+        ],
+        positionals: 0,
+    },
+    CmdSpec {
+        name: "docs",
+        summary: "Generate this reference manual from the binary's registries.",
+        args: "",
+        flags: &[("check", "Fail (exit 1) if the file on disk differs from the regeneration")],
+        opts: &[("out", "Output path; default docs/REFERENCE.md")],
+        positionals: 0,
+    },
+    CmdSpec {
+        name: "train",
+        summary: "Real FSDP training on AOT-compiled artifacts (requires --features xla).",
+        args: "",
+        flags: &[("quiet", "Suppress per-step progress lines")],
+        opts: &[
+            ("artifact", "AOT artifact name; default train_step_27m"),
+            ("artifacts-dir", "Artifact directory; default artifacts"),
+            ("ranks", "Worker ranks; default 4"),
+            ("steps", "Training steps; default 100"),
+            ("bandwidth-gbps", "Fabric bandwidth; default 200"),
+            ("seed", "Data/init seed; default 42"),
+            ("csv", "Write the per-step training log to a CSV file"),
+        ],
+        positionals: 0,
+    },
+    CmdSpec {
+        name: "list",
+        summary: "Enumerate experiments, model presets and cluster presets.",
+        args: "",
+        flags: &[],
+        opts: &[],
+        positionals: 0,
+    },
+];
+
+/// Append one `| a | b |` markdown table.
+fn table2(out: &mut String, head: (&str, &str), rows: impl Iterator<Item = (String, String)>) {
+    out.push_str(&format!("| {} | {} |\n", head.0, head.1));
+    out.push_str("|---|---|\n");
+    for (a, b) in rows {
+        out.push_str(&format!("| {a} | {b} |\n"));
+    }
+}
+
+/// Append one `| a | b | c |` markdown table.
+fn table3(
+    out: &mut String,
+    head: (&str, &str, &str),
+    rows: impl Iterator<Item = (String, String, String)>,
+) {
+    out.push_str(&format!("| {} | {} | {} |\n", head.0, head.1, head.2));
+    out.push_str("|---|---|---|\n");
+    for (a, b, c) in rows {
+        out.push_str(&format!("| {a} | {b} | {c} |\n"));
+    }
+}
+
+/// Render the whole reference manual.
+pub fn reference_markdown() -> String {
+    let mut out = String::new();
+    out.push_str("# fsdp-bw reference\n");
+    out.push('\n');
+    out.push_str("<!-- GENERATED by `fsdp-bw docs` — do not edit. CI regenerates this file and fails on drift. -->\n");
+    out.push('\n');
+    out.push_str("Generated from the binary's own registries: the CLI tables, the scenario\n");
+    out.push_str("and query dialects, the sweep-axis grammar, the evaluator backends, the\n");
+    out.push_str("HTTP API, and every `/metrics` series. Regenerate with\n");
+    out.push_str("`fsdp-bw docs --out docs/REFERENCE.md`.\n");
+    out.push('\n');
+
+    out.push_str("## CLI\n");
+    out.push('\n');
+    out.push_str("`fsdp-bw <command> [options]` — options not in a command's table are\n");
+    out.push_str("rejected, never ignored.\n");
+    for spec in CMD_SPECS {
+        out.push('\n');
+        if spec.args.is_empty() {
+            out.push_str(&format!("### `fsdp-bw {}`\n", spec.name));
+        } else {
+            out.push_str(&format!("### `fsdp-bw {} {}`\n", spec.name, spec.args));
+        }
+        out.push('\n');
+        out.push_str(spec.summary);
+        out.push('\n');
+        if !spec.flags.is_empty() || !spec.opts.is_empty() {
+            out.push('\n');
+            table2(
+                &mut out,
+                ("option", "description"),
+                spec.flags
+                    .iter()
+                    .map(|(n, d)| (format!("`--{n}`"), d.to_string()))
+                    .chain(
+                        spec.opts
+                            .iter()
+                            .map(|(n, d)| (format!("`--{n} <v>`"), d.to_string())),
+                    ),
+            );
+        }
+    }
+    out.push('\n');
+
+    out.push_str("## Scenario dialect\n");
+    out.push('\n');
+    out.push_str("One `key = value` per line; `#` starts a comment; unknown or duplicate\n");
+    out.push_str("keys are errors. Every key is sweepable (`sweep.<key> = <values>`).\n");
+    out.push('\n');
+    table2(
+        &mut out,
+        ("key", "description"),
+        KEY_DOCS.iter().map(|(k, d)| (format!("`{k}`"), d.to_string())),
+    );
+    out.push('\n');
+
+    out.push_str("## Sweep axes\n");
+    out.push('\n');
+    out.push_str("`sweep.<scenario key> = <values>` adds one grid axis. Value dialects:\n");
+    out.push('\n');
+    out.push_str("| spec | meaning |\n");
+    out.push_str("|---|---|\n");
+    out.push_str("| `a,b,c` | explicit list, kept verbatim (non-numeric values sweep too) |\n");
+    out.push_str("| `lo..hi` | arithmetic range, step 1 |\n");
+    out.push_str("| `lo..hi+d` | arithmetic range, step `d` |\n");
+    out.push_str("| `lo..hi*k` | geometric range, factor `k` |\n");
+    out.push('\n');
+    out.push_str("Axes are sorted by key; the last axis varies fastest (odometer order), and\n");
+    out.push_str("every point is addressable by its ordinal (mixed-radix decode), which is\n");
+    out.push_str("what makes chunked streaming and `--resume` possible. Caps: ");
+    out.push_str(&format!(
+        "{MAX_POINTS} points\nper sweep file, {MAX_AXIS_VALUES} values per axis. "
+    ));
+    out.push_str("Points = Π axis lengths; resident\n");
+    out.push_str(&format!(
+        "memory is O(--chunk) (default {DEFAULT_CHUNK}), not O(points).\n"
+    ));
+    out.push('\n');
+
+    out.push_str("## Query dialect\n");
+    out.push('\n');
+    out.push_str("A query file is a scenario file plus free axes (`sweep.*`), constraints\n");
+    out.push_str("(`where.<metric> = <op> <value>` with `<=`, `<`, `>=`, `>`, `==`, `!=`),\n");
+    out.push_str("and `query.*` controls.\n");
+    out.push('\n');
+    table2(
+        &mut out,
+        ("key", "description"),
+        QUERY_KEY_DOCS.iter().map(|(k, d)| (format!("`{k}`"), d.to_string())),
+    );
+    out.push('\n');
+    out.push_str("### Objectives\n");
+    out.push('\n');
+    table2(
+        &mut out,
+        ("objective", "description"),
+        OBJECTIVE_DOCS.iter().map(|(k, d)| (format!("`{k}`"), d.to_string())),
+    );
+    out.push('\n');
+    out.push_str("### Constraint metrics\n");
+    out.push('\n');
+    out.push_str("Tier 1 decides from the point alone, tier 2 from the closed-form memory\n");
+    out.push_str("model (Eqs 1–4), tier 3 after evaluation — lower-bound constraints on\n");
+    out.push_str("tier-3 metrics additionally prune points up front via Eqs 13–15.\n");
+    out.push('\n');
+    table3(
+        &mut out,
+        ("metric", "tier", "description"),
+        METRIC_DOCS
+            .iter()
+            .map(|(n, t, d)| (format!("`{n}`"), t.to_string(), d.to_string())),
+    );
+    out.push('\n');
+
+    out.push_str("## Backends\n");
+    out.push('\n');
+    out.push_str("Backend specs: a name below, a comma-separated list, `both`\n");
+    out.push_str("(analytical + simulated) or `all`.\n");
+    out.push('\n');
+    table2(
+        &mut out,
+        ("backend", "description"),
+        BACKEND_DOCS.iter().map(|(k, d)| (format!("`{k}`"), d.to_string())),
+    );
+    out.push('\n');
+
+    out.push_str("## HTTP API (`fsdp-bw serve`)\n");
+    out.push('\n');
+    out.push_str("Request bodies are query-dialect text or a flat JSON object of the same\n");
+    out.push_str("keys. Errors are JSON: `{\"error\": \"...\"}`.\n");
+    out.push('\n');
+    table3(
+        &mut out,
+        ("method", "path", "description"),
+        ENDPOINTS
+            .iter()
+            .map(|(m, p, d)| (m.to_string(), format!("`{p}`"), d.to_string())),
+    );
+    out.push('\n');
+
+    out.push_str("## Metrics\n");
+    out.push('\n');
+    out.push_str(&format!(
+        "Prometheus text exposition at `GET /metrics`; every series is prefixed\n`{PREFIX}_`.\n"
+    ));
+    out.push('\n');
+    table3(
+        &mut out,
+        ("series", "type", "help"),
+        SERIES
+            .iter()
+            .map(|(n, t, h)| (format!("`{PREFIX}_{n}`"), t.to_string(), h.to_string())),
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_contains_every_registry_entry() {
+        let md = reference_markdown();
+        for spec in CMD_SPECS {
+            assert!(md.contains(&format!("`fsdp-bw {}", spec.name)), "missing {}", spec.name);
+            for (n, _) in spec.flags.iter().chain(spec.opts.iter()) {
+                assert!(md.contains(&format!("`--{n}")), "missing --{n} of {}", spec.name);
+            }
+        }
+        for (k, _) in KEY_DOCS {
+            assert!(md.contains(&format!("| `{k}` |")), "missing scenario key {k}");
+        }
+        for (m, p, _) in ENDPOINTS {
+            assert!(md.contains(&format!("| {m} | `{p}` |")), "missing endpoint {m} {p}");
+        }
+        for (n, t, _) in SERIES {
+            assert!(md.contains(&format!("| `{PREFIX}_{n}` | {t} |")), "missing series {n}");
+        }
+        for (n, _, _) in METRIC_DOCS {
+            assert!(md.contains(&format!("| `{n}` |")), "missing metric {n}");
+        }
+        for (o, _) in OBJECTIVE_DOCS {
+            assert!(md.contains(&format!("| `{o}` |")), "missing objective {o}");
+        }
+        for (b, _) in BACKEND_DOCS {
+            assert!(md.contains(&format!("| `{b}` |")), "missing backend {b}");
+        }
+    }
+
+    #[test]
+    fn cmd_specs_are_consistent() {
+        for spec in CMD_SPECS {
+            assert!(!spec.summary.is_empty(), "{} lacks a summary", spec.name);
+            assert_eq!(
+                spec.positionals,
+                usize::from(!spec.args.is_empty()),
+                "{}: args rendering and positional count disagree",
+                spec.name
+            );
+            for (n, d) in spec.flags.iter().chain(spec.opts.iter()) {
+                assert!(!n.is_empty() && !d.is_empty(), "{}: bad option entry", spec.name);
+                assert!(
+                    !spec.flags.iter().any(|(f, _)| f == n) || !spec.opts.iter().any(|(o, _)| o == n),
+                    "{}: --{n} is both a flag and an option",
+                    spec.name
+                );
+            }
+        }
+        // Names are unique.
+        for (i, a) in CMD_SPECS.iter().enumerate() {
+            for b in &CMD_SPECS[i + 1..] {
+                assert_ne!(a.name, b.name, "duplicate subcommand");
+            }
+        }
+    }
+
+    #[test]
+    fn manual_tables_are_well_formed() {
+        // Every table row has a consistent cell count with its header —
+        // a malformed doc string (stray `|`) would break rendering.
+        let md = reference_markdown();
+        let mut cols: Option<usize> = None;
+        for line in md.lines() {
+            if line.starts_with('|') {
+                let n = line.matches('|').count();
+                if let Some(c) = cols {
+                    assert_eq!(n, c, "ragged table row: {line}");
+                } else {
+                    cols = Some(n);
+                }
+            } else {
+                cols = None;
+            }
+        }
+    }
+}

@@ -399,6 +399,16 @@ impl Evaluator for Alg1Point {
 /// usage, error messages, and the serve `/v1/presets` endpoint share.
 pub const BACKEND_NAMES: &[&str] = &["analytical", "simulated", "bounds", "gridsearch", "alg1"];
 
+/// One-line documentation per backend, in [`BACKEND_NAMES`] order (the
+/// reference manual renders this; a test pins the two lists together).
+pub const BACKEND_DOCS: &[(&str, &str)] = &[
+    ("analytical", "The §2 closed-form model, Eqs 1–11, at an assumed kernel efficiency α̂"),
+    ("simulated", "The discrete-event cluster simulator (calibrated kernels + allocator)"),
+    ("bounds", "The §2.7 closed-form maxima only, Eqs 12–15"),
+    ("gridsearch", "Algorithm 1: best feasible (α̂, γ, stage) configuration, fill-the-GPU"),
+    ("alg1", "One Algorithm 1 grid point: α̂/γ/stage pinned by the scenario"),
+];
+
 /// Resolve one backend by name.
 pub fn backend(name: &str) -> Result<Box<dyn Evaluator>> {
     Ok(match name {
@@ -429,6 +439,16 @@ pub fn backends_for(spec: &str) -> Result<Vec<Box<dyn Evaluator>>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backend_docs_cover_exactly_the_backend_names() {
+        let documented: Vec<&str> = BACKEND_DOCS.iter().map(|(n, _)| *n).collect();
+        assert_eq!(documented, BACKEND_NAMES, "BACKEND_DOCS must list BACKEND_NAMES, in order");
+        for (name, doc) in BACKEND_DOCS {
+            assert!(backend(name).is_ok(), "documented backend {name:?} rejected");
+            assert!(!doc.contains('|'), "backend {name:?} doc breaks the table");
+        }
+    }
 
     fn scen() -> Scenario {
         Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 10240\nbatch = 1\n").unwrap()

@@ -18,14 +18,25 @@
 //!
 //! [`sweep`] expands `sweep.<key> = …` axes into a Cartesian grid of
 //! scenarios and evaluates them across a worker pool; [`report`] renders
-//! the result as JSON/CSV with per-axis best-MFU/best-TGS summaries. Both
+//! the result as JSON/CSV with per-axis best-MFU/best-TGS summaries; for
+//! grids past RAM, [`stream`] walks the same grid as a lazy
+//! [`GridCursor`] in bounded-memory chunks with checkpoint/resume. All
 //! ride the declarative [`crate::query`] Planner: a sweep is a Query with
 //! no constraints and a `report_all` objective, and every backend can
 //! pre-screen points via [`Evaluator::prune_by_bounds`] / memoize via
 //! [`Evaluator::cache_key`].
+//!
+//! **Paper-equation map** (every number an [`Evaluation`] carries traces
+//! to §2): [`EvalMemory`] — the Eq 1–4 sharded-state and activation
+//! footprint; [`EvalStep`] — Eq 5 transfer time (via [`crate::comm`]),
+//! Eqs 6–8 FLOPs and phase times, Eq 9 overlapped step time, Eq 10
+//! `R_fwd`/`R_bwd` ratios; [`EvalMetrics`] — Eq 11 MFU/HFU/TGS;
+//! [`EvalBounds`] — the §2.7 closed-form maxima `E_MAX`, `HFU_max`,
+//! `MFU_max`, `K_max` (Eqs 12–15).
 
 pub mod backends;
 pub mod report;
+pub mod stream;
 pub mod sweep;
 
 use crate::config::scenario::Scenario;
@@ -35,8 +46,9 @@ use crate::util::json::Json;
 pub use backends::{
     backend, backends_for, Alg1Point, Analytical, BoundsEval, Searched, Simulated, BACKEND_NAMES,
 };
-pub use report::{SweepPointResult, SweepReport};
-pub use sweep::{parse_axis_values, run_sweep, run_sweep_cached, Sweep, SweepAxis};
+pub use report::{BestPoint, SweepPointResult, SweepReport, SweepSummary};
+pub use stream::{run_sweep_streamed, SweepFormat, SweepStreamConfig, SweepStreamOutcome};
+pub use sweep::{parse_axis_values, run_sweep, run_sweep_cached, GridCursor, Sweep, SweepAxis};
 
 /// The kernel efficiency the analytical backend assumes when none is given
 /// (the value used throughout the paper's worked examples).

@@ -3,6 +3,8 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{bail, Context, Result};
+
 use crate::util::json::Json;
 
 use super::sweep::SweepAxis;
@@ -20,6 +22,71 @@ pub struct SweepPointResult {
     /// One evaluation per backend, in backend order.
     pub evals: Vec<Evaluation>,
     pub error: Option<String>,
+}
+
+impl SweepPointResult {
+    /// This point's JSON entry in the report's `points` array — the single
+    /// rendering shared by the materialized [`SweepReport::json`] and the
+    /// streaming writer (which emits it per chunk and drops the point).
+    pub(crate) fn json(&self) -> Json {
+        let mut pairs = vec![
+            ("index", num(self.index as f64)),
+            ("point", point_obj(&self.point)),
+            ("evals", Json::Arr(self.evals.iter().map(|e| e.json()).collect())),
+        ];
+        if let Some(err) = &self.error {
+            pairs.push(("error", Json::Str(err.clone())));
+        }
+        obj(pairs)
+    }
+
+    /// Append this point's CSV rows (one per backend; a single row with the
+    /// error message for unconstructable points). Shared by the
+    /// materialized and streaming CSV renderings. Every variable cell is
+    /// RFC-4180-quoted by [`csv_cell`].
+    pub(crate) fn csv_rows(&self, out: &mut String) {
+        let prefix = {
+            let mut s = self.index.to_string();
+            for (_, v) in &self.point {
+                s.push(',');
+                s.push_str(&csv_cell(v));
+            }
+            s
+        };
+        if let Some(err) = &self.error {
+            out.push_str(&prefix);
+            out.push_str(",,,,,,,,,,,");
+            out.push_str(&csv_cell(err));
+            out.push('\n');
+            return;
+        }
+        for e in &self.evals {
+            out.push_str(&prefix);
+            out.push(',');
+            out.push_str(&csv_cell(e.backend));
+            out.push(',');
+            out.push_str(if e.feasible { "true" } else { "false" });
+            out.push(',');
+            out.push_str(if e.oom { "true" } else { "false" });
+            for v in [
+                e.metrics.map(|m| m.mfu),
+                e.metrics.map(|m| m.hfu),
+                e.metrics.map(|m| m.tgs),
+                e.step.map(|s| s.t_step),
+                e.memory.and_then(|m| m.active_gib),
+                e.memory.and_then(|m| m.reserved_gib),
+                e.memory.and_then(|m| m.m_free_gib),
+            ] {
+                out.push(',');
+                if let Some(x) = v {
+                    if x.is_finite() {
+                        out.push_str(&format!("{x}"));
+                    }
+                }
+            }
+            out.push_str(",\n");
+        }
+    }
 }
 
 /// The full result of one sweep run.
@@ -76,49 +143,20 @@ impl SweepReport {
         self.best_by(bi, metrics_for_tgs, |m| m.tgs)
     }
 
+    /// The summary accumulator, folded over this report's points.
+    pub fn summary(&self) -> SweepSummary {
+        let mut s = SweepSummary::new(self.axes.clone(), self.backends.clone());
+        for p in &self.points {
+            s.add(p);
+        }
+        s
+    }
+
     /// The whole report as a JSON value.
     pub fn json(&self) -> Json {
-        let axes = Json::Arr(
-            self.axes
-                .iter()
-                .map(|a| {
-                    obj(vec![
-                        ("key", Json::Str(a.key.clone())),
-                        (
-                            "values",
-                            Json::Arr(a.values.iter().map(|v| scalar(v)).collect()),
-                        ),
-                    ])
-                })
-                .collect(),
-        );
-        let points = Json::Arr(
-            self.points
-                .iter()
-                .map(|p| {
-                    let mut pairs = vec![
-                        ("index", num(p.index as f64)),
-                        ("point", point_obj(p)),
-                        ("evals", Json::Arr(p.evals.iter().map(|e| e.json()).collect())),
-                    ];
-                    if let Some(err) = &p.error {
-                        pairs.push(("error", Json::Str(err.clone())));
-                    }
-                    obj(pairs)
-                })
-                .collect(),
-        );
-        obj(vec![
-            ("axes", axes),
-            (
-                "backends",
-                Json::Arr(self.backends.iter().map(|b| Json::Str(b.clone())).collect()),
-            ),
-            ("n_points", num(self.points.len() as f64)),
-            ("n_errors", num(self.n_errors() as f64)),
-            ("points", points),
-            ("summary", self.summary_json()),
-        ])
+        let points = Json::Arr(self.points.iter().map(|p| p.json()).collect());
+        let summary = self.summary();
+        report_doc(&self.axes, &self.backends, self.n_points(), self.n_errors(), points, &summary)
     }
 
     /// Pretty-printed JSON document.
@@ -126,51 +164,198 @@ impl SweepReport {
         self.json().pretty()
     }
 
-    /// Per-backend global best and per-axis best-MFU/best-TGS summary.
-    /// One pass over the points per backend — each point contributes to
-    /// its own axis values' accumulators.
-    fn summary_json(&self) -> Json {
+    /// Flat CSV: one row per (point, backend); errored points emit one row
+    /// with the error message. Two `#`-prefixed header lines surface the
+    /// point and error counts (skippable via `comment='#'` in most CSV
+    /// readers). Cells that can contain separators or quotes (axis values,
+    /// error messages) are RFC-4180-quoted.
+    pub fn to_csv(&self) -> String {
+        let mut out = csv_header(&self.axes, self.n_points(), self.n_errors());
+        for p in &self.points {
+            p.csv_rows(&mut out);
+        }
+        out
+    }
+
+    /// Short human summary (the CLI's default sweep output).
+    pub fn to_text(&self) -> String {
+        self.summary().to_text()
+    }
+}
+
+/// The report document skeleton shared by the materialized and streaming
+/// JSON renderings — the streaming writer passes a placeholder for
+/// `points` and splices its spilled rows into the rendered text.
+pub(crate) fn report_doc(
+    axes: &[SweepAxis],
+    backends: &[String],
+    n_points: usize,
+    n_errors: usize,
+    points: Json,
+    summary: &SweepSummary,
+) -> Json {
+    let axes = Json::Arr(
+        axes.iter()
+            .map(|a| {
+                obj(vec![
+                    ("key", Json::Str(a.key.clone())),
+                    ("values", Json::Arr(a.values.iter().map(|v| scalar(v)).collect())),
+                ])
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("axes", axes),
+        ("backends", Json::Arr(backends.iter().map(|b| Json::Str(b.clone())).collect())),
+        ("n_points", num(n_points as f64)),
+        ("n_errors", num(n_errors as f64)),
+        ("points", points),
+        ("summary", summary.json()),
+    ])
+}
+
+/// The CSV comment header + column header shared by the materialized and
+/// streaming renderings.
+pub(crate) fn csv_header(axes: &[SweepAxis], n_points: usize, n_errors: usize) -> String {
+    let mut out = format!("# n_points,{n_points}\n# n_errors,{n_errors}\n");
+    out.push_str("index");
+    for a in axes {
+        out.push(',');
+        out.push_str(&csv_cell(&a.key));
+    }
+    out.push_str(",backend,feasible,oom,mfu,hfu,tgs,t_step,active_gib,reserved_gib,m_free_gib,error\n");
+    out
+}
+
+/// Reduced best-point record — exactly what summaries and the text
+/// rendering need from a winning grid point, so the streaming writer (and
+/// its checkpoint) never retains full evaluations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BestPoint {
+    /// `(axis key, value)` assignment of the winning point.
+    pub point: Vec<(String, String)>,
+    pub mfu: f64,
+    pub hfu: f64,
+    pub tgs: f64,
+}
+
+/// Online sweep summary: per-backend global best (by MFU and by TGS) and
+/// per-axis best-MFU/best-TGS accumulators, folded one point at a time in
+/// grid order. This *is* the summary computation — the materialized
+/// [`SweepReport`] folds its own points through it, and the streaming
+/// writer feeds it per chunk, so the two renderings agree byte for byte.
+/// State is O(Σ axis lengths), independent of grid size, and flat enough
+/// to serialize into a resume checkpoint.
+#[derive(Debug, Clone)]
+pub struct SweepSummary {
+    axes: Vec<SweepAxis>,
+    backends: Vec<String>,
+    n_points: usize,
+    n_errors: usize,
+    /// Per backend: best feasible point by MFU / by TGS (first wins ties,
+    /// like grid order).
+    best_mfu: Vec<Option<BestPoint>>,
+    best_tgs: Vec<Option<BestPoint>>,
+    /// `per_axis[backend][axis][value] = (best mfu, best tgs)` over
+    /// feasible points carrying that value.
+    per_axis: Vec<Vec<BTreeMap<String, (f64, f64)>>>,
+}
+
+impl SweepSummary {
+    pub fn new(axes: Vec<SweepAxis>, backends: Vec<String>) -> SweepSummary {
+        let n_backends = backends.len();
+        let n_axes = axes.len();
+        SweepSummary {
+            axes,
+            backends,
+            n_points: 0,
+            n_errors: 0,
+            best_mfu: vec![None; n_backends],
+            best_tgs: vec![None; n_backends],
+            per_axis: vec![vec![BTreeMap::new(); n_axes]; n_backends],
+        }
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.n_points
+    }
+
+    pub fn n_errors(&self) -> usize {
+        self.n_errors
+    }
+
+    pub fn axes(&self) -> &[SweepAxis] {
+        &self.axes
+    }
+
+    pub fn backends(&self) -> &[String] {
+        &self.backends
+    }
+
+    /// Fold in one grid point (grid order — ties keep the first winner).
+    pub fn add(&mut self, p: &SweepPointResult) {
+        self.n_points += 1;
+        if p.error.is_some() {
+            self.n_errors += 1;
+        }
+        for bi in 0..self.backends.len() {
+            let Some(e) = p.evals.get(bi) else { continue };
+            if !e.feasible {
+                continue;
+            }
+            let m_mfu = e.metrics;
+            let m_tgs = metrics_for_tgs(e);
+            let best = |m: &EvalMetrics| BestPoint {
+                point: p.point.clone(),
+                mfu: m.mfu,
+                hfu: m.hfu,
+                tgs: m.tgs,
+            };
+            if let Some(m) = &m_mfu {
+                if self.best_mfu[bi].as_ref().map(|b| m.mfu > b.mfu).unwrap_or(true) {
+                    self.best_mfu[bi] = Some(best(m));
+                }
+            }
+            if let Some(m) = &m_tgs {
+                if self.best_tgs[bi].as_ref().map(|b| m.tgs > b.tgs).unwrap_or(true) {
+                    self.best_tgs[bi] = Some(best(m));
+                }
+            }
+            if m_mfu.is_none() && m_tgs.is_none() {
+                continue;
+            }
+            for (ai, (_, v)) in p.point.iter().enumerate().take(self.axes.len()) {
+                let slot = self.per_axis[bi][ai]
+                    .entry(v.clone())
+                    .or_insert((f64::NEG_INFINITY, f64::NEG_INFINITY));
+                if let Some(m) = &m_mfu {
+                    slot.0 = slot.0.max(m.mfu);
+                }
+                if let Some(m) = &m_tgs {
+                    slot.1 = slot.1.max(m.tgs);
+                }
+            }
+        }
+    }
+
+    /// The report's `summary` JSON value.
+    pub fn json(&self) -> Json {
         let mut backends = BTreeMap::new();
         for (bi, bname) in self.backends.iter().enumerate() {
-            let best_entry = |best: Option<(&SweepPointResult, EvalMetrics)>| match best {
-                Some((p, m)) => obj(vec![
-                    ("point", point_obj(p)),
-                    ("mfu", num(m.mfu)),
-                    ("hfu", num(m.hfu)),
-                    ("tgs", num(m.tgs)),
+            let best_entry = |best: &Option<BestPoint>| match best {
+                Some(b) => obj(vec![
+                    ("point", point_obj(&b.point)),
+                    ("mfu", num(b.mfu)),
+                    ("hfu", num(b.hfu)),
+                    ("tgs", num(b.tgs)),
                 ]),
                 None => Json::Null,
             };
-            // acc[axis][value] = (best mfu, best tgs) over feasible points.
-            let mut acc: Vec<BTreeMap<&str, (f64, f64)>> =
-                vec![BTreeMap::new(); self.axes.len()];
-            for p in &self.points {
-                let Some(e) = p.evals.get(bi) else { continue };
-                if !e.feasible {
-                    continue;
-                }
-                let m_mfu = e.metrics;
-                let m_tgs = metrics_for_tgs(e);
-                if m_mfu.is_none() && m_tgs.is_none() {
-                    continue;
-                }
-                for (ai, (_, v)) in p.point.iter().enumerate().take(acc.len()) {
-                    let slot = acc[ai]
-                        .entry(v.as_str())
-                        .or_insert((f64::NEG_INFINITY, f64::NEG_INFINITY));
-                    if let Some(m) = m_mfu {
-                        slot.0 = slot.0.max(m.mfu);
-                    }
-                    if let Some(m) = m_tgs {
-                        slot.1 = slot.1.max(m.tgs);
-                    }
-                }
-            }
             let mut per_axis = BTreeMap::new();
             for (ai, ax) in self.axes.iter().enumerate() {
                 let mut by_value = BTreeMap::new();
                 for v in &ax.values {
-                    let entry = match acc[ai].get(v.as_str()) {
+                    let entry = match self.per_axis[bi][ai].get(v) {
                         Some(&(mfu, tgs)) => {
                             obj(vec![("best_mfu", num(mfu)), ("best_tgs", num(tgs))])
                         }
@@ -183,8 +368,8 @@ impl SweepReport {
             backends.insert(
                 bname.clone(),
                 obj(vec![
-                    ("best_mfu", best_entry(self.best_by(bi, |e| e.metrics, |m| m.mfu))),
-                    ("best_tgs", best_entry(self.best_by(bi, metrics_for_tgs, |m| m.tgs))),
+                    ("best_mfu", best_entry(&self.best_mfu[bi])),
+                    ("best_tgs", best_entry(&self.best_tgs[bi])),
                     ("per_axis", Json::Obj(per_axis)),
                 ]),
             );
@@ -192,80 +377,121 @@ impl SweepReport {
         Json::Obj(backends)
     }
 
-    /// Flat CSV: one row per (point, backend); errored points emit one row
-    /// with the error message. Two `#`-prefixed header lines surface the
-    /// point and error counts (skippable via `comment='#'` in most CSV
-    /// readers).
-    pub fn to_csv(&self) -> String {
-        let mut out = format!(
-            "# n_points,{}\n# n_errors,{}\n",
-            self.n_points(),
-            self.n_errors()
+    // -- checkpoint state --------------------------------------------------
+    //
+    // The accumulator is the only sweep state a resume has to carry (the
+    // rows themselves live in the spill file), so it round-trips through a
+    // small JSON encoding. Not a user-facing format: non-finite floats are
+    // encoded as strings (`"inf"`, `"-inf"`, `"NaN"`) because JSON has no
+    // literals for them and the per-axis accumulators start at -∞.
+
+    /// Serialize the accumulator for the `--checkpoint` file.
+    pub(crate) fn state_json(&self) -> Json {
+        let best = |b: &Option<BestPoint>| match b {
+            Some(b) => obj(vec![
+                ("point", pairs_json(&b.point)),
+                ("mfu", enc_f(b.mfu)),
+                ("hfu", enc_f(b.hfu)),
+                ("tgs", enc_f(b.tgs)),
+            ]),
+            None => Json::Null,
+        };
+        let per_axis = Json::Arr(
+            self.per_axis
+                .iter()
+                .map(|axes| {
+                    Json::Arr(
+                        axes.iter()
+                            .map(|m| {
+                                Json::Obj(
+                                    m.iter()
+                                        .map(|(v, &(mfu, tgs))| {
+                                            (
+                                                v.clone(),
+                                                Json::Arr(vec![enc_f(mfu), enc_f(tgs)]),
+                                            )
+                                        })
+                                        .collect(),
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
         );
-        out.push_str("index");
-        for a in &self.axes {
-            out.push(',');
-            out.push_str(&csv_cell(&a.key));
-        }
-        out.push_str(",backend,feasible,oom,mfu,hfu,tgs,t_step,active_gib,reserved_gib,m_free_gib,error\n");
-        for p in &self.points {
-            let prefix = {
-                let mut s = p.index.to_string();
-                for (_, v) in &p.point {
-                    s.push(',');
-                    s.push_str(&csv_cell(v));
-                }
-                s
-            };
-            if let Some(err) = &p.error {
-                out.push_str(&prefix);
-                out.push_str(",,,,,,,,,,,");
-                out.push_str(&csv_cell(err));
-                out.push('\n');
-                continue;
-            }
-            for e in &p.evals {
-                out.push_str(&prefix);
-                out.push(',');
-                out.push_str(e.backend);
-                out.push(',');
-                out.push_str(if e.feasible { "true" } else { "false" });
-                out.push(',');
-                out.push_str(if e.oom { "true" } else { "false" });
-                for v in [
-                    e.metrics.map(|m| m.mfu),
-                    e.metrics.map(|m| m.hfu),
-                    e.metrics.map(|m| m.tgs),
-                    e.step.map(|s| s.t_step),
-                    e.memory.and_then(|m| m.active_gib),
-                    e.memory.and_then(|m| m.reserved_gib),
-                    e.memory.and_then(|m| m.m_free_gib),
-                ] {
-                    out.push(',');
-                    if let Some(x) = v {
-                        if x.is_finite() {
-                            out.push_str(&format!("{x}"));
-                        }
-                    }
-                }
-                out.push_str(",\n");
-            }
-        }
-        out
+        obj(vec![
+            ("n_points", num(self.n_points as f64)),
+            ("n_errors", num(self.n_errors as f64)),
+            ("best_mfu", Json::Arr(self.best_mfu.iter().map(best).collect())),
+            ("best_tgs", Json::Arr(self.best_tgs.iter().map(best).collect())),
+            ("per_axis", per_axis),
+        ])
     }
 
-    /// Short human summary (the CLI's default sweep output).
+    /// Rebuild the accumulator from a checkpoint (`axes`/`backends` come
+    /// from the re-parsed sweep file, whose identity the checkpoint
+    /// fingerprint already verified).
+    pub(crate) fn from_state(
+        axes: Vec<SweepAxis>,
+        backends: Vec<String>,
+        v: &Json,
+    ) -> Result<SweepSummary> {
+        let best = |v: &Json| -> Result<Option<BestPoint>> {
+            match v {
+                Json::Null => Ok(None),
+                _ => Ok(Some(BestPoint {
+                    point: decode_pairs(v.get("point")?)?,
+                    mfu: dec_f(v.get("mfu")?)?,
+                    hfu: dec_f(v.get("hfu")?)?,
+                    tgs: dec_f(v.get("tgs")?)?,
+                })),
+            }
+        };
+        let mut s = SweepSummary::new(axes, backends);
+        s.n_points = v.get("n_points")?.as_usize().context("summary n_points")?;
+        s.n_errors = v.get("n_errors")?.as_usize().context("summary n_errors")?;
+        let best_mfu = v.get("best_mfu")?.as_arr()?;
+        let best_tgs = v.get("best_tgs")?.as_arr()?;
+        let per_axis = v.get("per_axis")?.as_arr()?;
+        if best_mfu.len() != s.backends.len()
+            || best_tgs.len() != s.backends.len()
+            || per_axis.len() != s.backends.len()
+        {
+            bail!("checkpoint summary does not match the sweep's backends");
+        }
+        s.best_mfu = best_mfu.iter().map(&best).collect::<Result<_>>()?;
+        s.best_tgs = best_tgs.iter().map(&best).collect::<Result<_>>()?;
+        for (bi, axes_v) in per_axis.iter().enumerate() {
+            let axes_v = axes_v.as_arr()?;
+            if axes_v.len() != s.axes.len() {
+                bail!("checkpoint summary does not match the sweep's axes");
+            }
+            for (ai, m) in axes_v.iter().enumerate() {
+                for (value, pair) in m.as_obj()? {
+                    let pair = pair.as_arr()?;
+                    if pair.len() != 2 {
+                        bail!("per-axis accumulator entry must be a [mfu, tgs] pair");
+                    }
+                    s.per_axis[bi][ai]
+                        .insert(value.clone(), (dec_f(&pair[0])?, dec_f(&pair[1])?));
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    /// The sweep's human summary (the CLI's default output).
     pub fn to_text(&self) -> String {
         use std::fmt::Write as _;
         let mut out = String::new();
         let _ = writeln!(
             out,
             "sweep: {} points × {} backend(s) [{}], {} error(s){}",
-            self.n_points(),
+            self.n_points,
             self.backends.len(),
             self.backends.join(", "),
-            self.n_errors(),
-            match self.n_errors() {
+            self.n_errors,
+            match self.n_errors {
                 0 => String::new(),
                 _ => "  (errored points failed to construct a scenario)".to_string(),
             }
@@ -273,16 +499,16 @@ impl SweepReport {
         for a in &self.axes {
             let _ = writeln!(out, "  axis {} : {}", a.key, a.values.join(", "));
         }
-        for b in &self.backends {
-            match self.best_mfu(b) {
-                Some((p, m)) => {
+        for (bi, b) in self.backends.iter().enumerate() {
+            match &self.best_mfu[bi] {
+                Some(best) => {
                     let at: Vec<String> =
-                        p.point.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                        best.point.iter().map(|(k, v)| format!("{k}={v}")).collect();
                     let _ = writeln!(
                         out,
                         "  best MFU ({b}) : {:.3} (TGS {:.0}) at {}",
-                        m.mfu,
-                        m.tgs,
+                        best.mfu,
+                        best.tgs,
                         at.join(" ")
                     );
                 }
@@ -290,13 +516,14 @@ impl SweepReport {
                     let _ = writeln!(out, "  best MFU ({b}) : no feasible point");
                 }
             }
-            if let Some((p, m)) = self.best_tgs(b) {
-                let at: Vec<String> = p.point.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            if let Some(best) = &self.best_tgs[bi] {
+                let at: Vec<String> =
+                    best.point.iter().map(|(k, v)| format!("{k}={v}")).collect();
                 let _ = writeln!(
                     out,
                     "  best TGS ({b}) : {:.0} (MFU {:.3}) at {}",
-                    m.tgs,
-                    m.mfu,
+                    best.tgs,
+                    best.mfu,
                     at.join(" ")
                 );
             }
@@ -319,13 +546,50 @@ pub(crate) fn metrics_for_tgs(e: &Evaluation) -> Option<EvalMetrics> {
 }
 
 /// Axis assignment as a JSON object (numeric-looking values as numbers).
-fn point_obj(p: &SweepPointResult) -> Json {
-    Json::Obj(
-        p.point
+fn point_obj(point: &[(String, String)]) -> Json {
+    Json::Obj(point.iter().map(|(k, v)| (k.clone(), scalar(v))).collect())
+}
+
+/// Axis assignment as an order-preserving `[[key, value], …]` array —
+/// checkpoint encoding (objects would re-sort the axis order).
+fn pairs_json(point: &[(String, String)]) -> Json {
+    Json::Arr(
+        point
             .iter()
-            .map(|(k, v)| (k.clone(), scalar(v)))
+            .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())]))
             .collect(),
     )
+}
+
+fn decode_pairs(v: &Json) -> Result<Vec<(String, String)>> {
+    v.as_arr()?
+        .iter()
+        .map(|p| {
+            let p = p.as_arr()?;
+            if p.len() != 2 {
+                bail!("point entry must be a [key, value] pair");
+            }
+            Ok((p[0].as_str()?.to_string(), p[1].as_str()?.to_string()))
+        })
+        .collect()
+}
+
+/// Checkpoint float encoding: JSON numbers for finite values, the strings
+/// `"inf"` / `"-inf"` / `"NaN"` otherwise (both parse back exactly).
+fn enc_f(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(format!("{v}"))
+    }
+}
+
+fn dec_f(v: &Json) -> Result<f64> {
+    match v {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => s.parse().with_context(|| format!("bad checkpoint float {s:?}")),
+        other => bail!("expected checkpoint float, got {other:?}"),
+    }
 }
 
 /// A dialect value as JSON: number when it parses as one, string otherwise.
@@ -337,10 +601,11 @@ pub(crate) fn scalar(v: &str) -> Json {
     }
 }
 
-/// CSV escaping: quote cells containing separators or quotes.
-/// (Shared with [`crate::query`]'s frontier CSV.)
+/// RFC-4180 CSV escaping: quote cells containing separators, quotes, or
+/// line breaks (CR or LF), doubling embedded quotes. (Shared with
+/// [`crate::query`]'s frontier CSV.)
 pub(crate) fn csv_cell(s: &str) -> String {
-    if s.contains(',') || s.contains('"') || s.contains('\n') {
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {
         s.to_string()
@@ -395,6 +660,75 @@ mod tests {
         assert_eq!(rep.n_errors(), 1);
         assert!(rep.to_text().contains("1 error(s)"), "{}", rep.to_text());
         assert!(rep.to_csv().starts_with("# n_points,2\n# n_errors,1\n"), "{}", rep.to_csv());
+    }
+
+    /// Minimal RFC-4180 row parser: splits one CSV line into cells,
+    /// honouring quoted cells with doubled quotes. (Test oracle only.)
+    fn rfc4180_cells(line: &str) -> Vec<String> {
+        let mut cells = Vec::new();
+        let mut cur = String::new();
+        let mut chars = line.chars().peekable();
+        let mut quoted = false;
+        while let Some(c) = chars.next() {
+            match (quoted, c) {
+                (false, ',') => cells.push(std::mem::take(&mut cur)),
+                (false, '"') if cur.is_empty() => quoted = true,
+                (true, '"') => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        cur.push('"');
+                    } else {
+                        quoted = false;
+                    }
+                }
+                (_, c) => cur.push(c),
+            }
+        }
+        cells.push(cur);
+        cells
+    }
+
+    #[test]
+    fn csv_cells_with_commas_and_quotes_are_rfc4180_quoted() {
+        // An error message with commas and quotes — the shape real scenario
+        // errors take (`unknown scenario key "x" (known keys: a, b, …)`).
+        let rep = SweepReport {
+            axes: vec![SweepAxis {
+                key: "cluster.topology.collective".to_string(),
+                values: vec!["ring".to_string(), "tree".to_string()],
+            }],
+            backends: vec!["analytical".to_string()],
+            points: vec![SweepPointResult {
+                index: 0,
+                point: vec![(
+                    "cluster.topology.collective".to_string(),
+                    "ring".to_string(),
+                )],
+                evals: Vec::new(),
+                error: Some("bad value \"x\" (known: ring, tree, hierarchical)".to_string()),
+            }],
+        };
+        let csv = rep.to_csv();
+        let mut lines = csv.lines().skip(2); // two `#` comment lines
+        let header = rfc4180_cells(lines.next().unwrap());
+        let row = rfc4180_cells(lines.next().unwrap());
+        assert_eq!(header.len(), row.len(), "error row keeps the column count\n{csv}");
+        assert_eq!(
+            row.last().unwrap(),
+            "bad value \"x\" (known: ring, tree, hierarchical)",
+            "{csv}"
+        );
+        // The raw line really is quoted (not just parse-coincidence).
+        assert!(csv.contains("\"bad value \"\"x\"\" (known: ring, tree, hierarchical)\""), "{csv}");
+    }
+
+    #[test]
+    fn csv_cell_quotes_all_rfc4180_specials() {
+        assert_eq!(csv_cell("plain"), "plain");
+        assert_eq!(csv_cell("a,b"), "\"a,b\"");
+        assert_eq!(csv_cell("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_cell("two\nlines"), "\"two\nlines\"");
+        assert_eq!(csv_cell("cr\rhere"), "\"cr\rhere\"");
     }
 
     #[test]

@@ -1,0 +1,603 @@
+//! Streaming, checkpointed sweep execution — `fsdp-bw sweep` for grids
+//! that do not fit in RAM.
+//!
+//! The classic [`super::run_sweep`] materializes every
+//! [`super::SweepPointResult`] before rendering; memory is O(grid). This
+//! module drives the same evaluation pipeline through the chunked
+//! [`crate::query::stream`] engine and renders each point **as its chunk
+//! completes**:
+//!
+//! * JSON/CSV rows append to a [`Spill`] (a file under `--checkpoint`, a
+//!   temp file for large un-checkpointed runs, memory for small ones);
+//! * the summary folds through the online
+//!   [`crate::eval::report::SweepSummary`] accumulator;
+//! * after every chunk the writer persists a checkpoint: the accumulator
+//!   state, the spill byte count, and a fingerprint of (sweep, backends,
+//!   chunk, format). `--resume` verifies the fingerprint, truncates the
+//!   spill to the last accounted byte, and re-enters the grid at the first
+//!   incomplete chunk — the final report is **byte-identical** to an
+//!   uninterrupted run, which is itself byte-identical to the materialized
+//!   path (both facts are asserted in `tests/stream_resume.rs`).
+//!
+//! Resident memory is O(chunk) + O(Σ axis lengths): the
+//! bounded-memory property that lets a single host walk the ≥10⁶-point
+//! spaces the paper's hardware-optimality question calls for.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::query::cache::EvalCache;
+use crate::query::stream::{StreamOptions, StreamProgress, StreamSink};
+use crate::query::{Planner, PlannedPoint, PointEval, Query};
+use crate::util::json::Json;
+use crate::util::spill::Spill;
+use crate::util::tempdir::TempDir;
+
+use super::report::{csv_header, report_doc, SweepSummary};
+use super::sweep::Sweep;
+use super::{num, obj, Evaluator, SweepPointResult};
+
+/// Output format of a streamed sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepFormat {
+    Json,
+    Csv,
+    Text,
+}
+
+impl SweepFormat {
+    fn tag(self) -> &'static str {
+        match self {
+            SweepFormat::Json => "json",
+            SweepFormat::Csv => "csv",
+            SweepFormat::Text => "text",
+        }
+    }
+}
+
+/// Placeholder spliced out of the rendered document skeleton and replaced
+/// by the spilled rows. Matched together with its `"points"` key, which
+/// only exists at the document root, so user-controlled values can never
+/// alias it.
+const POINTS_PLACEHOLDER: &str = "__FSDP_BW_STREAMED_POINTS__";
+
+/// Checkpoint format version.
+const CHECKPOINT_VERSION: f64 = 1.0;
+
+/// How to run a streamed sweep.
+#[derive(Debug, Clone)]
+pub struct SweepStreamConfig {
+    pub format: SweepFormat,
+    /// Points per chunk (bounds resident memory).
+    pub chunk: usize,
+    /// Worker threads.
+    pub threads: usize,
+    /// Checkpoint file path; rows spill to `<path>.rows`. `None` disables
+    /// checkpointing (rows spill to a temp file for multi-chunk grids).
+    pub checkpoint: Option<PathBuf>,
+    /// Re-enter at the last checkpointed chunk instead of starting fresh.
+    pub resume: bool,
+    /// Stop (checkpointed, resumable) after this many chunks this run.
+    pub max_chunks: Option<usize>,
+    /// Shared evaluation cache (the serve path's; optional for the CLI).
+    pub cache: Option<Arc<EvalCache>>,
+    /// Cooperative cancellation, checked at chunk boundaries.
+    pub cancel: Option<Arc<AtomicBool>>,
+    /// Stream the final report into this file instead of returning it as
+    /// an in-memory `body` — assembly then copies the spill through a
+    /// fixed buffer, so even the O(grid) document never becomes O(grid)
+    /// resident. (Without it — stdout, tests — the body is one String.)
+    pub out: Option<PathBuf>,
+}
+
+impl SweepStreamConfig {
+    pub fn new(format: SweepFormat, chunk: usize, threads: usize) -> SweepStreamConfig {
+        SweepStreamConfig {
+            format,
+            chunk,
+            threads,
+            checkpoint: None,
+            resume: false,
+            max_chunks: None,
+            cache: None,
+            cancel: None,
+            out: None,
+        }
+    }
+}
+
+/// What a streamed sweep did.
+#[derive(Debug)]
+pub struct SweepStreamOutcome {
+    /// Grid size.
+    pub n_points: usize,
+    /// Points rendered so far (equals `n_points` iff complete).
+    pub n_done: usize,
+    /// Errored points among them.
+    pub n_errors: usize,
+    pub chunks_done: usize,
+    pub total_chunks: usize,
+    /// Bounded-memory gauge: max points resident at once this run.
+    pub peak_resident_points: usize,
+    /// True when the run stopped at a checkpoint (max-chunks or cancel).
+    pub interrupted: bool,
+    /// The complete rendered report — `None` when interrupted, and `None`
+    /// when the report was streamed to [`SweepStreamConfig::out`].
+    pub body: Option<String>,
+    /// The run's checkpoint path, if any — completion does **not** delete
+    /// it (see [`Self::cleanup_checkpoint`]).
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl SweepStreamOutcome {
+    /// Remove the checkpoint and rows spill. Call only once the final
+    /// report has been safely delivered: completion deliberately leaves
+    /// both on disk so a failed report write (disk full on the O(grid)
+    /// output, unwritable path) stays resumable instead of losing the
+    /// whole run.
+    pub fn cleanup_checkpoint(&self) {
+        if let Some(ckpt) = &self.checkpoint {
+            let _ = std::fs::remove_file(ckpt);
+            let _ = std::fs::remove_file(rows_path(ckpt));
+        }
+    }
+}
+
+/// Run a sweep through the chunked engine, rendering rows incrementally.
+/// The complete run's `body` is byte-identical to the corresponding
+/// [`super::SweepReport`] rendering of [`super::run_sweep`].
+pub fn run_sweep_streamed(
+    sweep: &Sweep,
+    backends: &[Box<dyn Evaluator>],
+    cfg: &SweepStreamConfig,
+) -> Result<SweepStreamOutcome> {
+    let query = Query::from_sweep(sweep.clone(), "");
+    let n = query.space.len();
+    let chunk = cfg.chunk.max(1);
+    let backend_names: Vec<String> = backends.iter().map(|b| b.name().to_string()).collect();
+    let fingerprint = sweep_fingerprint(sweep, backends, chunk, cfg.format);
+
+    // Temp spill home for multi-chunk runs without a checkpoint — held
+    // until the report is assembled.
+    let mut _tempdir: Option<TempDir> = None;
+    let mut start_chunk = 0usize;
+    let mut writer = if cfg.resume {
+        let Some(ckpt) = &cfg.checkpoint else {
+            bail!("--resume needs --checkpoint <path>");
+        };
+        let (w, chunks_done) =
+            SweepStreamWriter::resume(ckpt, &fingerprint, sweep, &backend_names, cfg.format)?;
+        start_chunk = chunks_done;
+        w
+    } else {
+        let spill = match &cfg.checkpoint {
+            // A fresh run must not clobber hours of resumable progress
+            // because `--resume` was forgotten: starting over is an
+            // explicit `rm`, not a default.
+            Some(ckpt) if ckpt.exists() => bail!(
+                "checkpoint {} already exists — pass --resume to continue it, or delete \
+                 it (and {}) to start over",
+                ckpt.display(),
+                rows_path(ckpt).display()
+            ),
+            Some(ckpt) => Spill::file(&rows_path(ckpt), 0)?,
+            None if cfg.format != SweepFormat::Text && n > chunk => {
+                let dir = TempDir::new().context("creating spill temp dir")?;
+                let spill = Spill::file(&dir.path().join("rows"), 0)?;
+                _tempdir = Some(dir);
+                spill
+            }
+            None => Spill::mem(),
+        };
+        SweepStreamWriter {
+            format: cfg.format,
+            summary: SweepSummary::new(sweep.axes.clone(), backend_names.clone()),
+            spill,
+            checkpoint: cfg.checkpoint.clone(),
+            fingerprint: fingerprint.clone(),
+            chunk,
+        }
+    };
+
+    let mut planner = Planner::new(cfg.threads);
+    if let Some(cache) = &cfg.cache {
+        planner = planner.with_cache(cache.clone());
+    }
+    let opts = StreamOptions {
+        chunk,
+        start_chunk,
+        max_chunks: cfg.max_chunks,
+        cancel: cfg.cancel.clone(),
+        // Sweep reports carry no per-point provenance, so the O(unique
+        // keys) dedup ledger buys nothing here — disabling it keeps the
+        // engine's residency O(chunk); the shared cache still absorbs
+        // cross-chunk duplicate evaluations.
+        provenance_ledger: false,
+    };
+    let outcome = planner.run_streamed(&query, backends, &opts, &mut writer)?;
+
+    let n_done = writer.summary.n_points();
+    let n_errors = writer.summary.n_errors();
+    let body = if outcome.interrupted {
+        if cfg.checkpoint.is_none() {
+            bail!("sweep interrupted without --checkpoint — progress cannot be resumed");
+        }
+        None
+    } else {
+        match &cfg.out {
+            // Stream the assembly straight into the file: the document is
+            // the only O(grid) artifact and it never lives in memory.
+            Some(path) => {
+                let file = std::fs::File::create(path)
+                    .with_context(|| format!("creating report {}", path.display()))?;
+                let mut w = std::io::BufWriter::new(file);
+                writer.finish_into(&mut w)?;
+                use std::io::Write as _;
+                w.flush().with_context(|| format!("writing report {}", path.display()))?;
+                None
+            }
+            None => Some(writer.finish()?),
+        }
+    };
+    Ok(SweepStreamOutcome {
+        n_points: n,
+        n_done,
+        n_errors,
+        chunks_done: outcome.chunks_done,
+        total_chunks: outcome.total_chunks,
+        peak_resident_points: outcome.peak_resident_points,
+        interrupted: outcome.interrupted,
+        body,
+        checkpoint: cfg.checkpoint.clone(),
+    })
+}
+
+/// The rows spill lives next to its checkpoint.
+fn rows_path(checkpoint: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.rows", checkpoint.display()))
+}
+
+/// The rendered JSON document split around its `points` array: everything
+/// up to (and including) `"points": `, and everything after the value.
+/// Rendering the wrapper through the same [`report_doc`] + pretty printer
+/// as the materialized path is what keeps the spliced document
+/// byte-identical to it.
+fn json_skeleton(summary: &SweepSummary) -> (String, String) {
+    let doc = report_doc(
+        summary.axes(),
+        summary.backends(),
+        summary.n_points(),
+        summary.n_errors(),
+        Json::Str(POINTS_PLACEHOLDER.to_string()),
+        summary,
+    );
+    let text = doc.pretty();
+    let marker = format!("\"points\": \"{POINTS_PLACEHOLDER}\"");
+    let at = text.find(&marker).expect("skeleton contains the points key");
+    let pre = text[..at + "\"points\": ".len()].to_string();
+    let post = text[at + marker.len()..].to_string();
+    (pre, post)
+}
+
+/// FNV-1a over a canonical description of everything that shapes the
+/// output bytes: the point space, the backend instances (namespaces fold
+/// in their configuration), the chunking, and the format. A resume whose
+/// fingerprint disagrees is refused — silently mixing two different runs'
+/// rows would corrupt the report.
+fn sweep_fingerprint(
+    sweep: &Sweep,
+    backends: &[Box<dyn Evaluator>],
+    chunk: usize,
+    format: SweepFormat,
+) -> String {
+    use std::fmt::Write as _;
+    let mut canon = String::new();
+    for (k, v) in &sweep.base {
+        let _ = writeln!(canon, "base {k}={v}");
+    }
+    for a in &sweep.axes {
+        let _ = writeln!(canon, "axis {}={}", a.key, a.values.join("\u{1f}"));
+    }
+    for b in backends {
+        let _ = writeln!(canon, "backend {}", b.cache_namespace());
+    }
+    let _ = writeln!(canon, "chunk {chunk}");
+    let _ = writeln!(canon, "format {}", format.tag());
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for byte in canon.as_bytes() {
+        h ^= *byte as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// The render-and-drop sink: rows to the spill, summary to the online
+/// accumulator, checkpoint after every chunk.
+struct SweepStreamWriter {
+    format: SweepFormat,
+    summary: SweepSummary,
+    spill: Spill,
+    checkpoint: Option<PathBuf>,
+    fingerprint: String,
+    chunk: usize,
+}
+
+impl SweepStreamWriter {
+    /// Rebuild a writer from its checkpoint; returns it plus the number of
+    /// completed chunks to skip.
+    fn resume(
+        ckpt: &Path,
+        fingerprint: &str,
+        sweep: &Sweep,
+        backend_names: &[String],
+        format: SweepFormat,
+    ) -> Result<(SweepStreamWriter, usize)> {
+        let text = std::fs::read_to_string(ckpt)
+            .with_context(|| format!("reading checkpoint {}", ckpt.display()))?;
+        let v = Json::parse(&text)
+            .with_context(|| format!("parsing checkpoint {}", ckpt.display()))?;
+        if v.get("version")?.as_f64()? != CHECKPOINT_VERSION {
+            bail!("checkpoint {} has an unsupported version", ckpt.display());
+        }
+        let found = v.get("fingerprint")?.as_str()?.to_string();
+        if found != fingerprint {
+            bail!(
+                "checkpoint {} belongs to a different run (fingerprint {found}, expected \
+                 {fingerprint}) — the sweep file, backends, --chunk and output format must \
+                 all match the interrupted run",
+                ckpt.display()
+            );
+        }
+        let chunks_done = v.get("chunks_done")?.as_usize()?;
+        let rows_bytes = v.get("rows_bytes")?.as_f64()? as u64;
+        let summary = SweepSummary::from_state(
+            sweep.axes.clone(),
+            backend_names.to_vec(),
+            v.get("summary")?,
+        )
+        .context("restoring checkpoint summary")?;
+        // The spill must hold at least every byte the checkpoint accounts
+        // for — truncating to `rows_bytes` discards a half-written chunk,
+        // but set_len would silently zero-EXTEND a missing or shortened
+        // file into a corrupt report.
+        let rows = rows_path(ckpt);
+        let have = std::fs::metadata(&rows).map(|m| m.len()).unwrap_or(0);
+        if have < rows_bytes {
+            bail!(
+                "rows spill {} is missing or truncated ({have} of the {rows_bytes} bytes the \
+                 checkpoint accounts for) — the checkpoint pair is corrupt; delete both and \
+                 restart the sweep",
+                rows.display()
+            );
+        }
+        let spill = Spill::file(&rows, rows_bytes)?;
+        let chunk = v.get("chunk")?.as_usize()?;
+        Ok((
+            SweepStreamWriter {
+                format,
+                summary,
+                spill,
+                checkpoint: Some(ckpt.to_path_buf()),
+                fingerprint: fingerprint.to_string(),
+                chunk,
+            },
+            chunks_done,
+        ))
+    }
+
+    /// Persist the checkpoint (atomically: temp file + rename) after the
+    /// spill is synced, so every accounted row byte is durable first.
+    fn save_checkpoint(&mut self, progress: &StreamProgress) -> Result<()> {
+        let Some(ckpt) = self.checkpoint.clone() else { return Ok(()) };
+        self.spill.sync()?;
+        let doc = obj(vec![
+            ("version", Json::Num(CHECKPOINT_VERSION)),
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("chunk", num(self.chunk as f64)),
+            ("chunks_done", num(progress.chunks_done as f64)),
+            ("total_chunks", num(progress.total_chunks as f64)),
+            ("points", num(progress.points as f64)),
+            ("done", num(progress.done as f64)),
+            ("rows_bytes", num(self.spill.len() as f64)),
+            ("summary", self.summary.state_json()),
+        ]);
+        let tmp = PathBuf::from(format!("{}.tmp", ckpt.display()));
+        std::fs::write(&tmp, doc.pretty())
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, &ckpt)
+            .with_context(|| format!("publishing checkpoint {}", ckpt.display()))?;
+        Ok(())
+    }
+
+    /// Assemble the final document around the spilled rows, in memory
+    /// (small grids, stdout, tests — byte-identical to the materialized
+    /// [`super::SweepReport`] renderings).
+    fn finish(self) -> Result<String> {
+        let SweepStreamWriter { format, summary, spill, .. } = self;
+        match format {
+            SweepFormat::Text => Ok(summary.to_text()),
+            SweepFormat::Csv => {
+                let mut out =
+                    csv_header(summary.axes(), summary.n_points(), summary.n_errors());
+                spill.drain_into(&mut out)?;
+                Ok(out)
+            }
+            SweepFormat::Json => {
+                let (pre, post) = json_skeleton(&summary);
+                let mut out =
+                    String::with_capacity(pre.len() + post.len() + spill.len() as usize + 8);
+                out.push_str(&pre);
+                if spill.is_empty() {
+                    out.push_str("[]");
+                } else {
+                    out.push('[');
+                    spill.drain_into(&mut out)?;
+                    out.push_str("\n  ]");
+                }
+                out.push_str(&post);
+                Ok(out)
+            }
+        }
+    }
+
+    /// Assemble the final document straight into a writer: the same bytes
+    /// as [`Self::finish`] plus the CLI's trailing newline, with the spill
+    /// *copied* rather than loaded — resident memory stays O(chunk) even
+    /// for an O(grid) report.
+    fn finish_into(self, w: &mut dyn std::io::Write) -> Result<()> {
+        let SweepStreamWriter { format, summary, spill, .. } = self;
+        match format {
+            SweepFormat::Text => w.write_all(summary.to_text().as_bytes())?,
+            SweepFormat::Csv => {
+                let header = csv_header(summary.axes(), summary.n_points(), summary.n_errors());
+                w.write_all(header.as_bytes())?;
+                spill.drain_to(w)?;
+                // Header and rows all end in '\n' already.
+            }
+            SweepFormat::Json => {
+                let (pre, post) = json_skeleton(&summary);
+                w.write_all(pre.as_bytes())?;
+                if spill.is_empty() {
+                    w.write_all(b"[]")?;
+                } else {
+                    w.write_all(b"[")?;
+                    spill.drain_to(w)?;
+                    w.write_all(b"\n  ]")?;
+                }
+                w.write_all(post.as_bytes())?;
+                // The document ends with `}`; files end with a newline.
+                w.write_all(b"\n")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl StreamSink for SweepStreamWriter {
+    fn point(&mut self, _q: &Query, p: PlannedPoint) -> Result<()> {
+        let row = SweepPointResult {
+            index: p.index,
+            point: p.point,
+            evals: p
+                .evals
+                .into_iter()
+                .map(|pe| match pe {
+                    PointEval::Done { eval, .. } => eval,
+                    PointEval::Pruned { .. } => unreachable!("sweep queries run unpruned"),
+                })
+                .collect(),
+            error: p.error,
+        };
+        match self.format {
+            SweepFormat::Text => {}
+            SweepFormat::Csv => {
+                let mut s = String::new();
+                row.csv_rows(&mut s);
+                self.spill.push(&s)?;
+            }
+            SweepFormat::Json => {
+                let frag = row.json().pretty_at(2);
+                let mut s = String::with_capacity(frag.len() + 8);
+                if !self.spill.is_empty() {
+                    s.push(',');
+                }
+                s.push_str("\n    ");
+                s.push_str(&frag);
+                self.spill.push(&s)?;
+            }
+        }
+        self.summary.add(&row);
+        Ok(())
+    }
+
+    fn chunk_done(&mut self, progress: &StreamProgress) -> Result<()> {
+        self.save_checkpoint(progress)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{backends_for, run_sweep};
+
+    fn small_sweep() -> Sweep {
+        Sweep::parse(
+            "model = 1.3B\nbatch = 1\nsweep.n_gpus = 4,8\nsweep.seq_len = 1024,2048,4096\n",
+        )
+        .unwrap()
+    }
+
+    fn cfg(format: SweepFormat, chunk: usize) -> SweepStreamConfig {
+        SweepStreamConfig::new(format, chunk, 2)
+    }
+
+    #[test]
+    fn streamed_output_matches_materialized_for_every_format_and_chunking() {
+        let sw = small_sweep();
+        let backends = backends_for("both").unwrap();
+        let rep = run_sweep(&sw, &backends, 2);
+        for chunk in [1usize, 2, 4, 100] {
+            for (format, want) in [
+                (SweepFormat::Json, rep.to_json()),
+                (SweepFormat::Csv, rep.to_csv()),
+                (SweepFormat::Text, rep.to_text()),
+            ] {
+                let out =
+                    run_sweep_streamed(&sw, &backends, &cfg(format, chunk)).unwrap();
+                assert!(!out.interrupted);
+                assert_eq!(out.n_done, 6);
+                assert!(out.peak_resident_points <= chunk.max(1));
+                assert_eq!(
+                    out.body.as_deref(),
+                    Some(want.as_str()),
+                    "format {format:?} chunk {chunk}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn errored_points_stream_like_the_materialized_path() {
+        let sw = Sweep::parse("model = 1.3B\nsweep.n_gpus = 8,100000\n").unwrap();
+        let backends = backends_for("analytical").unwrap();
+        let rep = run_sweep(&sw, &backends, 2);
+        let out = run_sweep_streamed(&sw, &backends, &cfg(SweepFormat::Json, 1)).unwrap();
+        assert_eq!(out.n_errors, 1);
+        assert_eq!(out.body.as_deref(), Some(rep.to_json().as_str()));
+    }
+
+    #[test]
+    fn file_out_streams_identical_bytes_plus_trailing_newline() {
+        let sw = small_sweep();
+        let backends = backends_for("analytical").unwrap();
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        for format in [SweepFormat::Json, SweepFormat::Csv, SweepFormat::Text] {
+            let body =
+                run_sweep_streamed(&sw, &backends, &cfg(format, 2)).unwrap().body.unwrap();
+            let path = dir.path().join("report");
+            let mut c = cfg(format, 2);
+            c.out = Some(path.clone());
+            let out = run_sweep_streamed(&sw, &backends, &c).unwrap();
+            assert!(out.body.is_none(), "file-out runs return no in-memory body");
+            let on_disk = std::fs::read_to_string(&path).unwrap();
+            let mut want = body;
+            if !want.ends_with('\n') {
+                want.push('\n');
+            }
+            assert_eq!(on_disk, want, "{format:?}");
+        }
+    }
+
+    #[test]
+    fn interrupt_without_checkpoint_is_an_error() {
+        let sw = small_sweep();
+        let backends = backends_for("analytical").unwrap();
+        let mut c = cfg(SweepFormat::Csv, 2);
+        c.max_chunks = Some(1);
+        let err = run_sweep_streamed(&sw, &backends, &c).unwrap_err().to_string();
+        assert!(err.contains("--checkpoint"), "{err}");
+    }
+}

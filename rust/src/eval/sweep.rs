@@ -122,8 +122,18 @@ impl Sweep {
         self.len() == 0
     }
 
+    /// A chunked cursor over the grid: `[0, len)` split into ranges of at
+    /// most `chunk` indices, in order. Nothing is materialized — each index
+    /// decodes on demand via [`Self::point`].
+    pub fn cursor(&self, chunk: usize) -> GridCursor {
+        GridCursor { len: self.len(), chunk: chunk.max(1), next: 0 }
+    }
+
     /// Decode point `index` (odometer order, last axis fastest): the axis
-    /// assignment and the scenario it denotes. Scenario construction can
+    /// assignment and the scenario it denotes. The decode is a mixed-radix
+    /// expansion of the ordinal over the axis lengths, so any of the
+    /// `Π axis lengths` points is addressable in O(axes) without
+    /// materializing the Cartesian product. Scenario construction can
     /// fail for individual points (e.g. a swept `n_gpus` exceeding the
     /// cluster) — the sweep runner records those as errored points rather
     /// than aborting the grid.
@@ -145,6 +155,46 @@ impl Sweep {
             kv.insert(k.clone(), v.clone());
         }
         (assignment, Scenario::from_kv(&kv))
+    }
+}
+
+/// Chunked iterator over grid ordinals (see [`Sweep::cursor`]): yields
+/// half-open index ranges of at most `chunk` points, covering `[0, len)`
+/// in order. The streaming engine decodes, evaluates and discards one
+/// range at a time, so resident memory is O(chunk) for any grid size —
+/// and because every point is addressable by ordinal, a resumed run can
+/// skip straight to the first incomplete chunk.
+#[derive(Debug, Clone)]
+pub struct GridCursor {
+    len: usize,
+    chunk: usize,
+    next: usize,
+}
+
+impl GridCursor {
+    /// Total chunks this cursor will yield.
+    pub fn total_chunks(&self) -> usize {
+        self.len.div_ceil(self.chunk)
+    }
+
+    /// Skip the first `chunks` chunks (a resume entering at the last
+    /// checkpoint).
+    pub fn skip_chunks(&mut self, chunks: usize) {
+        self.next = chunks.saturating_mul(self.chunk).min(self.len);
+    }
+}
+
+impl Iterator for GridCursor {
+    type Item = std::ops::Range<usize>;
+
+    fn next(&mut self) -> Option<std::ops::Range<usize>> {
+        if self.next >= self.len {
+            return None;
+        }
+        let start = self.next;
+        let end = (start + self.chunk).min(self.len);
+        self.next = end;
+        Some(start..end)
     }
 }
 
@@ -334,6 +384,27 @@ mod tests {
         let s = s.unwrap();
         assert_eq!(s.n_gpus, 8);
         assert_eq!(s.training.seq_len, 2048);
+    }
+
+    #[test]
+    fn cursor_covers_the_grid_in_chunks() {
+        let sw = Sweep::parse("model = 1.3B\nsweep.n_gpus = 4,8\nsweep.seq_len = 1024,2048\n")
+            .unwrap();
+        let mut c = sw.cursor(3);
+        assert_eq!(c.total_chunks(), 2);
+        assert_eq!(c.next(), Some(0..3));
+        assert_eq!(c.next(), Some(3..4));
+        assert_eq!(c.next(), None);
+        // Oversized chunk → one range; chunk 0 clamps to 1.
+        assert_eq!(sw.cursor(100).collect::<Vec<_>>(), vec![0..4]);
+        assert_eq!(sw.cursor(0).total_chunks(), 4);
+        // Resume skips whole chunks.
+        let mut r = sw.cursor(3);
+        r.skip_chunks(1);
+        assert_eq!(r.next(), Some(3..4));
+        let mut done = sw.cursor(3);
+        done.skip_chunks(2);
+        assert_eq!(done.next(), None);
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub mod analysis;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
+pub mod docs;
 pub mod eval;
 pub mod experiments;
 pub mod gridsearch;

@@ -5,13 +5,17 @@
 //! * `simulate` / `bounds` / `gridsearch` — one scenario from CLI flags,
 //!   evaluated by the matching backend;
 //! * `scenario` — a `.scn` file evaluated by any/all backends;
-//! * `sweep` — a `.scn` file with `sweep.*` axes, expanded to a Cartesian
-//!   grid and evaluated in parallel;
+//! * `sweep` — a `.scn` file with `sweep.*` axes, streamed through the
+//!   chunked engine in bounded memory (checkpoint + resume for huge
+//!   grids);
 //! * `plan` — a declarative [`fsdp_bw::query::Query`] file (axes +
 //!   `where.*` constraints + `query.*` objective), bounds-pruned and
 //!   ranked into a frontier;
 //! * `serve` — the same Planner as a long-running HTTP service with a
-//!   shared cross-request evaluation cache (see [`fsdp_bw::serve`]);
+//!   shared cross-request evaluation cache and an async job API (see
+//!   [`fsdp_bw::serve`]);
+//! * `docs` — regenerate `docs/REFERENCE.md` from the binary's own
+//!   registries;
 //! * `experiment` — regenerate a paper table/figure;
 //! * `train` — the real FSDP trainer on AOT artifacts (needs `--features
 //!   xla`);
@@ -22,16 +26,17 @@
 //! rejected rather than silently ignored.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use fsdp_bw::config::scenario::Scenario;
 use fsdp_bw::config::{ClusterConfig, ModelConfig};
-use fsdp_bw::eval::{backends_for, run_sweep_cached, BoundsEval, Searched, Simulated};
-use fsdp_bw::eval::{Evaluation, Evaluator, Sweep};
+use fsdp_bw::docs::CMD_SPECS;
+use fsdp_bw::eval::{backends_for, run_sweep_streamed, BoundsEval, Searched, Simulated};
+use fsdp_bw::eval::{Evaluation, Evaluator, Sweep, SweepFormat, SweepStreamConfig};
 use fsdp_bw::experiments;
-use fsdp_bw::query::{EvalCache, Planner, Query};
+use fsdp_bw::query::{EvalCache, Planner, Query, StreamOptions, DEFAULT_CHUNK};
 use fsdp_bw::util::cli::Args;
 use fsdp_bw::util::json::Json;
 
@@ -54,21 +59,32 @@ COMMANDS:
                                          (backends: analytical, simulated,
                                           bounds, gridsearch, both, all)
   sweep      <file.scn> [--backend both] [--threads N] [--json|--csv]
-             [--out report.json]         expand sweep.* axes to a Cartesian
-                                         grid and evaluate in parallel
+             [--out report.json] [--chunk 65536] [--checkpoint ck.json]
+             [--resume] [--max-chunks N] expand sweep.* axes to a grid and
+                                         stream it in bounded-memory chunks
+                                         (O(chunk) resident, any grid size);
+                                         --checkpoint + --resume continue an
+                                         interrupted run byte-identically
   plan       <file.scn> [--backend analytical] [--threads N] [--top-k K]
              [--no-prune] [--check-prune] [--json|--csv] [--out path]
-                                         declarative query: sweep.* axes +
+             [--chunk N]                 declarative query: sweep.* axes +
                                          where.* constraints + query.*
                                          objective, §2.7 bounds-pruned,
                                          ranked frontier (see README)
   serve      [--addr 127.0.0.1:8787] [--threads 4] [--queue 64]
              [--timeout-ms 30000] [--cache-capacity 4096]
-             [--planner-threads 1]       the Planner as an HTTP service:
-                                         POST /v1/plan, GET /v1/presets,
+             [--planner-threads 1] [--job-workers 2] [--job-queue 32]
+             [--job-chunk 4096] [--job-records 256]
+                                         the Planner as an HTTP service:
+                                         POST /v1/plan, async jobs under
+                                         /v1/jobs, GET /v1/presets,
                                          GET /healthz, GET /metrics, with a
                                          shared cross-request evaluation
                                          cache and request coalescing
+  docs       [--out docs/REFERENCE.md] [--check]
+                                         generate the reference manual from
+                                         the binary's own registries
+                                         (--check fails on drift, for CI)
   train      [--artifact train_step_27m] [--artifacts-dir artifacts]
              [--ranks 4] [--steps 100] [--bandwidth-gbps 200]
              [--seed 42] [--csv out.csv] [--quiet]
@@ -76,67 +92,6 @@ COMMANDS:
                                          (requires --features xla)
   list                                   experiments, models, clusters
 ";
-
-/// One subcommand's complete CLI surface. [`main`] enforces it before
-/// dispatch: options outside `flags` ∪ `opts` and positionals beyond
-/// `positionals` are errors, so no subcommand silently ignores input.
-struct CmdSpec {
-    name: &'static str,
-    /// Boolean options (take no value).
-    flags: &'static [&'static str],
-    /// Options that consume a value.
-    opts: &'static [&'static str],
-    /// Positional arguments after the command name itself.
-    positionals: usize,
-}
-
-const CMD_SPECS: &[CmdSpec] = &[
-    CmdSpec { name: "experiment", flags: &["json"], opts: &[], positionals: 1 },
-    CmdSpec {
-        name: "gridsearch",
-        flags: &["json"],
-        opts: &["model", "cluster", "gpus", "precision"],
-        positionals: 0,
-    },
-    CmdSpec {
-        name: "simulate",
-        flags: &["json", "empty-cache"],
-        opts: &["model", "cluster", "gpus", "seq", "batch", "gamma", "stage", "precision"],
-        positionals: 0,
-    },
-    CmdSpec {
-        name: "bounds",
-        flags: &["json"],
-        opts: &["model", "cluster", "gpus", "seq", "precision"],
-        positionals: 0,
-    },
-    CmdSpec { name: "scenario", flags: &["json"], opts: &["backend"], positionals: 1 },
-    CmdSpec {
-        name: "sweep",
-        flags: &["json", "csv"],
-        opts: &["backend", "threads", "out"],
-        positionals: 1,
-    },
-    CmdSpec {
-        name: "plan",
-        flags: &["json", "csv", "no-prune", "check-prune"],
-        opts: &["backend", "threads", "top-k", "out"],
-        positionals: 1,
-    },
-    CmdSpec {
-        name: "serve",
-        flags: &[],
-        opts: &["addr", "threads", "queue", "timeout-ms", "cache-capacity", "planner-threads"],
-        positionals: 0,
-    },
-    CmdSpec {
-        name: "train",
-        flags: &["quiet"],
-        opts: &["artifact", "artifacts-dir", "ranks", "steps", "bandwidth-gbps", "seed", "csv"],
-        positionals: 0,
-    },
-    CmdSpec { name: "list", flags: &[], opts: &[], positionals: 0 },
-];
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -169,8 +124,8 @@ fn main() -> Result<()> {
     // swallowing the next token as its value.
     let parse_flags: Vec<&str> = CMD_SPECS
         .iter()
-        .flat_map(|s| s.flags.iter().copied())
-        .filter(|f| !spec.opts.contains(f))
+        .flat_map(|s| s.flags.iter().map(|(n, _)| *n))
+        .filter(|f| !spec.opts.iter().any(|(n, _)| n == f))
         .collect();
     let args = Args::parse(&raw, &parse_flags)?;
     // The command itself must be the first positional: `fsdp-bw x.scn plan`
@@ -184,7 +139,8 @@ fn main() -> Result<()> {
     }
 
     // Enforce the table: no subcommand ignores an option or a positional.
-    let known: Vec<&str> = spec.flags.iter().chain(spec.opts.iter()).copied().collect();
+    let known: Vec<&str> =
+        spec.flags.iter().chain(spec.opts.iter()).map(|(n, _)| *n).collect();
     args.check_known(&known)?;
     if args.positional.len() > 1 + spec.positionals {
         anyhow::bail!(
@@ -204,6 +160,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "plan" => cmd_plan(&args),
         "serve" => cmd_serve(&args),
+        "docs" => cmd_docs(&args),
         "train" => cmd_train(&args),
         "list" => cmd_list(),
         other => unreachable!("unspecced command {other:?}"),
@@ -317,38 +274,71 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let backends = backends_for(&args.str_opt("backend", "both"))?;
     let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let threads = args.num_opt("threads", default_threads)?;
-    // Route through the same shared-cache machinery the server uses. A
-    // single CLI invocation gains nothing over the planner's own dedup
-    // (the cache is per-process), but the CLI exercising the serve path
-    // keeps the two front-ends behaviorally identical; `empty_cache`
-    // stays a scenario key (part of the cache key), not a cache control.
-    let report = run_sweep_cached(&sweep, &backends, threads, Some(EvalCache::shared()));
-    let mut body = if args.flag("json") {
-        report.to_json()
+    let format = if args.flag("json") {
+        SweepFormat::Json
     } else if args.flag("csv") {
-        report.to_csv()
+        SweepFormat::Csv
     } else {
-        report.to_text()
+        SweepFormat::Text
     };
-    if !body.ends_with('\n') {
-        body.push('\n');
+    // Chunked streaming: the grid is walked O(--chunk) points at a time
+    // (rows spill to disk), so grid size is bounded by the axis caps, not
+    // by RAM. The shared-cache wiring mirrors the serve path, keeping the
+    // two front-ends behaviorally identical; `empty_cache` stays a
+    // scenario key (part of the cache key), not a cache control.
+    let mut cfg = SweepStreamConfig::new(format, args.num_opt("chunk", DEFAULT_CHUNK)?, threads);
+    cfg.checkpoint = args.str_maybe("checkpoint").map(PathBuf::from);
+    cfg.resume = args.flag("resume");
+    if let Some(m) = args.str_maybe("max-chunks") {
+        let m: usize = m.parse().context("--max-chunks")?;
+        anyhow::ensure!(m >= 1, "--max-chunks must be ≥ 1 (0 would do no work and leave no checkpoint)");
+        cfg.max_chunks = Some(m);
+        anyhow::ensure!(
+            cfg.checkpoint.is_some(),
+            "--max-chunks stops mid-grid, so it needs --checkpoint to be resumable"
+        );
     }
-    match args.str_maybe("out") {
-        Some(p) => {
-            std::fs::write(&p, body.as_bytes())?;
-            println!(
-                "wrote {p} ({} points × {} backends, {} errors)",
-                report.n_points(),
-                report.backends.len(),
-                report.n_errors()
-            );
+    cfg.cache = Some(EvalCache::shared());
+    cfg.out = args.str_maybe("out").map(PathBuf::from);
+    let outcome = run_sweep_streamed(&sweep, &backends, &cfg)?;
+    if outcome.interrupted {
+        println!(
+            "sweep checkpointed after {} of {} chunks ({} of {} points, {} errors) — \
+             continue with --resume",
+            outcome.chunks_done,
+            outcome.total_chunks,
+            outcome.n_done,
+            outcome.n_points,
+            outcome.n_errors
+        );
+        return Ok(());
+    }
+    match (&outcome.body, args.str_maybe("out")) {
+        // --out: the report was streamed straight into the file.
+        (None, Some(p)) => println!(
+            "wrote {p} ({} points × {} backends, {} errors; {} chunks, \
+             peak resident {} points)",
+            outcome.n_points,
+            backends.len(),
+            outcome.n_errors,
+            outcome.total_chunks,
+            outcome.peak_resident_points
+        ),
+        (Some(body), _) => {
+            print!("{body}");
+            if !body.ends_with('\n') {
+                println!();
+            }
         }
-        None => print!("{body}"),
+        (None, None) => unreachable!("no --out implies an in-memory body"),
     }
-    if report.n_points() > 0 && report.n_errors() == report.n_points() {
+    // Only now that the report is delivered does the checkpoint go away —
+    // a failed write above leaves the run resumable.
+    outcome.cleanup_checkpoint();
+    if outcome.n_points > 0 && outcome.n_errors == outcome.n_points {
         anyhow::bail!(
             "all {} sweep points failed to construct a scenario — check the axes",
-            report.n_points()
+            outcome.n_points
         );
     }
     Ok(())
@@ -403,9 +393,20 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
 
     // Per-process cache instance of the serve path (see cmd_sweep) — the
-    // frontier is identical with or without it.
+    // frontier is identical with or without it. `--chunk` routes through
+    // the chunked engine (byte-identical output; the serve job API's
+    // execution path) instead of one whole-grid pass.
     let planner = Planner::new(threads).with_cache(EvalCache::shared());
-    let frontier = planner.run(&query)?;
+    let chunk = args.num_opt("chunk", 0usize)?;
+    let frontier = if chunk > 0 {
+        let backends = backends_for(&query.backend_spec)?;
+        let opts = StreamOptions { chunk, ..StreamOptions::default() };
+        planner
+            .run_chunked(&query, &backends, &opts, |_| {})?
+            .expect("uncancelled run completes")
+    } else {
+        planner.run(&query)?
+    };
     let mut body = if args.flag("json") {
         frontier.to_json()
     } else if args.flag("csv") {
@@ -449,15 +450,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
         timeout: std::time::Duration::from_millis(args.num_opt("timeout-ms", 30_000u64)?),
         cache_capacity: args.num_opt("cache-capacity", defaults.cache_capacity)?,
         planner_threads: args.num_opt("planner-threads", defaults.planner_threads)?,
+        job_workers: args.num_opt("job-workers", defaults.job_workers)?,
+        job_queue: args.num_opt("job-queue", defaults.job_queue)?,
+        job_chunk: args.num_opt("job-chunk", defaults.job_chunk)?,
+        job_records: args.num_opt("job-records", defaults.job_records)?,
     };
     let threads = cfg.threads;
     let queue = cfg.queue;
     let cache_capacity = cfg.cache_capacity;
+    let job_workers = cfg.job_workers;
     let server = Server::start(cfg)?;
     println!("fsdp-bw serve: listening on http://{}", server.addr());
-    println!("  endpoints : POST /v1/plan · GET /v1/presets · GET /healthz · GET /metrics");
-    println!("  workers {threads} · accept queue {queue} · eval cache capacity {cache_capacity}");
+    println!(
+        "  endpoints : POST /v1/plan · POST/GET/DELETE /v1/jobs[/:id[/result]] · \
+         GET /v1/presets · GET /healthz · GET /metrics"
+    );
+    println!(
+        "  workers {threads} · accept queue {queue} · eval cache capacity {cache_capacity} \
+         · job workers {job_workers}"
+    );
     server.join();
+    Ok(())
+}
+
+/// `fsdp-bw docs`: render the reference manual from the binary's own
+/// registries; `--check` makes CI fail on drift instead of writing.
+fn cmd_docs(args: &Args) -> Result<()> {
+    let out = args.str_opt("out", "docs/REFERENCE.md");
+    let generated = fsdp_bw::docs::reference_markdown();
+    if args.flag("check") {
+        let on_disk = std::fs::read_to_string(&out).with_context(|| {
+            format!("reading {out} — generate it first with `fsdp-bw docs --out {out}`")
+        })?;
+        anyhow::ensure!(
+            on_disk == generated,
+            "{out} is stale — regenerate it with `fsdp-bw docs --out {out}`"
+        );
+        println!("{out} is current ({} bytes)", generated.len());
+        return Ok(());
+    }
+    if let Some(dir) = Path::new(&out).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, generated.as_bytes())?;
+    println!("wrote {out} ({} bytes)", generated.len());
     Ok(())
 }
 

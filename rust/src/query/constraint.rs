@@ -116,6 +116,27 @@ pub const METRIC_NAMES: &[&str] = &[
     "comm_ratio",
 ];
 
+/// Documentation for every constraint metric, in [`METRIC_NAMES`] order:
+/// `(name, tier, description)`. Tier 1 decides from the point alone,
+/// tier 2 from the closed-form Eq 1–4 memory model, tier 3 needs a backend
+/// evaluation. Rendered by the reference manual; a test pins it to
+/// [`METRIC_NAMES`].
+pub const METRIC_DOCS: &[(&str, &str, &str)] = &[
+    ("n_gpus", "1 (scenario)", "GPUs the point uses"),
+    ("seq_len", "1 (scenario)", "Context length, tokens"),
+    ("batch", "1 (scenario)", "Per-GPU micro-batch size"),
+    ("gamma", "1 (scenario)", "Activation-checkpointing fraction γ"),
+    ("tokens_per_gpu", "1 (scenario)", "seq_len × batch"),
+    ("m_free_gib", "2 (memory)", "Free memory after weights/optimizer/gradients, GiB (Eqs 1–3)"),
+    ("mem_headroom_gib", "2 (memory)", "m_free minus activation footprint, GiB (Eq 4)"),
+    ("mfu", "3 (evaluated)", "Model-FLOPs utilization (lower bounds prune via Eq 14)"),
+    ("hfu", "3 (evaluated)", "Hardware-FLOPs utilization (lower bounds prune via Eq 13)"),
+    ("tgs", "3 (evaluated)", "Tokens/GPU/s (lower bounds prune via Eq 15)"),
+    ("t_step", "3 (evaluated)", "Step time, seconds"),
+    ("exposed_comm", "3 (evaluated)", "Unoverlapped communication time, seconds"),
+    ("comm_ratio", "3 (evaluated)", "exposed_comm / t_step"),
+];
+
 impl Metric {
     fn parse(name: &str) -> Option<Metric> {
         Some(match name {
@@ -304,6 +325,17 @@ mod tests {
 
     fn scen() -> Scenario {
         Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 10240\n").unwrap()
+    }
+
+    #[test]
+    fn metric_docs_cover_exactly_the_metric_names() {
+        let documented: Vec<&str> = METRIC_DOCS.iter().map(|(n, _, _)| *n).collect();
+        assert_eq!(documented, METRIC_NAMES, "METRIC_DOCS must list METRIC_NAMES, in order");
+        for (name, tier, doc) in METRIC_DOCS {
+            assert!(Metric::parse(name).is_some(), "documented metric {name:?} rejected");
+            assert!(tier.starts_with(['1', '2', '3']), "metric {name:?} has bad tier {tier:?}");
+            assert!(!doc.contains('|'), "metric {name:?} doc breaks the table");
+        }
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::eval::sweep::SweepAxis;
 use crate::eval::{num, obj, Evaluation};
 use crate::util::json::Json;
 
-use super::Objective;
+use super::{Objective, ParetoAxis};
 
 /// Per-backend outcome of one grid point.
 #[derive(Debug, Clone, PartialEq)]
@@ -123,71 +123,117 @@ impl PlanCounters {
     }
 }
 
+/// Online ranking accumulator — the candidate pool is folded in one point
+/// at a time (grid order), holding only what the final ranking needs:
+/// nothing for `report_all` beyond the indices, the current top-k for
+/// scalar objectives, the current non-dominated set for `pareto`. This is
+/// what lets the streaming engine rank a million-point grid without
+/// materializing it; [`rank`] is the same accumulator fed from a
+/// materialized slice.
+#[derive(Debug, Clone)]
+pub(crate) enum RankAccum {
+    /// Every candidate, in arrival (grid) order.
+    All { indices: Vec<usize> },
+    /// Scalar objective. `k > 0`: kept sorted best-first and truncated to
+    /// `k` on every insert, so residency is O(k). `k == 0` (keep all):
+    /// appended and sorted once at the end.
+    Scalar { k: usize, entries: Vec<(f64, usize)> },
+    /// 2-D Pareto front: the current mutually non-dominated set.
+    Pareto { a: ParetoAxis, b: ParetoAxis, front: Vec<(f64, f64, usize)> },
+}
+
+/// `(score, index)` ordering for scalar objectives: score descending, grid
+/// order breaking ties.
+fn scalar_cmp(x: &(f64, usize), y: &(f64, usize)) -> Ordering {
+    y.0.partial_cmp(&x.0).unwrap_or(Ordering::Equal).then(x.1.cmp(&y.1))
+}
+
+impl RankAccum {
+    pub fn new(objective: &Objective, top_k: usize) -> RankAccum {
+        match objective {
+            Objective::ReportAll => RankAccum::All { indices: Vec::new() },
+            Objective::Pareto(a, b) => RankAccum::Pareto { a: *a, b: *b, front: Vec::new() },
+            _ => RankAccum::Scalar { k: top_k, entries: Vec::new() },
+        }
+    }
+
+    /// Fold in one point. Points must arrive in grid order — tie-breaking
+    /// and `report_all` ordering rely on it.
+    pub fn add(&mut self, p: &PlannedPoint) {
+        match self {
+            RankAccum::All { indices } => {
+                if p.is_candidate() {
+                    indices.push(p.index);
+                }
+            }
+            RankAccum::Scalar { k, entries } => {
+                let Some(score) = p.score.filter(|s| s.is_finite()) else { return };
+                let entry = (score, p.index);
+                if *k > 0 {
+                    let at = entries.partition_point(|e| scalar_cmp(e, &entry) == Ordering::Less);
+                    if at < *k {
+                        entries.insert(at, entry);
+                        entries.truncate(*k);
+                    }
+                } else {
+                    entries.push(entry);
+                }
+            }
+            RankAccum::Pareto { a, b, front } => {
+                if !p.is_candidate() {
+                    return;
+                }
+                let Some(e) = p.primary_eval() else { return };
+                let (Some(va), Some(vb)) = (a.value(e), b.value(e)) else { return };
+                if !va.is_finite() || !vb.is_finite() {
+                    return;
+                }
+                // Dominated by a member → not on the front.
+                if front
+                    .iter()
+                    .any(|&(ma, mb, _)| ma >= va && mb >= vb && (ma > va || mb > vb))
+                {
+                    return;
+                }
+                // Members the newcomer dominates fall off.
+                front.retain(|&(ma, mb, _)| !(va >= ma && vb >= mb && (va > ma || vb > mb)));
+                front.push((va, vb, p.index));
+            }
+        }
+    }
+
+    /// The ranked point indices.
+    pub fn finish(self) -> Vec<usize> {
+        match self {
+            RankAccum::All { indices } => indices,
+            RankAccum::Scalar { mut entries, .. } => {
+                entries.sort_by(scalar_cmp);
+                entries.into_iter().map(|(_, i)| i).collect()
+            }
+            RankAccum::Pareto { mut front, .. } => {
+                front.sort_by(|x, y| {
+                    y.0.partial_cmp(&x.0)
+                        .unwrap_or(Ordering::Equal)
+                        .then(y.1.partial_cmp(&x.1).unwrap_or(Ordering::Equal))
+                        .then(x.2.cmp(&y.2))
+                });
+                front.into_iter().map(|(_, _, i)| i).collect()
+            }
+        }
+    }
+}
+
 /// Rank the candidate pool under an objective. Returns point indices:
 /// top-k by score for scalar objectives (ties broken by grid order), the
 /// Pareto-optimal set (first axis descending) for `pareto`, every candidate
-/// in grid order for `report_all`.
+/// in grid order for `report_all`. One fold over [`RankAccum`] — the same
+/// online accumulator the streaming engine feeds chunk by chunk.
 pub(crate) fn rank(objective: &Objective, points: &[PlannedPoint], top_k: usize) -> Vec<usize> {
-    match objective {
-        Objective::ReportAll => {
-            points.iter().filter(|p| p.is_candidate()).map(|p| p.index).collect()
-        }
-        Objective::Pareto(a, b) => {
-            let mut pts: Vec<(usize, f64, f64)> = points
-                .iter()
-                .filter(|p| p.is_candidate())
-                .filter_map(|p| {
-                    let e = p.primary_eval()?;
-                    let (va, vb) = (a.value(e)?, b.value(e)?);
-                    (va.is_finite() && vb.is_finite()).then_some((p.index, va, vb))
-                })
-                .collect();
-            pts.sort_by(|x, y| {
-                y.1.partial_cmp(&x.1)
-                    .unwrap_or(Ordering::Equal)
-                    .then(y.2.partial_cmp(&x.2).unwrap_or(Ordering::Equal))
-                    .then(x.0.cmp(&y.0))
-            });
-            // Sweep over groups of equal first-axis value: a group member is
-            // Pareto-optimal iff it has the group's max second-axis value
-            // and strictly beats every higher-first-axis point on it.
-            let mut front = Vec::new();
-            let mut best_vb = f64::NEG_INFINITY;
-            let mut i = 0;
-            while i < pts.len() {
-                let va = pts[i].1;
-                let mut j = i;
-                let mut group_max = f64::NEG_INFINITY;
-                while j < pts.len() && pts[j].1 == va {
-                    group_max = group_max.max(pts[j].2);
-                    j += 1;
-                }
-                if group_max > best_vb {
-                    for p in &pts[i..j] {
-                        if p.2 == group_max {
-                            front.push(p.0);
-                        }
-                    }
-                    best_vb = group_max;
-                }
-                i = j;
-            }
-            front
-        }
-        _ => {
-            let mut scored: Vec<(usize, f64)> = points
-                .iter()
-                .filter_map(|p| p.score.filter(|s| s.is_finite()).map(|s| (p.index, s)))
-                .collect();
-            scored.sort_by(|x, y| {
-                y.1.partial_cmp(&x.1).unwrap_or(Ordering::Equal).then(x.0.cmp(&y.0))
-            });
-            if top_k > 0 {
-                scored.truncate(top_k);
-            }
-            scored.into_iter().map(|(i, _)| i).collect()
-        }
+    let mut acc = RankAccum::new(objective, top_k);
+    for p in points {
+        acc.add(p);
     }
+    acc.finish()
 }
 
 /// The result of planning and executing one query.
@@ -384,7 +430,9 @@ impl Frontier {
         use std::fmt::Write as _;
         let mut out = String::new();
         let c = &self.counters;
-        let _ = writeln!(out, "# objective,{}", self.objective.render());
+        // RFC-4180-quote the rendering: `pareto(mfu, tgs_per_gpu)` carries
+        // a comma that would otherwise corrupt the two-column header row.
+        let _ = writeln!(out, "# objective,{}", csv_cell(&self.objective.render()));
         let _ = writeln!(out, "# points,{}", c.points);
         let _ = writeln!(out, "# evaluated,{}", c.evaluated);
         let _ = writeln!(out, "# pruned_by_bounds,{}", c.pruned_by_bounds);
@@ -533,6 +581,19 @@ mod tests {
                 p.index
             );
         }
+    }
+
+    #[test]
+    fn pareto_objective_header_is_rfc4180_quoted() {
+        let f = plan(
+            "model = 13B\nbatch = 1\nsweep.seq_len = 2048,4096\n\
+             query.objective = pareto(mfu, tgs_per_gpu)\n",
+        );
+        let csv = f.to_csv();
+        let first = csv.lines().next().unwrap();
+        // The rendering contains a comma, so the cell must be quoted to
+        // keep the comment row at two columns.
+        assert_eq!(first, "# objective,\"pareto(mfu, tgs_per_gpu)\"", "{csv}");
     }
 
     #[test]

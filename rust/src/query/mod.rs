@@ -11,7 +11,9 @@
 //!   ([`constraint::Constraint`]), e.g. `where.mem_headroom_gib = >= 2`,
 //!   `where.comm_ratio = <= 0.3`, `where.n_gpus = <= 64`;
 //! * an **objective** (`query.objective`): `max_mfu`, `max_tgs`,
-//!   `min_step_time`, `report_all`, or `pareto(mfu, tgs_per_gpu)`;
+//!   `min_step_time`, `report_all`, or `pareto(mfu, tgs_per_gpu)` — all
+//!   read the primary backend's Eq 11 metrics (MFU/HFU/TGS) and Eq 9 step
+//!   time;
 //! * a **backend** choice (`query.backend`, any [`crate::eval`] backend
 //!   spec), plus `query.top_k` and `query.prune`.
 //!
@@ -49,6 +51,7 @@ pub mod cache;
 pub mod constraint;
 pub mod frontier;
 pub mod planner;
+pub mod stream;
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -64,9 +67,34 @@ pub use cache::{CacheStats, EvalCache};
 pub use constraint::{Cmp, Constraint, Metric};
 pub use frontier::{Frontier, PlanCounters, PlannedPoint, PointEval};
 pub use planner::Planner;
+pub use stream::{StreamOptions, StreamOutcome, StreamProgress, StreamSink, DEFAULT_CHUNK};
 
 /// Ranked points a scalar-objective frontier keeps by default.
 pub const DEFAULT_TOP_K: usize = 10;
+
+/// Every `query.*` dialect key: `(key, description)` — rendered by the
+/// reference manual; [`Query::parse`] implements exactly this set (drift
+/// is caught by a test).
+pub const QUERY_KEY_DOCS: &[(&str, &str)] = &[
+    ("query.objective", "What to optimize (see the objectives table); default `max_mfu`"),
+    ("query.backend", "Backend spec: a name, `both`, or `all`; default `analytical`"),
+    ("query.top_k", "Ranked points to keep for scalar objectives (`all` = every one); default 10"),
+    ("query.prune", "Apply §2.7 bounds pruning, Eqs 12–15 (`true`/`false`); default true"),
+];
+
+/// Every objective the dialect accepts: `(spec, description)`. Each spec
+/// must round-trip through [`Objective::parse`] (tested), so the manual
+/// can never document an objective the parser rejects.
+pub const OBJECTIVE_DOCS: &[(&str, &str)] = &[
+    ("max_mfu", "Highest model-FLOPs utilization (the paper's headline metric)"),
+    ("max_tgs", "Highest per-GPU token throughput K (Eq 11)"),
+    ("min_step_time", "Lowest step time (Eq 10)"),
+    ("report_all", "No ranking — every feasible point in grid order (sweep semantics)"),
+    (
+        "pareto(mfu, tgs_per_gpu)",
+        "2-D Pareto front over two axes of mfu, hfu, tgs_per_gpu, step_time",
+    ),
+];
 
 /// One axis of a `pareto(a, b)` objective, oriented so larger is better.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -305,6 +333,37 @@ impl Query {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn documented_objectives_parse() {
+        for (spec, doc) in OBJECTIVE_DOCS {
+            assert!(Objective::parse(spec).is_ok(), "documented objective {spec:?} rejected");
+            assert!(!doc.is_empty() && !doc.contains('|'), "{spec:?} doc breaks the table");
+        }
+    }
+
+    #[test]
+    fn documented_query_keys_match_the_parser() {
+        // Every documented key parses; every key the parser names in its
+        // error message is documented.
+        for (key, _) in QUERY_KEY_DOCS {
+            let text = format!(
+                "model = 7B\n{key} = {}\n",
+                match *key {
+                    "query.objective" => "max_tgs",
+                    "query.backend" => "simulated",
+                    "query.top_k" => "3",
+                    "query.prune" => "false",
+                    other => panic!("unexpected documented key {other:?}"),
+                }
+            );
+            assert!(Query::parse(&text).is_ok(), "documented key {key:?} rejected");
+        }
+        let err = Query::parse("model = 7B\nquery.warp = 1\n").unwrap_err().to_string();
+        for (key, _) in QUERY_KEY_DOCS {
+            assert!(err.contains(key), "parser error does not name documented key {key}: {err}");
+        }
+    }
 
     #[test]
     fn objective_dialect_roundtrips() {

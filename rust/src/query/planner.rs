@@ -23,8 +23,10 @@
 //! points (both facts are asserted in tests and by `fsdp-bw plan
 //! --check-prune`).
 
-use std::collections::hash_map::Entry;
-use std::collections::HashMap;
+use std::collections::hash_map::{DefaultHasher, Entry};
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::ops::Range;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -191,16 +193,70 @@ impl Planner {
     /// Run with explicit backend instances (`q.backend_spec` is not
     /// re-resolved). The first backend is the primary one: constraints and
     /// ranking read its evaluations.
+    ///
+    /// This is the materialized form of the engine: one
+    /// [`Self::execute_range`] over the whole grid, every point collected.
+    /// For chunked, bounded-memory execution over the same pipeline see
+    /// [`crate::query::stream`].
     pub fn run_with(&self, q: &Query, backends: &[Box<dyn Evaluator>]) -> Frontier {
         let n = q.space.len();
+        let mut counters = PlanCounters { points: n, ..Default::default() };
+        let mut seen = HashSet::new();
+        let mut points: Vec<PlannedPoint> = Vec::with_capacity(n);
+        self.execute_range(q, backends, 0..n, &mut seen, &mut counters, &mut |p| {
+            points.push(p);
+            Ok(())
+        })
+        .expect("collecting sink cannot fail");
+        let ranked = rank(&q.objective, &points, q.top_k);
+        Frontier {
+            objective: q.objective.clone(),
+            backends: backends.iter().map(|b| b.name().to_string()).collect(),
+            axes: q.space.axes.clone(),
+            constraints: q.constraints.iter().map(|c| c.render()).collect(),
+            top_k: q.top_k,
+            prune: q.prune,
+            counters,
+            ranked,
+            points,
+        }
+    }
+
+    /// Execute one contiguous index range of `q`'s grid and emit every
+    /// [`PlannedPoint`] in index order. This is the planner's whole
+    /// pipeline — decode/constrain/prune, dedup, evaluate, assemble — over
+    /// an arbitrary slice of the grid, so a caller can stream a huge grid
+    /// chunk by chunk with only O(range) resident memory.
+    ///
+    /// `seen` carries (backend, cache key) fingerprints *across* ranges of
+    /// one logical run: a slot whose key already appeared in an earlier
+    /// range is bookkept exactly like an in-range duplicate (provenance
+    /// `cache_hit = true`, not re-counted in `counters.evaluated`), so a
+    /// chunked run's counters and provenance are byte-identical to the
+    /// single-range run for any chunk size. Its value is re-obtained from
+    /// the attached shared cache when one is present, or recomputed (pure
+    /// evaluators make both byte-identical).
+    pub(crate) fn execute_range(
+        &self,
+        q: &Query,
+        backends: &[Box<dyn Evaluator>],
+        range: Range<usize>,
+        seen: &mut HashSet<u128>,
+        counters: &mut PlanCounters,
+        emit: &mut dyn FnMut(PlannedPoint) -> Result<()>,
+    ) -> Result<()> {
+        let len = range.len();
 
         // Phase 1 — decode, constrain, prune (parallel).
-        let pres: Vec<Pre> = par_map(n, self.threads, |i| pre_point(q, backends, i));
+        let pres: Vec<Pre> =
+            par_map(len, self.threads, |j| pre_point(q, backends, range.start + j));
 
-        // Phase 2 — dedup evaluable slots into unique jobs (serial).
+        // Phase 2 — dedup evaluable slots into unique jobs (serial). A key
+        // first seen in an *earlier* range becomes a job too (its value is
+        // not resident anymore), but is flagged as a cache hit.
         let mut key_to_job: HashMap<(usize, &str), usize> = HashMap::new();
-        let mut jobs: Vec<(usize, usize)> = Vec::new(); // (point, backend)
-        let mut assigned: Vec<Vec<Option<(usize, bool)>>> = Vec::with_capacity(n);
+        let mut jobs: Vec<(usize, usize, bool)> = Vec::new(); // (point, backend, prior-range dup)
+        let mut assigned: Vec<Vec<Option<(usize, bool)>>> = Vec::with_capacity(len);
         for (i, pre) in pres.iter().enumerate() {
             let row = match &pre.kind {
                 PreKind::Ready { slots, .. } => slots
@@ -211,10 +267,11 @@ impl Planner {
                         Slot::Eval(key) => Some(match key_to_job.entry((bi, key.as_str())) {
                             Entry::Occupied(e) => (*e.get(), true),
                             Entry::Vacant(e) => {
+                                let dup = !seen.insert(slot_fingerprint(bi, key));
                                 let id = jobs.len();
-                                jobs.push((i, bi));
+                                jobs.push((i, bi, dup));
                                 e.insert(id);
-                                (id, false)
+                                (id, dup)
                             }
                         }),
                     })
@@ -224,13 +281,14 @@ impl Planner {
             assigned.push(row);
         }
         drop(key_to_job);
+        counters.evaluated += jobs.iter().filter(|(_, _, dup)| !dup).count();
 
         // Phase 3 — evaluate unique jobs (parallel). With a shared cache
         // attached, each job first consults it (and registers in-flight, so
         // an identical job racing in another Planner run coalesces onto
         // this evaluation instead of repeating it).
         let job_results: Vec<Evaluation> = par_map(jobs.len(), self.threads, |j| {
-            let (pi, bi) = jobs[j];
+            let (pi, bi, _) = jobs[j];
             match &pres[pi].kind {
                 PreKind::Ready { scenario, slots } => match (&self.cache, &slots[bi]) {
                     (Some(cache), Slot::Eval(key)) => cache.get_or_compute(
@@ -244,16 +302,15 @@ impl Planner {
             }
         });
 
-        // Phase 4 — assemble, post-constrain, score (serial).
-        let mut counters = PlanCounters { points: n, evaluated: jobs.len(), ..Default::default() };
-        let mut points: Vec<PlannedPoint> = Vec::with_capacity(n);
+        // Phase 4 — assemble, post-constrain, score, emit (serial).
         for (i, (pre, row)) in pres.into_iter().zip(assigned).enumerate() {
+            let index = range.start + i;
             let kind = pre.kind;
             let planned = match kind {
                 PreKind::Error(msg) => {
                     counters.errors += 1;
                     PlannedPoint {
-                        index: i,
+                        index,
                         point: pre.point,
                         error: Some(msg),
                         rejected_by: None,
@@ -264,7 +321,7 @@ impl Planner {
                 PreKind::Rejected(c) => {
                     counters.rejected += 1;
                     PlannedPoint {
-                        index: i,
+                        index,
                         point: pre.point,
                         error: None,
                         rejected_by: Some(c),
@@ -331,7 +388,7 @@ impl Planner {
                         None => {}
                     }
                     PlannedPoint {
-                        index: i,
+                        index,
                         point: pre.point,
                         error: None,
                         rejected_by,
@@ -340,22 +397,26 @@ impl Planner {
                     }
                 }
             };
-            points.push(planned);
+            emit(planned)?;
         }
-
-        let ranked = rank(&q.objective, &points, q.top_k);
-        Frontier {
-            objective: q.objective.clone(),
-            backends: backends.iter().map(|b| b.name().to_string()).collect(),
-            axes: q.space.axes.clone(),
-            constraints: q.constraints.iter().map(|c| c.render()).collect(),
-            top_k: q.top_k,
-            prune: q.prune,
-            counters,
-            ranked,
-            points,
-        }
+        Ok(())
     }
+}
+
+/// 128-bit fingerprint of one `(backend slot, cache key)` pair — the
+/// cross-chunk dedup ledger stores these instead of the key strings, so a
+/// million-point run's ledger stays ~16 bytes per unique key instead of
+/// retaining every scenario text. Two independent 64-bit hashes make an
+/// accidental collision (which could only mislabel provenance, never
+/// change an evaluation) astronomically unlikely.
+fn slot_fingerprint(bi: usize, key: &str) -> u128 {
+    let mut a = DefaultHasher::new();
+    (0x9e37_79b9_7f4a_7c15u64, bi as u64).hash(&mut a);
+    key.hash(&mut a);
+    let mut b = DefaultHasher::new();
+    (0xc2b2_ae3d_27d4_eb4fu64, bi as u64).hash(&mut b);
+    key.hash(&mut b);
+    ((a.finish() as u128) << 64) | b.finish() as u128
 }
 
 #[cfg(test)]
@@ -490,6 +551,52 @@ mod tests {
         let (ea, eb) = (a.points[0].primary_eval().unwrap(), b.points[0].primary_eval().unwrap());
         assert_eq!(ea.search, eb.search);
         assert_eq!(ea.metrics, eb.metrics);
+    }
+
+    #[test]
+    fn execute_range_chunked_matches_single_range() {
+        // The gridsearch backend projects seq_len out of its cache key, so
+        // this grid has cross-chunk duplicates — exercising the fingerprint
+        // ledger that keeps `evaluated`/`cache_hit` provenance identical
+        // for any chunking.
+        let q = Query::parse(
+            "model = 1.3B\nn_gpus = 64\nsweep.seq_len = 1024,2048,4096,8192\n\
+             query.backend = gridsearch\n",
+        )
+        .unwrap();
+        let planner = Planner::new(2);
+        let whole = planner.run(&q).unwrap();
+        for chunk in [1usize, 2, 3] {
+            let backends = backends_for(&q.backend_spec).unwrap();
+            let n = q.space.len();
+            let mut counters = PlanCounters { points: n, ..Default::default() };
+            let mut seen = HashSet::new();
+            let mut points = Vec::new();
+            let mut start = 0;
+            while start < n {
+                let end = (start + chunk).min(n);
+                planner
+                    .execute_range(&q, &backends, start..end, &mut seen, &mut counters, &mut |p| {
+                        points.push(p);
+                        Ok(())
+                    })
+                    .unwrap();
+                start = end;
+            }
+            let ranked = rank(&q.objective, &points, q.top_k);
+            let chunked = Frontier {
+                objective: q.objective.clone(),
+                backends: backends.iter().map(|b| b.name().to_string()).collect(),
+                axes: q.space.axes.clone(),
+                constraints: q.constraints.iter().map(|c| c.render()).collect(),
+                top_k: q.top_k,
+                prune: q.prune,
+                counters,
+                ranked,
+                points,
+            };
+            assert_eq!(whole.to_json(), chunked.to_json(), "chunk={chunk}");
+        }
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! Chunked, cancellable, resumable execution of a [`Query`] — the engine
+//! behind million-point sweeps and the serve layer's async jobs.
+//!
+//! [`Planner::run_with`] materializes every [`PlannedPoint`]; that caps
+//! grid size by RAM and gives the caller no progress signal until the
+//! whole grid is done. [`Planner::run_streamed`] executes the same
+//! pipeline (`Planner::execute_range`) one [`crate::eval::GridCursor`]
+//! chunk at a time instead:
+//!
+//! * each chunk's points are decoded (mixed-radix, by ordinal), evaluated
+//!   on the worker pool, **emitted to a [`StreamSink`] in index order, and
+//!   dropped** — resident memory is O(chunk), not O(grid);
+//! * after every chunk the sink sees a [`StreamProgress`] snapshot
+//!   (points decided, §2.7-pruned, constraint-rejected, current best …) —
+//!   the job API's progress endpoint and the sweep checkpointer both hang
+//!   off this hook;
+//! * a run can stop at any chunk boundary — cooperatively via a shared
+//!   cancel flag (`DELETE /v1/jobs/:id`), or after a chunk budget
+//!   (`--max-chunks`) — and a later run can re-enter at `start_chunk`
+//!   without re-evaluating completed chunks;
+//! * cross-chunk `(backend, cache key)` duplicates are bookkept through a
+//!   16-byte-per-key fingerprint ledger, so **within one run** counters
+//!   and `cache_hit` provenance are byte-identical to the materialized
+//!   run for any chunk size (asserted in tests). The ledger is *not*
+//!   persisted across a resume: a duplicate whose first occurrence
+//!   predates the interrupt is re-evaluated in the resumed run (pure
+//!   evaluators make the results identical — only work is repeated, and
+//!   only for key-projecting backends like the grid search). The ledger
+//!   itself is O(unique keys) resident, so sinks that render no
+//!   provenance (the sweep writers) disable it via
+//!   [`StreamOptions::provenance_ledger`]; sweep reports carry no
+//!   per-point provenance, so resumed sweep reports stay byte-identical
+//!   regardless.
+//!
+//! [`Planner::run_chunked`] composes the engine with a collecting sink and
+//! the online ranking accumulator into a full [`Frontier`] — chunked
+//! execution with progress, byte-identical output to [`Planner::run`].
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::eval::Evaluator;
+
+use super::frontier::{rank, Frontier, PlanCounters, PlannedPoint};
+use super::{Planner, Query};
+
+/// Default points per chunk: small enough that a chunk's resident results
+/// are a few tens of MB, large enough that per-chunk overhead (thread
+/// fan-out, checkpoint write) is noise.
+pub const DEFAULT_CHUNK: usize = 65_536;
+
+/// How a streamed run is paced, interrupted, and resumed.
+#[derive(Debug, Clone)]
+pub struct StreamOptions {
+    /// Points per chunk (≥ 1).
+    pub chunk: usize,
+    /// Chunks to skip at entry — a resume re-entering after the last
+    /// completed checkpoint. The skipped chunks' points are *not* emitted
+    /// (their rows were already persisted by the previous run), and the
+    /// returned counters cover this run's chunks only.
+    pub start_chunk: usize,
+    /// Stop (with `interrupted = true`) after processing this many chunks
+    /// in this run. `None` runs to the end of the grid.
+    pub max_chunks: Option<usize>,
+    /// Cooperative cancellation, checked at every chunk boundary.
+    pub cancel: Option<Arc<AtomicBool>>,
+    /// Keep the cross-chunk dedup ledger (~16 bytes per unique cache key —
+    /// O(unique keys) resident). Required for materialized-identical
+    /// `evaluated`/`cache_hit` provenance (plans, jobs); sinks that render
+    /// no provenance (the sweep writers) disable it so resident memory
+    /// stays O(chunk), trading it for recomputation of cross-chunk
+    /// duplicates (which the attached shared cache still absorbs).
+    pub provenance_ledger: bool,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        Self {
+            chunk: DEFAULT_CHUNK,
+            start_chunk: 0,
+            max_chunks: None,
+            cancel: None,
+            provenance_ledger: true,
+        }
+    }
+}
+
+/// Progress snapshot delivered to [`StreamSink::chunk_done`] after every
+/// completed chunk (and echoed by `GET /v1/jobs/:id`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StreamProgress {
+    /// Grid points in the query's space.
+    pub points: usize,
+    /// Points decided so far, across all completed chunks (including any
+    /// skipped by `start_chunk`).
+    pub done: usize,
+    /// Completed chunks (global, including skipped ones).
+    pub chunks_done: usize,
+    pub total_chunks: usize,
+    /// Execution counters for *this run's* chunks.
+    pub counters: PlanCounters,
+    /// Grid index of the best-scoring candidate so far (scalar objectives).
+    pub best_index: Option<usize>,
+    /// Its score, in internal ranking units (see
+    /// [`super::Objective::report_score`]).
+    pub best_score: Option<f64>,
+}
+
+/// Where streamed points go. Implementations render-and-drop (the sweep
+/// report writers), collect (jobs), or count (tests).
+pub trait StreamSink {
+    /// One decided grid point, delivered in index order.
+    fn point(&mut self, q: &Query, p: PlannedPoint) -> Result<()>;
+
+    /// A chunk boundary: everything up to `progress.done` is decided and
+    /// emitted. Checkpointers persist here; an `Err` aborts the run.
+    fn chunk_done(&mut self, progress: &StreamProgress) -> Result<()> {
+        let _ = progress;
+        Ok(())
+    }
+}
+
+/// What a streamed run did.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamOutcome {
+    /// Execution counters for this run's chunks.
+    pub counters: PlanCounters,
+    /// Points decided across all completed chunks (= `points` iff the run
+    /// finished).
+    pub points_done: usize,
+    /// Completed chunks (global).
+    pub chunks_done: usize,
+    pub total_chunks: usize,
+    /// Largest number of points resident at once — the bounded-memory
+    /// gauge: always ≤ the chunk size, never the grid size.
+    pub peak_resident_points: usize,
+    /// True when the run stopped early (cancel flag or `max_chunks`).
+    pub interrupted: bool,
+    pub best_index: Option<usize>,
+    pub best_score: Option<f64>,
+}
+
+impl StreamOutcome {
+    pub fn finished(&self) -> bool {
+        !self.interrupted
+    }
+}
+
+impl Planner {
+    /// Execute `q` chunk by chunk, emitting every point to `sink` and
+    /// holding at most one chunk resident. See the module docs for the
+    /// determinism and resume contracts.
+    pub fn run_streamed(
+        &self,
+        q: &Query,
+        backends: &[Box<dyn Evaluator>],
+        opts: &StreamOptions,
+        sink: &mut dyn StreamSink,
+    ) -> Result<StreamOutcome> {
+        let n = q.space.len();
+        let chunk = opts.chunk.max(1);
+        let mut cursor = q.space.cursor(chunk);
+        let total_chunks = cursor.total_chunks();
+        cursor.skip_chunks(opts.start_chunk);
+        let mut counters = PlanCounters { points: n, ..Default::default() };
+        let mut seen: HashSet<u128> = HashSet::new();
+        let mut chunks_done = opts.start_chunk.min(total_chunks);
+        let mut processed_this_run = 0usize;
+        let mut peak = 0usize;
+        let mut best: Option<(f64, usize)> = None;
+        let mut interrupted = false;
+        for range in cursor {
+            if let Some(cancel) = &opts.cancel {
+                if cancel.load(Ordering::SeqCst) {
+                    interrupted = true;
+                    break;
+                }
+            }
+            if let Some(max) = opts.max_chunks {
+                if processed_this_run >= max {
+                    interrupted = true;
+                    break;
+                }
+            }
+            peak = peak.max(range.len());
+            let done_after = range.end;
+            self.execute_range(q, backends, range, &mut seen, &mut counters, &mut |p| {
+                if let Some(s) = p.score.filter(|s| s.is_finite()) {
+                    let better = match best {
+                        Some((bs, bi)) => s > bs || (s == bs && p.index < bi),
+                        None => true,
+                    };
+                    if better {
+                        best = Some((s, p.index));
+                    }
+                }
+                sink.point(q, p)
+            })?;
+            if !opts.provenance_ledger {
+                // No sink cares about cross-chunk dedup provenance here —
+                // drop the ledger so residency stays O(chunk) on grids
+                // where every point has a unique key.
+                seen.clear();
+            }
+            chunks_done += 1;
+            processed_this_run += 1;
+            let progress = StreamProgress {
+                points: n,
+                done: done_after,
+                chunks_done,
+                total_chunks,
+                counters,
+                best_index: best.map(|(_, i)| i),
+                best_score: best.map(|(s, _)| s),
+            };
+            sink.chunk_done(&progress)?;
+        }
+        Ok(StreamOutcome {
+            counters,
+            points_done: chunks_done.saturating_mul(chunk).min(n),
+            chunks_done,
+            total_chunks,
+            peak_resident_points: peak,
+            interrupted,
+            best_index: best.map(|(_, i)| i),
+            best_score: best.map(|(s, _)| s),
+        })
+    }
+
+    /// Chunked execution of a full plan: the streaming engine plus a
+    /// collecting sink and the online ranking accumulator. The returned
+    /// [`Frontier`] is byte-identical to [`Planner::run`]'s for the same
+    /// query (asserted in tests); `on_chunk` observes progress after every
+    /// chunk. Returns `Ok(None)` when the run was cancelled.
+    pub fn run_chunked(
+        &self,
+        q: &Query,
+        backends: &[Box<dyn Evaluator>],
+        opts: &StreamOptions,
+        mut on_chunk: impl FnMut(&StreamProgress),
+    ) -> Result<Option<Frontier>> {
+        anyhow::ensure!(
+            opts.start_chunk == 0 && opts.max_chunks.is_none(),
+            "run_chunked assembles a complete frontier — partial runs need run_streamed"
+        );
+        struct Collect<'a, F: FnMut(&StreamProgress)> {
+            points: Vec<PlannedPoint>,
+            on_chunk: &'a mut F,
+        }
+        impl<F: FnMut(&StreamProgress)> StreamSink for Collect<'_, F> {
+            fn point(&mut self, _q: &Query, p: PlannedPoint) -> Result<()> {
+                self.points.push(p);
+                Ok(())
+            }
+            fn chunk_done(&mut self, progress: &StreamProgress) -> Result<()> {
+                (self.on_chunk)(progress);
+                Ok(())
+            }
+        }
+        let mut sink = Collect { points: Vec::new(), on_chunk: &mut on_chunk };
+        let outcome = self.run_streamed(q, backends, opts, &mut sink)?;
+        if outcome.interrupted {
+            return Ok(None);
+        }
+        let ranked = rank(&q.objective, &sink.points, q.top_k);
+        Ok(Some(Frontier {
+            objective: q.objective.clone(),
+            backends: backends.iter().map(|b| b.name().to_string()).collect(),
+            axes: q.space.axes.clone(),
+            constraints: q.constraints.iter().map(|c| c.render()).collect(),
+            top_k: q.top_k,
+            prune: q.prune,
+            counters: outcome.counters,
+            ranked,
+            points: sink.points,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::backends_for;
+
+    fn query() -> Query {
+        Query::parse(
+            "model = 13B\nbatch = 1\nsweep.seq_len = 2048,4096,8192\nsweep.n_gpus = 8,16\n\
+             where.n_gpus = <= 16\nquery.top_k = 3\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn run_chunked_matches_run_for_any_chunk_size() {
+        let q = query();
+        let planner = Planner::new(2);
+        let whole = planner.run(&q).unwrap().to_json();
+        for chunk in [1usize, 2, 4, 100] {
+            let backends = backends_for(&q.backend_spec).unwrap();
+            let opts = StreamOptions { chunk, ..StreamOptions::default() };
+            let mut chunks_seen = 0;
+            let f = planner
+                .run_chunked(&q, &backends, &opts, |_| chunks_seen += 1)
+                .unwrap()
+                .expect("uncancelled run completes");
+            assert_eq!(f.to_json(), whole, "chunk={chunk}");
+            assert_eq!(chunks_seen, q.space.len().div_ceil(chunk), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn progress_is_monotone_and_complete() {
+        let q = query();
+        let planner = Planner::new(2);
+        let backends = backends_for(&q.backend_spec).unwrap();
+        let opts = StreamOptions { chunk: 2, ..StreamOptions::default() };
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        planner
+            .run_chunked(&q, &backends, &opts, |p| {
+                seen.push((p.chunks_done, p.done));
+                assert_eq!(p.points, 6);
+                assert_eq!(p.total_chunks, 3);
+            })
+            .unwrap()
+            .unwrap();
+        assert_eq!(seen, vec![(1, 2), (2, 4), (3, 6)]);
+    }
+
+    #[test]
+    fn max_chunks_interrupts_and_resume_covers_the_rest() {
+        struct Count(Vec<usize>);
+        impl StreamSink for Count {
+            fn point(&mut self, _q: &Query, p: PlannedPoint) -> Result<()> {
+                self.0.push(p.index);
+                Ok(())
+            }
+        }
+        let q = query();
+        let planner = Planner::new(1);
+        let backends = backends_for(&q.backend_spec).unwrap();
+        let mut first = Count(Vec::new());
+        let out = planner
+            .run_streamed(
+                &q,
+                &backends,
+                &StreamOptions { chunk: 2, max_chunks: Some(2), ..StreamOptions::default() },
+                &mut first,
+            )
+            .unwrap();
+        assert!(out.interrupted);
+        assert_eq!(out.chunks_done, 2);
+        assert_eq!(out.points_done, 4);
+        assert_eq!(out.peak_resident_points, 2);
+        assert_eq!(first.0, vec![0, 1, 2, 3]);
+        let mut rest = Count(Vec::new());
+        let out2 = planner
+            .run_streamed(
+                &q,
+                &backends,
+                &StreamOptions { chunk: 2, start_chunk: 2, ..StreamOptions::default() },
+                &mut rest,
+            )
+            .unwrap();
+        assert!(out2.finished());
+        assert_eq!(out2.points_done, 6);
+        assert_eq!(rest.0, vec![4, 5]);
+    }
+
+    #[test]
+    fn cancel_stops_at_a_chunk_boundary() {
+        struct Cancelling {
+            flag: Arc<AtomicBool>,
+            points: usize,
+        }
+        impl StreamSink for Cancelling {
+            fn point(&mut self, _q: &Query, _p: PlannedPoint) -> Result<()> {
+                self.points += 1;
+                Ok(())
+            }
+            fn chunk_done(&mut self, _p: &StreamProgress) -> Result<()> {
+                self.flag.store(true, Ordering::SeqCst);
+                Ok(())
+            }
+        }
+        let q = query();
+        let planner = Planner::new(1);
+        let backends = backends_for(&q.backend_spec).unwrap();
+        let flag = Arc::new(AtomicBool::new(false));
+        let mut sink = Cancelling { flag: flag.clone(), points: 0 };
+        let out = planner
+            .run_streamed(
+                &q,
+                &backends,
+                &StreamOptions { chunk: 2, cancel: Some(flag), ..StreamOptions::default() },
+                &mut sink,
+            )
+            .unwrap();
+        assert!(out.interrupted);
+        assert_eq!(out.chunks_done, 1, "cancel honoured at the first boundary");
+        assert_eq!(sink.points, 2);
+        // A cancelled run_chunked reports None rather than a partial answer.
+        let flag = Arc::new(AtomicBool::new(true));
+        let r = planner
+            .run_chunked(
+                &q,
+                &backends,
+                &StreamOptions { chunk: 2, cancel: Some(flag), ..StreamOptions::default() },
+                |_| {},
+            )
+            .unwrap();
+        assert!(r.is_none());
+    }
+}

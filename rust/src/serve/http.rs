@@ -203,10 +203,12 @@ pub fn read_response(stream: &mut impl Read) -> Result<Response> {
 pub fn reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        202 => "Accepted",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
+        409 => "Conflict",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -289,7 +291,7 @@ mod tests {
 
     #[test]
     fn reason_phrases_cover_service_codes() {
-        for code in [200, 400, 404, 405, 408, 413, 500, 503] {
+        for code in [200, 202, 400, 404, 405, 408, 409, 413, 500, 503] {
             assert_ne!(reason(code), "Unknown", "code {code}");
         }
         assert_eq!(reason(299), "Unknown");

@@ -1,0 +1,509 @@
+//! Async jobs: a plan that runs in the background while the client polls.
+//!
+//! `POST /v1/plan` blocks the connection for the whole evaluation; a
+//! *job* is the same query executed through [`Planner::run_chunked`] on a
+//! dedicated worker pool — non-blocking submission, chunk-granular
+//! progress, cooperative cancellation. (The job's *result* is still the
+//! materialized frontier, like `/v1/plan`'s — O(grid) per job, with
+//! `job_records` bounding retained record *count*, not bytes; the
+//! bounded-memory path for grids past RAM is the CLI's streaming
+//! `fsdp-bw sweep`, whose O(grid) artifact is a file.)
+//!
+//! * `POST /v1/jobs` validates the query, assigns an id, and returns
+//!   immediately (202);
+//! * `GET /v1/jobs/:id` reports chunk-granular progress — points decided,
+//!   §2.7-pruned, cache hits, constraint rejections, and the best-scoring
+//!   point so far;
+//! * `GET /v1/jobs/:id/result` returns the finished [`Frontier`] JSON —
+//!   **byte-identical** to what `POST /v1/plan` answers for the same query
+//!   (same engine, same shared evaluation cache);
+//! * `DELETE /v1/jobs/:id` cancels cooperatively at the next chunk
+//!   boundary, or discards a finished record.
+//!
+//! The registry keeps a bounded number of finished records (oldest evicted
+//! first) and exports gauge/counter series through `/metrics`.
+//!
+//! [`Frontier`]: crate::query::Frontier
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::eval::backends_for;
+use crate::query::stream::{StreamOptions, StreamProgress};
+use crate::query::{EvalCache, Planner, Query};
+use crate::util::json::Json;
+
+/// Lifecycle of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// State behind the lock: the phase plus its terminal payload.
+#[derive(Debug)]
+struct JobPhase {
+    state: JobState,
+    /// Finished frontier JSON (`Done` only).
+    result: Option<String>,
+    /// Failure message (`Failed` only).
+    error: Option<String>,
+}
+
+/// One submitted job. Progress counters are atomics so the engine's
+/// chunk-boundary updates never contend with status polls.
+pub struct Job {
+    pub id: u64,
+    /// The parsed query (objective converts the internal best score to
+    /// user-facing units in status bodies).
+    pub query: Query,
+    created: Instant,
+    phase: Mutex<JobPhase>,
+    cancel: Arc<AtomicBool>,
+    points: AtomicU64,
+    done: AtomicU64,
+    chunks_done: AtomicU64,
+    total_chunks: AtomicU64,
+    evaluated: AtomicU64,
+    pruned_by_bounds: AtomicU64,
+    cache_hits: AtomicU64,
+    rejected: AtomicU64,
+    infeasible: AtomicU64,
+    feasible: AtomicU64,
+    errors: AtomicU64,
+    /// `(grid index, internal score)` of the best candidate so far.
+    best: Mutex<Option<(usize, f64)>>,
+}
+
+impl Job {
+    fn new(id: u64, query: Query) -> Job {
+        let points = query.space.len() as u64;
+        Job {
+            id,
+            query,
+            created: Instant::now(),
+            phase: Mutex::new(JobPhase { state: JobState::Queued, result: None, error: None }),
+            cancel: Arc::new(AtomicBool::new(false)),
+            points: AtomicU64::new(points),
+            done: AtomicU64::new(0),
+            chunks_done: AtomicU64::new(0),
+            total_chunks: AtomicU64::new(0),
+            evaluated: AtomicU64::new(0),
+            pruned_by_bounds: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            infeasible: AtomicU64::new(0),
+            feasible: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            best: Mutex::new(None),
+        }
+    }
+
+    pub fn state(&self) -> JobState {
+        self.phase.lock().expect("job poisoned").state
+    }
+
+    /// The cancellation flag the engine polls at chunk boundaries.
+    pub fn cancel_flag(&self) -> Arc<AtomicBool> {
+        self.cancel.clone()
+    }
+
+    /// Request cancellation (effective at the next chunk boundary; a
+    /// queued job is skipped by its worker).
+    pub fn request_cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+
+    /// The finished frontier JSON, when done.
+    pub fn result(&self) -> Option<String> {
+        self.phase.lock().expect("job poisoned").result.clone()
+    }
+
+    /// The failure message, when failed.
+    pub fn error(&self) -> Option<String> {
+        self.phase.lock().expect("job poisoned").error.clone()
+    }
+
+    fn record_progress(&self, p: &StreamProgress) {
+        self.done.store(p.done as u64, Ordering::Relaxed);
+        self.chunks_done.store(p.chunks_done as u64, Ordering::Relaxed);
+        self.total_chunks.store(p.total_chunks as u64, Ordering::Relaxed);
+        let c = &p.counters;
+        self.evaluated.store(c.evaluated as u64, Ordering::Relaxed);
+        self.pruned_by_bounds.store(c.pruned_by_bounds as u64, Ordering::Relaxed);
+        self.cache_hits.store(c.cache_hits as u64, Ordering::Relaxed);
+        self.rejected.store(c.rejected as u64, Ordering::Relaxed);
+        self.infeasible.store(c.infeasible as u64, Ordering::Relaxed);
+        self.feasible.store(c.feasible as u64, Ordering::Relaxed);
+        self.errors.store(c.errors as u64, Ordering::Relaxed);
+        if let (Some(i), Some(s)) = (p.best_index, p.best_score) {
+            *self.best.lock().expect("job poisoned") = Some((i, s));
+        }
+    }
+
+    /// Progress/status document (the `GET /v1/jobs/:id` body).
+    pub fn status_json(&self) -> Json {
+        let phase = self.phase.lock().expect("job poisoned");
+        let num = |v: u64| Json::Num(v as f64);
+        let points = self.points.load(Ordering::Relaxed);
+        let done = self.done.load(Ordering::Relaxed);
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("id".to_string(), num(self.id)),
+            ("state".to_string(), Json::Str(phase.state.name().to_string())),
+            ("points".to_string(), num(points)),
+            ("done".to_string(), num(done)),
+            ("remaining".to_string(), num(points.saturating_sub(done))),
+            ("chunks_done".to_string(), num(self.chunks_done.load(Ordering::Relaxed))),
+            ("total_chunks".to_string(), num(self.total_chunks.load(Ordering::Relaxed))),
+            ("evaluated".to_string(), num(self.evaluated.load(Ordering::Relaxed))),
+            (
+                "pruned_by_bounds".to_string(),
+                num(self.pruned_by_bounds.load(Ordering::Relaxed)),
+            ),
+            ("cache_hits".to_string(), num(self.cache_hits.load(Ordering::Relaxed))),
+            ("rejected".to_string(), num(self.rejected.load(Ordering::Relaxed))),
+            ("infeasible".to_string(), num(self.infeasible.load(Ordering::Relaxed))),
+            ("feasible".to_string(), num(self.feasible.load(Ordering::Relaxed))),
+            ("errors".to_string(), num(self.errors.load(Ordering::Relaxed))),
+            (
+                "elapsed_seconds".to_string(),
+                Json::Num(self.created.elapsed().as_secs_f64()),
+            ),
+        ];
+        let best = *self.best.lock().expect("job poisoned");
+        pairs.push((
+            "best".to_string(),
+            match best {
+                Some((index, score)) => Json::Obj(
+                    [
+                        ("index".to_string(), Json::Num(index as f64)),
+                        (
+                            "score".to_string(),
+                            Json::Num(self.query.objective.report_score(score)),
+                        ),
+                    ]
+                    .into_iter()
+                    .collect(),
+                ),
+                None => Json::Null,
+            },
+        ));
+        if let Some(e) = &phase.error {
+            pairs.push(("error".to_string(), Json::Str(e.clone())));
+        }
+        Json::Obj(pairs.into_iter().collect())
+    }
+}
+
+impl std::fmt::Debug for Job {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Job").field("id", &self.id).field("state", &self.state()).finish()
+    }
+}
+
+/// Gauge/counter snapshot for `/metrics`. All `*_total` fields are
+/// monotonic counters (Prometheus `rate()` treats any decrease as a
+/// reset, so nothing here is ever decremented).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct JobStats {
+    pub queued: u64,
+    pub running: u64,
+    pub submitted: u64,
+    pub done: u64,
+    pub failed: u64,
+    pub cancelled: u64,
+    /// Submissions shed because the job queue was full (503) — these are
+    /// included in `submitted` but never ran.
+    pub shed: u64,
+}
+
+/// All jobs the server knows about, with bounded record retention.
+pub struct JobRegistry {
+    next: AtomicU64,
+    jobs: Mutex<BTreeMap<u64, Arc<Job>>>,
+    /// Retained records cap: beyond it, the oldest *terminal* records are
+    /// evicted (active jobs are never dropped).
+    max_records: usize,
+    submitted: AtomicU64,
+    done: AtomicU64,
+    failed: AtomicU64,
+    cancelled: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl std::fmt::Debug for JobRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobRegistry").field("stats", &self.stats()).finish()
+    }
+}
+
+impl JobRegistry {
+    pub fn new(max_records: usize) -> JobRegistry {
+        JobRegistry {
+            next: AtomicU64::new(1),
+            jobs: Mutex::new(BTreeMap::new()),
+            max_records: max_records.max(1),
+            submitted: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    /// Create and register a job for an already-validated query.
+    pub fn submit(&self, query: Query) -> Arc<Job> {
+        let id = self.next.fetch_add(1, Ordering::SeqCst);
+        let job = Arc::new(Job::new(id, query));
+        let mut jobs = self.jobs.lock().expect("registry poisoned");
+        jobs.insert(id, job.clone());
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        // Evict oldest terminal records beyond the cap.
+        while jobs.len() > self.max_records {
+            let victim = jobs
+                .iter()
+                .find(|(_, j)| j.state().terminal())
+                .map(|(id, _)| *id);
+            match victim {
+                Some(id) => {
+                    jobs.remove(&id);
+                }
+                None => break,
+            }
+        }
+        job
+    }
+
+    pub fn get(&self, id: u64) -> Option<Arc<Job>> {
+        self.jobs.lock().expect("registry poisoned").get(&id).cloned()
+    }
+
+    /// Drop a terminal job's record. Returns false when the job is still
+    /// active (records of active jobs cannot be discarded).
+    pub fn remove_terminal(&self, id: u64) -> bool {
+        let mut jobs = self.jobs.lock().expect("registry poisoned");
+        let Some(job) = jobs.get(&id) else { return false };
+        if !job.state().terminal() {
+            return false;
+        }
+        jobs.remove(&id);
+        true
+    }
+
+    /// Record a job whose evaluator panicked mid-execution (the worker
+    /// catches the unwind; the job must still reach a terminal state so
+    /// pollers are not left hanging on "running").
+    pub fn fail_panicked(&self, job: &Arc<Job>) {
+        self.finish(
+            job,
+            JobState::Failed,
+            None,
+            Some("job worker panicked during evaluation".to_string()),
+        );
+    }
+
+    /// Forget a job that was registered but could not be queued (job queue
+    /// full → the submission was shed with 503 and the job will never
+    /// run). Counters stay monotonic: the submission remains counted in
+    /// `submitted` and is additionally counted in `shed`.
+    pub fn discard_unqueued(&self, job: &Arc<Job>) {
+        self.jobs.lock().expect("registry poisoned").remove(&job.id);
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Request cancellation of every non-terminal job (graceful shutdown).
+    pub fn cancel_all(&self) {
+        for job in self.jobs.lock().expect("registry poisoned").values() {
+            if !job.state().terminal() {
+                job.request_cancel();
+            }
+        }
+    }
+
+    pub fn stats(&self) -> JobStats {
+        let (mut queued, mut running) = (0, 0);
+        for job in self.jobs.lock().expect("registry poisoned").values() {
+            match job.state() {
+                JobState::Queued => queued += 1,
+                JobState::Running => running += 1,
+                _ => {}
+            }
+        }
+        JobStats {
+            queued,
+            running,
+            submitted: self.submitted.load(Ordering::Relaxed),
+            done: self.done.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The `GET /v1/jobs` body: every known job's status, by id.
+    pub fn list_json(&self) -> Json {
+        let jobs = self.jobs.lock().expect("registry poisoned");
+        Json::Obj(
+            [(
+                "jobs".to_string(),
+                Json::Arr(jobs.values().map(|j| j.status_json()).collect()),
+            )]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    fn finish(&self, job: &Job, state: JobState, result: Option<String>, error: Option<String>) {
+        {
+            let mut phase = job.phase.lock().expect("job poisoned");
+            phase.state = state;
+            phase.result = result;
+            phase.error = error;
+        }
+        let counter = match state {
+            JobState::Done => &self.done,
+            JobState::Failed => &self.failed,
+            JobState::Cancelled => &self.cancelled,
+            _ => return,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Execute one job to completion (worker-thread entry point). The
+    /// frontier is produced by the chunked engine with the shared cache —
+    /// byte-identical to the synchronous `/v1/plan` answer.
+    pub fn execute(
+        &self,
+        job: &Arc<Job>,
+        planner_threads: usize,
+        chunk: usize,
+        cache: Arc<EvalCache>,
+    ) {
+        if job.cancel.load(Ordering::SeqCst) {
+            self.finish(job, JobState::Cancelled, None, None);
+            return;
+        }
+        job.phase.lock().expect("job poisoned").state = JobState::Running;
+        let run = || -> Result<Option<String>> {
+            let backends = backends_for(&job.query.backend_spec)?;
+            let planner = Planner::new(planner_threads).with_cache(cache);
+            let opts = StreamOptions {
+                chunk,
+                cancel: Some(job.cancel_flag()),
+                ..StreamOptions::default()
+            };
+            let frontier =
+                planner.run_chunked(&job.query, &backends, &opts, |p| job.record_progress(p))?;
+            Ok(frontier.map(|f| f.to_json()))
+        };
+        match run() {
+            Ok(Some(body)) => self.finish(job, JobState::Done, Some(body), None),
+            Ok(None) => self.finish(job, JobState::Cancelled, None, None),
+            Err(e) => self.finish(job, JobState::Failed, None, Some(format!("{e:#}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn query(text: &str) -> Query {
+        Query::parse(text).unwrap()
+    }
+
+    #[test]
+    fn job_lifecycle_and_result_matches_sync_plan() {
+        let reg = JobRegistry::new(8);
+        let q = query("model = 13B\nbatch = 1\nsweep.seq_len = 2048,4096\n");
+        let job = reg.submit(q.clone());
+        assert_eq!(job.state(), JobState::Queued);
+        assert_eq!(reg.stats().queued, 1);
+        let cache = EvalCache::shared();
+        reg.execute(&job, 1, 1, cache);
+        assert_eq!(job.state(), JobState::Done);
+        assert_eq!(reg.stats().done, 1);
+        let sync = Planner::new(1).run(&q).unwrap().to_json();
+        assert_eq!(job.result().unwrap(), sync, "job answer == /v1/plan answer");
+        let status = job.status_json();
+        assert_eq!(status.get("state").unwrap().as_str().unwrap(), "done");
+        assert_eq!(status.get("points").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(status.get("done").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(status.get("remaining").unwrap().as_usize().unwrap(), 0);
+        assert!(status.get("best").unwrap().get("score").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn cancel_before_execution_skips_the_work() {
+        let reg = JobRegistry::new(8);
+        let job = reg.submit(query("model = 13B\nsweep.seq_len = 2048,4096\n"));
+        job.request_cancel();
+        reg.execute(&job, 1, 1, EvalCache::shared());
+        assert_eq!(job.state(), JobState::Cancelled);
+        assert!(job.result().is_none());
+        assert_eq!(reg.stats().cancelled, 1);
+    }
+
+    #[test]
+    fn failed_jobs_carry_their_error() {
+        let reg = JobRegistry::new(8);
+        let mut q = query("model = 13B\n");
+        q.backend_spec = "warp-drive".to_string();
+        let job = reg.submit(q);
+        reg.execute(&job, 1, 1, EvalCache::shared());
+        assert_eq!(job.state(), JobState::Failed);
+        assert!(job.error().unwrap().contains("unknown backend"), "{:?}", job.error());
+        assert_eq!(reg.stats().failed, 1);
+    }
+
+    #[test]
+    fn record_retention_evicts_oldest_terminal_only() {
+        let reg = JobRegistry::new(2);
+        let a = reg.submit(query("model = 13B\n"));
+        reg.execute(&a, 1, 1, EvalCache::shared());
+        let b = reg.submit(query("model = 13B\nseq_len = 4096\n"));
+        reg.execute(&b, 1, 1, EvalCache::shared());
+        // Third submission evicts the oldest terminal record (id 1).
+        let c = reg.submit(query("model = 13B\nseq_len = 8192\n"));
+        assert!(reg.get(a.id).is_none(), "oldest terminal record evicted");
+        assert!(reg.get(b.id).is_some());
+        assert!(reg.get(c.id).is_some());
+        // Active jobs are never evicted: cap 2 with two active + one done.
+        assert!(!reg.remove_terminal(c.id), "active job cannot be discarded");
+        reg.execute(&c, 1, 1, EvalCache::shared());
+        assert!(reg.remove_terminal(c.id));
+        assert!(reg.get(c.id).is_none());
+    }
+
+    #[test]
+    fn list_reports_every_known_job() {
+        let reg = JobRegistry::new(8);
+        reg.submit(query("model = 13B\n"));
+        reg.submit(query("model = 7B\n"));
+        let v = reg.list_json();
+        assert_eq!(v.get("jobs").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

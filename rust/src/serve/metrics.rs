@@ -14,6 +14,8 @@ use std::sync::Mutex;
 
 use crate::query::cache::CacheStats;
 
+use super::jobs::JobStats;
+
 /// Histogram bucket upper bounds, in seconds. Spans sub-millisecond cache
 /// hits to multi-second cold grid searches.
 pub const LATENCY_BUCKETS: [f64; 11] =
@@ -21,6 +23,46 @@ pub const LATENCY_BUCKETS: [f64; 11] =
 
 /// Metric name prefix — every exported series starts with this.
 pub const PREFIX: &str = "fsdp_bw";
+
+/// Every series `/metrics` exports: `(name, type, help)`, without the
+/// [`PREFIX`]. This table is the single source of truth: [`ServeMetrics::render`]
+/// reads its HELP/TYPE strings from here, the `fsdp-bw docs` reference
+/// manual renders it, and a test asserts the rendered exposition and this
+/// table agree in both directions.
+pub const SERIES: &[(&str, &str, &str)] = &[
+    ("http_requests_total", "counter", "Requests handled, by endpoint and status code."),
+    ("http_request_seconds", "histogram", "Request latency histogram."),
+    ("http_inflight", "gauge", "Requests currently being handled."),
+    ("http_rejected_total", "counter", "Connections shed by accept-queue backpressure (503)."),
+    ("eval_cache_hits_total", "counter", "Evaluations served from the shared cache."),
+    ("eval_cache_misses_total", "counter", "Evaluations computed (cache misses)."),
+    (
+        "eval_cache_coalesced_total",
+        "counter",
+        "Evaluations that waited on an identical in-flight computation.",
+    ),
+    ("eval_cache_evictions_total", "counter", "Entries evicted by the capacity bound."),
+    ("eval_cache_entries", "gauge", "Entries currently cached."),
+    ("eval_cache_capacity", "gauge", "Configured cache capacity bound."),
+    ("jobs_queued", "gauge", "Jobs waiting for a job worker."),
+    ("jobs_running", "gauge", "Jobs currently executing."),
+    ("jobs_submitted_total", "counter", "Job submissions since start (including shed ones)."),
+    ("jobs_done_total", "counter", "Jobs finished successfully."),
+    ("jobs_failed_total", "counter", "Jobs that errored."),
+    ("jobs_cancelled_total", "counter", "Jobs cancelled before completion."),
+    ("jobs_shed_total", "counter", "Job submissions shed because the job queue was full (503)."),
+];
+
+/// HELP + TYPE preamble for a series, read from [`SERIES`] so the
+/// exposition can never drift from the documented table.
+fn preamble(out: &mut String, name: &str) {
+    let (_, typ, help) = SERIES
+        .iter()
+        .find(|(n, _, _)| *n == name)
+        .unwrap_or_else(|| panic!("series {name:?} missing from SERIES"));
+    let _ = writeln!(out, "# HELP {PREFIX}_{name} {help}");
+    let _ = writeln!(out, "# TYPE {PREFIX}_{name} {typ}");
+}
 
 /// Counters for one server instance. Shared via `Arc` between the accept
 /// loop, the workers, and the `/metrics` handler.
@@ -82,13 +124,13 @@ impl ServeMetrics {
         req.get(&(endpoint.to_string(), status)).copied().unwrap_or(0)
     }
 
-    /// Render the Prometheus text exposition, combining the server's own
-    /// series with the shared evaluation cache's counters.
-    pub fn render(&self, cache: &CacheStats) -> String {
+    /// Render the Prometheus text exposition: the server's own series, the
+    /// shared evaluation cache's counters, and the job registry's gauges.
+    /// HELP/TYPE lines come from [`SERIES`].
+    pub fn render(&self, cache: &CacheStats, jobs: &JobStats) -> String {
         let mut out = String::new();
 
-        let _ = writeln!(out, "# HELP {PREFIX}_http_requests_total Requests handled, by endpoint and status code.");
-        let _ = writeln!(out, "# TYPE {PREFIX}_http_requests_total counter");
+        preamble(&mut out, "http_requests_total");
         {
             let req = self.requests.lock().expect("metrics poisoned");
             for ((endpoint, status), count) in req.iter() {
@@ -99,8 +141,7 @@ impl ServeMetrics {
             }
         }
 
-        let _ = writeln!(out, "# HELP {PREFIX}_http_request_seconds Request latency histogram.");
-        let _ = writeln!(out, "# TYPE {PREFIX}_http_request_seconds histogram");
+        preamble(&mut out, "http_request_seconds");
         for (i, le) in LATENCY_BUCKETS.iter().enumerate() {
             let _ = writeln!(
                 out,
@@ -117,24 +158,28 @@ impl ServeMetrics {
         );
         let _ = writeln!(out, "{PREFIX}_http_request_seconds_count {count}");
 
-        let _ = writeln!(out, "# HELP {PREFIX}_http_inflight Requests currently being handled.");
-        let _ = writeln!(out, "# TYPE {PREFIX}_http_inflight gauge");
+        preamble(&mut out, "http_inflight");
         let _ = writeln!(out, "{PREFIX}_http_inflight {}", self.inflight.load(Ordering::Relaxed));
 
-        let _ = writeln!(out, "# HELP {PREFIX}_http_rejected_total Connections shed by accept-queue backpressure (503).");
-        let _ = writeln!(out, "# TYPE {PREFIX}_http_rejected_total counter");
+        preamble(&mut out, "http_rejected_total");
         let _ = writeln!(out, "{PREFIX}_http_rejected_total {}", self.rejected());
 
-        for (name, help, value, gauge) in [
-            ("eval_cache_hits_total", "Evaluations served from the shared cache.", cache.hits, false),
-            ("eval_cache_misses_total", "Evaluations computed (cache misses).", cache.misses, false),
-            ("eval_cache_coalesced_total", "Evaluations that waited on an identical in-flight computation.", cache.coalesced, false),
-            ("eval_cache_evictions_total", "Entries evicted by the capacity bound.", cache.evictions, false),
-            ("eval_cache_entries", "Entries currently cached.", cache.entries, true),
-            ("eval_cache_capacity", "Configured cache capacity bound.", cache.capacity, true),
+        for (name, value) in [
+            ("eval_cache_hits_total", cache.hits),
+            ("eval_cache_misses_total", cache.misses),
+            ("eval_cache_coalesced_total", cache.coalesced),
+            ("eval_cache_evictions_total", cache.evictions),
+            ("eval_cache_entries", cache.entries),
+            ("eval_cache_capacity", cache.capacity),
+            ("jobs_queued", jobs.queued),
+            ("jobs_running", jobs.running),
+            ("jobs_submitted_total", jobs.submitted),
+            ("jobs_done_total", jobs.done),
+            ("jobs_failed_total", jobs.failed),
+            ("jobs_cancelled_total", jobs.cancelled),
+            ("jobs_shed_total", jobs.shed),
         ] {
-            let _ = writeln!(out, "# HELP {PREFIX}_{name} {help}");
-            let _ = writeln!(out, "# TYPE {PREFIX}_{name} {}", if gauge { "gauge" } else { "counter" });
+            preamble(&mut out, name);
             let _ = writeln!(out, "{PREFIX}_{name} {value}");
         }
         out
@@ -156,6 +201,10 @@ impl Drop for InflightGuard<'_> {
 mod tests {
     use super::*;
 
+    fn render(m: &ServeMetrics) -> String {
+        m.render(&CacheStats::default(), &JobStats::default())
+    }
+
     #[test]
     fn observe_accumulates_counts_and_buckets() {
         let m = ServeMetrics::new();
@@ -165,7 +214,7 @@ mod tests {
         assert_eq!(m.requests_for("plan", 200), 2);
         assert_eq!(m.requests_for("plan", 400), 1);
         assert_eq!(m.requests_for("healthz", 200), 0);
-        let text = m.render(&CacheStats::default());
+        let text = render(&m);
         assert!(text.contains("fsdp_bw_http_requests_total{endpoint=\"plan\",code=\"200\"} 2"), "{text}");
         assert!(text.contains("fsdp_bw_http_request_seconds_count 3"), "{text}");
         // 0.0005 lands in every bucket; 0.2 only in le>=0.25.
@@ -179,16 +228,25 @@ mod tests {
         {
             let _a = m.inflight_guard();
             let _b = m.inflight_guard();
-            assert!(m.render(&CacheStats::default()).contains("fsdp_bw_http_inflight 2"));
+            assert!(render(&m).contains("fsdp_bw_http_inflight 2"));
         }
-        assert!(m.render(&CacheStats::default()).contains("fsdp_bw_http_inflight 0"));
+        assert!(render(&m).contains("fsdp_bw_http_inflight 0"));
     }
 
     #[test]
-    fn cache_counters_exported() {
+    fn cache_and_job_counters_exported() {
         let m = ServeMetrics::new();
         let stats = CacheStats { hits: 7, misses: 3, coalesced: 2, evictions: 1, entries: 3, capacity: 64 };
-        let text = m.render(&stats);
+        let jobs = JobStats {
+            queued: 1,
+            running: 2,
+            submitted: 9,
+            done: 4,
+            failed: 1,
+            cancelled: 1,
+            shed: 1,
+        };
+        let text = m.render(&stats, &jobs);
         for line in [
             "fsdp_bw_eval_cache_hits_total 7",
             "fsdp_bw_eval_cache_misses_total 3",
@@ -196,10 +254,40 @@ mod tests {
             "fsdp_bw_eval_cache_evictions_total 1",
             "fsdp_bw_eval_cache_entries 3",
             "fsdp_bw_eval_cache_capacity 64",
+            "fsdp_bw_jobs_queued 1",
+            "fsdp_bw_jobs_running 2",
+            "fsdp_bw_jobs_submitted_total 9",
+            "fsdp_bw_jobs_done_total 4",
+            "fsdp_bw_jobs_failed_total 1",
+            "fsdp_bw_jobs_cancelled_total 1",
+            "fsdp_bw_jobs_shed_total 1",
         ] {
             assert!(text.contains(line), "missing {line:?} in:\n{text}");
         }
         m.count_rejected();
         assert_eq!(m.rejected(), 1);
+    }
+
+    #[test]
+    fn series_table_and_exposition_agree_both_ways() {
+        // Every documented series appears in the exposition…
+        let m = ServeMetrics::new();
+        m.observe("plan", 200, 0.002);
+        let text = render(&m);
+        for (name, typ, _) in SERIES {
+            assert!(
+                text.contains(&format!("# TYPE {PREFIX}_{name} {typ}")),
+                "series {name} ({typ}) not rendered:\n{text}"
+            );
+        }
+        // …and every rendered series is documented (no undocumented names).
+        for line in text.lines() {
+            let Some(rest) = line.strip_prefix(&format!("# TYPE {PREFIX}_")) else { continue };
+            let name = rest.split_whitespace().next().unwrap();
+            assert!(
+                SERIES.iter().any(|(n, _, _)| *n == name),
+                "rendered series {name:?} missing from SERIES"
+            );
+        }
     }
 }

@@ -17,18 +17,30 @@
 //!
 //! Endpoints:
 //!
-//! | route             | method | answer                                          |
-//! |-------------------|--------|-------------------------------------------------|
-//! | `/v1/plan`        | POST   | the [`crate::query::Frontier`] of the posted query (dialect text or a flat JSON object of the same keys) |
-//! | `/v1/presets`     | GET    | model/cluster presets + backends + dialect keys |
-//! | `/healthz`        | GET    | liveness                                        |
-//! | `/metrics`        | GET    | Prometheus text: request/latency/in-flight/backpressure + evaluation-cache counters |
+//! | route                 | method | answer                                      |
+//! |-----------------------|--------|---------------------------------------------|
+//! | `/v1/plan`            | POST   | the [`crate::query::Frontier`] of the posted query (dialect text or a flat JSON object of the same keys), synchronously |
+//! | `/v1/jobs`            | POST   | the same query as a **background job** — 202 with an id, immediately |
+//! | `/v1/jobs`            | GET    | every known job's status                    |
+//! | `/v1/jobs/:id`        | GET    | progress: points decided / pruned / remaining, cache hits, current best |
+//! | `/v1/jobs/:id/result` | GET    | the finished Frontier JSON (byte-identical to the synchronous `/v1/plan` answer) |
+//! | `/v1/jobs/:id`        | DELETE | cancel (next chunk boundary) or discard a finished record |
+//! | `/v1/presets`         | GET    | model/cluster presets + backends + dialect keys |
+//! | `/healthz`            | GET    | liveness                                    |
+//! | `/metrics`            | GET    | Prometheus text: request/latency/in-flight/backpressure + evaluation-cache + job series |
 //!
 //! Start one with [`Server::start`] (binds, spawns, returns immediately);
 //! `fsdp-bw serve` is the CLI front-end, [`client`] the in-process one.
+//!
+//! The service computes nothing itself: every answer is the
+//! [`crate::query::Planner`] pricing points through the paper's model —
+//! Eqs 1–4 memory and Eq 5 communication through Eq 11 metrics, with the
+//! §2.7 bounds (Eqs 12–15) pruning the grid up front — synchronously for
+//! `/v1/plan`, chunk-by-chunk with observable progress for [`jobs`].
 
 pub mod client;
 pub mod http;
+pub mod jobs;
 pub mod metrics;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -43,14 +55,58 @@ use crate::config::scenario::KNOWN_KEYS;
 use crate::config::{ClusterConfig, ModelConfig};
 use crate::query::cache::{EvalCache, DEFAULT_CAPACITY};
 use crate::query::{Planner, Query};
-use crate::util::channel::{channel, Receiver, TrySendError};
+use crate::util::channel::{channel, Receiver, Sender, TrySendError};
 use crate::util::json::Json;
 
 use http::{read_request, write_response, Request};
+use jobs::{Job, JobRegistry, JobState};
 use metrics::ServeMetrics;
 
 const JSON: &str = "application/json";
 const PROMETHEUS: &str = "text/plain; version=0.0.4";
+
+/// Every route this service serves: `(method, path, description)`. The
+/// reference manual (`fsdp-bw docs`) renders this table; the request
+/// handler's routing implements it, and the serve tests exercise each row.
+pub const ENDPOINTS: &[(&str, &str, &str)] = &[
+    (
+        "POST",
+        "/v1/plan",
+        "Run a query synchronously; the response is the full Frontier JSON",
+    ),
+    (
+        "POST",
+        "/v1/jobs",
+        "Submit a query as a background job; responds 202 with the job id immediately",
+    ),
+    ("GET", "/v1/jobs", "List every known job with its status"),
+    (
+        "GET",
+        "/v1/jobs/:id",
+        "Job progress: points decided/pruned/remaining, cache hits, current best",
+    ),
+    (
+        "GET",
+        "/v1/jobs/:id/result",
+        "The finished job's Frontier JSON (409 until the job is done)",
+    ),
+    (
+        "DELETE",
+        "/v1/jobs/:id",
+        "Cancel a queued/running job, or discard a finished job's record",
+    ),
+    (
+        "GET",
+        "/v1/presets",
+        "Model/cluster presets, backend names, and every scenario dialect key",
+    ),
+    ("GET", "/healthz", "Liveness"),
+    (
+        "GET",
+        "/metrics",
+        "Prometheus text: request/latency/backpressure, evaluation-cache and job series",
+    ),
+];
 
 /// Server tuning. The defaults suit tests and single-host deployments;
 /// every knob is surfaced by `fsdp-bw serve`.
@@ -72,6 +128,17 @@ pub struct ServeConfig {
     /// multiplying thread counts; raise it for a lightly-loaded server
     /// answering huge single queries.
     pub planner_threads: usize,
+    /// Dedicated workers executing background jobs (`POST /v1/jobs`).
+    pub job_workers: usize,
+    /// Jobs queued ahead of the job workers; beyond this, submissions are
+    /// shed with 503.
+    pub job_queue: usize,
+    /// Grid points per job chunk — the progress/cancellation granularity
+    /// of `GET`/`DELETE /v1/jobs/:id`.
+    pub job_chunk: usize,
+    /// Finished job records retained for `GET /v1/jobs/:id[/result]`
+    /// (oldest evicted first; active jobs are never evicted).
+    pub job_records: usize,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +150,10 @@ impl Default for ServeConfig {
             timeout: Duration::from_secs(30),
             cache_capacity: DEFAULT_CAPACITY,
             planner_threads: 1,
+            job_workers: 2,
+            job_queue: 32,
+            job_chunk: 4096,
+            job_records: 256,
         }
     }
 }
@@ -95,19 +166,48 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    job_workers: Vec<JoinHandle<()>>,
     metrics: Arc<ServeMetrics>,
     cache: Arc<EvalCache>,
+    jobs: Arc<JobRegistry>,
 }
 
 impl Server {
-    /// Bind, spawn the accept loop + worker pool, and return immediately.
+    /// Bind, spawn the accept loop + request workers + job workers, and
+    /// return immediately.
     pub fn start(cfg: ServeConfig) -> Result<Server> {
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr()?;
         let metrics = Arc::new(ServeMetrics::new());
         let cache = Arc::new(EvalCache::new(cfg.cache_capacity));
+        let jobs = Arc::new(JobRegistry::new(cfg.job_records));
         let shutdown = Arc::new(AtomicBool::new(false));
+
+        // Job execution pool: jobs run off the request path so a
+        // million-point sweep never occupies a connection worker.
+        let (job_submit_tx, job_submit_rx) = channel::<Arc<Job>>(cfg.job_queue.max(1));
+        let mut job_workers = Vec::new();
+        for _ in 0..cfg.job_workers.max(1) {
+            let rx: Receiver<Arc<Job>> = job_submit_rx.clone();
+            let registry = jobs.clone();
+            let cache = cache.clone();
+            let planner_threads = cfg.planner_threads.max(1);
+            let job_chunk = cfg.job_chunk.max(1);
+            job_workers.push(std::thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    // A panicking evaluator must cost one job, not the
+                    // worker (mirrors the request workers below).
+                    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        registry.execute(&job, planner_threads, job_chunk, cache.clone());
+                    }));
+                    if caught.is_err() {
+                        registry.fail_panicked(&job);
+                    }
+                }
+            }));
+        }
+        drop(job_submit_rx);
 
         let (job_tx, job_rx) = channel::<TcpStream>(cfg.queue.max(1));
         let mut workers = Vec::new();
@@ -116,6 +216,8 @@ impl Server {
             let handler = Handler {
                 metrics: metrics.clone(),
                 cache: cache.clone(),
+                jobs: jobs.clone(),
+                job_submit: job_submit_tx.clone(),
                 planner_threads: cfg.planner_threads.max(1),
                 timeout: cfg.timeout,
             };
@@ -134,6 +236,7 @@ impl Server {
             }));
         }
         drop(job_rx);
+        drop(job_submit_tx);
 
         let accept = {
             let shutdown = shutdown.clone();
@@ -187,7 +290,16 @@ impl Server {
             })
         };
 
-        Ok(Server { addr, shutdown, accept: Some(accept), workers, metrics, cache })
+        Ok(Server {
+            addr,
+            shutdown,
+            accept: Some(accept),
+            workers,
+            job_workers,
+            metrics,
+            cache,
+            jobs,
+        })
     }
 
     /// The bound address (resolves the ephemeral port of `addr: …:0`).
@@ -205,6 +317,11 @@ impl Server {
         &self.cache
     }
 
+    /// The background-job registry.
+    pub fn jobs(&self) -> &Arc<JobRegistry> {
+        &self.jobs
+    }
+
     /// Stop accepting, finish queued + in-flight requests, join all
     /// threads.
     pub fn shutdown(mut self) {
@@ -218,6 +335,9 @@ impl Server {
             let _ = h.join();
         }
         for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.job_workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -234,6 +354,13 @@ impl Server {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        // Request workers gone → every job-submit sender is dropped; job
+        // workers exit once the queue drains. Cancel active jobs first so
+        // "drains" means chunk boundaries, not grid completions.
+        self.jobs.cancel_all();
+        for h in self.job_workers.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -247,6 +374,8 @@ impl Drop for Server {
 struct Handler {
     metrics: Arc<ServeMetrics>,
     cache: Arc<EvalCache>,
+    jobs: Arc<JobRegistry>,
+    job_submit: Sender<Arc<Job>>,
     planner_threads: usize,
     timeout: Duration,
 }
@@ -273,18 +402,26 @@ impl Handler {
 
     /// Dispatch one request: `(endpoint label, status, content type, body)`.
     fn route(&self, req: &Request) -> (&'static str, u16, &'static str, String) {
+        if let Some(rest) = req.path.strip_prefix("/v1/jobs/") {
+            return self.route_job(&req.method, rest);
+        }
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/healthz") => {
                 ("healthz", 200, JSON, "{\"status\": \"ok\"}".to_string())
             }
-            ("GET", "/metrics") => {
-                ("metrics", 200, PROMETHEUS, self.metrics.render(&self.cache.stats()))
-            }
+            ("GET", "/metrics") => (
+                "metrics",
+                200,
+                PROMETHEUS,
+                self.metrics.render(&self.cache.stats(), &self.jobs.stats()),
+            ),
             ("GET", "/v1/presets") => ("presets", 200, JSON, presets_json().pretty()),
             ("POST", "/v1/plan") => match self.handle_plan(&req.body) {
                 Ok(body) => ("plan", 200, JSON, body),
                 Err(e) => ("plan", 400, JSON, error_body(&format!("{e:#}"))),
             },
+            ("POST", "/v1/jobs") => self.handle_job_submit(&req.body),
+            ("GET", "/v1/jobs") => ("jobs_list", 200, JSON, self.jobs.list_json().pretty()),
             (_, "/healthz" | "/metrics" | "/v1/presets") => (
                 "method_not_allowed",
                 405,
@@ -294,11 +431,127 @@ impl Handler {
             (_, "/v1/plan") => {
                 ("method_not_allowed", 405, JSON, error_body("POST a query to /v1/plan"))
             }
+            (_, "/v1/jobs") => (
+                "method_not_allowed",
+                405,
+                JSON,
+                error_body("POST a query to /v1/jobs, or GET the list"),
+            ),
             _ => (
                 "not_found",
                 404,
                 JSON,
                 error_body(&format!("no route for {} {}", req.method, req.path)),
+            ),
+        }
+    }
+
+    /// `POST /v1/jobs`: validate the query up front (bad queries fail the
+    /// submission, not the job), then enqueue. A full job queue sheds with
+    /// 503, mirroring the accept queue's backpressure story.
+    fn handle_job_submit(&self, body: &str) -> (&'static str, u16, &'static str, String) {
+        let query = match plan_body_to_dialect(body).and_then(|t| Query::parse(&t)) {
+            Ok(q) => q,
+            Err(e) => return ("jobs_submit", 400, JSON, error_body(&format!("{e:#}"))),
+        };
+        let job = self.jobs.submit(query);
+        match self.job_submit.try_send(job.clone()) {
+            Ok(()) => {
+                // State is reported as "queued" — the state at submission
+                // time — rather than read back from the job, which a fast
+                // worker may already have moved to running or even done.
+                let body = Json::Obj(
+                    [
+                        ("id".to_string(), Json::Num(job.id as f64)),
+                        ("state".to_string(), Json::Str("queued".to_string())),
+                        (
+                            "status_url".to_string(),
+                            Json::Str(format!("/v1/jobs/{}", job.id)),
+                        ),
+                        (
+                            "result_url".to_string(),
+                            Json::Str(format!("/v1/jobs/{}/result", job.id)),
+                        ),
+                    ]
+                    .into_iter()
+                    .collect(),
+                );
+                ("jobs_submit", 202, JSON, body.pretty())
+            }
+            Err(_) => {
+                // Undo the registration — the job will never run.
+                self.jobs.discard_unqueued(&job);
+                ("jobs_submit", 503, JSON, error_body("job queue full; retry later"))
+            }
+        }
+    }
+
+    /// `/v1/jobs/:id[...]` — status, result, and cancel.
+    fn route_job(&self, method: &str, rest: &str) -> (&'static str, u16, &'static str, String) {
+        let (id_str, want_result) = match rest.strip_suffix("/result") {
+            Some(id) => (id, true),
+            None => (rest, false),
+        };
+        let Ok(id) = id_str.parse::<u64>() else {
+            return ("job_status", 404, JSON, error_body(&format!("bad job id {id_str:?}")));
+        };
+        let Some(job) = self.jobs.get(id) else {
+            return (
+                if want_result { "job_result" } else { "job_status" },
+                404,
+                JSON,
+                error_body(&format!("no job {id}")),
+            );
+        };
+        match (method, want_result) {
+            ("GET", false) => ("job_status", 200, JSON, job.status_json().pretty()),
+            ("GET", true) => match job.state() {
+                JobState::Done => {
+                    ("job_result", 200, JSON, job.result().expect("done job has a result"))
+                }
+                JobState::Failed => (
+                    "job_result",
+                    500,
+                    JSON,
+                    error_body(&format!(
+                        "job {id} failed: {}",
+                        job.error().unwrap_or_default()
+                    )),
+                ),
+                state => (
+                    "job_result",
+                    409,
+                    JSON,
+                    error_body(&format!("job {id} is {} — no result yet", state.name())),
+                ),
+            },
+            ("DELETE", false) => {
+                if job.state().terminal() {
+                    self.jobs.remove_terminal(id);
+                    (
+                        "job_cancel",
+                        200,
+                        JSON,
+                        Json::Obj(
+                            [
+                                ("id".to_string(), Json::Num(id as f64)),
+                                ("removed".to_string(), Json::Bool(true)),
+                            ]
+                            .into_iter()
+                            .collect(),
+                        )
+                        .pretty(),
+                    )
+                } else {
+                    job.request_cancel();
+                    ("job_cancel", 200, JSON, job.status_json().pretty())
+                }
+            }
+            _ => (
+                "method_not_allowed",
+                405,
+                JSON,
+                error_body("job endpoints accept GET (status/result) and DELETE (cancel)"),
             ),
         }
     }

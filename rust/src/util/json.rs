@@ -119,6 +119,18 @@ impl Json {
         s
     }
 
+    /// Pretty serialization of a *fragment* nested `depth` levels deep in a
+    /// surrounding document: identical to the text [`Self::pretty`] would
+    /// emit for this value at that depth (the first line carries no leading
+    /// pad — the container supplies it). The streaming report writers use
+    /// this to emit array elements one at a time, byte-identical to
+    /// pretty-printing the whole document at once.
+    pub fn pretty_at(&self, depth: usize) -> String {
+        let mut s = String::new();
+        self.write(&mut s, Some(2), depth);
+        s
+    }
+
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
         let (nl, pad, pad_in) = match indent {
             Some(w) => ("\n", " ".repeat(w * depth), " ".repeat(w * (depth + 1))),
@@ -434,6 +446,32 @@ mod tests {
         let arr = v.get("a").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 3);
         assert_eq!(arr[1].get("b").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn pretty_at_matches_in_context_rendering() {
+        // Splicing `pretty_at(depth)` fragments between the container's own
+        // separators must reproduce `pretty()` of the whole document.
+        let elems = vec![
+            Json::parse(r#"{"a": 1, "b": [true, null]}"#).unwrap(),
+            Json::Num(2.5),
+            Json::parse(r#"["x", {"y": "z"}]"#).unwrap(),
+        ];
+        let doc = Json::Obj(
+            [("points".to_string(), Json::Arr(elems.clone()))].into_iter().collect(),
+        );
+        let whole = doc.pretty();
+        // Hand-assemble: {"\n  "points": [ <elems at depth 2> \n  ]\n}
+        let mut spliced = String::from("{\n  \"points\": [");
+        for (i, e) in elems.iter().enumerate() {
+            if i > 0 {
+                spliced.push(',');
+            }
+            spliced.push_str("\n    ");
+            spliced.push_str(&e.pretty_at(2));
+        }
+        spliced.push_str("\n  ]\n}");
+        assert_eq!(spliced, whole);
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! A byte sink that is either an in-memory string or an append-only file —
+//! the row buffer behind the streaming sweep writers.
+//!
+//! A streamed report renders each grid point's rows as soon as its chunk
+//! completes, but the final document wraps those rows with values that are
+//! only known at the end (error counts, summaries). The writers therefore
+//! append rows to a [`Spill`] and assemble the document in one pass at
+//! finish time. Small runs keep the rows in memory; chunked runs spill to a
+//! file so resident memory stays O(chunk) while the rows stay O(grid) on
+//! disk — and a checkpointed run can truncate the file back to the last
+//! completed chunk's byte offset on `--resume`.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Append-only row storage: in memory or on disk.
+pub enum Spill {
+    Mem(String),
+    File {
+        path: PathBuf,
+        writer: BufWriter<File>,
+        /// Bytes appended so far (tracked here so checkpoints never need to
+        /// stat the file through the buffer).
+        bytes: u64,
+    },
+}
+
+impl std::fmt::Debug for Spill {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Spill::Mem(s) => f.debug_struct("Spill::Mem").field("bytes", &s.len()).finish(),
+            Spill::File { path, bytes, .. } => f
+                .debug_struct("Spill::File")
+                .field("path", path)
+                .field("bytes", bytes)
+                .finish(),
+        }
+    }
+}
+
+impl Spill {
+    /// An in-memory spill (small, unchunked runs).
+    pub fn mem() -> Spill {
+        Spill::Mem(String::new())
+    }
+
+    /// A file-backed spill, truncated to `keep_bytes` (0 starts fresh; a
+    /// resume passes the last checkpoint's byte count so rows from a chunk
+    /// that was interrupted mid-write are discarded).
+    pub fn file(path: &Path, keep_bytes: u64) -> Result<Spill> {
+        let f = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening row spill {}", path.display()))?;
+        f.set_len(keep_bytes)
+            .with_context(|| format!("truncating row spill {}", path.display()))?;
+        let mut writer = BufWriter::new(f);
+        writer.seek(SeekFrom::End(0))?;
+        Ok(Spill::File { path: path.to_path_buf(), writer, bytes: keep_bytes })
+    }
+
+    /// Append text.
+    pub fn push(&mut self, text: &str) -> Result<()> {
+        match self {
+            Spill::Mem(s) => s.push_str(text),
+            Spill::File { writer, bytes, path } => {
+                writer
+                    .write_all(text.as_bytes())
+                    .with_context(|| format!("writing row spill {}", path.display()))?;
+                *bytes += text.len() as u64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes appended so far.
+    pub fn len(&self) -> u64 {
+        match self {
+            Spill::Mem(s) => s.len() as u64,
+            Spill::File { bytes, .. } => *bytes,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flush buffered bytes to stable storage (no-op in memory). Called
+    /// before each checkpoint so a resume finds every byte it accounts for.
+    pub fn sync(&mut self) -> Result<()> {
+        if let Spill::File { writer, path, .. } = self {
+            writer.flush().with_context(|| format!("flushing row spill {}", path.display()))?;
+            writer
+                .get_ref()
+                .sync_data()
+                .with_context(|| format!("syncing row spill {}", path.display()))?;
+        }
+        Ok(())
+    }
+
+    /// Consume the spill and append its entire contents to `out`. For
+    /// file spills this loads the whole file — use [`Self::drain_to`] when
+    /// the destination is a writer and memory must stay bounded.
+    pub fn drain_into(self, out: &mut String) -> Result<()> {
+        match self {
+            Spill::Mem(s) => out.push_str(&s),
+            Spill::File { mut writer, path, .. } => {
+                writer.flush()?;
+                let mut f = writer.into_inner().map_err(|e| anyhow::anyhow!("{e}"))?;
+                f.seek(SeekFrom::Start(0))?;
+                f.read_to_string(out)
+                    .with_context(|| format!("reading row spill {}", path.display()))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume the spill, streaming its contents into `w` without loading
+    /// them: file spills copy through a fixed-size buffer, so assembling
+    /// an O(grid) report into a file stays O(chunk) resident.
+    pub fn drain_to(self, w: &mut dyn Write) -> Result<()> {
+        match self {
+            Spill::Mem(s) => w.write_all(s.as_bytes())?,
+            Spill::File { mut writer, path, .. } => {
+                writer.flush()?;
+                let mut f = writer.into_inner().map_err(|e| anyhow::anyhow!("{e}"))?;
+                f.seek(SeekFrom::Start(0))?;
+                std::io::copy(&mut f, w)
+                    .with_context(|| format!("copying row spill {}", path.display()))?;
+            }
+        }
+        Ok(())
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn mem_spill_accumulates() {
+        let mut s = Spill::mem();
+        assert!(s.is_empty());
+        s.push("a,b\n").unwrap();
+        s.push("c,d\n").unwrap();
+        assert_eq!(s.len(), 8);
+        let mut out = String::from("head\n");
+        s.drain_into(&mut out).unwrap();
+        assert_eq!(out, "head\na,b\nc,d\n");
+    }
+
+    #[test]
+    fn drain_to_streams_the_same_bytes() {
+        let dir = TempDir::new().unwrap();
+        let mut s = Spill::file(&dir.path().join("rows"), 0).unwrap();
+        s.push("alpha\n").unwrap();
+        s.push("beta\n").unwrap();
+        let mut sink: Vec<u8> = b"head\n".to_vec();
+        s.drain_to(&mut sink).unwrap();
+        assert_eq!(sink, b"head\nalpha\nbeta\n");
+        let mut m = Spill::mem();
+        m.push("x").unwrap();
+        let mut sink = Vec::new();
+        m.drain_to(&mut sink).unwrap();
+        assert_eq!(sink, b"x");
+    }
+
+    #[test]
+    fn file_spill_roundtrips_and_truncates() {
+        let dir = TempDir::new().unwrap();
+        let path = dir.path().join("rows");
+        {
+            let mut s = Spill::file(&path, 0).unwrap();
+            s.push("one\n").unwrap();
+            s.push("two\n").unwrap();
+            s.sync().unwrap();
+            assert_eq!(s.len(), 8);
+            let mut out = String::new();
+            s.drain_into(&mut out).unwrap();
+            assert_eq!(out, "one\ntwo\n");
+        }
+        // Reopen keeping only the first 4 bytes (a resume discarding a
+        // half-written chunk), then continue appending.
+        let mut s = Spill::file(&path, 4).unwrap();
+        s.push("TWO\n").unwrap();
+        let mut out = String::new();
+        s.drain_into(&mut out).unwrap();
+        assert_eq!(out, "one\nTWO\n");
+    }
+}

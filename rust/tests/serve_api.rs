@@ -206,6 +206,180 @@ fn saturated_accept_queue_sheds_with_503() {
     server.shutdown();
 }
 
+/// Poll a job until it reaches `want` (or panic after ~10s).
+fn wait_job(addr: &str, id: u64, want: &str) -> Json {
+    for _ in 0..200 {
+        let r = client::get(addr, &format!("/v1/jobs/{id}")).unwrap();
+        assert_eq!(r.status, 200, "{}", r.body);
+        let v = Json::parse(&r.body).unwrap();
+        let state = v.get("state").unwrap().as_str().unwrap().to_string();
+        if state == want {
+            return v;
+        }
+        assert!(
+            !["done", "failed", "cancelled"].contains(&state.as_str()),
+            "job {id} terminal in state {state:?} while waiting for {want:?}: {}",
+            r.body
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("job {id} never reached {want:?}");
+}
+
+#[test]
+fn job_lifecycle_result_matches_synchronous_plan() {
+    let server = start(2, 16, 30_000);
+    let addr = server.addr().to_string();
+
+    // The synchronous answer is the oracle.
+    let sync = client::post(&addr, "/v1/plan", PLAN).unwrap();
+    assert_eq!(sync.status, 200, "{}", sync.body);
+
+    let submitted = client::post(&addr, "/v1/jobs", PLAN).unwrap();
+    assert_eq!(submitted.status, 202, "{}", submitted.body);
+    let v = Json::parse(&submitted.body).unwrap();
+    let id = v.get("id").unwrap().as_usize().unwrap() as u64;
+    assert_eq!(
+        v.get("status_url").unwrap().as_str().unwrap(),
+        format!("/v1/jobs/{id}")
+    );
+
+    let status = wait_job(&addr, id, "done");
+    assert_eq!(status.get("points").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(status.get("done").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(status.get("remaining").unwrap().as_usize().unwrap(), 0);
+    assert!(status.get("best").unwrap().get("score").unwrap().as_f64().unwrap() > 0.0);
+
+    // The async result is byte-identical to the synchronous plan.
+    let result = client::get(&addr, &format!("/v1/jobs/{id}/result")).unwrap();
+    assert_eq!(result.status, 200);
+    assert_eq!(result.body, sync.body, "job result == /v1/plan answer");
+
+    // The job shows up in the list and in /metrics.
+    let list = client::get(&addr, "/v1/jobs").unwrap();
+    assert_eq!(
+        Json::parse(&list.body).unwrap().get("jobs").unwrap().as_arr().unwrap().len(),
+        1
+    );
+    let m = client::get(&addr, "/metrics").unwrap().body;
+    assert_eq!(metric(&m, "fsdp_bw_jobs_submitted_total"), 1.0, "{m}");
+    assert_eq!(metric(&m, "fsdp_bw_jobs_done_total"), 1.0, "{m}");
+    assert_eq!(metric(&m, "fsdp_bw_jobs_running"), 0.0, "{m}");
+
+    // DELETE discards the finished record; its endpoints then 404.
+    let del =
+        client::request(&addr, "DELETE", &format!("/v1/jobs/{id}"), None, Duration::from_secs(5))
+            .unwrap();
+    assert_eq!(del.status, 200, "{}", del.body);
+    assert_eq!(client::get(&addr, &format!("/v1/jobs/{id}")).unwrap().status, 404);
+    assert_eq!(client::get(&addr, &format!("/v1/jobs/{id}/result")).unwrap().status, 404);
+
+    server.shutdown();
+}
+
+#[test]
+fn job_error_paths_and_unfinished_result() {
+    let server = start(2, 16, 30_000);
+    let addr = server.addr().to_string();
+
+    // Invalid queries fail the submission, not the job.
+    let bad = client::post(&addr, "/v1/jobs", "modle = 13B\n").unwrap();
+    assert_eq!(bad.status, 400, "{}", bad.body);
+    // Unknown ids and garbage ids are 404s.
+    assert_eq!(client::get(&addr, "/v1/jobs/999").unwrap().status, 404);
+    assert_eq!(client::get(&addr, "/v1/jobs/xyz").unwrap().status, 404);
+    // Wrong method on a job resource.
+    let put =
+        client::request(&addr, "PUT", "/v1/jobs/1", None, Duration::from_secs(5)).unwrap();
+    assert_eq!(put.status, 404, "unknown id wins over method: {}", put.body);
+
+    server.shutdown();
+}
+
+#[test]
+fn running_jobs_report_progress_and_cancel_at_chunk_boundaries() {
+    // Chunk = 1 point and a single planner thread: a 4000-point grid takes
+    // long enough that the DELETE lands while the job is running.
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 2,
+        queue: 16,
+        job_workers: 1,
+        job_chunk: 1,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let big = "model = 1.3B\nbatch = 1\nsweep.seq_len = 128..512000+128\n\
+               query.backend = analytical\nquery.top_k = 1\n";
+    let submitted = client::post(&addr, "/v1/jobs", big).unwrap();
+    assert_eq!(submitted.status, 202, "{}", submitted.body);
+    let id = Json::parse(&submitted.body).unwrap().get("id").unwrap().as_usize().unwrap() as u64;
+
+    // An unfinished job has no result yet (409), but reports progress.
+    let status = wait_job(&addr, id, "running");
+    assert_eq!(status.get("points").unwrap().as_usize().unwrap(), 4000);
+    let early = client::get(&addr, &format!("/v1/jobs/{id}/result")).unwrap();
+    assert_eq!(early.status, 409, "{}", early.body);
+
+    let del =
+        client::request(&addr, "DELETE", &format!("/v1/jobs/{id}"), None, Duration::from_secs(5))
+            .unwrap();
+    assert_eq!(del.status, 200, "{}", del.body);
+    let cancelled = wait_job(&addr, id, "cancelled");
+    let done = cancelled.get("done").unwrap().as_usize().unwrap();
+    assert!(done < 4000, "cancelled before the grid finished (done={done})");
+    let m = client::get(&addr, "/metrics").unwrap().body;
+    assert_eq!(metric(&m, "fsdp_bw_jobs_cancelled_total"), 1.0, "{m}");
+
+    server.shutdown();
+}
+
+#[test]
+fn full_job_queue_sheds_submissions_without_phantom_records() {
+    // One job worker, one queue slot: a slow running job + one queued job
+    // saturate the pool, so further submissions must shed with 503 and
+    // leave no registry record behind.
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 2,
+        queue: 16,
+        job_workers: 1,
+        job_queue: 1,
+        job_chunk: 1,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let slow = "model = 1.3B\nbatch = 1\nsweep.seq_len = 128..512000+128\n\
+                query.backend = analytical\n";
+    let mut accepted = 0u64;
+    let mut shed = 0u64;
+    for _ in 0..4 {
+        let r = client::post(&addr, "/v1/jobs", slow).unwrap();
+        match r.status {
+            202 => accepted += 1,
+            503 => shed += 1,
+            other => panic!("unexpected status {other}: {}", r.body),
+        }
+    }
+    assert!(shed >= 1, "a 1-slot queue with 4 fast submissions must shed");
+    assert_eq!(accepted + shed, 4);
+
+    // Shed submissions leave no record: only accepted jobs are listed.
+    let list = client::get(&addr, "/v1/jobs").unwrap();
+    let listed = Json::parse(&list.body).unwrap().get("jobs").unwrap().as_arr().unwrap().len();
+    assert_eq!(listed as u64, accepted, "{}", list.body);
+    let m = client::get(&addr, "/metrics").unwrap().body;
+    assert_eq!(metric(&m, "fsdp_bw_jobs_shed_total"), shed as f64, "{m}");
+    assert_eq!(metric(&m, "fsdp_bw_jobs_submitted_total"), 4.0, "monotonic: sheds stay counted");
+
+    // Shutdown cancels the still-running/queued jobs promptly.
+    server.shutdown();
+}
+
 #[test]
 fn graceful_shutdown_joins_and_stops_accepting() {
     let server = start(2, 8, 5_000);

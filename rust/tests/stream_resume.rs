@@ -1,0 +1,234 @@
+//! Acceptance tests of the streaming sweep path: bounded-memory chunked
+//! execution, checkpointing, and byte-identical resume.
+//!
+//! The contracts under test:
+//! * a streamed sweep's report is byte-identical to the materialized
+//!   [`run_sweep`] path, for every format and chunking;
+//! * a sweep interrupted at *any* chunk boundary and resumed via its
+//!   checkpoint produces the byte-identical report to an uninterrupted
+//!   run — including across a process boundary (the writer state lives
+//!   entirely in the checkpoint file + rows spill);
+//! * resident memory is O(chunk): the engine's peak-resident gauge never
+//!   reaches the grid size;
+//! * a checkpoint from a different run (other axes, chunking, or format)
+//!   is refused instead of silently corrupting the report.
+
+use std::path::PathBuf;
+
+use fsdp_bw::eval::{
+    backends_for, run_sweep, run_sweep_streamed, Sweep, SweepFormat, SweepStreamConfig,
+};
+use fsdp_bw::util::tempdir::TempDir;
+
+/// 3 × 4 × 2 = 24 points, two of them errored (n_gpus beyond the cluster),
+/// so resume also covers error accounting.
+const SWEEP: &str = "model = 1.3B\nbatch = 1\n\
+                     sweep.n_gpus = 8,16,100000\n\
+                     sweep.seq_len = 1024..8192*2\n\
+                     sweep.gamma = 0,0.5\n";
+
+fn sweep() -> Sweep {
+    Sweep::parse(SWEEP).unwrap()
+}
+
+fn cfg(format: SweepFormat, chunk: usize) -> SweepStreamConfig {
+    SweepStreamConfig::new(format, chunk, 2)
+}
+
+/// Run to completion in one go and return the body.
+fn uninterrupted(format: SweepFormat, chunk: usize) -> String {
+    let backends = backends_for("analytical").unwrap();
+    let out = run_sweep_streamed(&sweep(), &backends, &cfg(format, chunk)).unwrap();
+    assert!(!out.interrupted);
+    out.body.unwrap()
+}
+
+#[test]
+fn bounded_memory_gauge_never_reaches_the_grid() {
+    let backends = backends_for("analytical").unwrap();
+    let out = run_sweep_streamed(&sweep(), &backends, &cfg(SweepFormat::Json, 5)).unwrap();
+    assert_eq!(out.n_points, 24);
+    assert_eq!(out.total_chunks, 5);
+    assert_eq!(out.peak_resident_points, 5, "resident points bounded by --chunk");
+}
+
+#[test]
+fn resume_at_every_chunk_boundary_is_byte_identical() {
+    let chunk = 5; // 24 points → 5 chunks
+    for format in [SweepFormat::Json, SweepFormat::Csv, SweepFormat::Text] {
+        let want = uninterrupted(format, chunk);
+        for stop_after in 1..5usize {
+            let dir = TempDir::new().unwrap();
+            let ckpt: PathBuf = dir.path().join("ck.json");
+            let backends = backends_for("analytical").unwrap();
+
+            // Phase 1: run `stop_after` chunks, then stop at the boundary —
+            // the in-process equivalent of killing the process mid-grid
+            // (everything the resume needs is on disk afterwards).
+            let mut c1 = cfg(format, chunk);
+            c1.checkpoint = Some(ckpt.clone());
+            c1.max_chunks = Some(stop_after);
+            let partial = run_sweep_streamed(&sweep(), &backends, &c1).unwrap();
+            assert!(partial.interrupted, "stop_after={stop_after}");
+            assert_eq!(partial.chunks_done, stop_after);
+            assert!(partial.body.is_none());
+            assert!(ckpt.exists(), "checkpoint written");
+
+            // Phase 2: fresh writer state (as a new process would have),
+            // resumed from the checkpoint.
+            let mut c2 = cfg(format, chunk);
+            c2.checkpoint = Some(ckpt.clone());
+            c2.resume = true;
+            let resumed = run_sweep_streamed(&sweep(), &backends, &c2).unwrap();
+            assert!(!resumed.interrupted);
+            assert_eq!(resumed.n_done, 24);
+            assert_eq!(resumed.n_errors, 8, "two of three n_gpus values error × 4 × 2");
+            assert_eq!(
+                resumed.body.as_deref(),
+                Some(want.as_str()),
+                "format {format:?}, interrupted after {stop_after} chunks"
+            );
+            // Completion leaves the checkpoint on disk (so a failed report
+            // write stays resumable); explicit cleanup removes it.
+            assert!(ckpt.exists(), "checkpoint kept until the report is delivered");
+            resumed.cleanup_checkpoint();
+            assert!(!ckpt.exists(), "cleanup removes the checkpoint");
+        }
+    }
+}
+
+#[test]
+fn streamed_reports_match_the_materialized_path() {
+    // The pre-streaming contract: collect-everything `run_sweep` and the
+    // chunked writer agree byte for byte on a small grid.
+    let sw = sweep();
+    let backends = backends_for("analytical").unwrap();
+    let rep = run_sweep(&sw, &backends, 2);
+    for (format, want) in [
+        (SweepFormat::Json, rep.to_json()),
+        (SweepFormat::Csv, rep.to_csv()),
+        (SweepFormat::Text, rep.to_text()),
+    ] {
+        for chunk in [3usize, 24, 1000] {
+            let out = run_sweep_streamed(&sw, &backends, &cfg(format, chunk)).unwrap();
+            assert_eq!(out.body.as_deref(), Some(want.as_str()), "{format:?} chunk {chunk}");
+        }
+    }
+}
+
+#[test]
+fn mismatched_checkpoints_are_refused() {
+    let dir = TempDir::new().unwrap();
+    let ckpt: PathBuf = dir.path().join("ck.json");
+    let backends = backends_for("analytical").unwrap();
+    let mut c1 = cfg(SweepFormat::Csv, 5);
+    c1.checkpoint = Some(ckpt.clone());
+    c1.max_chunks = Some(2);
+    run_sweep_streamed(&sweep(), &backends, &c1).unwrap();
+
+    // Different chunking → different run → refused.
+    let mut wrong_chunk = cfg(SweepFormat::Csv, 6);
+    wrong_chunk.checkpoint = Some(ckpt.clone());
+    wrong_chunk.resume = true;
+    let err = run_sweep_streamed(&sweep(), &backends, &wrong_chunk).unwrap_err().to_string();
+    assert!(err.contains("different run"), "{err}");
+
+    // Different format → refused.
+    let mut wrong_format = cfg(SweepFormat::Json, 5);
+    wrong_format.checkpoint = Some(ckpt.clone());
+    wrong_format.resume = true;
+    assert!(run_sweep_streamed(&sweep(), &backends, &wrong_format).is_err());
+
+    // Different grid → refused.
+    let other = Sweep::parse("model = 1.3B\nsweep.n_gpus = 8,16\n").unwrap();
+    let mut wrong_grid = cfg(SweepFormat::Csv, 5);
+    wrong_grid.checkpoint = Some(ckpt.clone());
+    wrong_grid.resume = true;
+    assert!(run_sweep_streamed(&other, &backends, &wrong_grid).is_err());
+
+    // The matching configuration still resumes fine.
+    let mut right = cfg(SweepFormat::Csv, 5);
+    right.checkpoint = Some(ckpt);
+    right.resume = true;
+    let done = run_sweep_streamed(&sweep(), &backends, &right).unwrap();
+    assert_eq!(done.body.unwrap(), uninterrupted(SweepFormat::Csv, 5));
+}
+
+#[test]
+fn resume_refuses_a_missing_or_truncated_rows_spill() {
+    let dir = TempDir::new().unwrap();
+    let ckpt: PathBuf = dir.path().join("ck.json");
+    let rows = dir.path().join("ck.json.rows");
+    let backends = backends_for("analytical").unwrap();
+    let mut c1 = cfg(SweepFormat::Csv, 5);
+    c1.checkpoint = Some(ckpt.clone());
+    c1.max_chunks = Some(2);
+    run_sweep_streamed(&sweep(), &backends, &c1).unwrap();
+
+    // Shorten the spill below what the checkpoint accounts for — a resume
+    // must refuse rather than zero-extend it into a corrupt report.
+    let full = std::fs::metadata(&rows).unwrap().len();
+    assert!(full > 4);
+    std::fs::File::options().write(true).open(&rows).unwrap().set_len(4).unwrap();
+    let mut resume = cfg(SweepFormat::Csv, 5);
+    resume.checkpoint = Some(ckpt.clone());
+    resume.resume = true;
+    let err = run_sweep_streamed(&sweep(), &backends, &resume).unwrap_err().to_string();
+    assert!(err.contains("missing or truncated"), "{err}");
+
+    // A deleted spill is refused the same way.
+    std::fs::remove_file(&rows).unwrap();
+    let mut resume2 = cfg(SweepFormat::Csv, 5);
+    resume2.checkpoint = Some(ckpt);
+    resume2.resume = true;
+    let err = run_sweep_streamed(&sweep(), &backends, &resume2).unwrap_err().to_string();
+    assert!(err.contains("missing or truncated"), "{err}");
+}
+
+#[test]
+fn fresh_run_refuses_to_clobber_an_existing_checkpoint() {
+    let dir = TempDir::new().unwrap();
+    let ckpt: PathBuf = dir.path().join("ck.json");
+    let backends = backends_for("analytical").unwrap();
+    let mut c1 = cfg(SweepFormat::Csv, 5);
+    c1.checkpoint = Some(ckpt.clone());
+    c1.max_chunks = Some(2);
+    run_sweep_streamed(&sweep(), &backends, &c1).unwrap();
+    let rows_before = std::fs::metadata(dir.path().join("ck.json.rows")).unwrap().len();
+    assert!(rows_before > 0);
+
+    // The same command without --resume must refuse, leaving both files
+    // intact (forgetting --resume must not cost the completed chunks).
+    let mut again = cfg(SweepFormat::Csv, 5);
+    again.checkpoint = Some(ckpt.clone());
+    let err = run_sweep_streamed(&sweep(), &backends, &again).unwrap_err().to_string();
+    assert!(err.contains("already exists"), "{err}");
+    assert!(ckpt.exists());
+    assert_eq!(
+        std::fs::metadata(dir.path().join("ck.json.rows")).unwrap().len(),
+        rows_before,
+        "rows spill untouched by the refused run"
+    );
+
+    // --resume still works afterwards.
+    let mut resume = cfg(SweepFormat::Csv, 5);
+    resume.checkpoint = Some(ckpt);
+    resume.resume = true;
+    let done = run_sweep_streamed(&sweep(), &backends, &resume).unwrap();
+    assert_eq!(done.body.unwrap(), uninterrupted(SweepFormat::Csv, 5));
+}
+
+#[test]
+fn resume_without_a_checkpoint_file_errors() {
+    let dir = TempDir::new().unwrap();
+    let backends = backends_for("analytical").unwrap();
+    let mut c = cfg(SweepFormat::Csv, 5);
+    c.checkpoint = Some(dir.path().join("missing.json"));
+    c.resume = true;
+    let err = run_sweep_streamed(&sweep(), &backends, &c).unwrap_err().to_string();
+    assert!(err.contains("reading checkpoint"), "{err}");
+    let mut no_path = cfg(SweepFormat::Csv, 5);
+    no_path.resume = true;
+    let err = run_sweep_streamed(&sweep(), &backends, &no_path).unwrap_err().to_string();
+    assert!(err.contains("--checkpoint"), "{err}");
+}
