@@ -1,0 +1,795 @@
+//! `fsdp-bw check` — a static analyzer for scenario/query programs.
+//!
+//! The Planner already *prunes* infeasible points one at a time with the
+//! §2.7 closed forms (Eqs 12–15). This module lifts the same closed forms
+//! to **intervals over the whole grid**: because the Eq 1–4 memory chain,
+//! the Eq 12–15 maxima and every tier-1/2 constraint metric are
+//! coordinate-wise monotone in each numeric scenario scalar, their
+//! extremes over an axis-aligned grid are attained at its corners (see
+//! [`probe`]). Probing a handful of corners therefore *proves* properties
+//! of a million-point program — the feasible set is empty, a constraint
+//! can never hold, an axis changes nothing — **without evaluating a
+//! single point**.
+//!
+//! Verdicts are [`Diagnostic`]s with stable codes in three tiers:
+//!
+//! * `E1xx` (errors) — the program provably returns nothing; `check`
+//!   exits nonzero, `plan` refuses to run, job submission is rejected
+//!   with HTTP 422.
+//! * `W2xx` (warnings) — the program runs but part of it is dead: a
+//!   vacuous constraint, an axis that never changes an evaluation, a
+//!   corner that fails to construct.
+//! * `I3xx` (info) — shape notes: grid cardinality, estimated evaluation
+//!   cost, streaming residency.
+//!
+//! Soundness contract: an `E` diagnostic is **never** wrong — whenever
+//! the analyzer cannot prove a verdict (a probe fails to construct, the
+//! corner budget overflows, a backend vouches no bounds) it stays silent
+//! rather than guessing. A randomized oracle test cross-validates every
+//! `E`/`W200` verdict against a brute-force Planner run.
+
+mod probe;
+
+pub use probe::{Corner, ProbeSet, PROBE_CAP};
+
+use std::collections::BTreeMap;
+
+use crate::config::scenario::Scenario;
+use crate::eval::{num, obj, Evaluator};
+use crate::query::{Cmp, Metric, Query, DEFAULT_CHUNK};
+use crate::util::json::Json;
+
+/// Diagnostic severity tier; the variant order is the sort order of a
+/// rendered report (errors first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warning,
+    Info,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// One analyzer verdict: a stable code, the offending program key (empty
+/// when the verdict is about the whole program), and a human message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable code (`E100`, `W201`, …) — see [`DIAG_DOCS`].
+    pub code: &'static str,
+    pub severity: Severity,
+    /// The program key the verdict anchors to (`where.mfu`,
+    /// `sweep.seq_len`, …); empty for whole-program verdicts.
+    pub span: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn error(code: &'static str, span: impl Into<String>, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Error, span: span.into(), message }
+    }
+
+    fn warning(code: &'static str, span: impl Into<String>, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Warning, span: span.into(), message }
+    }
+
+    fn info(code: &'static str, span: impl Into<String>, message: String) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Info, span: span.into(), message }
+    }
+
+    /// `error[E100] where.mfu: …` — the span is omitted when empty.
+    pub fn render(&self) -> String {
+        if self.span.is_empty() {
+            format!("{}[{}]: {}", self.severity.name(), self.code, self.message)
+        } else {
+            format!("{}[{}] {}: {}", self.severity.name(), self.code, self.span, self.message)
+        }
+    }
+
+    pub fn json(&self) -> Json {
+        obj(vec![
+            ("code", Json::Str(self.code.to_string())),
+            ("severity", Json::Str(self.severity.name().to_string())),
+            ("span", Json::Str(self.span.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+/// Every diagnostic code the analyzer can emit:
+/// `(code, severity, meaning, example)`. Rendered into the reference
+/// manual's diagnostics table; tests pin it against the emitters.
+pub const DIAG_DOCS: &[(&str, &str, &str, &str)] = &[
+    (
+        "E100",
+        "error",
+        "The feasible set is provably empty: every grid point fails the Eq 1-4 memory model, the Eqs 12-15 bounds, or a `where.*` constraint before any evaluation",
+        "every corner of the grid is pruned: Eq 12: M_free <= 0",
+    ),
+    (
+        "E101",
+        "error",
+        "A tier-1/2 constraint is never satisfiable: the metric's attained range over the grid misses the required value entirely",
+        "`n_gpus >= 64` is never satisfiable: n_gpus spans [4, 32]",
+    ),
+    (
+        "E102",
+        "error",
+        "A lower-bound constraint on an evaluated metric exceeds its Eqs 13-15 closed-form maximum everywhere on the grid",
+        "`mfu >= 0.999` is unsatisfiable everywhere: Eq 14: mfu <= 0.41",
+    ),
+    (
+        "E103",
+        "error",
+        "No grid point constructs a valid scenario (only provable when the probes cover the whole grid)",
+        "no grid point constructs: job wants 64 GPUs but cluster has 8",
+    ),
+    (
+        "E104",
+        "error",
+        "A constraint reads a metric the primary backend never reports, so it would reject every point",
+        "backend \"bounds\" never reports mfu",
+    ),
+    (
+        "W200",
+        "warning",
+        "A constraint is vacuous: every point that constructs satisfies it, so it filters nothing",
+        "`mfu <= 1` is vacuous: Eq 14 caps mfu at 0.41",
+    ),
+    (
+        "W201",
+        "warning",
+        "A sweep axis is dead: all its values produce identical evaluations under the primary backend",
+        "axis sweep.seq_len is dead under backend \"gridsearch\"",
+    ),
+    (
+        "W202",
+        "warning",
+        "Probed grid corners fail to construct a scenario; verdicts that need those corners are skipped",
+        "2/8 probed corners fail to construct (n_gpus=64): job wants 64 GPUs",
+    ),
+    (
+        "I300",
+        "info",
+        "Grid cardinality and per-axis sizes",
+        "grid has 1000000 points (sweep.alpha x100 ...)",
+    ),
+    (
+        "I301",
+        "info",
+        "Estimated evaluation cost (points x backends) and the O(chunk) streaming residency",
+        "at most 2000000 evaluations; streamed memory stays O(chunk)",
+    ),
+    (
+        "I302",
+        "info",
+        "The corner-probe product exceeds the probe budget; interval passes were skipped",
+        "corner-probe product exceeds the 4096-probe budget",
+    ),
+];
+
+/// The analyzer's output: the grid shape it saw and the diagnostics,
+/// sorted errors first.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Grid cardinality of the analyzed program.
+    pub points: usize,
+    /// Corners actually probed (0 when the probe budget overflowed).
+    pub probes: usize,
+    /// The probes covered the entire grid (per-point passes were exact).
+    pub exhaustive: bool,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn infos(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Info).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.errors() > 0
+    }
+
+    pub fn json(&self) -> Json {
+        obj(vec![
+            ("points", num(self.points as f64)),
+            ("probes", num(self.probes as f64)),
+            ("exhaustive", Json::Bool(self.exhaustive)),
+            ("errors", num(self.errors() as f64)),
+            ("warnings", num(self.warnings() as f64)),
+            ("infos", num(self.infos() as f64)),
+            ("diagnostics", Json::Arr(self.diagnostics.iter().map(|d| d.json()).collect())),
+        ])
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{} points, {} corner probes{}: {} error(s), {} warning(s)\n",
+            self.points,
+            self.probes,
+            if self.exhaustive { " (exhaustive)" } else { "" },
+            self.errors(),
+            self.warnings(),
+        ));
+        out
+    }
+}
+
+/// Which metrics a backend's evaluations actually report. Conservative by
+/// construction: an unknown backend name returns `true` (never a false
+/// `E104`). Pinned against the real backends by a test.
+fn backend_reports(backend: &str, metric: Metric) -> bool {
+    match backend {
+        "analytical" | "simulated" => true,
+        // The searches report their best grid point's Eq 11 metrics but no
+        // step decomposition.
+        "gridsearch" | "alg1" => matches!(metric, Metric::Mfu | Metric::Hfu | Metric::Tgs),
+        "bounds" => false,
+        _ => true,
+    }
+}
+
+/// Is `cmp value` unsatisfiable for every attained metric in `[lo, hi]`?
+fn interval_never(cmp: Cmp, lo: f64, hi: f64, v: f64) -> bool {
+    match cmp {
+        Cmp::Le => lo > v,
+        Cmp::Lt => lo >= v,
+        Cmp::Ge => hi < v,
+        Cmp::Gt => hi <= v,
+        Cmp::Eq => v < lo || v > hi,
+        Cmp::Ne => lo == hi && lo == v,
+    }
+}
+
+/// Does `cmp value` hold for every attained metric in `[lo, hi]`?
+fn interval_always(cmp: Cmp, lo: f64, hi: f64, v: f64) -> bool {
+    match cmp {
+        Cmp::Le => hi <= v,
+        Cmp::Lt => hi < v,
+        Cmp::Ge => lo >= v,
+        Cmp::Gt => lo > v,
+        Cmp::Eq => lo == hi && lo == v,
+        Cmp::Ne => v < lo || v > hi,
+    }
+}
+
+/// The Eqs 13-15 cap a lower-bound constraint on `metric` compares
+/// against, read from an upper-envelope [`crate::eval::EvalBounds`].
+fn envelope_cap(metric: Metric, b: &crate::eval::EvalBounds) -> Option<(f64, &'static str)> {
+    match metric {
+        Metric::Hfu => Some((b.hfu_max, "Eq 13")),
+        Metric::Mfu => Some((b.mfu_max, "Eq 14")),
+        Metric::Tgs => Some((b.k_max, "Eq 15")),
+        _ => None,
+    }
+}
+
+/// Render a corner's axis assignment for messages.
+fn describe_point(point: &[(String, String)]) -> String {
+    if point.is_empty() {
+        "the base scenario".to_string()
+    } else {
+        point.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(", ")
+    }
+}
+
+/// Statically analyze a query program against its backends without
+/// evaluating any point: only `cache_key`, `prune_by_bounds` and
+/// `constraint_bounds` (all closed-form) are consulted — never
+/// [`Evaluator::evaluate`]. The first backend is the *primary* one,
+/// matching [`crate::query::Planner`] semantics: constraints and
+/// feasibility verdicts read it.
+pub fn check_query(q: &Query, backends: &[Box<dyn Evaluator>]) -> Report {
+    let sweep = &q.space;
+    let n = sweep.len();
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    let axes_desc = if sweep.axes.is_empty() {
+        "single point, no sweep axes".to_string()
+    } else {
+        sweep
+            .axes
+            .iter()
+            .map(|a| format!("sweep.{} x{}", a.key, a.values.len()))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    diags.push(Diagnostic::info("I300", "sweep", format!("grid has {n} points ({axes_desc})")));
+
+    let nb = backends.len().max(1);
+    diags.push(Diagnostic::info(
+        "I301",
+        "query.backend",
+        format!(
+            "at most {} evaluations ({n} points x {nb} backend(s)); \
+             streamed execution keeps memory O(chunk), chunk = {DEFAULT_CHUNK}",
+            n.saturating_mul(nb)
+        ),
+    ));
+
+    let probes = ProbeSet::build(sweep);
+    if probes.truncated {
+        diags.push(Diagnostic::info(
+            "I302",
+            "sweep",
+            format!(
+                "corner-probe product exceeds the {PROBE_CAP}-probe budget — \
+                 interval passes skipped (the Planner's per-point pruning still applies)"
+            ),
+        ));
+        diags.sort_by_key(|d| d.severity);
+        return Report { points: n, probes: 0, exhaustive: false, diagnostics: diags };
+    }
+
+    let corners = &probes.corners;
+    let failed: Vec<&Corner> = corners.iter().filter(|c| c.scenario.is_err()).collect();
+    let ok: Vec<&Scenario> = corners.iter().filter_map(|c| c.scenario.as_ref().ok()).collect();
+
+    if let Some(first) = failed.first() {
+        let what = describe_point(&first.point);
+        let err = first.scenario.as_ref().unwrap_err();
+        if probes.exhaustive && ok.is_empty() {
+            diags.push(Diagnostic::error(
+                "E103",
+                "sweep",
+                format!("no grid point constructs a valid scenario — e.g. {what}: {err}"),
+            ));
+        } else {
+            diags.push(Diagnostic::warning(
+                "W202",
+                "sweep",
+                format!(
+                    "{}/{} probed corners fail to construct ({what}: {err}) — \
+                     corner-interval verdicts are skipped",
+                    failed.len(),
+                    corners.len()
+                ),
+            ));
+        }
+    }
+
+    if let Some(primary) = backends.first() {
+        let all_corners_ok = failed.is_empty() && !ok.is_empty();
+        let ok_owned: Vec<Scenario> = ok.iter().map(|s| (*s).clone()).collect();
+        let range = primary.bounds_over_range(&ok_owned);
+
+        // E100 (interval form): every corner is pruned by the monotone
+        // Eq 12/4 bounds, so the whole box is — but only when every corner
+        // constructed (a missing corner could hide the feasible extreme).
+        if all_corners_ok {
+            if let Some(reason) = &range.infeasible {
+                diags.push(Diagnostic::error(
+                    "E100",
+                    "",
+                    format!(
+                        "the feasible set is provably empty — every corner of the \
+                         {n}-point grid is pruned by the closed-form bounds; e.g. {reason}"
+                    ),
+                ));
+            }
+        }
+
+        // E101/W200 over tier-1/2 constraint metrics: interval-evaluate the
+        // same reading `Planner::pre_point` uses, over the corners.
+        if all_corners_ok {
+            for c in &q.constraints {
+                if !c.is_pre_evaluation() {
+                    continue;
+                }
+                let vals: Option<Vec<f64>> = ok.iter().map(|s| c.pre_value(s)).collect();
+                let Some(vals) = vals else { continue };
+                let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+                for v in vals {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let span = format!("where.{}", c.metric_name());
+                if interval_never(c.cmp, lo, hi, c.value) {
+                    diags.push(Diagnostic::error(
+                        "E101",
+                        span,
+                        format!(
+                            "`{}` is never satisfiable: {} spans [{lo}, {hi}] over the grid",
+                            c.render(),
+                            c.metric_name()
+                        ),
+                    ));
+                } else if interval_always(c.cmp, lo, hi, c.value) {
+                    diags.push(Diagnostic::warning(
+                        "W200",
+                        span,
+                        format!(
+                            "`{}` is vacuous: {} spans [{lo}, {hi}] — every point satisfies it",
+                            c.render(),
+                            c.metric_name()
+                        ),
+                    ));
+                }
+            }
+        }
+
+        // E102 / W200 over evaluated metrics, via the upper envelope of the
+        // Eqs 13-15 caps across the corners (elementwise max — monotone, so
+        // it dominates every interior point's cap).
+        if all_corners_ok {
+            if let Some(maxb) = &range.max {
+                for c in &q.constraints {
+                    if c.is_pre_evaluation() {
+                        continue;
+                    }
+                    let span = format!("where.{}", c.metric_name());
+                    if let Some(reason) = c.bound_excludes(maxb) {
+                        diags.push(Diagnostic::error(
+                            "E102",
+                            span,
+                            format!(
+                                "`{}` is unsatisfiable everywhere on the grid: {reason} \
+                                 (upper envelope over all corners)",
+                                c.render()
+                            ),
+                        ));
+                    } else if let Some((cap, eq)) = envelope_cap(c.metric, maxb) {
+                        let vacuous = cap.is_finite()
+                            && match c.cmp {
+                                Cmp::Le => cap <= c.value,
+                                Cmp::Lt => cap < c.value,
+                                _ => false,
+                            };
+                        if vacuous {
+                            diags.push(Diagnostic::warning(
+                                "W200",
+                                span,
+                                format!(
+                                    "`{}` is vacuous: {eq} caps {} at {cap:.4} across the \
+                                     grid — every point satisfies it",
+                                    c.render(),
+                                    c.metric_name()
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+
+        // E104: a constraint on a metric the primary backend structurally
+        // never reports — `eval_post` fails unverifiable requirements, so
+        // every point would be rejected.
+        for c in &q.constraints {
+            if !c.is_pre_evaluation() && !backend_reports(primary.name(), c.metric) {
+                diags.push(Diagnostic::error(
+                    "E104",
+                    format!("where.{}", c.metric_name()),
+                    format!(
+                        "backend \"{}\" never reports {} — `{}` would reject every point",
+                        primary.name(),
+                        c.metric_name(),
+                        c.render()
+                    ),
+                ));
+            }
+        }
+
+        // W201: a dead axis — swapping its value never changes the primary
+        // backend's cache key (hence, by the cache-key contract, never the
+        // evaluation) at any probed context. Checked exactly, so it is
+        // restricted to small axes and skipped on any construction failure.
+        'axes: for ax in &sweep.axes {
+            let len = ax.values.len();
+            if !(2..=32).contains(&len) {
+                continue;
+            }
+            let ctxs: Vec<&Corner> = corners.iter().filter(|c| c.scenario.is_ok()).take(2).collect();
+            if ctxs.is_empty() {
+                continue;
+            }
+            for ctx in &ctxs {
+                let mut kv: BTreeMap<String, String> = sweep.base.clone();
+                for (k, v) in &ctx.point {
+                    kv.insert(k.clone(), v.clone());
+                }
+                let mut first: Option<String> = None;
+                for v in &ax.values {
+                    kv.insert(ax.key.clone(), v.clone());
+                    let Ok(s) = Scenario::from_kv(&kv) else { continue 'axes };
+                    let key = primary.cache_key(&s);
+                    match &first {
+                        None => first = Some(key),
+                        Some(f) if *f != key => continue 'axes,
+                        _ => {}
+                    }
+                }
+            }
+            diags.push(Diagnostic::warning(
+                "W201",
+                format!("sweep.{}", ax.key),
+                format!(
+                    "axis sweep.{} is dead under backend \"{}\": all {len} values \
+                     produce identical evaluations (identical cache keys)",
+                    ax.key,
+                    primary.name()
+                ),
+            ));
+        }
+
+        // Exhaustive E100: when the probes are the whole grid, check each
+        // point's pre-evaluation fate directly — mixed causes (construction
+        // failure here, memory there, a bound elsewhere) still add up to an
+        // empty feasible set. Skipped when an E was already emitted.
+        if probes.exhaustive
+            && !corners.is_empty()
+            && !diags.iter().any(|d| d.severity == Severity::Error)
+        {
+            let all_excluded = corners.iter().all(|c| match &c.scenario {
+                Err(_) => true,
+                Ok(s) => {
+                    q.constraints.iter().any(|k| k.eval_pre(s) == Some(false))
+                        || primary.prune_by_bounds(s).is_some()
+                        || primary.constraint_bounds(s).is_some_and(|b| {
+                            q.constraints.iter().any(|k| k.bound_excludes(&b).is_some())
+                        })
+                }
+            });
+            if all_excluded {
+                diags.push(Diagnostic::error(
+                    "E100",
+                    "",
+                    format!(
+                        "the feasible set is provably empty: each of the {n} grid points \
+                         fails construction, the Eq 1-4 memory model, the Eqs 12-15 \
+                         bounds, or a `where.*` constraint before any evaluation"
+                    ),
+                ));
+            }
+        }
+    }
+
+    diags.sort_by_key(|d| d.severity);
+    Report { points: n, probes: corners.len(), exhaustive: probes.exhaustive, diagnostics: diags }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::backends_for;
+
+    fn check(text: &str) -> Report {
+        let q = Query::parse(text).unwrap();
+        let backends = backends_for(&q.backend_spec).unwrap();
+        check_query(&q, &backends)
+    }
+
+    fn codes(r: &Report) -> Vec<&'static str> {
+        r.diagnostics.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn diag_docs_are_wellformed_and_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for (code, sev, meaning, example) in DIAG_DOCS {
+            assert!(seen.insert(code), "duplicate code {code}");
+            let tier = match *sev {
+                "error" => 'E',
+                "warning" => 'W',
+                "info" => 'I',
+                other => panic!("bad severity {other:?}"),
+            };
+            assert!(code.starts_with(tier), "{code} severity/prefix mismatch");
+            for cell in [*sev, *meaning, *example] {
+                assert!(!cell.is_empty() && !cell.contains('|'), "{code}: cell breaks the table");
+            }
+        }
+    }
+
+    #[test]
+    fn every_program_reports_shape_infos() {
+        let r = check("model = 13B\nn_gpus = 8\n");
+        assert_eq!(r.points, 1);
+        assert!(r.exhaustive);
+        assert!(!r.has_errors());
+        assert!(codes(&r).contains(&"I300") && codes(&r).contains(&"I301"));
+    }
+
+    #[test]
+    fn e100_when_every_corner_is_memory_pruned() {
+        // 310B at 4-8 GPUs: model states alone exceed usable memory at
+        // every corner, and n_gpus enumerates — the grid is exhaustive.
+        let r = check("model = 310B\nseq_len = 4096\nsweep.n_gpus = 4, 8\n");
+        assert!(r.has_errors());
+        assert!(codes(&r).contains(&"E100"), "{:?}", codes(&r));
+        let e = r.diagnostics.iter().find(|d| d.code == "E100").unwrap();
+        assert!(e.message.contains("provably empty"), "{}", e.message);
+        assert_eq!(e.span, "");
+    }
+
+    #[test]
+    fn e101_when_a_scenario_constraint_never_holds() {
+        let r = check("model = 13B\nsweep.n_gpus = 4, 8, 16\nwhere.n_gpus = >= 64\n");
+        let e = r.diagnostics.iter().find(|d| d.code == "E101").unwrap();
+        assert_eq!(e.span, "where.n_gpus");
+        assert!(e.message.contains("never satisfiable"), "{}", e.message);
+        assert!(e.message.contains("[4, 16]"), "{}", e.message);
+    }
+
+    #[test]
+    fn w200_when_a_scenario_constraint_is_vacuous() {
+        let r = check("model = 13B\nsweep.n_gpus = 4, 8, 16\nwhere.n_gpus = <= 64\n");
+        assert!(!r.has_errors());
+        let w = r.diagnostics.iter().find(|d| d.code == "W200").unwrap();
+        assert_eq!(w.span, "where.n_gpus");
+        assert!(w.message.contains("vacuous"), "{}", w.message);
+    }
+
+    #[test]
+    fn e102_when_a_bound_excludes_a_lower_bound_constraint() {
+        // Mirrors the Planner's Eq 14 pruning test: 65B on the 100 Gbps
+        // cluster is bandwidth-capped far below MFU 0.999 at both corners.
+        let r = check(
+            "model = 65B\ncluster = 40GB-A100-100Gbps\nseq_len = 4096\n\
+             sweep.n_gpus = 64,128\nwhere.mfu = >= 0.999\n",
+        );
+        let e = r.diagnostics.iter().find(|d| d.code == "E102").unwrap();
+        assert_eq!(e.span, "where.mfu");
+        assert!(e.message.contains("Eq 14"), "{}", e.message);
+    }
+
+    #[test]
+    fn w200_when_an_upper_bound_constraint_is_implied_by_eq14() {
+        // MFU <= 1 filters nothing: Eq 14 already caps MFU at 1.
+        let r = check("model = 13B\nsweep.n_gpus = 8, 16\nwhere.mfu = <= 1\n");
+        assert!(!r.has_errors());
+        let w = r.diagnostics.iter().find(|d| d.code == "W200").unwrap();
+        assert!(w.message.contains("Eq 14"), "{}", w.message);
+    }
+
+    #[test]
+    fn e103_when_no_point_constructs() {
+        let r = check(
+            "model = 13B\ncluster.nodes = 1\ncluster.gpus_per_node = 8\n\
+             sweep.n_gpus = 16, 32\n",
+        );
+        let e = r.diagnostics.iter().find(|d| d.code == "E103").unwrap();
+        assert_eq!(e.span, "sweep");
+        assert!(e.message.contains("n_gpus=16"), "{}", e.message);
+    }
+
+    #[test]
+    fn w202_when_only_some_corners_fail() {
+        let r = check(
+            "model = 13B\ncluster.nodes = 1\ncluster.gpus_per_node = 8\n\
+             sweep.n_gpus = 8, 32\n",
+        );
+        assert!(!r.has_errors(), "{:?}", codes(&r));
+        let w = r.diagnostics.iter().find(|d| d.code == "W202").unwrap();
+        assert!(w.message.contains("1/2"), "{}", w.message);
+    }
+
+    #[test]
+    fn e104_when_the_backend_never_reports_the_metric() {
+        let r = check(
+            "model = 13B\nsweep.n_gpus = 8, 16\nquery.backend = bounds\nwhere.mfu = >= 0.1\n",
+        );
+        let e = r.diagnostics.iter().find(|d| d.code == "E104").unwrap();
+        assert_eq!(e.span, "where.mfu");
+        assert!(e.message.contains("\"bounds\""), "{}", e.message);
+        // The same constraint under gridsearch is fine — it reports MFU.
+        let r2 = check(
+            "model = 1.3B\nsweep.n_gpus = 32, 64\nquery.backend = gridsearch\n\
+             where.mfu = >= 0.1\n",
+        );
+        assert!(!codes(&r2).contains(&"E104"), "{:?}", codes(&r2));
+    }
+
+    #[test]
+    fn backend_reports_table_matches_the_real_backends() {
+        use crate::eval::backend;
+        let s = Scenario::parse("model = 1.3B\nn_gpus = 8\nseq_len = 2048\n").unwrap();
+        for name in ["analytical", "simulated", "bounds", "gridsearch", "alg1"] {
+            let e = backend(name).unwrap().evaluate(&s);
+            assert!(e.feasible, "{name}: probe scenario must be feasible");
+            // If the table says a metric is reported, the evaluation must
+            // carry it — the soundness direction E104 relies on.
+            if backend_reports(name, Metric::Mfu) {
+                assert!(e.metrics.is_some(), "{name} must report metrics");
+            }
+            if backend_reports(name, Metric::TStep) {
+                assert!(e.step.is_some(), "{name} must report a step");
+            }
+        }
+    }
+
+    #[test]
+    fn w201_flags_an_axis_the_backend_projects_away() {
+        // The grid search sweeps seq/gamma itself: its cache key projects
+        // them out, so sweeping them is dead under that backend...
+        let r = check(
+            "model = 1.3B\nn_gpus = 64\nquery.backend = gridsearch\n\
+             sweep.seq_len = 2048, 4096\n",
+        );
+        let w = r.diagnostics.iter().find(|d| d.code == "W201").unwrap();
+        assert_eq!(w.span, "sweep.seq_len");
+        // ...while the analytical backend genuinely varies with it.
+        let r2 = check("model = 1.3B\nn_gpus = 64\nsweep.seq_len = 2048, 4096\n");
+        assert!(!codes(&r2).contains(&"W201"), "{:?}", codes(&r2));
+    }
+
+    #[test]
+    fn exhaustive_e100_combines_mixed_causes() {
+        // One point fails construction (64 GPUs on an 8-GPU cluster), the
+        // other a tier-1 constraint — neither cause alone covers the grid.
+        let r = check(
+            "model = 13B\ncluster.nodes = 1\ncluster.gpus_per_node = 8\n\
+             sweep.n_gpus = 8, 64\nwhere.n_gpus = >= 32\n",
+        );
+        assert!(codes(&r).contains(&"E100"), "{:?}", codes(&r));
+    }
+
+    #[test]
+    fn reports_sort_errors_first_and_render_stably() {
+        let r = check("model = 310B\nseq_len = 4096\nsweep.n_gpus = 4, 8\n");
+        let sevs: Vec<Severity> = r.diagnostics.iter().map(|d| d.severity).collect();
+        let mut sorted = sevs.clone();
+        sorted.sort();
+        assert_eq!(sevs, sorted);
+        let text = r.to_text();
+        assert!(text.contains("error[E100]:"), "{text}");
+        assert!(text.lines().last().unwrap().contains("error(s)"), "{text}");
+    }
+
+    #[test]
+    fn json_report_shape_is_stable() {
+        let r = check("model = 310B\nseq_len = 4096\nsweep.n_gpus = 4, 8\n");
+        let j = Json::parse(&r.json().dump()).unwrap();
+        assert_eq!(j.get("points").unwrap().as_usize().unwrap(), 2);
+        assert!(j.get("errors").unwrap().as_usize().unwrap() >= 1);
+        let d = j.get("diagnostics").unwrap().as_arr().unwrap();
+        for item in d {
+            for key in ["code", "severity", "span", "message"] {
+                assert!(item.opt(key).is_some(), "diagnostic missing {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn probe_budget_overflow_degrades_to_i302() {
+        let r = check(
+            "model.vocab = 32000\n\
+             sweep.model.layers = 1 .. 17 + 1\n\
+             sweep.model.hidden = 128 .. 2176 + 128\n\
+             sweep.model.heads = 1 .. 17 + 1\n",
+        );
+        assert!(!r.has_errors());
+        assert_eq!(r.probes, 0);
+        assert!(codes(&r).contains(&"I302"), "{:?}", codes(&r));
+    }
+
+    #[test]
+    fn clean_feasible_programs_stay_quiet() {
+        let r = check(
+            "model = 13B\nsweep.n_gpus = 8, 16, 32\nsweep.seq_len = 2048 .. 16384 * 2\n\
+             where.mfu = >= 0.2\n",
+        );
+        assert!(!r.has_errors(), "{:?}", r.diagnostics);
+        assert_eq!(r.warnings(), 0, "{:?}", r.diagnostics);
+    }
+}

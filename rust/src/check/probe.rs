@@ -1,0 +1,274 @@
+//! Corner probing — the interval substrate of the static analyzer.
+//!
+//! The §2.7 closed forms (Eqs 12–15), the Eq 1–4 memory chain and every
+//! tier-1/2 constraint metric are coordinate-wise monotone in each
+//! *numeric* scenario scalar (seq_len, batch, gamma, alpha, bandwidths,
+//! memory sizes, …), so their extremes over an axis-aligned grid are
+//! attained at the grid's **corners**: probing the per-axis minima and
+//! maxima bounds the whole box without visiting its interior. Keys whose
+//! effect is structural rather than monotone (model/cluster presets,
+//! discrete dimensions, `zero_stage`, collectives, …) are enumerated in
+//! full instead — see [`ENUMERATE_KEYS`].
+//!
+//! A [`ProbeSet`] is that corner selection, decoded through
+//! [`Sweep::point`] so every probe carries its true grid ordinal and the
+//! analyzer reasons about exactly the points the Planner would run.
+
+use crate::config::scenario::Scenario;
+use crate::eval::sweep::Sweep;
+
+/// Hard cap on probed corners: past this the analyzer degrades to the
+/// cheap passes (an `I302` notes the skip) rather than stalling.
+pub const PROBE_CAP: usize = 4096;
+
+/// Scenario keys whose values the analyzer must enumerate in full:
+/// swapping presets or discrete structure is not monotone in any useful
+/// order, so corner probing would be unsound for them.
+pub(crate) const ENUMERATE_KEYS: &[&str] = &[
+    "model",
+    "model.name",
+    "model.layers",
+    "model.hidden",
+    "model.heads",
+    "cluster",
+    "cluster.name",
+    "cluster.nodes",
+    "cluster.gpus_per_node",
+    "cluster.gpu_name",
+    "cluster.topology.collective",
+    "n_gpus",
+    "zero_stage",
+    "precision",
+    "empty_cache",
+];
+
+/// One probed grid point: its ordinal in the sweep's odometer order, the
+/// axis assignment that produced it, and the scenario it denotes (or the
+/// construction error, stringified so probes stay cheap to clone).
+#[derive(Debug, Clone)]
+pub struct Corner {
+    /// Grid ordinal (decodes via [`Sweep::point`]).
+    pub index: usize,
+    /// `(axis key, value)` assignment, in axis order.
+    pub point: Vec<(String, String)>,
+    pub scenario: Result<Scenario, String>,
+}
+
+/// The corner selection for a sweep grid: which value indices each axis
+/// contributes, whether that covers the axis completely, and the decoded
+/// corner points.
+#[derive(Debug, Clone)]
+pub struct ProbeSet {
+    /// Per axis (sweep order): the probed value indices, ascending.
+    pub axis_indices: Vec<Vec<usize>>,
+    /// Per axis: do the probes cover every value of the axis?
+    pub complete: Vec<bool>,
+    /// Every axis is complete — the corners *are* the whole grid, and
+    /// per-point passes become exact rather than interval-based.
+    pub exhaustive: bool,
+    /// The corner product exceeded [`PROBE_CAP`]; `corners` is empty and
+    /// interval passes must be skipped.
+    pub truncated: bool,
+    pub corners: Vec<Corner>,
+}
+
+impl ProbeSet {
+    /// Select and decode the corners of a sweep grid. An axis is probed at
+    /// its numeric extremes when every value parses as a number, the key
+    /// is not in [`ENUMERATE_KEYS`], and there are more than two values;
+    /// otherwise it is enumerated in full (which is also complete).
+    pub fn build(sweep: &Sweep) -> ProbeSet {
+        let mut axis_indices: Vec<Vec<usize>> = Vec::with_capacity(sweep.axes.len());
+        let mut complete: Vec<bool> = Vec::with_capacity(sweep.axes.len());
+        for ax in &sweep.axes {
+            let numeric: Option<Vec<f64>> =
+                ax.values.iter().map(|v| v.trim().parse::<f64>().ok()).collect();
+            let enumerate = ENUMERATE_KEYS.contains(&ax.key.as_str())
+                || ax.values.len() <= 2
+                || numeric.is_none();
+            if enumerate {
+                axis_indices.push((0..ax.values.len()).collect());
+                complete.push(true);
+            } else {
+                let nums = numeric.expect("checked above");
+                let (mut lo, mut hi) = (0usize, 0usize);
+                for (i, &x) in nums.iter().enumerate() {
+                    if x < nums[lo] {
+                        lo = i;
+                    }
+                    if x > nums[hi] {
+                        hi = i;
+                    }
+                }
+                let mut idx = vec![lo, hi];
+                idx.sort_unstable();
+                idx.dedup();
+                complete.push(idx.len() == ax.values.len());
+                axis_indices.push(idx);
+            }
+        }
+
+        let mut product: usize = 1;
+        let mut truncated = false;
+        for idx in &axis_indices {
+            match product.checked_mul(idx.len()) {
+                Some(p) if p <= PROBE_CAP => product = p,
+                _ => {
+                    truncated = true;
+                    break;
+                }
+            }
+        }
+        if truncated {
+            return ProbeSet {
+                axis_indices,
+                complete,
+                exhaustive: false,
+                truncated: true,
+                corners: Vec::new(),
+            };
+        }
+        let exhaustive = complete.iter().all(|&c| c);
+
+        // Grid ordinal strides over the *full* axis lengths (last axis
+        // fastest) — the same mixed-radix layout `Sweep::point` decodes.
+        let k = sweep.axes.len();
+        let mut strides = vec![1usize; k];
+        for i in (0..k.saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * sweep.axes[i + 1].values.len();
+        }
+
+        let mut corners = Vec::with_capacity(product);
+        let mut odo = vec![0usize; k];
+        'grid: loop {
+            let index: usize = (0..k).map(|i| axis_indices[i][odo[i]] * strides[i]).sum();
+            let (point, scenario) = sweep.point(index);
+            corners.push(Corner { index, point, scenario: scenario.map_err(|e| format!("{e:#}")) });
+            let mut i = k;
+            loop {
+                if i == 0 {
+                    break 'grid;
+                }
+                i -= 1;
+                odo[i] += 1;
+                if odo[i] < axis_indices[i].len() {
+                    break;
+                }
+                odo[i] = 0;
+            }
+        }
+
+        ProbeSet { axis_indices, complete, exhaustive, truncated: false, corners }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_axes_probe_their_extremes() {
+        let s = Sweep::parse("model = 13B\nsweep.seq_len = 1024 .. 8192 * 2\n").unwrap();
+        assert_eq!(s.axes[0].values.len(), 4);
+        let p = ProbeSet::build(&s);
+        assert_eq!(p.axis_indices, vec![vec![0, 3]]);
+        assert_eq!(p.complete, vec![false]);
+        assert!(!p.exhaustive && !p.truncated);
+        assert_eq!(p.corners.len(), 2);
+        // Corners decode through Sweep::point: true ordinals, true values.
+        assert_eq!(p.corners[0].index, 0);
+        assert_eq!(p.corners[0].point, vec![("seq_len".to_string(), "1024".to_string())]);
+        assert_eq!(p.corners[1].index, 3);
+        assert_eq!(p.corners[1].point, vec![("seq_len".to_string(), "8192".to_string())]);
+        assert_eq!(p.corners[1].scenario.as_ref().unwrap().training.seq_len, 8192);
+    }
+
+    #[test]
+    fn structural_and_tiny_axes_enumerate_in_full() {
+        let s = Sweep::parse(
+            "model = 13B\nsweep.n_gpus = 8, 16, 32, 64\nsweep.gamma = 0, 0.5\n",
+        )
+        .unwrap();
+        let p = ProbeSet::build(&s);
+        // Axes sort by key: gamma (2 values — already its corners) before
+        // n_gpus (structural, enumerated in full).
+        assert_eq!(p.axis_indices, vec![vec![0, 1], vec![0, 1, 2, 3]]);
+        assert_eq!(p.complete, vec![true, true]);
+        assert!(p.exhaustive);
+        assert_eq!(p.corners.len(), 8);
+        let mut seen: Vec<usize> = p.corners.iter().map(|c| c.index).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn unordered_values_still_probe_min_and_max() {
+        let s = Sweep::parse("model = 13B\nsweep.seq_len = 4096, 1024, 16384, 2048\n").unwrap();
+        let p = ProbeSet::build(&s);
+        assert_eq!(p.axis_indices, vec![vec![1, 2]]); // 1024 and 16384
+        let lens: Vec<u64> =
+            p.corners.iter().map(|c| c.scenario.as_ref().unwrap().training.seq_len).collect();
+        assert_eq!(lens, vec![1024, 16384]);
+    }
+
+    #[test]
+    fn million_point_grid_probes_a_handful_of_corners() {
+        let s = Sweep::parse(
+            "model = 13B\n\
+             sweep.seq_len = 1024 .. 102400 + 1024\n\
+             sweep.alpha = 0.4 .. 0.895 + 0.005\n\
+             sweep.gamma = 0 .. 0.9 + 0.1\n\
+             sweep.n_gpus = 4 .. 40 + 4\n",
+        )
+        .unwrap();
+        assert_eq!(s.len(), 1_000_000);
+        let p = ProbeSet::build(&s);
+        assert!(!p.truncated && !p.exhaustive);
+        assert_eq!(p.corners.len(), 2 * 2 * 2 * 10);
+        for c in &p.corners {
+            assert!(c.index < s.len());
+            let (point, _) = s.point(c.index);
+            assert_eq!(point, c.point, "corner must round-trip through Sweep::point");
+        }
+    }
+
+    #[test]
+    fn probe_budget_overflow_truncates_instead_of_stalling() {
+        let s = Sweep::parse(
+            "model.vocab = 32000\n\
+             sweep.model.layers = 1 .. 17 + 1\n\
+             sweep.model.hidden = 128 .. 2176 + 128\n\
+             sweep.model.heads = 1 .. 17 + 1\n",
+        )
+        .unwrap();
+        // 17 × 17 × 17 = 4913 enumerated corners > PROBE_CAP.
+        let p = ProbeSet::build(&s);
+        assert!(p.truncated);
+        assert!(p.corners.is_empty());
+        assert!(!p.exhaustive);
+    }
+
+    #[test]
+    fn axis_free_program_is_one_exhaustive_corner() {
+        let s = Sweep::parse("model = 13B\nn_gpus = 8\n").unwrap();
+        let p = ProbeSet::build(&s);
+        assert!(p.exhaustive && !p.truncated);
+        assert_eq!(p.corners.len(), 1);
+        assert_eq!(p.corners[0].index, 0);
+        assert!(p.corners[0].point.is_empty());
+        assert!(p.corners[0].scenario.is_ok());
+    }
+
+    #[test]
+    fn failing_corners_carry_the_construction_error() {
+        let s = Sweep::parse(
+            "model = 13B\ncluster.nodes = 1\ncluster.gpus_per_node = 8\n\
+             sweep.n_gpus = 8, 64\n",
+        )
+        .unwrap();
+        let p = ProbeSet::build(&s);
+        assert!(p.corners[0].scenario.is_ok());
+        let err = p.corners[1].scenario.as_ref().unwrap_err();
+        assert!(err.contains("64"), "error should name the bad value: {err}");
+    }
+}

@@ -44,6 +44,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::{ClusterConfig, ModelConfig, Precision, TrainingConfig, ZeroStage, GIB};
+use crate::util::suggest::suggestion;
 
 /// The cluster assumed when a scenario names none (the paper's main
 /// empirical cluster).
@@ -193,7 +194,11 @@ impl Scenario {
     pub fn from_kv(kv: &BTreeMap<String, String>) -> Result<Self> {
         for k in kv.keys() {
             if !known_key(k) {
-                bail!("unknown scenario key {k:?} (known keys: {})", KNOWN_KEYS.join(", "));
+                bail!(
+                    "unknown scenario key {k:?} (known keys: {}){}",
+                    KNOWN_KEYS.join(", "),
+                    suggestion(k, KNOWN_KEYS)
+                );
             }
         }
         let get = |k: &str, d: &str| kv.get(k).cloned().unwrap_or_else(|| d.to_string());
@@ -531,6 +536,10 @@ mod tests {
     fn unknown_keys_rejected() {
         let err = Scenario::parse("model = 7B\nmodle = 13B\n").unwrap_err().to_string();
         assert!(err.contains("unknown scenario key"), "{err}");
+        // The nearest registered key rides along as a suggestion.
+        assert!(err.contains("did you mean \"model\"?"), "{err}");
+        let err = Scenario::parse("n_gpu = 8\n").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"n_gpus\"?"), "{err}");
     }
 
     #[test]

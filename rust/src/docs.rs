@@ -10,6 +10,7 @@
 //! * [`crate::eval::sweep`]'s axis grammar and caps;
 //! * [`crate::query::QUERY_KEY_DOCS`] / [`crate::query::OBJECTIVE_DOCS`] /
 //!   [`crate::query::constraint::METRIC_DOCS`] — the query dialect;
+//! * [`crate::check::DIAG_DOCS`] — the static analyzer's diagnostic codes;
 //! * [`crate::eval::backends::BACKEND_DOCS`] — the evaluator backends;
 //! * [`crate::serve::ENDPOINTS`] — the HTTP API;
 //! * [`crate::serve::metrics::SERIES`] — every `/metrics` series.
@@ -18,6 +19,7 @@
 //! documents, so the chain `code → table → manual` is drift-checked at
 //! both links.
 
+use crate::check::DIAG_DOCS;
 use crate::config::scenario::KEY_DOCS;
 use crate::eval::backends::BACKEND_DOCS;
 use crate::eval::sweep::{MAX_AXIS_VALUES, MAX_POINTS};
@@ -43,6 +45,9 @@ pub struct CmdSpec {
     pub opts: &'static [(&'static str, &'static str)],
     /// Positional arguments after the command name itself.
     pub positionals: usize,
+    /// The final positional repeats (`<file.scn>...`): `main` accepts any
+    /// number at or above `positionals` instead of enforcing an exact cap.
+    pub variadic: bool,
 }
 
 pub const CMD_SPECS: &[CmdSpec] = &[
@@ -53,6 +58,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
         flags: &[("json", "Emit the report as JSON instead of text")],
         opts: &[],
         positionals: 1,
+        variadic: false,
     },
     CmdSpec {
         name: "gridsearch",
@@ -66,6 +72,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("precision", "bf16, fp16 or fp32; default bf16"),
         ],
         positionals: 0,
+        variadic: false,
     },
     CmdSpec {
         name: "simulate",
@@ -86,6 +93,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("precision", "bf16, fp16 or fp32; default bf16"),
         ],
         positionals: 0,
+        variadic: false,
     },
     CmdSpec {
         name: "bounds",
@@ -100,6 +108,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("precision", "bf16, fp16 or fp32; default bf16"),
         ],
         positionals: 0,
+        variadic: false,
     },
     CmdSpec {
         name: "scenario",
@@ -108,6 +117,22 @@ pub const CMD_SPECS: &[CmdSpec] = &[
         flags: &[("json", "Emit the evaluations as JSON instead of text")],
         opts: &[("backend", "Backend spec (see the backends table); default all")],
         positionals: 1,
+        variadic: false,
+    },
+    CmdSpec {
+        name: "check",
+        summary: "Statically analyze program files without evaluating any point: \
+                  interval bounds (Eqs 12–15) over the grid's corners prove empty \
+                  feasible sets, unsatisfiable or vacuous constraints, and dead \
+                  axes (see the diagnostics table).",
+        args: "<file.scn>...",
+        flags: &[
+            ("json", "Emit one report object per file as a JSON array"),
+            ("strict", "Warnings are fatal too (exit nonzero) — for CI gates"),
+        ],
+        opts: &[("backend", "Backend spec; overrides each file's query.backend")],
+        positionals: 1,
+        variadic: true,
     },
     CmdSpec {
         name: "sweep",
@@ -128,6 +153,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("max-chunks", "Stop (checkpointed, resumable) after N chunks"),
         ],
         positionals: 1,
+        variadic: false,
     },
     CmdSpec {
         name: "plan",
@@ -148,6 +174,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("chunk", "Execute in chunks of N points (progress-observable); default: whole grid"),
         ],
         positionals: 1,
+        variadic: false,
     },
     CmdSpec {
         name: "serve",
@@ -169,6 +196,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("job-records", "Finished job records retained; default 256"),
         ],
         positionals: 0,
+        variadic: false,
     },
     CmdSpec {
         name: "docs",
@@ -177,6 +205,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
         flags: &[("check", "Fail (exit 1) if the file on disk differs from the regeneration")],
         opts: &[("out", "Output path; default docs/REFERENCE.md")],
         positionals: 0,
+        variadic: false,
     },
     CmdSpec {
         name: "train",
@@ -193,6 +222,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("csv", "Write the per-step training log to a CSV file"),
         ],
         positionals: 0,
+        variadic: false,
     },
     CmdSpec {
         name: "list",
@@ -201,6 +231,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
         flags: &[],
         opts: &[],
         positionals: 0,
+        variadic: false,
     },
 ];
 
@@ -223,6 +254,19 @@ fn table3(
     out.push_str("|---|---|---|\n");
     for (a, b, c) in rows {
         out.push_str(&format!("| {a} | {b} | {c} |\n"));
+    }
+}
+
+/// Append one `| a | b | c | d |` markdown table.
+fn table4(
+    out: &mut String,
+    head: (&str, &str, &str, &str),
+    rows: impl Iterator<Item = (String, String, String, String)>,
+) {
+    out.push_str(&format!("| {} | {} | {} | {} |\n", head.0, head.1, head.2, head.3));
+    out.push_str("|---|---|---|---|\n");
+    for (a, b, c, d) in rows {
+        out.push_str(&format!("| {a} | {b} | {c} | {d} |\n"));
     }
 }
 
@@ -341,6 +385,24 @@ pub fn reference_markdown() -> String {
     );
     out.push('\n');
 
+    out.push_str("## Diagnostics (`fsdp-bw check`)\n");
+    out.push('\n');
+    out.push_str("The static analyzer interval-evaluates the closed forms (Eqs 12–15 and\n");
+    out.push_str("the Eq 1–4 memory model) over a grid's corner probes and proves program\n");
+    out.push_str("properties without evaluating a single point. `E` codes are sound (never\n");
+    out.push_str("a false infeasibility) and fatal: `check` exits nonzero, `plan` refuses\n");
+    out.push_str("the program, and `POST /v1/jobs` rejects the submission with HTTP 422;\n");
+    out.push_str("`W` codes flag dead program parts; `I` codes describe shape and cost.\n");
+    out.push('\n');
+    table4(
+        &mut out,
+        ("code", "severity", "meaning", "example"),
+        DIAG_DOCS.iter().map(|(c, s, m, e)| {
+            (format!("`{c}`"), s.to_string(), m.to_string(), format!("`{e}`"))
+        }),
+    );
+    out.push('\n');
+
     out.push_str("## Backends\n");
     out.push('\n');
     out.push_str("Backend specs: a name below, a comma-separated list, `both`\n");
@@ -413,6 +475,9 @@ mod tests {
         }
         for (b, _) in BACKEND_DOCS {
             assert!(md.contains(&format!("| `{b}` |")), "missing backend {b}");
+        }
+        for (c, s, _, _) in DIAG_DOCS {
+            assert!(md.contains(&format!("| `{c}` | {s} |")), "missing diagnostic {c}");
         }
     }
 

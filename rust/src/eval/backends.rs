@@ -578,4 +578,42 @@ mod tests {
         assert_eq!(two[0].name(), "bounds");
         assert_eq!(two[1].name(), "gridsearch");
     }
+
+    /// `bounds_over_range` is the static analyzer's interval hook: it
+    /// reports whole-range infeasibility only when *every* probe prunes,
+    /// and its `max` is the elementwise maximum of the per-probe bounds.
+    #[test]
+    fn bounds_over_range_aggregates_probes() {
+        let fit = scen();
+        let oom = Scenario::parse("model = 310B\nn_gpus = 8\nseq_len = 4096\n").unwrap();
+        let b = Analytical::default();
+
+        // Mixed probes: one feasible corner defeats the infeasibility claim.
+        let mixed = b.bounds_over_range(std::slice::from_ref(&fit));
+        assert!(mixed.infeasible.is_none());
+        let bf = b.constraint_bounds(&fit).unwrap();
+        assert_eq!(mixed.max, Some(bf));
+
+        let both = b.bounds_over_range(&[fit.clone(), oom.clone()]);
+        assert!(both.infeasible.is_none(), "a feasible probe must block the verdict");
+        let bo = b.constraint_bounds(&oom).unwrap();
+        let m = both.max.unwrap();
+        assert_eq!(m.e_max, bf.e_max.max(bo.e_max));
+        assert_eq!(m.hfu_max, bf.hfu_max.max(bo.hfu_max));
+        assert_eq!(m.mfu_max, bf.mfu_max.max(bo.mfu_max));
+        assert_eq!(m.k_max, bf.k_max.max(bo.k_max));
+
+        // All probes pruned: the range is provably infeasible, with a reason.
+        let all_oom = b.bounds_over_range(std::slice::from_ref(&oom));
+        assert!(all_oom.infeasible.is_some());
+
+        // Backends without closed-form bounds yield no interval maximum.
+        let gs = backend("gridsearch").unwrap();
+        assert!(gs.constraint_bounds(&fit).is_none());
+        assert!(gs.bounds_over_range(&[fit.clone()]).max.is_none());
+
+        // Empty probe sets prove nothing.
+        let empty = b.bounds_over_range(&[]);
+        assert!(empty.infeasible.is_none() && empty.max.is_none());
+    }
 }

@@ -109,6 +109,57 @@ pub trait Evaluator: Send + Sync {
     fn constraint_bounds(&self, _s: &Scenario) -> Option<EvalBounds> {
         None
     }
+
+    /// Interval form of the two hooks above, over a set of *probe*
+    /// scenarios standing in for a whole grid region (its corners, under
+    /// the monotone §2.7 closed forms — see [`crate::check`]): the
+    /// region-wide infeasibility verdict and the elementwise maximum of
+    /// the Eq 13–15 caps. Every future backend inherits static analysis
+    /// through this one provided method; overriding is only needed for
+    /// backends with a tighter region analysis than corner probing.
+    fn bounds_over_range(&self, probes: &[Scenario]) -> RangeBounds {
+        let mut infeasible = None;
+        let mut all_pruned = !probes.is_empty();
+        for s in probes {
+            match self.prune_by_bounds(s) {
+                Some(r) => {
+                    infeasible.get_or_insert(r);
+                }
+                None => all_pruned = false,
+            }
+        }
+        let mut max: Option<EvalBounds> = None;
+        for s in probes {
+            let Some(b) = self.constraint_bounds(s) else {
+                max = None;
+                break;
+            };
+            max = Some(match max {
+                Some(m) => EvalBounds {
+                    e_max: m.e_max.max(b.e_max),
+                    hfu_max: m.hfu_max.max(b.hfu_max),
+                    mfu_max: m.mfu_max.max(b.mfu_max),
+                    k_max: m.k_max.max(b.k_max),
+                },
+                None => b,
+            });
+        }
+        RangeBounds { infeasible: if all_pruned { infeasible } else { None }, max }
+    }
+}
+
+/// What [`Evaluator::bounds_over_range`] proves about a grid region from
+/// its probe scenarios.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RangeBounds {
+    /// `Some(reason)` when **every** probe is pruned by the Eq 12/4
+    /// bounds — under the monotone closed forms (corner probes) the whole
+    /// region is infeasible for this backend.
+    pub infeasible: Option<String>,
+    /// Elementwise maximum of [`Evaluator::constraint_bounds`] across the
+    /// probes — an upper envelope for the region when the backend vouches
+    /// bounds at every probe; `None` otherwise.
+    pub max: Option<EvalBounds>,
 }
 
 /// Scenario identity echoed into every evaluation, so a result is

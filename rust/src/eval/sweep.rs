@@ -29,7 +29,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::scenario::{known_key, parse_kv, Scenario};
+use crate::config::scenario::{known_key, parse_kv, Scenario, KNOWN_KEYS};
+use crate::util::suggest::suggestion;
 
 use super::report::SweepReport;
 use super::Evaluator;
@@ -54,7 +55,10 @@ impl SweepAxis {
     /// key against the scenario dialect.
     pub fn parse(key: &str, spec: &str) -> Result<SweepAxis> {
         if !known_key(key) {
-            bail!("sweep axis \"sweep.{key}\": {key:?} is not a scenario key");
+            bail!(
+                "sweep axis \"sweep.{key}\": {key:?} is not a scenario key{}",
+                suggestion(key, KNOWN_KEYS)
+            );
         }
         let values = parse_axis_values(spec).with_context(|| format!("sweep axis {key:?}"))?;
         Ok(SweepAxis { key: key.to_string(), values })
@@ -99,7 +103,7 @@ impl Sweep {
     pub fn from_parts(base: BTreeMap<String, String>, axes: Vec<SweepAxis>) -> Result<Self> {
         for k in base.keys() {
             if !known_key(k) {
-                bail!("unknown scenario key {k:?}");
+                bail!("unknown scenario key {k:?}{}", suggestion(k, KNOWN_KEYS));
             }
         }
         let mut n: usize = 1;
@@ -360,6 +364,15 @@ mod tests {
         assert!(parse_axis_values("0..8*2").is_err());
         assert!(parse_axis_values("1..x").is_err());
         assert!(parse_axis_values("a,,b").is_err());
+    }
+
+    #[test]
+    fn unknown_axis_key_suggests_the_nearest_scenario_key() {
+        let err = SweepAxis::parse("sqe_len", "2048,4096").unwrap_err().to_string();
+        assert!(err.contains("is not a scenario key"), "{err}");
+        assert!(err.contains("did you mean \"seq_len\"?"), "{err}");
+        let err = Sweep::parse("modle = 13B\nsweep.n_gpus = 4,8\n").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"model\"?"), "{err}");
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //!   checkpointing, parameter all-gather transfer time, fwd/bwd FLOPs and
 //!   times, the overlapped step-time model, and the closed-form maxima of
 //!   §2.7 / Appendix B (Conclusions 1–3).
+//! * [`check`] — a static analyzer for scenario/query programs: interval
+//!   evaluation of the Eqs 12–15 closed forms over a grid's corners proves
+//!   infeasibility, vacuous constraints and dead axes before a single
+//!   point is evaluated (`fsdp-bw check`, `POST /v1/validate`).
 //! * [`comm`] — the topology-aware collective engine every layer prices
 //!   communication through: ring / tree / two-level hierarchical
 //!   algorithms over an intra-/inter-node topology, plus the straggler
@@ -58,6 +62,7 @@
 //! ```
 
 pub mod analysis;
+pub mod check;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

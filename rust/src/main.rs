@@ -58,6 +58,13 @@ COMMANDS:
                                          evaluate a scenario file
                                          (backends: analytical, simulated,
                                           bounds, gridsearch, both, all)
+  check      <file.scn>... [--backend B] [--strict] [--json]
+                                         statically analyze programs without
+                                         evaluating any point: corner-interval
+                                         bounds (Eqs 12–15) prove empty
+                                         feasible sets, dead constraints and
+                                         dead axes; exits nonzero on errors
+                                         (--strict: warnings too, for CI)
   sweep      <file.scn> [--backend both] [--threads N] [--json|--csv]
              [--out report.json] [--chunk 65536] [--checkpoint ck.json]
              [--resume] [--max-chunks N] expand sweep.* axes to a grid and
@@ -142,7 +149,7 @@ fn main() -> Result<()> {
     let known: Vec<&str> =
         spec.flags.iter().chain(spec.opts.iter()).map(|(n, _)| *n).collect();
     args.check_known(&known)?;
-    if args.positional.len() > 1 + spec.positionals {
+    if !spec.variadic && args.positional.len() > 1 + spec.positionals {
         anyhow::bail!(
             "unexpected argument {:?}: `fsdp-bw {}` takes {} positional argument(s)",
             args.positional[1 + spec.positionals],
@@ -157,6 +164,7 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "bounds" => cmd_bounds(&args),
         "scenario" => cmd_scenario(&args),
+        "check" => cmd_check(&args),
         "sweep" => cmd_sweep(&args),
         "plan" => cmd_plan(&args),
         "serve" => cmd_serve(&args),
@@ -265,6 +273,51 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fsdp-bw check`: run the static analyzer over one or more program
+/// files. Exits nonzero when any file has `E` diagnostics (`--strict`
+/// also fails on warnings) — no point is ever evaluated.
+fn cmd_check(args: &Args) -> Result<()> {
+    let paths = &args.positional[1..];
+    anyhow::ensure!(
+        !paths.is_empty(),
+        "check needs at least one file path (scenario, sweep or query program)"
+    );
+    let strict = args.flag("strict");
+    let mut reports: Vec<Json> = Vec::new();
+    let mut bad = 0usize;
+    for path in paths {
+        let mut query = Query::load(Path::new(path))?;
+        if let Some(b) = args.str_maybe("backend") {
+            query.backend_spec = b;
+        }
+        let report = Planner::check(&query)?;
+        if report.has_errors() || (strict && report.warnings() > 0) {
+            bad += 1;
+        }
+        if args.flag("json") {
+            let Json::Obj(mut o) = report.json() else { unreachable!("report is an object") };
+            o.insert("file".to_string(), Json::Str(path.clone()));
+            reports.push(Json::Obj(o));
+        } else {
+            if paths.len() > 1 {
+                println!("{path}:");
+            }
+            print!("{}", report.to_text());
+        }
+    }
+    if args.flag("json") {
+        println!("{}", Json::Arr(reports).pretty());
+    }
+    if bad > 0 {
+        anyhow::bail!(
+            "static check failed for {bad} of {} file(s){}",
+            paths.len(),
+            if strict { " (--strict: warnings are fatal)" } else { "" }
+        );
+    }
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     let path = args
         .positional
@@ -272,6 +325,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("sweep needs a file path (scenario + sweep.* axes)"))?;
     let sweep = Sweep::load(Path::new(path))?;
     let backends = backends_for(&args.str_opt("backend", "both"))?;
+    // Static pre-flight (see `fsdp-bw check`): sweeps legitimately report
+    // infeasible/OOM points, so only the unrunnable verdict — no point
+    // even constructs a scenario — refuses up front.
+    let pre = fsdp_bw::check::check_query(&Query::from_sweep(sweep.clone(), "unused"), &backends);
+    if let Some(d) = pre.diagnostics.iter().find(|d| d.code == "E103") {
+        anyhow::bail!("{} (run `fsdp-bw check {path}` for the full analysis)", d.render());
+    }
     let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let threads = args.num_opt("threads", default_threads)?;
     let format = if args.flag("json") {
@@ -359,6 +419,21 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
     let default_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let threads = args.num_opt("threads", default_threads)?;
+
+    // Static pre-flight (see `fsdp-bw check`): a program the analyzer
+    // proves empty — infeasible everywhere, an unsatisfiable constraint, a
+    // metric the backend never reports — is refused before any evaluation.
+    let pre = Planner::check(&query)?;
+    if pre.has_errors() {
+        for d in pre.diagnostics.iter().filter(|d| d.severity == fsdp_bw::check::Severity::Error) {
+            eprintln!("{}", d.render());
+        }
+        anyhow::bail!(
+            "plan is statically infeasible ({} error(s)) — run `fsdp-bw check {path}` \
+             for the full analysis, or fix the program",
+            pre.errors()
+        );
+    }
 
     if args.flag("check-prune") {
         // Parity harness: the §2.7-pruned plan must return the byte-identical
@@ -462,7 +537,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = Server::start(cfg)?;
     println!("fsdp-bw serve: listening on http://{}", server.addr());
     println!(
-        "  endpoints : POST /v1/plan · POST/GET/DELETE /v1/jobs[/:id[/result]] · \
+        "  endpoints : POST /v1/plan · POST /v1/validate · \
+         POST/GET/DELETE /v1/jobs[/:id[/result]] · \
          GET /v1/presets · GET /healthz · GET /metrics"
     );
     println!(

@@ -30,6 +30,7 @@ use crate::config::scenario::Scenario;
 use crate::config::GIB;
 use crate::eval::report::metrics_for_tgs;
 use crate::eval::{EvalBounds, Evaluation};
+use crate::util::suggest::suggestion;
 
 /// Comparison operator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -203,8 +204,9 @@ impl Constraint {
         let Some(m) = Metric::parse(metric) else {
             bail!(
                 "unknown constraint metric {metric:?} (syntax: `where.<metric> = <op> <value>`, \
-                 metrics: {})",
-                METRIC_NAMES.join(", ")
+                 metrics: {}){}",
+                METRIC_NAMES.join(", "),
+                suggestion(metric, METRIC_NAMES)
             );
         };
         let spec = spec.trim();
@@ -236,13 +238,30 @@ impl Constraint {
         format!("{} {} {}", self.metric.name(), self.cmp.symbol(), self.value)
     }
 
-    /// Decide the constraint from the scenario alone when possible (tier
-    /// 1–2 metrics); `None` means an evaluation is required.
-    pub fn eval_pre(&self, s: &Scenario) -> Option<bool> {
+    /// The constraint's metric name (`mfu`, `n_gpus`, ...).
+    pub fn metric_name(&self) -> &'static str {
+        self.metric.name()
+    }
+
+    /// Is the metric decidable from the scenario alone (tiers 1–2)?
+    pub fn is_pre_evaluation(&self) -> bool {
+        self.metric.pre_evaluation()
+    }
+
+    /// Does a metric reading satisfy the constraint?
+    pub fn holds(&self, lhs: f64) -> bool {
+        self.cmp.apply(lhs, self.value)
+    }
+
+    /// The tier 1–2 metric value at a scenario — the left-hand side
+    /// [`Self::eval_pre`] compares, exposed so the static analyzer
+    /// ([`crate::check`]) can interval-evaluate the same reading over a
+    /// grid's corners. `None` for evaluated-tier metrics.
+    pub fn pre_value(&self, s: &Scenario) -> Option<f64> {
         if !self.metric.pre_evaluation() {
             return None;
         }
-        let lhs = match self.metric {
+        Some(match self.metric {
             Metric::NGpus => s.n_gpus as f64,
             Metric::SeqLen => s.training.seq_len as f64,
             Metric::Batch => s.training.batch_per_gpu as f64,
@@ -256,8 +275,13 @@ impl Constraint {
                 }
             }
             _ => unreachable!("pre_evaluation() gated"),
-        };
-        Some(self.cmp.apply(lhs, self.value))
+        })
+    }
+
+    /// Decide the constraint from the scenario alone when possible (tier
+    /// 1–2 metrics); `None` means an evaluation is required.
+    pub fn eval_pre(&self, s: &Scenario) -> Option<bool> {
+        self.pre_value(s).map(|lhs| self.cmp.apply(lhs, self.value))
     }
 
     /// Decide the constraint against one evaluation (tier-3 metrics; tier
@@ -347,6 +371,26 @@ mod tests {
         assert_eq!(Constraint::parse("n_gpus", "<=64").unwrap().cmp, Cmp::Le);
         assert_eq!(Constraint::parse("gamma", "!= 0.5").unwrap().cmp, Cmp::Ne);
         assert_eq!(Constraint::parse("gamma", "= 0.5").unwrap().cmp, Cmp::Eq);
+    }
+
+    #[test]
+    fn unknown_metric_suggests_the_nearest_name() {
+        let err = Constraint::parse("mflu", ">= 0.4").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"mfu\"?"), "{err}");
+        let err = Constraint::parse("gama", "<= 0.5").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"gamma\"?"), "{err}");
+    }
+
+    #[test]
+    fn pre_value_matches_eval_pre_and_holds() {
+        let s = scen();
+        let c = Constraint::parse("tokens_per_gpu", ">= 1").unwrap();
+        assert!(c.is_pre_evaluation());
+        assert_eq!(c.metric_name(), "tokens_per_gpu");
+        let v = c.pre_value(&s).unwrap();
+        assert_eq!(Some(c.holds(v)), c.eval_pre(&s));
+        // Evaluated-tier metrics have no pre value.
+        assert!(Constraint::parse("mfu", ">= 0.4").unwrap().pre_value(&s).is_none());
     }
 
     #[test]

@@ -283,9 +283,11 @@ impl Query {
             } else if k == "query.prune" {
                 prune = v.parse().context("query.prune")?;
             } else if k.starts_with("query.") {
+                let known: Vec<&str> = QUERY_KEY_DOCS.iter().map(|(n, _)| *n).collect();
                 bail!(
                     "unknown query key {k:?} (known: query.objective, query.backend, \
-                     query.top_k, query.prune)"
+                     query.top_k, query.prune){}",
+                    crate::util::suggest::suggestion(&k, &known)
                 );
             } else {
                 base.insert(k, v);
@@ -359,6 +361,9 @@ mod tests {
             );
             assert!(Query::parse(&text).is_ok(), "documented key {key:?} rejected");
         }
+        // A near-miss additionally suggests the registered spelling.
+        let err = Query::parse("model = 7B\nquery.topk = 3\n").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"query.top_k\"?"), "{err}");
         let err = Query::parse("model = 7B\nquery.warp = 1\n").unwrap_err().to_string();
         for (key, _) in QUERY_KEY_DOCS {
             assert!(err.contains(key), "parser error does not name documented key {key}: {err}");

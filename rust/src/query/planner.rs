@@ -190,6 +190,15 @@ impl Planner {
         Ok(self.run_with(q, &backends))
     }
 
+    /// Statically analyze the query without evaluating any point (see
+    /// [`crate::check`]): resolves the backend spec and runs the
+    /// corner-interval passes. Front-ends call this before [`Self::run`]
+    /// to refuse provably-empty programs up front.
+    pub fn check(q: &Query) -> Result<crate::check::Report> {
+        let backends = backends_for(&q.backend_spec)?;
+        Ok(crate::check::check_query(q, &backends))
+    }
+
     /// Run with explicit backend instances (`q.backend_spec` is not
     /// re-resolved). The first backend is the primary one: constraints and
     /// ranking read its evaluations.

@@ -9,8 +9,10 @@
 //! bounded-memory path for grids past RAM is the CLI's streaming
 //! `fsdp-bw sweep`, whose O(grid) artifact is a file.)
 //!
-//! * `POST /v1/jobs` validates the query, assigns an id, and returns
-//!   immediately (202);
+//! * `POST /v1/jobs` validates the query — both the parse and the
+//!   [`crate::check`] static analysis, which rejects provably-infeasible
+//!   programs with 422 before they reach a worker — assigns an id, and
+//!   returns immediately (202);
 //! * `GET /v1/jobs/:id` reports chunk-granular progress — points decided,
 //!   §2.7-pruned, cache hits, constraint rejections, and the best-scoring
 //!   point so far;

@@ -20,7 +20,8 @@
 //! | route                 | method | answer                                      |
 //! |-----------------------|--------|---------------------------------------------|
 //! | `/v1/plan`            | POST   | the [`crate::query::Frontier`] of the posted query (dialect text or a flat JSON object of the same keys), synchronously |
-//! | `/v1/jobs`            | POST   | the same query as a **background job** — 202 with an id, immediately |
+//! | `/v1/validate`        | POST   | the [`crate::check`] static-analysis report of the posted query — no point is evaluated |
+//! | `/v1/jobs`            | POST   | the same query as a **background job** — 202 with an id, immediately; 422 with diagnostics if the analyzer proves it infeasible |
 //! | `/v1/jobs`            | GET    | every known job's status                    |
 //! | `/v1/jobs/:id`        | GET    | progress: points decided / pruned / remaining, cache hits, current best |
 //! | `/v1/jobs/:id/result` | GET    | the finished Frontier JSON (byte-identical to the synchronous `/v1/plan` answer) |
@@ -76,8 +77,13 @@ pub const ENDPOINTS: &[(&str, &str, &str)] = &[
     ),
     (
         "POST",
+        "/v1/validate",
+        "Statically analyze a query without evaluating any point; the response is the full diagnostics report",
+    ),
+    (
+        "POST",
         "/v1/jobs",
-        "Submit a query as a background job; responds 202 with the job id immediately",
+        "Submit a query as a background job; responds 202 with the job id immediately (422 if statically infeasible)",
     ),
     ("GET", "/v1/jobs", "List every known job with its status"),
     (
@@ -420,6 +426,10 @@ impl Handler {
                 Ok(body) => ("plan", 200, JSON, body),
                 Err(e) => ("plan", 400, JSON, error_body(&format!("{e:#}"))),
             },
+            ("POST", "/v1/validate") => match handle_validate(&req.body) {
+                Ok(body) => ("validate", 200, JSON, body),
+                Err(e) => ("validate", 400, JSON, error_body(&format!("{e:#}"))),
+            },
             ("POST", "/v1/jobs") => self.handle_job_submit(&req.body),
             ("GET", "/v1/jobs") => ("jobs_list", 200, JSON, self.jobs.list_json().pretty()),
             (_, "/healthz" | "/metrics" | "/v1/presets") => (
@@ -431,6 +441,12 @@ impl Handler {
             (_, "/v1/plan") => {
                 ("method_not_allowed", 405, JSON, error_body("POST a query to /v1/plan"))
             }
+            (_, "/v1/validate") => (
+                "method_not_allowed",
+                405,
+                JSON,
+                error_body("POST a query to /v1/validate"),
+            ),
             (_, "/v1/jobs") => (
                 "method_not_allowed",
                 405,
@@ -447,13 +463,43 @@ impl Handler {
     }
 
     /// `POST /v1/jobs`: validate the query up front (bad queries fail the
-    /// submission, not the job), then enqueue. A full job queue sheds with
-    /// 503, mirroring the accept queue's backpressure story.
+    /// submission, not the job), then enqueue. A statically-infeasible
+    /// query — one the analyzer *proves* has an empty feasible set — is
+    /// rejected with 422 and the diagnostics instead of burning job-worker
+    /// time on a grid with a known-empty answer. A full job queue sheds
+    /// with 503, mirroring the accept queue's backpressure story.
     fn handle_job_submit(&self, body: &str) -> (&'static str, u16, &'static str, String) {
         let query = match plan_body_to_dialect(body).and_then(|t| Query::parse(&t)) {
             Ok(q) => q,
             Err(e) => return ("jobs_submit", 400, JSON, error_body(&format!("{e:#}"))),
         };
+        // Unknown-backend specs skip the gate: the job still enqueues and
+        // fails with its own error, preserving the job-record semantics.
+        if let Ok(report) = Planner::check(&query) {
+            if report.has_errors() {
+                let body = Json::Obj(
+                    [
+                        (
+                            "error".to_string(),
+                            Json::Str("query is statically infeasible".to_string()),
+                        ),
+                        (
+                            "diagnostics".to_string(),
+                            Json::Arr(
+                                report
+                                    .diagnostics
+                                    .iter()
+                                    .map(crate::check::Diagnostic::json)
+                                    .collect(),
+                            ),
+                        ),
+                    ]
+                    .into_iter()
+                    .collect(),
+                );
+                return ("jobs_submit", 422, JSON, body.pretty());
+            }
+        }
         let job = self.jobs.submit(query);
         match self.job_submit.try_send(job.clone()) {
             Ok(()) => {
@@ -567,6 +613,17 @@ impl Handler {
         let frontier = planner.run(&query)?;
         Ok(frontier.to_json())
     }
+}
+
+/// `POST /v1/validate`: run the static analyzer ([`crate::check`]) over the
+/// posted query and return the full report — grid shape, corner probes and
+/// every diagnostic — without evaluating a single point. Always 200 when
+/// the program parses; the client inspects `errors` in the report.
+fn handle_validate(body: &str) -> Result<String> {
+    let text = plan_body_to_dialect(body)?;
+    let query = Query::parse(&text)?;
+    let report = Planner::check(&query)?;
+    Ok(report.json().pretty())
 }
 
 /// Normalize a `/v1/plan` body to query-dialect text. JSON bodies are a
@@ -705,6 +762,30 @@ mod tests {
         assert_eq!(v.get("backends").unwrap().as_arr().unwrap().len(), 5);
         let keys = v.get("scenario_keys").unwrap().as_arr().unwrap();
         assert!(keys.iter().any(|k| k.as_str().unwrap() == "model"));
+    }
+
+    #[test]
+    fn validate_reports_diagnostics_without_evaluating() {
+        // A 310B model can never fit 8 GPUs: the analyzer proves the empty
+        // feasible set from the corner bounds alone.
+        let body = handle_validate(
+            "model = 310B\nseq_len = 4096\nsweep.n_gpus = 4, 8\nquery.backend = analytical\n",
+        )
+        .unwrap();
+        let v = Json::parse(&body).unwrap();
+        assert!(v.get("errors").unwrap().as_f64().unwrap() >= 1.0);
+        let diags = v.get("diagnostics").unwrap().as_arr().unwrap();
+        assert!(diags
+            .iter()
+            .any(|d| d.get("code").unwrap().as_str().unwrap() == "E100"));
+        // A feasible program answers 200 with zero errors — the endpoint
+        // reports, it does not reject.
+        let ok = handle_validate("model = 13B\nn_gpus = 8\nquery.backend = analytical\n")
+            .unwrap();
+        let v = Json::parse(&ok).unwrap();
+        assert_eq!(v.get("errors").unwrap().as_f64().unwrap(), 0.0);
+        // Unparseable programs are a 400-path error.
+        assert!(handle_validate("modle = 13B\n").is_err());
     }
 
     #[test]

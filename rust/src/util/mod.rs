@@ -1,12 +1,14 @@
 //! Shared substrates built in-tree for the offline environment: JSON,
 //! channels, CLI parsing, a bench harness, temp dirs, spill buffers for
-//! streamed reports, a deterministic RNG, and small stats helpers.
+//! streamed reports, did-you-mean suggestions, a deterministic RNG, and
+//! small stats helpers.
 
 pub mod bench;
 pub mod channel;
 pub mod cli;
 pub mod json;
 pub mod spill;
+pub mod suggest;
 pub mod tempdir;
 
 /// Format bytes as GiB with two decimals (paper convention).

@@ -1,0 +1,119 @@
+//! "Did you mean ...?" suggestions for dialect errors.
+//!
+//! Every registry-backed parser (scenario keys, sweep axes, query keys,
+//! constraint metrics) reports the nearest known spelling on an unknown
+//! input, sourced from the same const registries the reference manual is
+//! generated from — so suggestions can never drift from the dialect.
+//!
+//! Distance is optimal string alignment (Levenshtein plus adjacent
+//! transpositions), which makes the classic `modle` → `model` slip cost 1
+//! instead of 2.
+
+/// Optimal-string-alignment edit distance: insertions, deletions,
+/// substitutions, and adjacent transpositions each cost 1.
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() || b.is_empty() {
+        return a.len().max(b.len());
+    }
+    let w = b.len() + 1;
+    // Three-row DP: row i-2 (for transpositions), row i-1, and row i.
+    let mut prev2 = vec![0usize; w];
+    let mut prev: Vec<usize> = (0..w).collect();
+    let mut cur = vec![0usize; w];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let mut d = (prev[j] + usize::from(ca != cb))
+                .min(prev[j + 1] + 1)
+                .min(cur[j] + 1);
+            if i > 0 && j > 0 && ca == b[j - 1] && a[i - 1] == cb {
+                d = d.min(prev2[j - 1] + 1);
+            }
+            cur[j + 1] = d;
+        }
+        std::mem::swap(&mut prev2, &mut prev);
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest candidate within tolerance `max(2, |input|/3)`, or `None`
+/// when nothing is plausibly a typo of the input. An exact match returns
+/// `None` too (the caller reached here because the input was *rejected*,
+/// so an identical candidate would be a useless suggestion). Ties go to
+/// the first candidate in registry order.
+pub fn nearest<'a>(input: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    let cap = (input.chars().count() / 3).max(2);
+    let mut best: Option<(usize, &'a str)> = None;
+    for &c in candidates {
+        let d = edit_distance(input, c);
+        if d == 0 {
+            return None;
+        }
+        if d <= cap && best.map_or(true, |(bd, _)| d < bd) {
+            best = Some((d, c));
+        }
+    }
+    best.map(|(_, c)| c)
+}
+
+/// A ready-to-append ` — did you mean "model"?` suffix for an error
+/// message, or the empty string when no candidate is close enough.
+pub fn suggestion(input: &str, candidates: &[&str]) -> String {
+    match nearest(input, candidates) {
+        Some(c) => format!(" — did you mean {c:?}?"),
+        None => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("flaw", "lawn"), 2);
+    }
+
+    #[test]
+    fn adjacent_transposition_costs_one() {
+        assert_eq!(edit_distance("modle", "model"), 1);
+        assert_eq!(edit_distance("sqe_len", "seq_len"), 1);
+        assert_eq!(edit_distance("ab", "ba"), 1);
+    }
+
+    #[test]
+    fn nearest_finds_typos_within_the_cap() {
+        let keys = &["model", "n_gpus", "seq_len", "gamma"];
+        assert_eq!(nearest("modle", keys), Some("model"));
+        assert_eq!(nearest("sqe_len", keys), Some("seq_len"));
+        assert_eq!(nearest("n_gpu", keys), Some("n_gpus"));
+        // Nothing within max(2, len/3) of this.
+        assert_eq!(nearest("zzzzzz", keys), None);
+    }
+
+    #[test]
+    fn exact_match_is_not_a_typo() {
+        // A rejected input that equals a candidate (e.g. a duplicate-key
+        // error path) must not suggest itself.
+        assert_eq!(nearest("model", &["model", "n_gpus"]), None);
+    }
+
+    #[test]
+    fn ties_go_to_registry_order() {
+        assert_eq!(nearest("ax", &["aax", "axx"]), Some("aax"));
+    }
+
+    #[test]
+    fn suggestion_renders_or_stays_empty() {
+        assert_eq!(suggestion("modle", &["model"]), " — did you mean \"model\"?");
+        assert_eq!(suggestion("qqqqq", &["model"]), "");
+    }
+}

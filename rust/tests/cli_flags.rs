@@ -5,6 +5,8 @@
 
 use std::process::Command;
 
+use fsdp_bw::util::json::Json;
+
 fn run(args: &[&str]) -> (bool, String, String) {
     let out = Command::new(env!("CARGO_BIN_EXE_fsdp-bw"))
         .args(args)
@@ -69,6 +71,51 @@ fn unknown_command_and_missing_args_still_error() {
     assert_rejected(&["plan"], "plan needs a file path");
     assert_rejected(&["scenario"], "scenario needs a file path");
     assert_rejected(&["experiment"], "experiment needs an id");
+}
+
+#[test]
+fn check_refuses_the_broken_fixture_with_structured_diagnostics() {
+    let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/broken.scn");
+    assert_rejected(&["check"], "check needs at least one file path");
+    assert_rejected(&["check", fixture, "--top-k", "3"], "unknown option --top-k");
+
+    // The intentionally-broken fixture exits nonzero in human mode...
+    let (ok, out, err) = run(&["check", fixture]);
+    assert!(!ok, "broken fixture must fail the static check");
+    assert!(err.contains("static check failed"), "{err}");
+    assert!(out.contains("E100"), "{out}");
+
+    // ...and --json emits one report object per file with the stable
+    // diagnostic shape (the same shape CI asserts).
+    let (ok, out, _err) = run(&["check", fixture, "--json"]);
+    assert!(!ok, "--json must preserve the nonzero exit");
+    let v = Json::parse(&out).expect("check --json prints a JSON array");
+    let reports = v.as_arr().unwrap();
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert!(r.get("file").unwrap().as_str().unwrap().ends_with("broken.scn"));
+    assert!(r.get("errors").unwrap().as_usize().unwrap() >= 1);
+    let diags = r.get("diagnostics").unwrap().as_arr().unwrap();
+    let e = diags
+        .iter()
+        .find(|d| d.get("code").unwrap().as_str().unwrap().starts_with('E'))
+        .expect("at least one E diagnostic");
+    for key in ["code", "severity", "span", "message"] {
+        assert!(e.get(key).is_some(), "diagnostic lacks {key}");
+    }
+
+    // The shipped example programs stay clean even under --strict (the CI
+    // gate); multiple files are checked in one run.
+    let examples = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples");
+    let (ok, _out, err) = run(&[
+        "check",
+        &format!("{examples}/plan.scn"),
+        &format!("{examples}/sweep.scn"),
+        &format!("{examples}/sweep_million.scn"),
+        &format!("{examples}/topology_sweep.scn"),
+        "--strict",
+    ]);
+    assert!(ok, "examples must pass `check --strict`: {err}");
 }
 
 #[test]

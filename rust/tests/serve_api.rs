@@ -297,6 +297,61 @@ fn job_error_paths_and_unfinished_result() {
 }
 
 #[test]
+fn validate_endpoint_and_infeasible_job_submissions() {
+    let server = start(2, 16, 30_000);
+    let addr = server.addr().to_string();
+
+    // A 310B model can never fit 4 or 8 GPUs: provably empty feasible set.
+    let infeasible = "model = 310B\nseq_len = 4096\nsweep.n_gpus = 4, 8\n\
+                      query.backend = analytical\n";
+
+    // /v1/validate answers 200 with the full static-analysis report — it
+    // reports, it does not reject — and performs zero evaluations.
+    let r = client::post(&addr, "/v1/validate", infeasible).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body);
+    let v = Json::parse(&r.body).unwrap();
+    assert!(v.get("errors").unwrap().as_usize().unwrap() >= 1, "{}", r.body);
+    assert!(v
+        .get("diagnostics")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .any(|d| d.get("code").unwrap().as_str().unwrap() == "E100"));
+    let stats = server.cache().stats();
+    assert_eq!(stats.misses, 0, "validate must not evaluate any point: {stats:?}");
+
+    // A feasible program validates with zero errors.
+    let ok = client::post(&addr, "/v1/validate", PLAN).unwrap();
+    assert_eq!(ok.status, 200, "{}", ok.body);
+    let v = Json::parse(&ok.body).unwrap();
+    assert_eq!(v.get("errors").unwrap().as_usize().unwrap(), 0, "{}", ok.body);
+
+    // Unparseable programs are 400s; wrong methods are 405s.
+    assert_eq!(client::post(&addr, "/v1/validate", "modle = 13B\n").unwrap().status, 400);
+    assert_eq!(client::get(&addr, "/v1/validate").unwrap().status, 405);
+
+    // Submitting the provably-infeasible query as a job is rejected with
+    // 422 + the E-diagnostics instead of enqueueing, and leaves no record.
+    let rejected = client::post(&addr, "/v1/jobs", infeasible).unwrap();
+    assert_eq!(rejected.status, 422, "{}", rejected.body);
+    let v = Json::parse(&rejected.body).unwrap();
+    assert!(v.get("error").unwrap().as_str().unwrap().contains("infeasible"));
+    let diags = v.get("diagnostics").unwrap().as_arr().unwrap();
+    assert!(diags
+        .iter()
+        .any(|d| d.get("code").unwrap().as_str().unwrap().starts_with('E')));
+    let list = client::get(&addr, "/v1/jobs").unwrap();
+    assert!(
+        Json::parse(&list.body).unwrap().get("jobs").unwrap().as_arr().unwrap().is_empty(),
+        "rejected submissions leave no job record: {}",
+        list.body
+    );
+
+    server.shutdown();
+}
+
+#[test]
 fn running_jobs_report_progress_and_cancel_at_chunk_boundaries() {
     // Chunk = 1 point and a single planner thread: a 4000-point grid takes
     // long enough that the DELETE lands while the job is running.
