@@ -3,10 +3,19 @@
 //! 160-point example grid must be sweep-able in well under a second, and
 //! §2.7 bounds pruning must beat brute force on an infeasibility-heavy
 //! grid (quantified by the 594-point pruned-vs-unpruned pair).
+//!
+//! The `eval/million_*` trio records the batched-evaluation perf
+//! trajectory on the full `examples/sweep_million.scn` grid:
+//! `million_pointwise_legacy` is the pre-optimization engine (map-clone +
+//! re-parse decode), `million_pointwise_typed` adds the typed decoder, and
+//! `million_batched` the SoA kernels. CI dumps the three to
+//! `BENCH_eval.json` (`FSDP_BW_BENCH_OUT`) and gates on the
+//! batched-vs-legacy points/s ratio; `FSDP_BW_BENCH_BASELINE` additionally
+//! fails the binary on a >20% regression against a pinned dump.
 
 use fsdp_bw::config::scenario::Scenario;
 use fsdp_bw::eval::{backends_for, run_sweep, Analytical, BoundsEval, Evaluator, Simulated, Sweep};
-use fsdp_bw::query::{Planner, Query};
+use fsdp_bw::query::{Planner, PlannedPoint, Query, StreamOptions, StreamSink};
 use fsdp_bw::util::bench::Bench;
 
 const SWEEP_TEXT: &str = "model = 13B\nbatch = 1\n\
@@ -78,5 +87,54 @@ fn main() {
         std::hint::black_box(planner.run(&brute_q).expect("plan").counters.evaluated)
     });
 
+    // The recorded perf trajectory: one million analytical points through
+    // the streaming engine at a single thread, under the three decode/eval
+    // strategies. The three runs must agree on every counter before any of
+    // them is worth timing (full byte-identity of the rendered reports is
+    // pinned in `tests/batch_equivalence.rs` and the CI `--no-batch` leg).
+    let million =
+        Sweep::parse(include_str!("../../examples/sweep_million.scn")).expect("million sweep");
+    let mq = Query::from_sweep(million, "analytical");
+    assert_eq!(mq.space.len(), 1_000_000, "the example grid is exactly a million points");
+    let m_backends = backends_for("analytical").expect("backends");
+    let legacy = Planner::new(1).without_typed_decode();
+    let typed = Planner::new(1).without_batch();
+    let batched = Planner::new(1);
+    {
+        let a = run_million(&legacy, &mq, &m_backends);
+        let b_ = run_million(&typed, &mq, &m_backends);
+        let c = run_million(&batched, &mq, &m_backends);
+        assert_eq!(a, b_, "typed decode must not change any counter");
+        assert_eq!(a, c, "batched evaluation must not change any counter");
+    }
+    let n = mq.space.len() as f64;
+    b.case("eval/million_pointwise_legacy", n, || run_million(&legacy, &mq, &m_backends));
+    b.case("eval/million_pointwise_typed", n, || run_million(&typed, &mq, &m_backends));
+    b.case("eval/million_batched", n, || run_million(&batched, &mq, &m_backends));
+
     println!("\n{}", b.dump_json());
+    std::process::exit(b.finish());
+}
+
+/// Stream the whole grid through a counting sink (no rendering, O(chunk)
+/// residency — the engine itself is what is being timed) and return the
+/// observable outcome: (points emitted, feasible, infeasible, errors).
+fn run_million(
+    planner: &Planner,
+    q: &Query,
+    backends: &[Box<dyn Evaluator>],
+) -> (usize, usize, usize, usize) {
+    struct Count(usize);
+    impl StreamSink for Count {
+        fn point(&mut self, _q: &Query, p: PlannedPoint) -> anyhow::Result<()> {
+            self.0 += 1;
+            std::hint::black_box(&p);
+            Ok(())
+        }
+    }
+    let mut sink = Count(0);
+    let opts = StreamOptions { provenance_ledger: false, ..StreamOptions::default() };
+    let out = planner.run_streamed(q, backends, &opts, &mut sink).expect("streamed run");
+    let c = out.counters;
+    (sink.0, c.feasible, c.infeasible, c.errors)
 }

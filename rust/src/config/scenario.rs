@@ -192,6 +192,17 @@ impl Scenario {
     /// single construction path shared by scenario files, CLI flags and the
     /// sweep engine's expanded grid points.
     pub fn from_kv(kv: &BTreeMap<String, String>) -> Result<Self> {
+        let s = Self::from_kv_unvalidated(kv)?;
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// [`Self::from_kv`] without the final [`Self::validate`] pass — the
+    /// construction half only. The typed sweep decoder
+    /// ([`crate::eval::typed`]) uses this to build an axis template that
+    /// may be invalid at its particular axis values (validation then runs
+    /// per decoded point, exactly as `from_kv` would have).
+    pub fn from_kv_unvalidated(kv: &BTreeMap<String, String>) -> Result<Self> {
         for k in kv.keys() {
             if !known_key(k) {
                 bail!(
@@ -320,15 +331,13 @@ impl Scenario {
             None => None,
         };
 
-        let s = Scenario {
+        Ok(Scenario {
             model,
             cluster,
             training,
             n_gpus: get("n_gpus", "8").parse().context("n_gpus")?,
             alpha,
-        };
-        s.validate()?;
-        Ok(s)
+        })
     }
 
     /// Serialize back to the `key = value` dialect.

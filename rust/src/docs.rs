@@ -143,6 +143,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("json", "Full JSON report (all points + summary) instead of the text summary"),
             ("csv", "Flat CSV report (one row per point × backend)"),
             ("resume", "Re-enter at the last completed chunk of --checkpoint"),
+            ("no-batch", "Disable the batched SoA evaluation fast path (identical output)"),
         ],
         opts: &[
             ("backend", "Backend spec; default both (analytical + simulated)"),
@@ -165,6 +166,7 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("csv", "Ranked entries as CSV"),
             ("no-prune", "Disable §2.7 bounds pruning (brute force; identical frontier)"),
             ("check-prune", "Assert pruned and brute-force frontiers are byte-identical"),
+            ("no-batch", "Disable the batched SoA evaluation fast path (identical output)"),
         ],
         opts: &[
             ("backend", "Backend spec; overrides the file's query.backend"),

@@ -10,6 +10,7 @@ use crate::config::TrainingConfig;
 use crate::gridsearch::{GridSearch, SearchPoint};
 use crate::simulator::{simulate_step, AllocatorModel, EfficiencyModel};
 
+use super::typed::{EvalColumns, TypedChunk};
 use super::{
     to_gib, EvalBounds, EvalMemory, EvalMetrics, EvalSearch, EvalStep, Evaluation, Evaluator,
     ScenarioPoint, SearchChoice, DEFAULT_ALPHA,
@@ -90,6 +91,73 @@ impl Evaluator for Analytical {
         // maxima evaluated at that same context.
         let b = StepModel::new(&s.model, &s.cluster, &s.training, s.n_gpus).bounds();
         Some(EvalBounds { e_max: b.e_max, hfu_max: b.hfu_max, mfu_max: b.mfu_max, k_max: b.k_max })
+    }
+
+    fn supports_batch(&self) -> bool {
+        true
+    }
+
+    /// Native kernel for a `seq_len`/`batch` run: one [`StepModel`] —
+    /// carrying every run-constant input of Eqs 1–15 (the model's Φ and
+    /// per-layer shapes of Eq 1, the cluster's memory/bandwidth/topology
+    /// terms of Eqs 2–5, the assumed α̂) — is built **once per run**; the
+    /// per-point work is overwriting the one scalar the inner axis varies
+    /// and re-running the token-dependent tail of the chain (Eqs 4, 6–11
+    /// and the Eqs 12–15 maxima at that context) through the *same*
+    /// [`StepModel`] methods [`Self::evaluate`] calls, so results are
+    /// bit-identical by construction. What the run hoists relative to the
+    /// pointwise path: the scenario materialization, the model/cluster
+    /// clones of `StepModel::new`, and all per-point provenance strings.
+    fn evaluate_batch(&self, chunk: &TypedChunk, out: &mut EvalColumns) {
+        let (proto, values, is_seq) = match chunk {
+            TypedChunk::SeqLen { proto, values } => (*proto, *values, true),
+            TypedChunk::Batch { proto, values } => (*proto, *values, false),
+            TypedChunk::Points(ps) => {
+                for s in *ps {
+                    out.push_evaluation(self.evaluate(s));
+                }
+                return;
+            }
+        };
+        let mut sm = StepModel::new(&proto.model, &proto.cluster, &proto.training, proto.n_gpus);
+        let alpha = proto.alpha.unwrap_or(self.alpha);
+        for &v in values {
+            if is_seq {
+                sm.cfg.seq_len = v;
+            } else {
+                sm.cfg.batch_per_gpu = v;
+            }
+            let mem = sm.memory();
+            let b = sm.breakdown(alpha);
+            let m = metrics::from_breakdown(&sm, &b);
+            let bounds = sm.bounds();
+            let fits = mem.fits();
+            out.push(
+                fits,
+                !fits,
+                Some(EvalMetrics { mfu: m.mfu, hfu: m.hfu, tgs: m.tgs }),
+                Some(EvalStep {
+                    t_step: b.t_step,
+                    t_fwd: b.t_fwd,
+                    t_bwd: b.t_bwd,
+                    exposed_comm: b.exposed_comm(),
+                    r_fwd: b.r_fwd,
+                    r_bwd: b.r_bwd,
+                }),
+                Some(EvalMemory {
+                    m_free_gib: Some(to_gib(mem.m_free)),
+                    active_gib: Some(to_gib(mem.total_per_gpu())),
+                    reserved_gib: None,
+                }),
+                Some(EvalBounds {
+                    e_max: bounds.e_max,
+                    hfu_max: bounds.hfu_max,
+                    mfu_max: bounds.mfu_max,
+                    k_max: bounds.k_max,
+                }),
+                None,
+            );
+        }
     }
 }
 
@@ -220,6 +288,57 @@ impl Evaluator for BoundsEval {
             );
         }
         None
+    }
+
+    fn supports_batch(&self) -> bool {
+        true
+    }
+
+    /// Native kernel, same shape as [`Analytical::evaluate_batch`] but for
+    /// the §2.7 subset this backend reports: one [`StepModel`] per run,
+    /// per point only the Eq 2–4 memory view and the Eqs 12–15 maxima at
+    /// the varied token count — through the same methods
+    /// [`Self::evaluate`] uses, so bit-identical.
+    fn evaluate_batch(&self, chunk: &TypedChunk, out: &mut EvalColumns) {
+        let (proto, values, is_seq) = match chunk {
+            TypedChunk::SeqLen { proto, values } => (*proto, *values, true),
+            TypedChunk::Batch { proto, values } => (*proto, *values, false),
+            TypedChunk::Points(ps) => {
+                for s in *ps {
+                    out.push_evaluation(self.evaluate(s));
+                }
+                return;
+            }
+        };
+        let mut sm = StepModel::new(&proto.model, &proto.cluster, &proto.training, proto.n_gpus);
+        for &v in values {
+            if is_seq {
+                sm.cfg.seq_len = v;
+            } else {
+                sm.cfg.batch_per_gpu = v;
+            }
+            let mem = sm.memory();
+            let bounds = sm.bounds();
+            let has_memory = mem.m_free > 0.0;
+            out.push(
+                has_memory,
+                !has_memory,
+                None,
+                None,
+                Some(EvalMemory {
+                    m_free_gib: Some(to_gib(mem.m_free)),
+                    active_gib: None,
+                    reserved_gib: None,
+                }),
+                Some(EvalBounds {
+                    e_max: bounds.e_max,
+                    hfu_max: bounds.hfu_max,
+                    mfu_max: bounds.mfu_max,
+                    k_max: bounds.k_max,
+                }),
+                None,
+            );
+        }
     }
 }
 
@@ -556,6 +675,61 @@ mod tests {
         let c = e.search.unwrap().best_mfu.unwrap();
         assert_eq!(c.tokens, direct.tokens);
         assert_eq!(c.alpha_hat, 0.6);
+    }
+
+    /// The native batch kernels must be bit-identical to the pointwise
+    /// evaluator on every chunk form — the batched planner's byte-identical
+    /// output guarantee rests on this.
+    #[test]
+    fn batch_kernels_match_pointwise_exactly() {
+        let proto =
+            Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 1024\nalpha = 0.6\n").unwrap();
+        // Long enough seq_len runs cross the OOM boundary, so both the
+        // feasible and infeasible arms are compared.
+        let seqs: Vec<u64> = (1..40).map(|i| i * 1024).collect();
+        let batches: Vec<u64> = (1..16).collect();
+        let pts: Vec<Scenario> = ["7B", "13B"]
+            .iter()
+            .map(|m| {
+                Scenario::parse(&format!("model = {m}\nn_gpus = 8\nseq_len = 10240\n")).unwrap()
+            })
+            .collect();
+        let chunks = [
+            TypedChunk::SeqLen { proto: &proto, values: &seqs },
+            TypedChunk::Batch { proto: &proto, values: &batches },
+            TypedChunk::Points(&pts),
+        ];
+        let analytical = Analytical::default();
+        for b in [&analytical as &dyn Evaluator, &BoundsEval] {
+            assert!(b.supports_batch(), "{}", b.name());
+            for chunk in &chunks {
+                let mut cols = EvalColumns::with_capacity(chunk.len());
+                b.evaluate_batch(chunk, &mut cols);
+                assert_eq!(cols.len(), chunk.len());
+                for i in 0..chunk.len() {
+                    let s = chunk.scenario(i);
+                    let want = b.evaluate(&s);
+                    let got = cols.evaluation(i, b.name(), ScenarioPoint::of(&s));
+                    assert_eq!(got, want, "{} chunk point {i}", b.name());
+                }
+            }
+        }
+    }
+
+    /// Backends without a hoistable closed form keep the default pointwise
+    /// loop (and stay off the batched planner path), but that loop must
+    /// still match `evaluate`.
+    #[test]
+    fn only_closed_form_backends_support_batch() {
+        assert!(!Simulated::default().supports_batch());
+        assert!(!Searched.supports_batch());
+        assert!(!Alg1Point::default().supports_batch());
+        let s = scen();
+        let pts = [s.clone()];
+        let mut cols = EvalColumns::with_capacity(1);
+        Simulated::default().evaluate_batch(&TypedChunk::Points(&pts), &mut cols);
+        let want = Simulated::default().evaluate(&s);
+        assert_eq!(cols.evaluation(0, want.backend, want.scenario.clone()), want);
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub mod backends;
 pub mod report;
 pub mod stream;
 pub mod sweep;
+pub mod typed;
 
 use crate::config::scenario::Scenario;
 use crate::config::{Precision, ZeroStage, GIB};
@@ -49,6 +50,7 @@ pub use backends::{
 pub use report::{BestPoint, SweepPointResult, SweepReport, SweepSummary};
 pub use stream::{run_sweep_streamed, SweepFormat, SweepStreamConfig, SweepStreamOutcome};
 pub use sweep::{parse_axis_values, run_sweep, run_sweep_cached, GridCursor, Sweep, SweepAxis};
+pub use typed::{EvalColumns, TypedChunk, TypedSweep};
 
 /// The kernel efficiency the analytical backend assumes when none is given
 /// (the value used throughout the paper's worked examples).
@@ -145,6 +147,33 @@ pub trait Evaluator: Send + Sync {
             });
         }
         RangeBounds { infeasible: if all_pruned { infeasible } else { None }, max }
+    }
+
+    /// Does this backend implement a native [`Self::evaluate_batch`]
+    /// kernel? Returning `true` additionally promises the backend keeps
+    /// the **default identity** [`Self::cache_key`] (the full canonical
+    /// scenario text), because the batched planner fingerprints points
+    /// from the scenario itself rather than calling `cache_key` per
+    /// point — a projected key would make its dedup ledger disagree with
+    /// the pointwise path's. Backends with projected keys (the grid
+    /// search) or non-hoistable evaluation (the simulator) keep the
+    /// default `false` and are fed points one at a time.
+    fn supports_batch(&self) -> bool {
+        false
+    }
+
+    /// Evaluate a whole [`TypedChunk`], appending one result row per
+    /// point to `out` (point `i` of the chunk lands at row `i`). Must be
+    /// observably identical to calling [`Self::evaluate`] on
+    /// [`TypedChunk::scenario`] for each point — the default does
+    /// exactly that, so backends without a native kernel stay correct.
+    /// Native implementations (analytical, bounds) hoist every Eq 1–15
+    /// subexpression that is constant along the chunk's run — see
+    /// [`typed`] module docs.
+    fn evaluate_batch(&self, chunk: &TypedChunk, out: &mut EvalColumns) {
+        for i in 0..chunk.len() {
+            out.push_evaluation(self.evaluate(&chunk.scenario(i)));
+        }
     }
 }
 

@@ -91,6 +91,9 @@ pub struct SweepStreamConfig {
     /// fixed buffer, so even the O(grid) document never becomes O(grid)
     /// resident. (Without it — stdout, tests — the body is one String.)
     pub out: Option<PathBuf>,
+    /// Allow the planner's batched evaluation path (default). `--no-batch`
+    /// clears it; output bytes are identical either way.
+    pub batch: bool,
 }
 
 impl SweepStreamConfig {
@@ -105,6 +108,7 @@ impl SweepStreamConfig {
             cache: None,
             cancel: None,
             out: None,
+            batch: true,
         }
     }
 }
@@ -205,6 +209,9 @@ pub fn run_sweep_streamed(
     let mut planner = Planner::new(cfg.threads);
     if let Some(cache) = &cfg.cache {
         planner = planner.with_cache(cache.clone());
+    }
+    if !cfg.batch {
+        planner = planner.without_batch();
     }
     let opts = StreamOptions {
         chunk,
@@ -588,6 +595,19 @@ mod tests {
                 want.push('\n');
             }
             assert_eq!(on_disk, want, "{format:?}");
+        }
+    }
+
+    #[test]
+    fn no_batch_streams_identical_bytes() {
+        let sw = small_sweep();
+        let backends = backends_for("both").unwrap();
+        for format in [SweepFormat::Json, SweepFormat::Csv, SweepFormat::Text] {
+            let batched = run_sweep_streamed(&sw, &backends, &cfg(format, 2)).unwrap();
+            let mut c = cfg(format, 2);
+            c.batch = false;
+            let pointwise = run_sweep_streamed(&sw, &backends, &c).unwrap();
+            assert_eq!(batched.body, pointwise.body, "{format:?}");
         }
     }
 

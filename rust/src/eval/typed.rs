@@ -1,0 +1,762 @@
+//! Typed sweep decoding — parse each axis value **once per sweep**, not
+//! once per point.
+//!
+//! [`Sweep::point`] decodes a grid ordinal by cloning the base
+//! `BTreeMap`, inserting the axis assignment and re-running the full
+//! [`Scenario::from_kv`] string parse — per point. On a million-point
+//! grid that is a million redundant parses of the same handful of
+//! strings. [`TypedSweep::compile`] hoists all of that to sweep setup:
+//!
+//! * the base scenario and the **first** value of every axis are parsed
+//!   once into a *template* [`Scenario`] (construction only — validation
+//!   stays per-point, see below);
+//! * every axis value is parsed once into a *patch*: a closure that
+//!   overwrites exactly the typed fields that `from_kv` would have set
+//!   for that `key = value` pair (preset axes bake the preset lookup
+//!   plus the base's `model.*`/`cluster.*` overrides, mirroring
+//!   `from_kv`'s preset-then-override order).
+//!
+//! Decoding a point is then a template clone plus one field-patch per
+//! axis — no maps, no string parsing. Patches apply in key-sorted axis
+//! order, which reproduces `from_kv`'s semantics: `"model"` sorts
+//! before `"model.*"` (prefix order), so a swept preset never clobbers
+//! a swept override, and all other keys write disjoint fields.
+//!
+//! **Equivalence.** `TypedSweep::compile` returns `None` unless every
+//! axis value of every axis parses and the template constructs. Because
+//! `from_kv` construction can only fail on unknown keys (uniform across
+//! the grid), missing custom-model keys (uniform), or a value that
+//! fails to parse (checked per value here), compile success implies
+//! per-point construction succeeds for **every** grid point — the only
+//! per-point failure mode left is [`Scenario::validate`], which
+//! [`TypedSweep::point`] runs exactly as `from_kv` would, yielding
+//! byte-identical error strings. Callers fall back to the string path
+//! whenever `compile` returns `None`, so the typed layer never changes
+//! observable behaviour, only its cost.
+//!
+//! **Inner runs.** Points decode in odometer order — the **last** axis
+//! varies fastest — so a grid walk is a sequence of *runs* of length
+//! [`TypedSweep::run_len`] in which only the innermost axis value
+//! changes. When that axis is `seq_len` or `batch` ([`Inner`]), a run
+//! shares one prototype scenario ([`TypedSweep::run`]) and the batch
+//! evaluation kernels ([`super::Evaluator::evaluate_batch`]) hoist
+//! every subexpression of Eqs 1–15 that does not depend on the token
+//! count `e = l_seq · b` — parameter counts Φ (Eq 1), sharded-state
+//! and reserved memory (Eqs 2–4), transfer time (Eq 5) — computing
+//! them once per run instead of once per point. [`TypedChunk`] carries
+//! a run (or an arbitrary point slice) to the kernels and
+//! [`EvalColumns`] receives the results as structure-of-arrays columns,
+//! deferring [`Evaluation`] assembly to the planner.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::comm::Algorithm;
+use crate::config::scenario::Scenario;
+use crate::config::{ClusterConfig, ModelConfig, Precision, ZeroStage, GIB};
+
+use super::sweep::Sweep;
+use super::{EvalBounds, EvalMemory, EvalMetrics, EvalSearch, EvalStep, Evaluation, ScenarioPoint};
+
+/// A pre-parsed axis value: overwrites the typed fields its `key = value`
+/// pair denotes.
+type Patch = Box<dyn Fn(&mut Scenario) + Send + Sync>;
+
+fn patch(f: impl Fn(&mut Scenario) + Send + Sync + 'static) -> Patch {
+    Box::new(f)
+}
+
+/// Compile one axis value into a [`Patch`], or `None` when the value does
+/// not parse (the caller then falls back to the string path, which
+/// reports the parse error with its usual context). Each arm mirrors the
+/// conversion [`Scenario::from_kv`] applies for the same key.
+fn compile_patch(key: &str, v: &str, base: &BTreeMap<String, String>) -> Option<Patch> {
+    Some(match key {
+        // Preset axes replace the whole sub-config, then re-apply the
+        // base's overrides — exactly `from_kv`'s preset-then-override
+        // order. (Overrides that are themselves axes re-apply after this
+        // patch: "model" < "model.*" in the key-sorted patch order.)
+        "model" => {
+            let mut m = ModelConfig::lookup(v)?;
+            if let Some(x) = base.get("model.name") {
+                m.name = x.clone();
+            }
+            if let Some(x) = base.get("model.layers") {
+                m.layers = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("model.hidden") {
+                m.hidden = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("model.heads") {
+                m.heads = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("model.vocab") {
+                m.vocab = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("model.ffn_ratio") {
+                m.ffn_ratio = x.parse().ok()?;
+            }
+            patch(move |s| s.model = m.clone())
+        }
+        "cluster" => {
+            let mut c = ClusterConfig::preset(v)?;
+            if let Some(x) = base.get("cluster.name") {
+                c.name = x.clone();
+            }
+            if let Some(x) = base.get("cluster.nodes") {
+                c.nodes = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("cluster.gpus_per_node") {
+                c.gpus_per_node = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("cluster.inter_node_gbps") {
+                c.inter_node_gbps = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("cluster.intra_node_gbps") {
+                c.intra_node_gbps = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("cluster.latency") {
+                c.latency = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("cluster.reserved_gib") {
+                c.reserved_bytes = x.parse::<f64>().ok()? * GIB;
+            }
+            if let Some(x) = base.get("cluster.gpu_mem_gib") {
+                c.gpu.mem_bytes = x.parse::<f64>().ok()? * GIB;
+            }
+            if let Some(x) = base.get("cluster.peak_tflops") {
+                c.gpu.peak_flops = x.parse::<f64>().ok()? * 1e12;
+            }
+            if let Some(x) = base.get("cluster.gpu_name") {
+                c.gpu.name = x.clone();
+            }
+            if let Some(x) = base.get("cluster.topology.collective") {
+                c.comm.collective = Algorithm::parse(x).ok()?;
+            }
+            if let Some(x) = base.get("cluster.topology.intra_latency") {
+                c.comm.intra_latency = Some(x.parse().ok()?);
+            }
+            if let Some(x) = base.get("cluster.topology.inter_latency") {
+                c.comm.inter_latency = Some(x.parse().ok()?);
+            }
+            if let Some(x) = base.get("cluster.sim_latency") {
+                c.comm.sim_latency = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("cluster.straggler.knee") {
+                c.comm.straggler.knee = x.parse().ok()?;
+            }
+            if let Some(x) = base.get("cluster.straggler.slope") {
+                c.comm.straggler.slope = x.parse().ok()?;
+            }
+            patch(move |s| s.cluster = c.clone())
+        }
+        "n_gpus" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.n_gpus = v)
+        }
+        "seq_len" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.training.seq_len = v)
+        }
+        "batch" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.training.batch_per_gpu = v)
+        }
+        "gamma" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.training.gamma = v)
+        }
+        "zero_stage" => {
+            let z = match v {
+                "3" | "zero-3" | "zero3" => ZeroStage::Stage3,
+                "1" | "2" | "12" | "1/2" | "zero-1/2" | "zero-12" => ZeroStage::Stage12,
+                _ => return None,
+            };
+            patch(move |s| s.training.zero_stage = z)
+        }
+        "precision" => {
+            let p = match v.to_ascii_lowercase().as_str() {
+                "bf16" => Precision::Bf16,
+                "fp16" | "half" => Precision::Fp16,
+                "fp32" | "float32" => Precision::Fp32,
+                _ => return None,
+            };
+            patch(move |s| s.training.precision = p)
+        }
+        "empty_cache" => {
+            let v: bool = v.parse().ok()?;
+            patch(move |s| s.training.empty_cache = v)
+        }
+        "alpha" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.alpha = Some(v))
+        }
+        "model.name" => {
+            let v = v.to_string();
+            patch(move |s| s.model.name = v.clone())
+        }
+        "model.layers" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.model.layers = v)
+        }
+        "model.hidden" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.model.hidden = v)
+        }
+        "model.heads" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.model.heads = v)
+        }
+        "model.vocab" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.model.vocab = v)
+        }
+        "model.ffn_ratio" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.model.ffn_ratio = v)
+        }
+        "cluster.name" => {
+            let v = v.to_string();
+            patch(move |s| s.cluster.name = v.clone())
+        }
+        "cluster.nodes" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.cluster.nodes = v)
+        }
+        "cluster.gpus_per_node" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.cluster.gpus_per_node = v)
+        }
+        "cluster.inter_node_gbps" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.cluster.inter_node_gbps = v)
+        }
+        "cluster.intra_node_gbps" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.cluster.intra_node_gbps = v)
+        }
+        "cluster.latency" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.cluster.latency = v)
+        }
+        "cluster.reserved_gib" => {
+            let b = v.parse::<f64>().ok()? * GIB;
+            patch(move |s| s.cluster.reserved_bytes = b)
+        }
+        "cluster.gpu_mem_gib" => {
+            let b = v.parse::<f64>().ok()? * GIB;
+            patch(move |s| s.cluster.gpu.mem_bytes = b)
+        }
+        "cluster.peak_tflops" => {
+            let f = v.parse::<f64>().ok()? * 1e12;
+            patch(move |s| s.cluster.gpu.peak_flops = f)
+        }
+        "cluster.gpu_name" => {
+            let v = v.to_string();
+            patch(move |s| s.cluster.gpu.name = v.clone())
+        }
+        "cluster.topology.collective" => {
+            let a = Algorithm::parse(v).ok()?;
+            patch(move |s| s.cluster.comm.collective = a)
+        }
+        "cluster.topology.intra_latency" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.cluster.comm.intra_latency = Some(v))
+        }
+        "cluster.topology.inter_latency" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.cluster.comm.inter_latency = Some(v))
+        }
+        "cluster.sim_latency" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.cluster.comm.sim_latency = v)
+        }
+        "cluster.straggler.knee" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.cluster.comm.straggler.knee = v)
+        }
+        "cluster.straggler.slope" => {
+            let v: f64 = v.parse().ok()?;
+            patch(move |s| s.cluster.comm.straggler.slope = v)
+        }
+        _ => return None,
+    })
+}
+
+fn parse_u64s(values: &[String]) -> Option<Vec<u64>> {
+    values.iter().map(|v| v.parse().ok()).collect()
+}
+
+/// One compiled axis: the raw value strings (for assignment echoes) and
+/// their pre-parsed patches, index-aligned.
+struct TypedAxis {
+    key: String,
+    values: Vec<String>,
+    patches: Vec<Patch>,
+}
+
+/// What the innermost (fastest-varying) axis is, when it admits a
+/// hoisted batch kernel. `seq_len` and `batch` only enter Eqs 1–15
+/// through the token count `e = l_seq · b` and never enter
+/// [`Scenario::validate`], so a run over either shares one validated
+/// prototype and the kernels vary a single scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Inner {
+    /// Innermost axis is `seq_len`; the parsed values, in axis order.
+    SeqLen(Vec<u64>),
+    /// Innermost axis is `batch`; the parsed values, in axis order.
+    Batch(Vec<u64>),
+    /// Any other innermost axis (or no axes): points decode individually.
+    Other,
+}
+
+/// A [`Sweep`] compiled to typed form: a template [`Scenario`] plus one
+/// [`Patch`] per axis value. See the module docs for the equivalence
+/// contract with [`Sweep::point`].
+pub struct TypedSweep {
+    template: Scenario,
+    axes: Vec<TypedAxis>,
+    /// Axis indices in key-sorted order — the order `from_kv` applies
+    /// keys in ([`Sweep`] axes from a sweep *file* arrive key-sorted,
+    /// but [`Sweep::from_parts`] does not promise it).
+    order: Vec<usize>,
+    inner: Inner,
+}
+
+impl TypedSweep {
+    /// Compile a sweep, parsing the base and every axis value exactly
+    /// once. `None` when any value fails to parse or the template fails
+    /// to construct — the caller falls back to the per-point string
+    /// path, which reports the error with its usual context.
+    pub fn compile(sweep: &Sweep) -> Option<TypedSweep> {
+        let mut kv = sweep.base.clone();
+        for ax in &sweep.axes {
+            kv.insert(ax.key.clone(), ax.values.first()?.clone());
+        }
+        let template = Scenario::from_kv_unvalidated(&kv).ok()?;
+        let mut axes = Vec::with_capacity(sweep.axes.len());
+        for ax in &sweep.axes {
+            let patches = ax
+                .values
+                .iter()
+                .map(|v| compile_patch(&ax.key, v, &sweep.base))
+                .collect::<Option<Vec<_>>>()?;
+            axes.push(TypedAxis { key: ax.key.clone(), values: ax.values.clone(), patches });
+        }
+        let mut order: Vec<usize> = (0..axes.len()).collect();
+        order.sort_by(|&a, &b| axes[a].key.cmp(&axes[b].key));
+        let inner = match axes.last() {
+            Some(ax) if ax.key == "seq_len" => {
+                parse_u64s(&ax.values).map_or(Inner::Other, Inner::SeqLen)
+            }
+            Some(ax) if ax.key == "batch" => {
+                parse_u64s(&ax.values).map_or(Inner::Other, Inner::Batch)
+            }
+            _ => Inner::Other,
+        };
+        Some(TypedSweep { template, axes, order, inner })
+    }
+
+    /// Number of grid points (1 when there are no axes) — equals
+    /// [`Sweep::len`].
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Length of one innermost-axis run (1 when there are no axes).
+    /// Grid ordinals `[r·run_len, (r+1)·run_len)` share every axis value
+    /// except the innermost.
+    pub fn run_len(&self) -> usize {
+        self.axes.last().map_or(1, |a| a.values.len())
+    }
+
+    /// The innermost-axis classification (see [`Inner`]).
+    pub fn inner(&self) -> &Inner {
+        &self.inner
+    }
+
+    /// Key and raw value strings of the innermost axis, for assignment
+    /// echoes; `None` when the sweep has no axes.
+    pub fn inner_axis(&self) -> Option<(&str, &[String])> {
+        self.axes.last().map(|a| (a.key.as_str(), &a.values[..]))
+    }
+
+    /// Decode point `index` — the typed equivalent of [`Sweep::point`]:
+    /// same assignment, same scenario, same validation-error strings,
+    /// without the map clone and string re-parse.
+    pub fn point(&self, index: usize) -> (Vec<(String, String)>, Result<Scenario>) {
+        let mut rem = index;
+        let mut idx = vec![0usize; self.axes.len()];
+        for i in (0..self.axes.len()).rev() {
+            idx[i] = rem % self.axes[i].values.len();
+            rem /= self.axes[i].values.len();
+        }
+        let assignment: Vec<(String, String)> = self
+            .axes
+            .iter()
+            .zip(&idx)
+            .map(|(a, &j)| (a.key.clone(), a.values[j].clone()))
+            .collect();
+        let mut s = self.template.clone();
+        for &i in &self.order {
+            (self.axes[i].patches[idx[i]])(&mut s);
+        }
+        (assignment, s.validate().map(|_| s))
+    }
+
+    /// Decode run `run` (grid ordinals `[run·run_len, (run+1)·run_len)`)
+    /// into the outer-axis assignment and the run's shared prototype
+    /// scenario — every patch applied except the innermost axis's.
+    ///
+    /// Only meaningful when [`Self::inner`] is `SeqLen` or `Batch`:
+    /// those keys patch fields no other key touches and
+    /// [`Scenario::validate`] never reads them, so the prototype's
+    /// validation verdict (and error string) is exactly that of every
+    /// point in the run.
+    pub fn run(&self, run: usize) -> (Vec<(String, String)>, Result<Scenario>) {
+        debug_assert!(
+            !matches!(self.inner, Inner::Other),
+            "TypedSweep::run needs a seq_len/batch innermost axis"
+        );
+        let inner_i = self.axes.len() - 1;
+        let mut rem = run;
+        let mut idx = vec![0usize; self.axes.len()];
+        for i in (0..inner_i).rev() {
+            idx[i] = rem % self.axes[i].values.len();
+            rem /= self.axes[i].values.len();
+        }
+        let assignment: Vec<(String, String)> = self.axes[..inner_i]
+            .iter()
+            .zip(&idx)
+            .map(|(a, &j)| (a.key.clone(), a.values[j].clone()))
+            .collect();
+        let mut s = self.template.clone();
+        for &i in &self.order {
+            if i == inner_i {
+                // The prototype keeps the template's (first) inner value;
+                // the batch kernel overwrites it per point.
+                continue;
+            }
+            (self.axes[i].patches[idx[i]])(&mut s);
+        }
+        (assignment, s.validate().map(|_| s))
+    }
+}
+
+/// A batch of scenarios handed to [`super::Evaluator::evaluate_batch`].
+/// The run forms carry one prototype plus the varying scalar — the
+/// kernels hoist everything in Eqs 1–15 that the scalar does not reach;
+/// `Points` is the general form (full scenarios, no hoisting, still
+/// amortizing per-call overheads).
+#[derive(Clone, Copy)]
+pub enum TypedChunk<'a> {
+    /// One innermost-axis run over `seq_len`.
+    SeqLen {
+        /// The run's shared prototype (its `seq_len` is unspecified).
+        proto: &'a Scenario,
+        /// `seq_len` per point.
+        values: &'a [u64],
+    },
+    /// One innermost-axis run over `batch`.
+    Batch {
+        proto: &'a Scenario,
+        /// `batch_per_gpu` per point.
+        values: &'a [u64],
+    },
+    /// Arbitrary scenarios, one per point.
+    Points(&'a [Scenario]),
+}
+
+impl TypedChunk<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            TypedChunk::SeqLen { values, .. } | TypedChunk::Batch { values, .. } => values.len(),
+            TypedChunk::Points(ps) => ps.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize point `i` as a full [`Scenario`] — what the default
+    /// pointwise `evaluate_batch` loop feeds to `evaluate`.
+    pub fn scenario(&self, i: usize) -> Scenario {
+        match self {
+            TypedChunk::SeqLen { proto, values } => {
+                let mut s = (*proto).clone();
+                s.training.seq_len = values[i];
+                s
+            }
+            TypedChunk::Batch { proto, values } => {
+                let mut s = (*proto).clone();
+                s.training.batch_per_gpu = values[i];
+                s
+            }
+            TypedChunk::Points(ps) => ps[i].clone(),
+        }
+    }
+}
+
+/// Structure-of-arrays results of one [`TypedChunk`] evaluation —
+/// everything an [`Evaluation`] carries except its provenance
+/// (`backend`, `scenario`), which the planner stamps when assembling
+/// output rows. Kernels append with [`Self::push`]; index `i` holds
+/// point `i` of the chunk.
+#[derive(Debug, Default, Clone)]
+pub struct EvalColumns {
+    pub feasible: Vec<bool>,
+    pub oom: Vec<bool>,
+    pub metrics: Vec<Option<EvalMetrics>>,
+    pub step: Vec<Option<EvalStep>>,
+    pub memory: Vec<Option<EvalMemory>>,
+    pub bounds: Vec<Option<EvalBounds>>,
+    pub search: Vec<Option<EvalSearch>>,
+}
+
+impl EvalColumns {
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            feasible: Vec::with_capacity(n),
+            oom: Vec::with_capacity(n),
+            metrics: Vec::with_capacity(n),
+            step: Vec::with_capacity(n),
+            memory: Vec::with_capacity(n),
+            bounds: Vec::with_capacity(n),
+            search: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.feasible.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.feasible.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.feasible.clear();
+        self.oom.clear();
+        self.metrics.clear();
+        self.step.clear();
+        self.memory.clear();
+        self.bounds.clear();
+        self.search.clear();
+    }
+
+    /// Append one point's results.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        feasible: bool,
+        oom: bool,
+        metrics: Option<EvalMetrics>,
+        step: Option<EvalStep>,
+        memory: Option<EvalMemory>,
+        bounds: Option<EvalBounds>,
+        search: Option<EvalSearch>,
+    ) {
+        self.feasible.push(feasible);
+        self.oom.push(oom);
+        self.metrics.push(metrics);
+        self.step.push(step);
+        self.memory.push(memory);
+        self.bounds.push(bounds);
+        self.search.push(search);
+    }
+
+    /// Append a finished [`Evaluation`]'s result fields (dropping its
+    /// provenance) — the default pointwise `evaluate_batch` loop.
+    pub fn push_evaluation(&mut self, e: Evaluation) {
+        self.push(e.feasible, e.oom, e.metrics, e.step, e.memory, e.bounds, e.search);
+    }
+
+    /// Assemble point `i` back into a full [`Evaluation`] with the given
+    /// provenance — the inverse of [`Self::push_evaluation`].
+    pub fn evaluation(
+        &self,
+        i: usize,
+        backend: &'static str,
+        scenario: ScenarioPoint,
+    ) -> Evaluation {
+        Evaluation {
+            backend,
+            scenario,
+            feasible: self.feasible[i],
+            oom: self.oom[i],
+            metrics: self.metrics[i],
+            step: self.step[i],
+            memory: self.memory[i],
+            bounds: self.bounds[i],
+            search: self.search[i].clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::backends_for;
+
+    /// The central contract: for every grid point of every sweep the
+    /// typed decode yields the same assignment, the same scenario, and
+    /// the same error string as the string path.
+    #[test]
+    fn typed_point_matches_sweep_point() {
+        let texts = [
+            "model = 1.3B\nsweep.n_gpus = 4,8\nsweep.seq_len = 1024,2048\n",
+            // Preset axis (model swept as a whole).
+            "batch = 2\nsweep.model = 1.3B,13B\nsweep.seq_len = 1024,2048\n",
+            // Custom model; base override shadowed by the same key swept.
+            "model.name = mine\nmodel.layers = 12\nmodel.hidden = 1024\n\
+             sweep.model.hidden = 1024,2048\nsweep.gamma = 0..1+0.5\n",
+            // Per-point validation errors (100000 GPUs fits no preset).
+            "model = 1.3B\nsweep.n_gpus = 8,100000\n",
+            // Base key shadowed by an axis on the same key.
+            "model = 7B\nalpha = 0.5\nsweep.alpha = 0.4,0.75\n",
+            // Cluster preset axis with a base cluster.* override to re-apply.
+            "model = 7B\ncluster.gpu_mem_gib = 80\n\
+             sweep.cluster = 40GB-A100-200Gbps,40GB-A100-100Gbps\nsweep.zero_stage = 3,1/2\n",
+            "model = 13B\nsweep.precision = bf16,fp16,fp32\nsweep.empty_cache = true,false\n",
+            "model = 13B\nsweep.cluster.topology.collective = ring,tree,hierarchical,auto\n\
+             sweep.batch = 1,2\n",
+        ];
+        for text in texts {
+            let sw = Sweep::parse(text).unwrap();
+            let ty = TypedSweep::compile(&sw).unwrap_or_else(|| panic!("compile failed: {text}"));
+            assert_eq!(ty.len(), sw.len());
+            for i in 0..sw.len() {
+                let (a0, r0) = sw.point(i);
+                let (a1, r1) = ty.point(i);
+                assert_eq!(a0, a1, "{text} point {i}");
+                match (r0, r1) {
+                    (Ok(s0), Ok(s1)) => assert_eq!(s0, s1, "{text} point {i}"),
+                    (Err(e0), Err(e1)) => {
+                        assert_eq!(format!("{e0:#}"), format!("{e1:#}"), "{text} point {i}")
+                    }
+                    (r0, r1) => panic!(
+                        "{text} point {i}: pointwise ok={} vs typed ok={}",
+                        r0.is_ok(),
+                        r1.is_ok()
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inner_axis_classification() {
+        let ty = |t: &str| TypedSweep::compile(&Sweep::parse(t).unwrap()).unwrap();
+        // Axes sort by key, so seq_len is innermost here.
+        let s = ty("model = 1.3B\nsweep.n_gpus = 4,8\nsweep.seq_len = 1024,2048\n");
+        assert_eq!(s.inner(), &Inner::SeqLen(vec![1024, 2048]));
+        assert_eq!(s.run_len(), 2);
+        let b = ty("model = 1.3B\nsweep.alpha = 0.5,0.6\nsweep.batch = 1,2,4\n");
+        assert_eq!(b.inner(), &Inner::Batch(vec![1, 2, 4]));
+        assert_eq!(b.run_len(), 3);
+        // n_gpus innermost → no hoisted kernel.
+        let o = ty("model = 1.3B\nsweep.gamma = 0,0.5\nsweep.n_gpus = 4,8\n");
+        assert_eq!(o.inner(), &Inner::Other);
+        // No axes: a single point, trivially Other.
+        let none = ty("model = 1.3B\n");
+        assert_eq!(none.inner(), &Inner::Other);
+        assert_eq!(none.run_len(), 1);
+        assert!(none.inner_axis().is_none());
+        assert_eq!(none.len(), 1);
+    }
+
+    #[test]
+    fn run_prototype_matches_per_point_decode() {
+        let sw = Sweep::parse("model = 1.3B\nsweep.n_gpus = 4,8,12\nsweep.seq_len = 1024,2048\n")
+            .unwrap();
+        let ty = TypedSweep::compile(&sw).unwrap();
+        let Inner::SeqLen(vals) = ty.inner().clone() else { panic!("seq_len inner") };
+        let rl = ty.run_len();
+        let (ikey, raws) = ty.inner_axis().unwrap();
+        let (ikey, raws) = (ikey.to_string(), raws.to_vec());
+        for run in 0..ty.len() / rl {
+            let (outer, proto) = ty.run(run);
+            let proto = proto.unwrap();
+            for j in 0..rl {
+                // Prototype + inner value must equal the full decode.
+                let mut want = proto.clone();
+                want.training.seq_len = vals[j];
+                let mut want_assign = outer.clone();
+                want_assign.push((ikey.clone(), raws[j].clone()));
+                let (a, r) = ty.point(run * rl + j);
+                assert_eq!(a, want_assign, "run {run} point {j}");
+                assert_eq!(r.unwrap(), want, "run {run} point {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_validation_verdict_covers_the_whole_run() {
+        let sw = Sweep::parse("model = 1.3B\nsweep.n_gpus = 8,100000\nsweep.seq_len = 1024,2048\n")
+            .unwrap();
+        let ty = TypedSweep::compile(&sw).unwrap();
+        let (_, good) = ty.run(0);
+        assert!(good.is_ok());
+        let (_, bad) = ty.run(1);
+        let msg = format!("{:#}", bad.unwrap_err());
+        for j in 0..2 {
+            let (_, r) = ty.point(2 + j);
+            assert_eq!(format!("{:#}", r.unwrap_err()), msg);
+        }
+    }
+
+    #[test]
+    fn compile_falls_back_on_unparseable_values() {
+        let none = |t: &str| TypedSweep::compile(&Sweep::parse(t).unwrap()).is_none();
+        // Unknown preset among the axis values.
+        assert!(none("batch = 1\nsweep.model = 1.3B,nope\n"));
+        // Non-numeric value on a numeric axis.
+        assert!(none("model = 1.3B\nsweep.n_gpus = 8,x\n"));
+        // Base that fails construction (template cannot build).
+        assert!(none(
+            "model.name = m\nmodel.layers = abc\nmodel.hidden = 1024\nsweep.seq_len = 1024,2048\n"
+        ));
+        // All of these still work through the string path per point — the
+        // planner falls back, so behaviour is unchanged.
+    }
+
+    #[test]
+    fn chunk_scenario_materializes_each_form() {
+        let proto = Scenario::parse("model = 1.3B\nn_gpus = 8\nseq_len = 1024\n").unwrap();
+        let seq = TypedChunk::SeqLen { proto: &proto, values: &[2048, 4096] };
+        assert_eq!(seq.len(), 2);
+        assert_eq!(seq.scenario(1).training.seq_len, 4096);
+        let bat = TypedChunk::Batch { proto: &proto, values: &[2, 4] };
+        assert_eq!(bat.scenario(0).training.batch_per_gpu, 2);
+        // Both leave every other field at the prototype's value.
+        assert_eq!(seq.scenario(0).model, proto.model);
+        let pts = [proto.clone()];
+        let general = TypedChunk::Points(&pts);
+        assert!(!general.is_empty());
+        assert_eq!(general.scenario(0), proto);
+    }
+
+    #[test]
+    fn eval_columns_roundtrip_every_backend() {
+        let s = Scenario::parse("model = 13B\nn_gpus = 8\nseq_len = 4096\n").unwrap();
+        let mut cols = EvalColumns::with_capacity(4);
+        let mut want = Vec::new();
+        for b in backends_for("all").unwrap() {
+            let e = b.evaluate(&s);
+            cols.push_evaluation(e.clone());
+            want.push(e);
+        }
+        assert_eq!(cols.len(), want.len());
+        for (i, e) in want.iter().enumerate() {
+            assert_eq!(&cols.evaluation(i, e.backend, e.scenario.clone()), e);
+        }
+        cols.clear();
+        assert!(cols.is_empty());
+    }
+}

@@ -67,14 +67,15 @@ COMMANDS:
                                          (--strict: warnings too, for CI)
   sweep      <file.scn> [--backend both] [--threads N] [--json|--csv]
              [--out report.json] [--chunk 65536] [--checkpoint ck.json]
-             [--resume] [--max-chunks N] expand sweep.* axes to a grid and
+             [--resume] [--max-chunks N] [--no-batch]
+                                         expand sweep.* axes to a grid and
                                          stream it in bounded-memory chunks
                                          (O(chunk) resident, any grid size);
                                          --checkpoint + --resume continue an
                                          interrupted run byte-identically
   plan       <file.scn> [--backend analytical] [--threads N] [--top-k K]
              [--no-prune] [--check-prune] [--json|--csv] [--out path]
-             [--chunk N]                 declarative query: sweep.* axes +
+             [--chunk N] [--no-batch]    declarative query: sweep.* axes +
                                          where.* constraints + query.*
                                          objective, §2.7 bounds-pruned,
                                          ranked frontier (see README)
@@ -360,6 +361,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     cfg.cache = Some(EvalCache::shared());
     cfg.out = args.str_maybe("out").map(PathBuf::from);
+    // Escape hatch for the batched SoA evaluation path (output bytes are
+    // identical either way — see the CI byte-compare leg).
+    cfg.batch = !args.flag("no-batch");
     let outcome = run_sweep_streamed(&sweep, &backends, &cfg)?;
     if outcome.interrupted {
         println!(
@@ -439,7 +443,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
         // Parity harness: the §2.7-pruned plan must return the byte-identical
         // frontier to brute force, evaluating no more points. Runs without a
         // shared cache so the two executions stay fully independent.
-        let planner = Planner::new(threads);
+        let mut planner = Planner::new(threads);
+        if args.flag("no-batch") {
+            planner = planner.without_batch();
+        }
         let mut pruned_q = query.clone();
         pruned_q.prune = true;
         let mut brute_q = query.clone();
@@ -471,7 +478,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
     // frontier is identical with or without it. `--chunk` routes through
     // the chunked engine (byte-identical output; the serve job API's
     // execution path) instead of one whole-grid pass.
-    let planner = Planner::new(threads).with_cache(EvalCache::shared());
+    let mut planner = Planner::new(threads).with_cache(EvalCache::shared());
+    if args.flag("no-batch") {
+        planner = planner.without_batch();
+    }
     let chunk = args.num_opt("chunk", 0usize)?;
     let frontier = if chunk > 0 {
         let backends = backends_for(&query.backend_spec)?;

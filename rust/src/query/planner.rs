@@ -32,7 +32,8 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::scenario::Scenario;
-use crate::eval::{backends_for, Evaluation, Evaluator};
+use crate::eval::typed::{EvalColumns, Inner, TypedChunk, TypedSweep};
+use crate::eval::{backends_for, Evaluation, Evaluator, ScenarioPoint};
 use crate::util::channel::channel;
 
 use super::cache::EvalCache;
@@ -108,8 +109,20 @@ enum Slot {
     Eval(String),
 }
 
-fn pre_point(q: &Query, backends: &[Box<dyn Evaluator>], index: usize) -> Pre {
-    let (point, scen) = q.space.point(index);
+fn pre_point(
+    q: &Query,
+    typed: Option<&TypedSweep>,
+    backends: &[Box<dyn Evaluator>],
+    index: usize,
+) -> Pre {
+    // The typed decoder (compiled once per range) replaces `Sweep::point`'s
+    // map clone + string re-parse with a template clone + field patches —
+    // same assignment, scenario and error strings, several times cheaper.
+    // Backends that never batch (simulator, grid search) get this win too.
+    let (point, scen) = match typed {
+        Some(t) => t.point(index),
+        None => q.space.point(index),
+    };
     let s = match scen {
         Ok(s) => s,
         Err(e) => return Pre { point, kind: PreKind::Error(format!("{e:#}")) },
@@ -158,11 +171,18 @@ fn pre_point(q: &Query, backends: &[Box<dyn Evaluator>], index: usize) -> Pre {
 pub struct Planner {
     pub threads: usize,
     cache: Option<Arc<EvalCache>>,
+    /// Dispatch sweep-shaped queries to the batched SoA path when every
+    /// backend supports it (default true; the `--no-batch` CLI escape
+    /// hatch clears it).
+    batch: bool,
+    /// Decode grid points through a compiled [`TypedSweep`] (default
+    /// true; cleared only by [`Self::without_typed_decode`]).
+    typed_decode: bool,
 }
 
 impl Planner {
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1), cache: None }
+        Self { threads: threads.max(1), cache: None, batch: true, typed_decode: true }
     }
 
     /// One worker per available core.
@@ -182,6 +202,26 @@ impl Planner {
     /// The attached shared cache, if any.
     pub fn cache(&self) -> Option<&Arc<EvalCache>> {
         self.cache.as_ref()
+    }
+
+    /// Disable the batched evaluation path (the `--no-batch` escape
+    /// hatch): every query runs the pointwise pipeline. Output is
+    /// byte-identical either way — this exists for A/B timing and as a
+    /// fallback lever, not because results differ.
+    pub fn without_batch(mut self) -> Self {
+        self.batch = false;
+        self
+    }
+
+    /// Disable the typed sweep decoder — and with it, implicitly, the
+    /// batched path: grid points decode through the original map-clone +
+    /// re-parse [`crate::eval::Sweep::point`]. This is the
+    /// pre-optimization reference the recorded perf trajectory measures
+    /// against (`benches/eval.rs` → `BENCH_eval.json`); it is not
+    /// exposed on the CLI.
+    pub fn without_typed_decode(mut self) -> Self {
+        self.typed_decode = false;
+        self
     }
 
     /// Resolve the query's `backend_spec` and run.
@@ -254,11 +294,36 @@ impl Planner {
         counters: &mut PlanCounters,
         emit: &mut dyn FnMut(PlannedPoint) -> Result<()>,
     ) -> Result<()> {
+        // Compile the typed decoder once per range — microseconds against a
+        // range of thousands of points. `None` (an axis value outside the
+        // typed grammar, or typed decode disabled) falls back to the
+        // original per-point parse for the whole query, keeping error
+        // strings exact.
+        let typed = if self.typed_decode { TypedSweep::compile(&q.space) } else { None };
+
+        // The batched path handles exactly the sweep shape: every point
+        // evaluated (no pruning), no constraints, and every backend
+        // vouching a batch kernel with the identity cache key. Everything
+        // else — plans, constrained queries, mixed backends — takes the
+        // pointwise pipeline below. The gate reads only (query, planner
+        // config), so one logical run (all chunks sharing a `seen` ledger)
+        // always stays on one path and never mixes fingerprint schemes.
+        if let Some(t) = &typed {
+            if self.batch
+                && !q.prune
+                && q.constraints.is_empty()
+                && backends.iter().all(|b| b.supports_batch())
+            {
+                return self.execute_range_batched(q, backends, t, range, seen, counters, emit);
+            }
+        }
+
         let len = range.len();
 
         // Phase 1 — decode, constrain, prune (parallel).
-        let pres: Vec<Pre> =
-            par_map(len, self.threads, |j| pre_point(q, backends, range.start + j));
+        let pres: Vec<Pre> = par_map(len, self.threads, |j| {
+            pre_point(q, typed.as_ref(), backends, range.start + j)
+        });
 
         // Phase 2 — dedup evaluable slots into unique jobs (serial). A key
         // first seen in an *earlier* range becomes a job too (its value is
@@ -410,6 +475,133 @@ impl Planner {
         }
         Ok(())
     }
+
+    /// The batched execution path: decode whole inner runs once, evaluate
+    /// them through [`Evaluator::evaluate_batch`] kernels, and emit the
+    /// same [`PlannedPoint`]s the pointwise pipeline would — byte-identical
+    /// counters, provenance, ranking and serialized output (pinned by the
+    /// equivalence tests here, `tests/batch_equivalence.rs`, and the CI
+    /// `--no-batch` byte-compare leg).
+    ///
+    /// Differences from the pointwise pipeline, none observable:
+    ///
+    /// * Work splits into run-aligned segments (capped at [`SEG_CAP`])
+    ///   instead of per-point jobs; a segment worker decodes one run
+    ///   prototype and hands the varying scalar column to the kernels.
+    /// * Duplicate points are re-evaluated rather than joined onto a
+    ///   representative job — the kernels are pure closed forms, so a
+    ///   duplicate's numbers are bit-identical and cheaper to recompute
+    ///   than to dedup. The dedup *ledger* is still kept, so the
+    ///   `evaluated`/`cache_hits` counters and per-point `cache_hit`
+    ///   provenance match the pointwise path exactly.
+    /// * For seq_len/batch runs the fingerprint hashes (scenario text
+    ///   with the inner field zeroed, inner value) instead of the full
+    ///   cache-key text. The schemes partition points identically —
+    ///   `to_text` is injective and always carries the inner field's
+    ///   line — and the dispatch gate keeps a logical run on one scheme.
+    /// * The shared [`EvalCache`] is bypassed: its value is cross-run
+    ///   memoization of expensive backends (simulator, grid search),
+    ///   which never support batching. Results are unchanged because the
+    ///   closed-form evaluators are pure.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_range_batched(
+        &self,
+        q: &Query,
+        backends: &[Box<dyn Evaluator>],
+        typed: &TypedSweep,
+        range: Range<usize>,
+        seen: &mut HashSet<u128>,
+        counters: &mut PlanCounters,
+        emit: &mut dyn FnMut(PlannedPoint) -> Result<()>,
+    ) -> Result<()> {
+        // Segment the range at inner-run boundaries so each work item is a
+        // slice of exactly one run, and at SEG_CAP so one huge run still
+        // spreads across the worker pool.
+        let run_len = typed.run_len().max(1);
+        let mut segs: Vec<Range<usize>> = Vec::new();
+        let mut start = range.start;
+        while start < range.end {
+            let run_end = (start / run_len + 1) * run_len;
+            let end = range.end.min(run_end).min(start + SEG_CAP);
+            segs.push(start..end);
+            start = end;
+        }
+
+        // Parallel phase: decode + evaluate each segment.
+        let rows_per_seg: Vec<Vec<BatchRow>> = par_map(segs.len(), self.threads, |si| {
+            let seg = &segs[si];
+            match typed.inner() {
+                Inner::SeqLen(vals) | Inner::Batch(vals) => {
+                    batched_run_segment(backends, typed, seg, vals)
+                }
+                Inner::Other => batched_point_segment(backends, typed, seg),
+            }
+        });
+
+        // Serial phase: dedup bookkeeping, scoring, emission — in index
+        // order, mirroring the pointwise phase 2 + 4 exactly.
+        let mut range_first: HashSet<u128> = HashSet::new();
+        for (seg, rows) in segs.iter().zip(rows_per_seg) {
+            for (off, row) in rows.into_iter().enumerate() {
+                let index = seg.start + off;
+                match row {
+                    BatchRow::Error { point, msg } => {
+                        counters.errors += 1;
+                        emit(PlannedPoint {
+                            index,
+                            point,
+                            error: Some(msg),
+                            rejected_by: None,
+                            evals: Vec::new(),
+                            score: None,
+                        })?;
+                    }
+                    BatchRow::Done { point, evals } => {
+                        let mut evs: Vec<PointEval> = Vec::with_capacity(evals.len());
+                        for (eval, fp) in evals {
+                            // First occurrence in this range consults the
+                            // cross-range ledger; a repeat within the range
+                            // is a hit outright — the same classification
+                            // the pointwise job dedup produces.
+                            let hit = if range_first.insert(fp) {
+                                let dup = !seen.insert(fp);
+                                if !dup {
+                                    counters.evaluated += 1;
+                                }
+                                dup
+                            } else {
+                                true
+                            };
+                            if hit {
+                                counters.cache_hits += 1;
+                            }
+                            evs.push(PointEval::Done { eval, cache_hit: hit });
+                        }
+                        let mut score = None;
+                        if let Some(PointEval::Done { eval, .. }) = evs.first() {
+                            if !eval.feasible {
+                                counters.infeasible += 1;
+                            } else {
+                                // No post-constraints on this path — the
+                                // dispatch gate requires an empty set.
+                                counters.feasible += 1;
+                                score = q.objective.score(eval);
+                            }
+                        }
+                        emit(PlannedPoint {
+                            index,
+                            point,
+                            error: None,
+                            rejected_by: None,
+                            evals: evs,
+                            score,
+                        })?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// 128-bit fingerprint of one `(backend slot, cache key)` pair — the
@@ -426,6 +618,160 @@ fn slot_fingerprint(bi: usize, key: &str) -> u128 {
     (0xc2b2_ae3d_27d4_eb4fu64, bi as u64).hash(&mut b);
     key.hash(&mut b);
     ((a.finish() as u128) << 64) | b.finish() as u128
+}
+
+/// Cap on points per batched work item, so a single long inner run still
+/// spreads across the worker pool and per-segment buffers stay bounded.
+const SEG_CAP: usize = 4096;
+
+/// One decoded + evaluated point from a batched segment worker, pending
+/// the serial dedup/emit pass.
+enum BatchRow {
+    /// Scenario validation failed — recorded, not fatal, exactly like
+    /// [`PreKind::Error`].
+    Error { point: Vec<(String, String)>, msg: String },
+    /// Evaluated under every backend: `(evaluation, dedup fingerprint)`
+    /// in backend order.
+    Done { point: Vec<(String, String)>, evals: Vec<(Evaluation, u128)> },
+}
+
+/// Decode and evaluate one slice of a seq_len/batch inner run: the run
+/// prototype is built once, the kernels consume the typed value column,
+/// and only the inner field is patched into the per-point provenance.
+fn batched_run_segment(
+    backends: &[Box<dyn Evaluator>],
+    typed: &TypedSweep,
+    seg: &Range<usize>,
+    vals: &[u64],
+) -> Vec<BatchRow> {
+    let run_len = typed.run_len();
+    let run = seg.start / run_len;
+    let j0 = seg.start - run * run_len;
+    let j1 = seg.end - run * run_len;
+    let (ikey, raws) = typed.inner_axis().expect("run segments require an inner axis");
+    let (outer, proto) = typed.run(run);
+    let proto = match proto {
+        Ok(p) => p,
+        Err(e) => {
+            // Validation never reads seq_len or batch, so the verdict (and
+            // its message) is uniform along the run.
+            let msg = format!("{e:#}");
+            return (j0..j1)
+                .map(|j| {
+                    let mut point = outer.clone();
+                    point.push((ikey.to_string(), raws[j].clone()));
+                    BatchRow::Error { point, msg: msg.clone() }
+                })
+                .collect();
+        }
+    };
+    let is_seq = matches!(typed.inner(), Inner::SeqLen(_));
+    let chunk = if is_seq {
+        TypedChunk::SeqLen { proto: &proto, values: &vals[j0..j1] }
+    } else {
+        TypedChunk::Batch { proto: &proto, values: &vals[j0..j1] }
+    };
+    let mut cols: Vec<EvalColumns> = Vec::with_capacity(backends.len());
+    for bk in backends {
+        let mut c = EvalColumns::with_capacity(j1 - j0);
+        bk.evaluate_batch(&chunk, &mut c);
+        debug_assert_eq!(c.len(), j1 - j0, "batch kernel must fill one row per point");
+        cols.push(c);
+    }
+    // Fingerprints must partition points exactly like the pointwise path's
+    // cache-key text does. `to_text` always emits the inner field's line,
+    // so (text with the inner field zeroed, inner value) is injective in
+    // it; the run-constant prefix is hashed once here, the value below.
+    let mut zeroed = proto.clone();
+    if is_seq {
+        zeroed.training.seq_len = 0;
+    } else {
+        zeroed.training.batch_per_gpu = 0;
+    }
+    let ztext = zeroed.to_text();
+    let hashers: Vec<(DefaultHasher, DefaultHasher)> = (0..backends.len())
+        .map(|bi| {
+            let mut a = DefaultHasher::new();
+            (0x9e37_79b9_7f4a_7c15u64, bi as u64).hash(&mut a);
+            ztext.hash(&mut a);
+            let mut b = DefaultHasher::new();
+            (0xc2b2_ae3d_27d4_eb4fu64, bi as u64).hash(&mut b);
+            ztext.hash(&mut b);
+            (a, b)
+        })
+        .collect();
+    let sp_base = ScenarioPoint::of(&proto);
+    (j0..j1)
+        .map(|j| {
+            let mut point = outer.clone();
+            point.push((ikey.to_string(), raws[j].clone()));
+            let mut sp = sp_base.clone();
+            if is_seq {
+                sp.seq_len = vals[j];
+            } else {
+                sp.batch = vals[j];
+            }
+            let evals = (0..backends.len())
+                .map(|bi| {
+                    let (mut a, mut b) = hashers[bi].clone();
+                    vals[j].hash(&mut a);
+                    vals[j].hash(&mut b);
+                    let fp = ((a.finish() as u128) << 64) | b.finish() as u128;
+                    (cols[bi].evaluation(j - j0, backends[bi].name(), sp.clone()), fp)
+                })
+                .collect();
+            BatchRow::Done { point, evals }
+        })
+        .collect()
+}
+
+/// Decode and evaluate one segment of a grid whose inner axis is not a
+/// typed scalar run: points decode individually through the typed layer,
+/// then feed the kernels as a [`TypedChunk::Points`] column. Fingerprints
+/// reuse [`slot_fingerprint`] over the identity cache key, which the
+/// `supports_batch` contract guarantees.
+fn batched_point_segment(
+    backends: &[Box<dyn Evaluator>],
+    typed: &TypedSweep,
+    seg: &Range<usize>,
+) -> Vec<BatchRow> {
+    let mut decoded: Vec<(Vec<(String, String)>, Result<usize, String>)> =
+        Vec::with_capacity(seg.len());
+    let mut scens: Vec<Scenario> = Vec::new();
+    for i in seg.clone() {
+        let (point, scen) = typed.point(i);
+        match scen {
+            Ok(s) => {
+                decoded.push((point, Ok(scens.len())));
+                scens.push(s);
+            }
+            Err(e) => decoded.push((point, Err(format!("{e:#}")))),
+        }
+    }
+    let chunk = TypedChunk::Points(&scens);
+    let mut cols: Vec<EvalColumns> = Vec::with_capacity(backends.len());
+    for bk in backends {
+        let mut c = EvalColumns::with_capacity(scens.len());
+        bk.evaluate_batch(&chunk, &mut c);
+        debug_assert_eq!(c.len(), scens.len(), "batch kernel must fill one row per point");
+        cols.push(c);
+    }
+    decoded
+        .into_iter()
+        .map(|(point, scen)| match scen {
+            Err(msg) => BatchRow::Error { point, msg },
+            Ok(k) => {
+                let sp = ScenarioPoint::of(&scens[k]);
+                let evals = (0..backends.len())
+                    .map(|bi| {
+                        let fp = slot_fingerprint(bi, &backends[bi].cache_key(&scens[k]));
+                        (cols[bi].evaluation(k, backends[bi].name(), sp.clone()), fp)
+                    })
+                    .collect();
+                BatchRow::Done { point, evals }
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -625,5 +971,84 @@ mod tests {
         // The representative is the first index; later points are hits.
         assert!(matches!(a.points[0].evals[0], PointEval::Done { cache_hit: false, .. }));
         assert!(matches!(a.points[1].evals[0], PointEval::Done { cache_hit: true, .. }));
+    }
+
+    #[test]
+    fn batched_matches_pointwise_byte_for_byte() {
+        // A sweep-shaped query exercising every equivalence hazard at once:
+        // duplicate points (gamma listed twice), whole-run validation
+        // errors (n_gpus = 100000), multiple backends, and a seq_len inner
+        // run. Three planners, one expected JSON.
+        let sweep = crate::eval::Sweep::parse(
+            "model = 1.3B\nsweep.gamma = 0,0\nsweep.n_gpus = 8,100000\n\
+             sweep.seq_len = 1024,2048,4096\n",
+        )
+        .unwrap();
+        let q = Query::from_sweep(sweep, "analytical,bounds");
+        let batched = Planner::new(2).run(&q).unwrap();
+        let pointwise = Planner::new(2).without_batch().run(&q).unwrap();
+        let legacy = Planner::new(2).without_typed_decode().run(&q).unwrap();
+        assert_eq!(batched.to_json(), pointwise.to_json());
+        assert_eq!(batched.to_json(), legacy.to_json());
+        // The hazards actually fired: errors from the oversized cluster,
+        // cache hits from the duplicated gamma value.
+        assert!(batched.counters.errors > 0, "{:?}", batched.counters);
+        assert!(batched.counters.cache_hits > 0, "{:?}", batched.counters);
+        assert!(batched.counters.feasible > 0, "{:?}", batched.counters);
+    }
+
+    #[test]
+    fn batched_chunked_matches_single_range_across_run_boundaries() {
+        // Chunk sizes coprime with the run length (3) make segments start
+        // mid-run, exercising the j0/j1 slicing and the cross-range ledger.
+        let sweep = crate::eval::Sweep::parse(
+            "model = 1.3B\nsweep.n_gpus = 16,64\nsweep.seq_len = 1024,2048,4096\n",
+        )
+        .unwrap();
+        let q = Query::from_sweep(sweep, "analytical");
+        let planner = Planner::new(2);
+        let whole = planner.run(&q).unwrap();
+        for chunk in [1usize, 2, 5] {
+            let backends = backends_for(&q.backend_spec).unwrap();
+            let n = q.space.len();
+            let mut counters = PlanCounters { points: n, ..Default::default() };
+            let mut seen = HashSet::new();
+            let mut points = Vec::new();
+            let mut start = 0;
+            while start < n {
+                let end = (start + chunk).min(n);
+                planner
+                    .execute_range(&q, &backends, start..end, &mut seen, &mut counters, &mut |p| {
+                        points.push(p);
+                        Ok(())
+                    })
+                    .unwrap();
+                start = end;
+            }
+            let ranked = rank(&q.objective, &points, q.top_k);
+            let chunked = Frontier {
+                objective: q.objective.clone(),
+                backends: backends.iter().map(|b| b.name().to_string()).collect(),
+                axes: q.space.axes.clone(),
+                constraints: Vec::new(),
+                top_k: q.top_k,
+                prune: q.prune,
+                counters,
+                ranked,
+                points,
+            };
+            assert_eq!(whole.to_json(), chunked.to_json(), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn plan_shaped_queries_stay_on_the_pointwise_path() {
+        // `Query::parse` defaults to prune = true, which the dispatch gate
+        // excludes — so bounds pruning still shows up in the counters even
+        // with batching enabled (the batched path never prunes).
+        let q = Query::parse("model = 13B\nseq_len = 4096\nsweep.n_gpus = 4,8,16\n").unwrap();
+        assert!(q.prune);
+        let f = Planner::new(2).run(&q).unwrap();
+        assert_eq!(f.counters.pruned_by_bounds, 1, "{:?}", f.counters);
     }
 }

@@ -119,6 +119,103 @@ impl Bench {
     pub fn is_quick(&self) -> bool {
         self.quick
     }
+
+    /// End-of-binary bookkeeping, returning the process exit code.
+    ///
+    /// * `FSDP_BW_BENCH_OUT=<path>` — write the [`Self::dump_json`] dump
+    ///   there (this is how CI materializes `BENCH_eval.json`).
+    /// * `FSDP_BW_BENCH_BASELINE=<path>` — compare against a previously
+    ///   dumped baseline and fail (exit 1) when any case regressed by more
+    ///   than [`REGRESSION_TOLERANCE`]. A baseline that is not a dump —
+    ///   e.g. the committed placeholder that CI has not yet replaced — is
+    ///   reported and skipped, not an error.
+    pub fn finish(&self) -> i32 {
+        let mut code = 0;
+        if let Some(path) = std::env::var_os("FSDP_BW_BENCH_OUT") {
+            let path = std::path::PathBuf::from(path);
+            let mut dump = self.dump_json();
+            dump.push('\n');
+            if let Err(e) = std::fs::write(&path, dump) {
+                eprintln!("bench: cannot write {}: {e}", path.display());
+                code = 1;
+            } else {
+                eprintln!("bench: wrote {}", path.display());
+            }
+        }
+        if let Some(path) = std::env::var_os("FSDP_BW_BENCH_BASELINE") {
+            let path = std::path::PathBuf::from(path);
+            match std::fs::read_to_string(&path) {
+                Err(e) => {
+                    eprintln!("bench: cannot read baseline {}: {e}", path.display());
+                    code = 1;
+                }
+                Ok(text) => match baseline_regressions(&self.results, &text) {
+                    Err(why) => {
+                        eprintln!("bench: baseline {} skipped: {why}", path.display());
+                    }
+                    Ok(regressions) if regressions.is_empty() => {
+                        eprintln!("bench: no regression vs baseline {}", path.display());
+                    }
+                    Ok(regressions) => {
+                        for r in &regressions {
+                            eprintln!("bench: REGRESSION {r}");
+                        }
+                        code = 1;
+                    }
+                },
+            }
+        }
+        code
+    }
+}
+
+/// Allowed fractional slowdown vs a pinned baseline before
+/// [`Bench::finish`] fails the run.
+pub const REGRESSION_TOLERANCE: f64 = 0.20;
+
+/// Compare measured results against a baseline dump (the
+/// [`Bench::dump_json`] format): one message per case whose median slowed
+/// down by more than [`REGRESSION_TOLERANCE`]. Names present on only one
+/// side are ignored, so adding or retiring cases never trips the gate;
+/// `Err` means the baseline text is not a dump at all (the caller treats
+/// that as "no baseline yet").
+pub fn baseline_regressions(
+    results: &[BenchResult],
+    baseline: &str,
+) -> Result<Vec<String>, String> {
+    let v = Json::parse(baseline).map_err(|e| format!("not JSON ({e:#})"))?;
+    let entries = v.as_arr().map_err(|_| "not a dump array (placeholder?)".to_string())?;
+    let mut base = std::collections::BTreeMap::new();
+    for e in entries {
+        if let (Ok(name), Ok(median)) = (
+            e.get("name").and_then(|j| j.as_str()),
+            e.get("median_ns").and_then(|j| j.as_f64()),
+        ) {
+            if median > 0.0 {
+                base.insert(name.to_string(), median);
+            }
+        }
+    }
+    if base.is_empty() {
+        return Err("no usable cases (placeholder?)".to_string());
+    }
+    let mut regressions = Vec::new();
+    for r in results {
+        if let Some(&was) = base.get(&r.name) {
+            let slowdown = r.median_ns / was - 1.0;
+            if slowdown > REGRESSION_TOLERANCE {
+                regressions.push(format!(
+                    "{}: {} vs baseline {} (+{:.0}% > {:.0}% tolerance)",
+                    r.name,
+                    fmt_ns(r.median_ns),
+                    fmt_ns(was),
+                    slowdown * 100.0,
+                    REGRESSION_TOLERANCE * 100.0
+                ));
+            }
+        }
+    }
+    Ok(regressions)
 }
 
 /// Human-friendly nanoseconds.
@@ -148,6 +245,35 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         let json = b.dump_json();
         assert!(json.contains("noop-ish"));
+    }
+
+    #[test]
+    fn baseline_comparison_flags_only_real_regressions() {
+        let mk = |name: &str, median: f64| BenchResult {
+            name: name.into(),
+            median_ns: median,
+            mean_ns: median,
+            stddev_ns: 0.0,
+            iters: 1,
+            items: None,
+        };
+        let baseline = Bench {
+            results: vec![mk("fast", 100.0), mk("slow", 100.0), mk("retired", 1.0)],
+            batches: 1,
+            target: 0.0,
+            quick: true,
+        }
+        .dump_json();
+        // Within tolerance, over tolerance, and a case the baseline has
+        // never seen.
+        let now = [mk("fast", 115.0), mk("slow", 130.0), mk("brand_new", 9e9)];
+        let regressions = baseline_regressions(&now, &baseline).unwrap();
+        assert_eq!(regressions.len(), 1, "{regressions:?}");
+        assert!(regressions[0].contains("slow"), "{regressions:?}");
+        // Placeholders and junk skip the gate instead of failing it.
+        assert!(baseline_regressions(&now, "{\n}").is_err());
+        assert!(baseline_regressions(&now, "[]").is_err());
+        assert!(baseline_regressions(&now, "pending CI").is_err());
     }
 
     #[test]

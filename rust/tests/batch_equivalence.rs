@@ -1,0 +1,160 @@
+//! Batched vs pointwise equivalence: the planner's batched SoA path must
+//! produce byte-identical reports, frontiers, counters and provenance to
+//! the pointwise pipeline — and both must match the pre-optimization
+//! decode (`Planner::without_typed_decode`) — across randomized sweeps,
+//! odd chunkings, duplicate values, error points, and every backend mix.
+//!
+//! These tests are the contract behind `--no-batch` being a pure A/B
+//! lever: if any of them fails, the fast path changed observable output.
+
+use fsdp_bw::eval::{
+    backends_for, run_sweep, run_sweep_streamed, Sweep, SweepFormat, SweepStreamConfig,
+};
+use fsdp_bw::query::{Planner, Query};
+
+/// Deterministic 64-bit LCG (Knuth constants) — the suite must generate
+/// the same sweeps on every run and platform.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next(&mut self, bound: usize) -> usize {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((self.0 >> 33) as usize) % bound
+    }
+}
+
+/// Axis pool: typed scalar runs (seq_len/batch inner), duplicate values
+/// (dedup + cache_hit provenance), an oversized cluster (whole-run
+/// validation errors), preset axes, and non-scalar inner axes
+/// (zero_stage/precision sort after seq_len, forcing the `Points` path).
+const AXES: &[(&str, &[&str])] = &[
+    ("seq_len", &["1024,2048,4096", "512,1024", "1024,1024,8192"]),
+    ("batch", &["1,2", "1,2,4,8"]),
+    ("n_gpus", &["8,16", "4,8,100000", "8,8"]),
+    ("gamma", &["0,0.5", "0,0,1"]),
+    ("alpha", &["0.5,0.75", "0.6"]),
+    ("zero_stage", &["3,1/2"]),
+    ("precision", &["bf16,fp32"]),
+    ("empty_cache", &["true,false"]),
+    ("cluster", &["40GB-A100-200Gbps,40GB-A100-100Gbps"]),
+    ("model", &["1.3B,13B"]),
+];
+
+fn random_sweep(rng: &mut Lcg) -> Sweep {
+    let mut text = String::from("model = 13B\nbatch = 1\n");
+    let n_axes = 2 + rng.next(2);
+    let mut picked: Vec<usize> = Vec::new();
+    while picked.len() < n_axes {
+        let i = rng.next(AXES.len());
+        if !picked.contains(&i) {
+            picked.push(i);
+        }
+    }
+    for &i in &picked {
+        let (key, specs) = AXES[i];
+        text.push_str(&format!("sweep.{key} = {}\n", specs[rng.next(specs.len())]));
+    }
+    Sweep::parse(&text).expect("generated sweeps are well-formed")
+}
+
+fn streamed(sweep: &Sweep, spec: &str, format: SweepFormat, chunk: usize, batch: bool) -> String {
+    let backends = backends_for(spec).unwrap();
+    let mut cfg = SweepStreamConfig::new(format, chunk, 2);
+    cfg.batch = batch;
+    let out = run_sweep_streamed(sweep, &backends, &cfg).unwrap();
+    out.body.expect("uninterrupted runs return a body")
+}
+
+#[test]
+fn randomized_sweeps_stream_identically_batched_and_pointwise() {
+    let mut rng = Lcg(0x9E37_79B9_7F4A_7C15);
+    for round in 0..10 {
+        let sweep = random_sweep(&mut rng);
+        for spec in ["analytical", "analytical,bounds"] {
+            // Chunk 7 is coprime with every run length in the pool, so
+            // segments start and end mid-run; 64 covers the
+            // one-chunk-holds-everything shape.
+            for chunk in [7usize, 64] {
+                for format in [SweepFormat::Json, SweepFormat::Csv] {
+                    let batched = streamed(&sweep, spec, format, chunk, true);
+                    let pointwise = streamed(&sweep, spec, format, chunk, false);
+                    assert_eq!(
+                        batched, pointwise,
+                        "round {round} spec {spec} chunk {chunk} {format:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_batched_matches_the_materialized_report() {
+    let mut rng = Lcg(7);
+    for round in 0..4 {
+        let sweep = random_sweep(&mut rng);
+        let backends = backends_for("analytical,bounds").unwrap();
+        let materialized = run_sweep(&sweep, &backends, 2);
+        assert_eq!(
+            streamed(&sweep, "analytical,bounds", SweepFormat::Json, 7, true),
+            materialized.to_json(),
+            "round {round}"
+        );
+        assert_eq!(
+            streamed(&sweep, "analytical,bounds", SweepFormat::Csv, 7, true),
+            materialized.to_csv(),
+            "round {round}"
+        );
+    }
+}
+
+#[test]
+fn frontiers_agree_across_all_three_engines() {
+    // "both" includes the simulated backend, which opts out of batching —
+    // the gate must fall back to the pointwise pipeline and the typed
+    // decoder must still be invisible.
+    let mut rng = Lcg(42);
+    for round in 0..8 {
+        let sweep = random_sweep(&mut rng);
+        for spec in ["analytical", "analytical,bounds", "both"] {
+            let q = Query::from_sweep(sweep.clone(), spec);
+            let batched = Planner::new(2).run(&q).unwrap().to_json();
+            let pointwise = Planner::new(2).without_batch().run(&q).unwrap().to_json();
+            let legacy = Planner::new(2).without_typed_decode().run(&q).unwrap().to_json();
+            assert_eq!(batched, pointwise, "round {round} spec {spec}");
+            assert_eq!(batched, legacy, "round {round} spec {spec}");
+        }
+    }
+}
+
+#[test]
+fn constrained_and_pruned_queries_agree_with_the_legacy_decode() {
+    // Constraints and pruning exclude the batched path by construction;
+    // what this pins is the typed *decoder* on the pointwise pipeline —
+    // same assignment, scenarios, error strings, frontier bytes.
+    let q = Query::parse(
+        "model = 13B\nbatch = 1\nsweep.n_gpus = 4,8,16,100000\n\
+         sweep.seq_len = 2048,4096,8192\nwhere.n_gpus = <= 16\nquery.top_k = 3\n",
+    )
+    .unwrap();
+    assert!(q.prune && !q.constraints.is_empty());
+    let default = Planner::new(2).run(&q).unwrap().to_json();
+    let no_batch = Planner::new(2).without_batch().run(&q).unwrap().to_json();
+    let legacy = Planner::new(2).without_typed_decode().run(&q).unwrap().to_json();
+    assert_eq!(default, no_batch);
+    assert_eq!(default, legacy);
+}
+
+#[test]
+fn axisless_single_point_sweeps_batch_too() {
+    let sweep = Sweep::parse("model = 1.3B\nn_gpus = 8\nseq_len = 2048\n").unwrap();
+    assert_eq!(
+        streamed(&sweep, "analytical,bounds", SweepFormat::Json, 7, true),
+        streamed(&sweep, "analytical,bounds", SweepFormat::Json, 7, false),
+    );
+    let q = Query::from_sweep(sweep, "analytical,bounds");
+    assert_eq!(
+        Planner::new(1).run(&q).unwrap().to_json(),
+        Planner::new(1).without_typed_decode().run(&q).unwrap().to_json(),
+    );
+}

@@ -40,6 +40,9 @@ fn foreign_flags_are_rejected_not_ignored() {
     // And a few more cross-subcommand strays.
     assert_rejected(&["gridsearch", "--empty-cache"], "unknown option --empty-cache");
     assert_rejected(&["bounds", "--batch", "2"], "unknown option --batch");
+    // --no-batch belongs to sweep/plan only.
+    assert_rejected(&["bounds", "--no-batch"], "unknown option --no-batch");
+    assert_rejected(&["simulate", "--no-batch"], "unknown option --no-batch");
     assert_rejected(&["experiment", "fig1", "--csv"], "unknown option --csv");
     assert_rejected(&["scenario", "x.scn", "--threads", "4"], "unknown option --threads");
 }
@@ -140,4 +143,22 @@ fn valid_invocations_still_pass() {
     let (ok, out, _) = run(&["list"]);
     assert!(ok);
     assert!(out.contains("clusters:"), "{out}");
+}
+
+#[test]
+fn no_batch_is_accepted_and_changes_no_output_bytes() {
+    let examples = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples");
+    let sweep = format!("{examples}/sweep.scn");
+    let (ok, batched, err) = run(&["sweep", &sweep, "--csv", "--backend", "analytical"]);
+    assert!(ok, "stderr: {err}");
+    let (ok, pointwise, err) =
+        run(&["sweep", &sweep, "--csv", "--backend", "analytical", "--no-batch"]);
+    assert!(ok, "stderr: {err}");
+    assert_eq!(batched, pointwise, "--no-batch must not change sweep output");
+    let plan = format!("{examples}/plan.scn");
+    let (ok, with, err) = run(&["plan", &plan, "--json", "--no-batch"]);
+    assert!(ok, "stderr: {err}");
+    let (ok, without, err) = run(&["plan", &plan, "--json"]);
+    assert!(ok, "stderr: {err}");
+    assert_eq!(with, without, "--no-batch must not change plan output");
 }
