@@ -152,6 +152,12 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("chunk", "Grid points per chunk (bounds resident memory); default 65536"),
             ("checkpoint", "Checkpoint file; rows spill to <path>.rows"),
             ("max-chunks", "Stop (checkpointed, resumable) after N chunks"),
+            (
+                "fleet",
+                "Comma-separated `fsdp-bw serve` workers (host:port,...) to scatter the \
+                 chunks across; the report is byte-identical to the local run and ranges \
+                 lost to dead workers are re-issued (recovery stats go to stderr)",
+            ),
         ],
         positionals: 1,
         variadic: false,
@@ -174,6 +180,13 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("top-k", "Ranked points to keep; overrides the file's query.top_k"),
             ("out", "Write the report to a file instead of stdout"),
             ("chunk", "Execute in chunks of N points (progress-observable); default: whole grid"),
+            (
+                "fleet",
+                "Comma-separated `fsdp-bw serve` workers (host:port,...) to scatter the \
+                 grid across; the frontier — counters, provenance and ranking included — \
+                 is byte-identical to the local run (workers use their own \
+                 --planner-threads; recovery stats go to stderr)",
+            ),
         ],
         positionals: 1,
         variadic: false,

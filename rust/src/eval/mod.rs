@@ -48,7 +48,9 @@ pub use backends::{
     backend, backends_for, Alg1Point, Analytical, BoundsEval, Searched, Simulated, BACKEND_NAMES,
 };
 pub use report::{BestPoint, SweepPointResult, SweepReport, SweepSummary};
-pub use stream::{run_sweep_streamed, SweepFormat, SweepStreamConfig, SweepStreamOutcome};
+pub use stream::{
+    run_sweep_fleet, run_sweep_streamed, SweepFormat, SweepStreamConfig, SweepStreamOutcome,
+};
 pub use sweep::{parse_axis_values, run_sweep, run_sweep_cached, GridCursor, Sweep, SweepAxis};
 pub use typed::{EvalColumns, TypedChunk, TypedSweep};
 

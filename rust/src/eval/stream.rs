@@ -164,47 +164,8 @@ pub fn run_sweep_streamed(
     let backend_names: Vec<String> = backends.iter().map(|b| b.name().to_string()).collect();
     let fingerprint = sweep_fingerprint(sweep, backends, chunk, cfg.format);
 
-    // Temp spill home for multi-chunk runs without a checkpoint — held
-    // until the report is assembled.
-    let mut _tempdir: Option<TempDir> = None;
-    let mut start_chunk = 0usize;
-    let mut writer = if cfg.resume {
-        let Some(ckpt) = &cfg.checkpoint else {
-            bail!("--resume needs --checkpoint <path>");
-        };
-        let (w, chunks_done) =
-            SweepStreamWriter::resume(ckpt, &fingerprint, sweep, &backend_names, cfg.format)?;
-        start_chunk = chunks_done;
-        w
-    } else {
-        let spill = match &cfg.checkpoint {
-            // A fresh run must not clobber hours of resumable progress
-            // because `--resume` was forgotten: starting over is an
-            // explicit `rm`, not a default.
-            Some(ckpt) if ckpt.exists() => bail!(
-                "checkpoint {} already exists — pass --resume to continue it, or delete \
-                 it (and {}) to start over",
-                ckpt.display(),
-                rows_path(ckpt).display()
-            ),
-            Some(ckpt) => Spill::file(&rows_path(ckpt), 0)?,
-            None if cfg.format != SweepFormat::Text && n > chunk => {
-                let dir = TempDir::new().context("creating spill temp dir")?;
-                let spill = Spill::file(&dir.path().join("rows"), 0)?;
-                _tempdir = Some(dir);
-                spill
-            }
-            None => Spill::mem(),
-        };
-        SweepStreamWriter {
-            format: cfg.format,
-            summary: SweepSummary::new(sweep.axes.clone(), backend_names.clone()),
-            spill,
-            checkpoint: cfg.checkpoint.clone(),
-            fingerprint: fingerprint.clone(),
-            chunk,
-        }
-    };
+    let (mut writer, start_chunk, _tempdir) =
+        setup_writer(sweep, &backend_names, &fingerprint, cfg, n, chunk)?;
 
     let mut planner = Planner::new(cfg.threads);
     if let Some(cache) = &cfg.cache {
@@ -234,20 +195,7 @@ pub fn run_sweep_streamed(
         }
         None
     } else {
-        match &cfg.out {
-            // Stream the assembly straight into the file: the document is
-            // the only O(grid) artifact and it never lives in memory.
-            Some(path) => {
-                let file = std::fs::File::create(path)
-                    .with_context(|| format!("creating report {}", path.display()))?;
-                let mut w = std::io::BufWriter::new(file);
-                writer.finish_into(&mut w)?;
-                use std::io::Write as _;
-                w.flush().with_context(|| format!("writing report {}", path.display()))?;
-                None
-            }
-            None => Some(writer.finish()?),
-        }
+        assemble_body(writer, &cfg.out)?
     };
     Ok(SweepStreamOutcome {
         n_points: n,
@@ -260,6 +208,218 @@ pub fn run_sweep_streamed(
         body,
         checkpoint: cfg.checkpoint.clone(),
     })
+}
+
+/// Run a sweep across a worker fleet ([`crate::fleet`]): the coordinator
+/// scatters the grid's chunk ranges to the configured workers, folds the
+/// gathered partials through the same render-and-drop writer as
+/// [`run_sweep_streamed`], and produces **byte-identical** reports and
+/// interoperable checkpoints — a run interrupted on one fleet (or a
+/// single host) resumes on another.
+///
+/// `source` is the sweep file's original text (it is shipped verbatim to
+/// the workers, whose own parser defines the grid); `backend_spec` is the
+/// CLI backend selection, resolved locally only to name the columns and
+/// fingerprint the run. Fleet checkpoints additionally carry a `ranges`
+/// ledger — one fingerprint per completed chunk — so a fleet resume
+/// refuses a checkpoint whose completed prefix was produced by different
+/// fleet parameters (source text, backend, chunking or batch mode).
+pub fn run_sweep_fleet(
+    sweep: &Sweep,
+    source: &str,
+    backend_spec: &str,
+    cfg: &SweepStreamConfig,
+    fleet: &crate::fleet::FleetConfig,
+) -> Result<(SweepStreamOutcome, crate::fleet::FleetStats)> {
+    use crate::fleet::{range_fingerprint, run_fingerprint, scatter_gather, ScatterSpec};
+    use crate::fleet::wire::{RangeMode, RangeRequest};
+
+    let backends = super::backends_for(backend_spec)?;
+    let query = Query::from_sweep(sweep.clone(), "");
+    let n = query.space.len();
+    let chunk = cfg.chunk.max(1);
+    let backend_names: Vec<String> = backends.iter().map(|b| b.name().to_string()).collect();
+    let fingerprint = sweep_fingerprint(sweep, &backends, chunk, cfg.format);
+    let (mut writer, start_chunk, _tempdir) =
+        setup_writer(sweep, &backend_names, &fingerprint, cfg, n, chunk)?;
+
+    let req = RangeRequest {
+        mode: RangeMode::Sweep,
+        source: source.to_string(),
+        backend: backend_spec.to_string(),
+        top_k: 0,
+        prune: false,
+        batch: cfg.batch,
+        threads: fleet.threads,
+        start: 0,
+        end: 0,
+    };
+    let run_fp = run_fingerprint(&req, chunk);
+    let total_chunks = n.div_ceil(chunk);
+    let start_chunk = start_chunk.min(total_chunks);
+    // The completed prefix this run inherits, as range fingerprints. A
+    // resumed *fleet* checkpoint must agree entry for entry — same source
+    // bytes, backend, chunking and batch mode — before new ranges are
+    // scattered; a single-process checkpoint (no ledger) is adopted as-is,
+    // since the sweep fingerprint already vouches for its rows.
+    let expected: Vec<String> = (0..start_chunk)
+        .map(|i| {
+            let s = i * chunk;
+            let e = ((i + 1) * chunk).min(n);
+            format!("{:032x}", range_fingerprint(run_fp, s, e))
+        })
+        .collect();
+    if let Some(stored) = &writer.fleet_ranges {
+        for (i, (got, want)) in stored.iter().zip(&expected).enumerate() {
+            if got != want {
+                bail!(
+                    "checkpoint range ledger entry {i} was produced by a different fleet \
+                     run ({got}, expected {want}) — the sweep source text, backend, \
+                     --chunk and batch mode must all match the interrupted fleet run"
+                );
+            }
+        }
+    }
+    writer.fleet_ranges = Some(expected);
+
+    let fleet_cfg = {
+        let mut f = fleet.clone();
+        f.chunk = chunk;
+        f
+    };
+    let spec = ScatterSpec {
+        req: &req,
+        n,
+        start_chunk,
+        max_chunks: cfg.max_chunks,
+        cancel: cfg.cancel.clone(),
+    };
+    let mut chunks_done = start_chunk;
+    let mut peak = 0usize;
+    let (stats, interrupted) = scatter_gather(&spec, &fleet_cfg, &mut |partial| {
+        peak = peak.max(partial.end - partial.start);
+        for (p, _fps) in partial.points {
+            writer.point(&query, p)?;
+        }
+        chunks_done += 1;
+        if let Some(ledger) = writer.fleet_ranges.as_mut() {
+            ledger.push(format!(
+                "{:032x}",
+                range_fingerprint(run_fp, partial.start, partial.end)
+            ));
+        }
+        let progress = StreamProgress {
+            points: n,
+            done: partial.end,
+            chunks_done,
+            total_chunks,
+            ..StreamProgress::default()
+        };
+        writer.chunk_done(&progress)
+    })?;
+
+    let n_done = writer.summary.n_points();
+    let n_errors = writer.summary.n_errors();
+    let body = if interrupted {
+        if cfg.checkpoint.is_none() {
+            bail!("sweep interrupted without --checkpoint — progress cannot be resumed");
+        }
+        None
+    } else {
+        assemble_body(writer, &cfg.out)?
+    };
+    Ok((
+        SweepStreamOutcome {
+            n_points: n,
+            n_done,
+            n_errors,
+            chunks_done,
+            total_chunks,
+            peak_resident_points: peak,
+            interrupted,
+            body,
+            checkpoint: cfg.checkpoint.clone(),
+        },
+        stats,
+    ))
+}
+
+/// Build (fresh) or rebuild (`--resume`) the render-and-drop writer the
+/// local and fleet sweep drivers share. Returns the writer, the first
+/// chunk to execute, and the temp spill home (held until assembly).
+fn setup_writer(
+    sweep: &Sweep,
+    backend_names: &[String],
+    fingerprint: &str,
+    cfg: &SweepStreamConfig,
+    n: usize,
+    chunk: usize,
+) -> Result<(SweepStreamWriter, usize, Option<TempDir>)> {
+    if cfg.resume {
+        let Some(ckpt) = &cfg.checkpoint else {
+            bail!("--resume needs --checkpoint <path>");
+        };
+        let (w, chunks_done) =
+            SweepStreamWriter::resume(ckpt, fingerprint, sweep, backend_names, cfg.format)?;
+        return Ok((w, chunks_done, None));
+    }
+    // Temp spill home for multi-chunk runs without a checkpoint — held
+    // until the report is assembled.
+    let mut tempdir: Option<TempDir> = None;
+    let spill = match &cfg.checkpoint {
+        // A fresh run must not clobber hours of resumable progress
+        // because `--resume` was forgotten: starting over is an
+        // explicit `rm`, not a default.
+        Some(ckpt) if ckpt.exists() => bail!(
+            "checkpoint {} already exists — pass --resume to continue it, or delete \
+             it (and {}) to start over",
+            ckpt.display(),
+            rows_path(ckpt).display()
+        ),
+        Some(ckpt) => Spill::file(&rows_path(ckpt), 0)?,
+        None if cfg.format != SweepFormat::Text && n > chunk => {
+            let dir = TempDir::new().context("creating spill temp dir")?;
+            let spill = Spill::file(&dir.path().join("rows"), 0)?;
+            tempdir = Some(dir);
+            spill
+        }
+        None => Spill::mem(),
+    };
+    Ok((
+        SweepStreamWriter {
+            format: cfg.format,
+            summary: SweepSummary::new(sweep.axes.clone(), backend_names.to_vec()),
+            spill,
+            checkpoint: cfg.checkpoint.clone(),
+            fingerprint: fingerprint.to_string(),
+            chunk,
+            fleet_ranges: None,
+        },
+        0,
+        tempdir,
+    ))
+}
+
+/// Assemble the final report: streamed into `out` (no in-memory body) or
+/// returned as one `String` — shared by the local and fleet drivers.
+fn assemble_body(
+    writer: SweepStreamWriter,
+    out: &Option<PathBuf>,
+) -> Result<Option<String>> {
+    match out {
+        // Stream the assembly straight into the file: the document is
+        // the only O(grid) artifact and it never lives in memory.
+        Some(path) => {
+            let file = std::fs::File::create(path)
+                .with_context(|| format!("creating report {}", path.display()))?;
+            let mut w = std::io::BufWriter::new(file);
+            writer.finish_into(&mut w)?;
+            use std::io::Write as _;
+            w.flush().with_context(|| format!("writing report {}", path.display()))?;
+            Ok(None)
+        }
+        None => Ok(Some(writer.finish()?)),
+    }
 }
 
 /// The rows spill lives next to its checkpoint.
@@ -330,6 +490,12 @@ struct SweepStreamWriter {
     checkpoint: Option<PathBuf>,
     fingerprint: String,
     chunk: usize,
+    /// Fleet runs only ([`run_sweep_fleet`]): one range fingerprint per
+    /// completed chunk, persisted under the checkpoint's `ranges` key so
+    /// a fleet resume can prove the inherited prefix came from the same
+    /// fleet parameters. `None` for single-process runs — their
+    /// checkpoint bytes are unchanged by this field's existence.
+    fleet_ranges: Option<Vec<String>>,
 }
 
 impl SweepStreamWriter {
@@ -382,6 +548,18 @@ impl SweepStreamWriter {
         }
         let spill = Spill::file(&rows, rows_bytes)?;
         let chunk = v.get("chunk")?.as_usize()?;
+        // Fleet checkpoints carry a per-chunk range-fingerprint ledger;
+        // single-process ones don't (and resume fine without it).
+        let fleet_ranges = match v.opt("ranges") {
+            Some(ledger) => {
+                let mut list = Vec::new();
+                for e in ledger.as_arr().context("checkpoint ranges ledger")? {
+                    list.push(e.as_str().context("checkpoint range entry")?.to_string());
+                }
+                Some(list)
+            }
+            None => None,
+        };
         Ok((
             SweepStreamWriter {
                 format,
@@ -390,6 +568,7 @@ impl SweepStreamWriter {
                 checkpoint: Some(ckpt.to_path_buf()),
                 fingerprint: fingerprint.to_string(),
                 chunk,
+                fleet_ranges,
             },
             chunks_done,
         ))
@@ -400,7 +579,7 @@ impl SweepStreamWriter {
     fn save_checkpoint(&mut self, progress: &StreamProgress) -> Result<()> {
         let Some(ckpt) = self.checkpoint.clone() else { return Ok(()) };
         self.spill.sync()?;
-        let doc = obj(vec![
+        let mut fields = vec![
             ("version", Json::Num(CHECKPOINT_VERSION)),
             ("fingerprint", Json::Str(self.fingerprint.clone())),
             ("chunk", num(self.chunk as f64)),
@@ -410,7 +589,14 @@ impl SweepStreamWriter {
             ("done", num(progress.done as f64)),
             ("rows_bytes", num(self.spill.len() as f64)),
             ("summary", self.summary.state_json()),
-        ]);
+        ];
+        if let Some(ledger) = &self.fleet_ranges {
+            fields.push((
+                "ranges",
+                Json::Arr(ledger.iter().map(|fp| Json::Str(fp.clone())).collect()),
+            ));
+        }
+        let doc = obj(fields);
         let tmp = PathBuf::from(format!("{}.tmp", ckpt.display()));
         std::fs::write(&tmp, doc.pretty())
             .with_context(|| format!("writing checkpoint {}", tmp.display()))?;

@@ -1,0 +1,724 @@
+//! The distributed sweep fabric — scatter chunk ranges across serve
+//! workers, gather partials online, survive worker loss.
+//!
+//! A single host walks a million-point grid with the chunked engine
+//! ([`crate::query::stream`]); the fleet walks the *same tiling* across N
+//! workers. The coordinator ships the query **source text** plus a range
+//! `start..end` to each worker (`POST /v1/ranges`, [`wire`]); a worker
+//! rebuilds the query, runs [`crate::query::Planner::execute_range`] with
+//! a fresh ledger, and answers with the folded partial: every
+//! [`crate::query::PlannedPoint`] of the range with its dedup
+//! fingerprints, the range-local [`crate::query::PlanCounters`], and a
+//! serialized rank accumulator. The coordinator gathers partials as they
+//! land, folds them **in range order**, and reassembles exactly what the
+//! single-process chunked run would have produced:
+//!
+//! * the rank accumulator merge (`RankAccum::merge`) is associative and
+//!   commutative, so partial fronts can be folded in any gather order;
+//! * `evaluated`/`cache_hits` counters and per-slot `cache_hit`
+//!   provenance are **replayed** against a coordinator-global fingerprint
+//!   ledger in index order — a worker cannot see duplicates that first
+//!   occurred on another worker's range, so the coordinator reclassifies
+//!   every slot exactly as one shared `seen` set would have;
+//! * the output report is therefore **byte-identical** to the
+//!   single-process run (asserted in `tests/fleet.rs`).
+//!
+//! Fault tolerance is a range ledger (`Pending → Issued → Done`, one
+//! entry per chunk): a failed or timed-out range goes back to pending and
+//! is re-issued to any live worker; a range overdue past
+//! [`FleetConfig::deadline`] is stolen from its (possibly hung) worker;
+//! a completion for a range already `Done` is dropped — every range folds
+//! **exactly once**, so nothing is double-counted no matter how many
+//! workers die or how often a range is re-sent. The [`FleetStats`]
+//! re-issue/duplicate/failure counters make the recovery path observable
+//! without touching the deterministic report bytes (they go to stderr).
+
+pub mod wire;
+
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::eval::{backends_for, Sweep};
+use crate::query::cache::EvalCache;
+use crate::query::frontier::{rank, RankAccum};
+use crate::query::{Frontier, PlanCounters, PlannedPoint, Planner, PointEval, Query};
+use crate::serve::client::{self, ClientConfig};
+use crate::util::json::Json;
+
+/// Re-issue a range whose worker has not answered within this long.
+/// Generous: deadline stealing exists for *hung* workers — dead ones fail
+/// their TCP connection and re-queue immediately.
+pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Per-request socket timeout for range execution (a cold multi-thousand
+/// point range on a slow backend is real work).
+pub const DEFAULT_RANGE_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Consecutive transport failures after which a worker is retired (as
+/// long as at least one other worker stays alive).
+const RETIRE_AFTER: u32 = 3;
+
+/// How the coordinator runs a fleet.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Worker addresses, `host:port` each (see [`parse_hosts`]).
+    pub hosts: Vec<String>,
+    /// Points per scattered range — the same tiling the single-process
+    /// chunked engine uses, so outputs align byte for byte.
+    pub chunk: usize,
+    /// Worker-side planner threads (0 = each worker's own default).
+    pub threads: usize,
+    /// Allow workers' batched evaluation path (`--no-batch` clears it).
+    pub batch: bool,
+    /// Steal-and-re-issue deadline for unacknowledged ranges.
+    pub deadline: Duration,
+    /// Socket policy for range requests.
+    pub client: ClientConfig,
+    /// Gathered-but-unfolded partials to hold at most (0 = derive from
+    /// the host count). Bounds coordinator memory when one straggler
+    /// blocks the in-order fold.
+    pub max_buffered: usize,
+}
+
+impl FleetConfig {
+    pub fn new(hosts: Vec<String>) -> FleetConfig {
+        FleetConfig {
+            hosts,
+            chunk: crate::query::DEFAULT_CHUNK,
+            threads: 0,
+            batch: true,
+            deadline: DEFAULT_DEADLINE,
+            client: ClientConfig { timeout: DEFAULT_RANGE_TIMEOUT, ..ClientConfig::default() },
+            max_buffered: 0,
+        }
+    }
+}
+
+/// What the recovery machinery did — observability for the CI smoke test
+/// and the CLI's stderr summary; never part of the report bytes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    /// Ranges scattered this run (the chunk count).
+    pub ranges: usize,
+    /// Issues beyond each range's first: failure re-queues that were
+    /// handed to another worker plus deadline steals.
+    pub reissued: usize,
+    /// Completions for ranges already folded — dropped, never
+    /// double-counted.
+    pub duplicates_dropped: usize,
+    /// Failed range requests (dead peer, HTTP error, bad partial).
+    pub worker_failures: usize,
+}
+
+impl FleetStats {
+    /// One human-readable line for stderr (greppable: `re-issued`).
+    pub fn summary(&self, hosts: usize) -> String {
+        format!(
+            "fleet: {} ranges over {} workers — {} re-issued, {} duplicate completions \
+             dropped, {} worker failures",
+            self.ranges, hosts, self.reissued, self.duplicates_dropped, self.worker_failures
+        )
+    }
+}
+
+/// Parse and validate a `--fleet` host list: comma-separated `host:port`
+/// entries, each with a non-empty host and a numeric port. No DNS is done
+/// here — validation must not depend on the network.
+pub fn parse_hosts(spec: &str) -> Result<Vec<String>> {
+    let mut hosts = Vec::new();
+    for raw in spec.split(',') {
+        let h = raw.trim();
+        if h.is_empty() {
+            bail!("--fleet: empty worker entry in {spec:?}");
+        }
+        let Some((host, port)) = h.rsplit_once(':') else {
+            bail!("--fleet: worker {h:?} must be host:port");
+        };
+        if host.is_empty() {
+            bail!("--fleet: worker {h:?} has an empty host");
+        }
+        if port.parse::<u16>().is_err() {
+            bail!("--fleet: worker {h:?} has an invalid port {port:?}");
+        }
+        hosts.push(h.to_string());
+    }
+    Ok(hosts)
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Rebuild the query a shipped range request describes. The worker's own
+/// parser defines grid order, so coordinator and workers agree on the
+/// tiling by construction.
+pub fn build_query(req: &wire::RangeRequest) -> Result<Query> {
+    let mut q = match req.mode {
+        wire::RangeMode::Sweep => {
+            let sweep = Sweep::parse(&req.source).context("parsing shipped sweep source")?;
+            Query::from_sweep(sweep, &req.backend)
+        }
+        wire::RangeMode::Plan => {
+            let mut q = Query::parse(&req.source).context("parsing shipped query source")?;
+            q.backend_spec = req.backend.clone();
+            q
+        }
+    };
+    q.top_k = req.top_k;
+    q.prune = req.prune;
+    Ok(q)
+}
+
+/// Execute one range request — the whole worker side of the protocol,
+/// shared by the serve endpoint and in-process tests. Runs the planner
+/// pipeline over `start..end` with a *fresh* dedup ledger (cross-range
+/// duplicates are the coordinator's replay to classify) and returns the
+/// encoded partial.
+pub fn execute_range_request(
+    req: &wire::RangeRequest,
+    cache: Option<Arc<EvalCache>>,
+) -> Result<Json> {
+    let q = build_query(req)?;
+    let n = q.space.len();
+    ensure!(req.end <= n, "range {}..{} exceeds the {n}-point grid", req.start, req.end);
+    let backends = backends_for(&q.backend_spec)?;
+    let mut planner =
+        if req.threads == 0 { Planner::auto() } else { Planner::new(req.threads) };
+    if let Some(cache) = cache {
+        planner = planner.with_cache(cache);
+    }
+    if !req.batch {
+        planner = planner.without_batch();
+    }
+    let mut seen: HashSet<u128> = HashSet::new();
+    let mut counters = PlanCounters { points: req.end - req.start, ..Default::default() };
+    let mut accum = RankAccum::new(&q.objective, q.top_k);
+    let mut points: Vec<Json> = Vec::with_capacity(req.end - req.start);
+    planner.execute_range(
+        &q,
+        &backends,
+        req.start..req.end,
+        &mut seen,
+        &mut counters,
+        &mut |p, fps| {
+            accum.add(&p);
+            points.push(wire::planned_point_json(&p, fps));
+            Ok(())
+        },
+    )?;
+    let names: Vec<Json> =
+        backends.iter().map(|b| Json::Str(b.name().to_string())).collect();
+    Ok(wire::partial_json(req.start, req.end, names, &counters, &accum, points))
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprints (checkpoint range ledger)
+// ---------------------------------------------------------------------------
+
+const FNV128_OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+const FNV128_PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013B;
+
+fn fnv128(mut h: u128, bytes: &[u8]) -> u128 {
+    for b in bytes {
+        h ^= *b as u128;
+        h = h.wrapping_mul(FNV128_PRIME);
+    }
+    h
+}
+
+/// Fingerprint of everything that shapes a fleet run's scatter: the
+/// source text, mode, effective overrides, and the chunk tiling. FNV-1a,
+/// 128-bit — stable across builds, unlike the per-slot dedup fingerprints
+/// (which never outlive one run).
+pub fn run_fingerprint(req: &wire::RangeRequest, chunk: usize) -> u128 {
+    let mut h = FNV128_OFFSET;
+    let mode = match req.mode {
+        wire::RangeMode::Sweep => "sweep",
+        wire::RangeMode::Plan => "plan",
+    };
+    for part in [mode, &req.source, &req.backend] {
+        h = fnv128(h, part.as_bytes());
+        h = fnv128(h, &[0x1f]);
+    }
+    for v in [req.top_k as u64, req.prune as u64, req.batch as u64, chunk as u64] {
+        h = fnv128(h, &v.to_le_bytes());
+    }
+    h
+}
+
+/// The range ledger key: one completed chunk of one fleet run.
+pub fn range_fingerprint(run: u128, start: usize, end: usize) -> u128 {
+    let mut h = fnv128(run, &(start as u64).to_le_bytes());
+    h = fnv128(h, &(end as u64).to_le_bytes());
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator engine
+// ---------------------------------------------------------------------------
+
+/// One scatter-gather run over the grid's chunk tiling. `start_chunk`
+/// ranges are assumed already folded by a previous (resumed) run.
+pub(crate) struct ScatterSpec<'a> {
+    /// The request template; `start`/`end` are filled per range.
+    pub req: &'a wire::RangeRequest,
+    /// Grid size.
+    pub n: usize,
+    /// Chunks already completed by a previous run (resume).
+    pub start_chunk: usize,
+    /// Stop (interrupted, resumable) after this many chunks this run.
+    pub max_chunks: Option<usize>,
+    /// Cooperative cancellation, checked between folds.
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+enum RangeState {
+    Pending,
+    Issued { at: Instant, epoch: u64 },
+    Done,
+}
+
+struct Shared {
+    /// Range states, indexed by `chunk id - first`.
+    states: Vec<RangeState>,
+    /// Failed attempts per range (fatal once exhausted).
+    attempts: Vec<u32>,
+    /// Chunk ids awaiting (re-)issue.
+    pending: VecDeque<usize>,
+    /// Completed partials not yet folded (out-of-order arrivals).
+    buffered: BTreeMap<usize, wire::RangePartial>,
+    /// Ranges not yet `Done`.
+    remaining: usize,
+    /// Monotonic issue counter — a failed worker only re-queues a range
+    /// it still owns (same epoch), never one already stolen.
+    epoch: u64,
+    hosts_alive: usize,
+    /// Cancel / fold-error: workers drop everything and exit.
+    stopping: bool,
+    /// Unrecoverable protocol or exhaustion error.
+    failure: Option<String>,
+    stats: FleetStats,
+}
+
+struct Ctx<'a> {
+    shared: Mutex<Shared>,
+    /// Workers wait here for work or buffer space.
+    work_cv: Condvar,
+    /// The fold loop waits here for the next in-order partial.
+    fold_cv: Condvar,
+    req: &'a wire::RangeRequest,
+    client: &'a ClientConfig,
+    deadline: Duration,
+    chunk: usize,
+    n: usize,
+    first: usize,
+    max_buffered: usize,
+    max_attempts: u32,
+}
+
+/// Scatter ranges `[start_chunk, …)` of the grid's tiling across the
+/// fleet, deliver each gathered partial to `on_range` **in range order**,
+/// and return the recovery stats plus whether the run stopped early
+/// (`max_chunks` or cancel).
+pub(crate) fn scatter_gather(
+    spec: &ScatterSpec,
+    cfg: &FleetConfig,
+    on_range: &mut dyn FnMut(wire::RangePartial) -> Result<()>,
+) -> Result<(FleetStats, bool)> {
+    ensure!(!cfg.hosts.is_empty(), "a fleet needs at least one worker");
+    let chunk = cfg.chunk.max(1);
+    let total = spec.n.div_ceil(chunk);
+    let first = spec.start_chunk.min(total);
+    let last = match spec.max_chunks {
+        Some(m) => first.saturating_add(m).min(total),
+        None => total,
+    };
+    let mut stats = FleetStats { ranges: last - first, ..FleetStats::default() };
+    if first >= last {
+        return Ok((stats, last < total));
+    }
+    let ctx = Ctx {
+        shared: Mutex::new(Shared {
+            states: (first..last).map(|_| RangeState::Pending).collect(),
+            attempts: vec![0; last - first],
+            pending: (first..last).collect(),
+            buffered: BTreeMap::new(),
+            remaining: last - first,
+            epoch: 0,
+            hosts_alive: cfg.hosts.len(),
+            stopping: false,
+            failure: None,
+            stats,
+        }),
+        work_cv: Condvar::new(),
+        fold_cv: Condvar::new(),
+        req: spec.req,
+        client: &cfg.client,
+        deadline: cfg.deadline,
+        chunk,
+        n: spec.n,
+        first,
+        max_buffered: if cfg.max_buffered == 0 {
+            cfg.hosts.len() * 2 + 2
+        } else {
+            cfg.max_buffered
+        },
+        max_attempts: (cfg.hosts.len() as u32) * 3 + 6,
+    };
+
+    let mut fold_err: Option<anyhow::Error> = None;
+    let mut cancelled = false;
+    std::thread::scope(|s| {
+        let ctx_ref = &ctx;
+        for host in &cfg.hosts {
+            let host = host.as_str();
+            s.spawn(move || host_loop(host, ctx_ref));
+        }
+        // The in-order fold runs on this thread while workers gather.
+        let mut next = first;
+        let mut g = ctx.shared.lock().unwrap();
+        while next < last {
+            if let Some(cancel) = &spec.cancel {
+                if cancel.load(Ordering::SeqCst) {
+                    cancelled = true;
+                    g.stopping = true;
+                    ctx.work_cv.notify_all();
+                    break;
+                }
+            }
+            if g.failure.is_some() {
+                break;
+            }
+            if let Some(partial) = g.buffered.remove(&next) {
+                drop(g);
+                let folded = on_range(partial);
+                g = ctx.shared.lock().unwrap();
+                ctx.work_cv.notify_all();
+                if let Err(e) = folded {
+                    fold_err = Some(e);
+                    g.stopping = true;
+                    ctx.work_cv.notify_all();
+                    break;
+                }
+                next += 1;
+                continue;
+            }
+            g = ctx.fold_cv.wait_timeout(g, Duration::from_millis(100)).unwrap().0;
+        }
+    });
+
+    let shared = ctx.shared.into_inner().unwrap();
+    if let Some(e) = fold_err {
+        return Err(e);
+    }
+    if let Some(msg) = shared.failure {
+        bail!("{msg}");
+    }
+    stats = shared.stats;
+    stats.ranges = last - first;
+    Ok((stats, cancelled || last < total))
+}
+
+/// One worker's drive loop: claim a range (pending first, then overdue
+/// steals), post it, bank the partial or re-queue on failure.
+fn host_loop(host: &str, ctx: &Ctx) {
+    let mut consecutive = 0u32;
+    loop {
+        let (id, my_epoch) = {
+            let mut g = ctx.shared.lock().unwrap();
+            loop {
+                if g.remaining == 0 || g.stopping || g.failure.is_some() {
+                    return;
+                }
+                let mut job = None;
+                if g.buffered.len() < ctx.max_buffered {
+                    if let Some(id) = g.pending.pop_front() {
+                        job = Some(id);
+                    } else {
+                        // Nothing pending but ranges remain: steal one
+                        // that has been in flight past the deadline (its
+                        // worker is hung or silently gone).
+                        let now = Instant::now();
+                        let overdue = g.states.iter().position(|st| {
+                            matches!(st, RangeState::Issued { at, .. }
+                                     if now.duration_since(*at) > ctx.deadline)
+                        });
+                        if let Some(ix) = overdue {
+                            g.stats.reissued += 1;
+                            job = Some(ctx.first + ix);
+                        }
+                    }
+                }
+                if let Some(id) = job {
+                    g.epoch += 1;
+                    let epoch = g.epoch;
+                    g.states[id - ctx.first] = RangeState::Issued { at: Instant::now(), epoch };
+                    break (id, epoch);
+                }
+                g = ctx.work_cv.wait_timeout(g, Duration::from_millis(50)).unwrap().0;
+            }
+        };
+
+        let start = id * ctx.chunk;
+        let end = ((id + 1) * ctx.chunk).min(ctx.n);
+        let result = post_range(host, ctx.req, start, end, ctx.client);
+
+        let mut g = ctx.shared.lock().unwrap();
+        let ix = id - ctx.first;
+        match result {
+            Ok(partial) => {
+                consecutive = 0;
+                if matches!(g.states[ix], RangeState::Done) {
+                    // A steal raced a slow-but-alive worker: the range
+                    // already folded once; this copy is dropped.
+                    g.stats.duplicates_dropped += 1;
+                } else {
+                    g.states[ix] = RangeState::Done;
+                    g.remaining -= 1;
+                    g.buffered.insert(id, partial);
+                    ctx.fold_cv.notify_all();
+                    ctx.work_cv.notify_all();
+                }
+            }
+            Err(e) => {
+                g.stats.worker_failures += 1;
+                consecutive += 1;
+                let still_mine = matches!(
+                    g.states[ix],
+                    RangeState::Issued { epoch, .. } if epoch == my_epoch
+                );
+                if still_mine {
+                    g.states[ix] = RangeState::Pending;
+                    g.pending.push_front(id);
+                    g.stats.reissued += 1;
+                    g.attempts[ix] = g.attempts[ix].saturating_add(1);
+                    if g.attempts[ix] > ctx.max_attempts {
+                        g.failure = Some(format!(
+                            "range {start}..{end} failed on every attempt; last error \
+                             from {host}: {e:#}"
+                        ));
+                        ctx.fold_cv.notify_all();
+                        ctx.work_cv.notify_all();
+                        return;
+                    }
+                    ctx.work_cv.notify_all();
+                }
+                if consecutive >= RETIRE_AFTER && g.hosts_alive > 1 {
+                    // This worker looks dead; the survivors own its share.
+                    // The last worker never retires — it keeps trying
+                    // until the per-range attempt budget gives out.
+                    g.hosts_alive -= 1;
+                    ctx.work_cv.notify_all();
+                    ctx.fold_cv.notify_all();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Post one range to one worker and decode + validate the partial.
+fn post_range(
+    host: &str,
+    template: &wire::RangeRequest,
+    start: usize,
+    end: usize,
+    client_cfg: &ClientConfig,
+) -> Result<wire::RangePartial> {
+    let mut req = template.clone();
+    req.start = start;
+    req.end = end;
+    let resp =
+        client::request_with(host, "POST", "/v1/ranges", Some(&req.json().dump()), client_cfg)
+            .with_context(|| format!("posting range {start}..{end} to {host}"))?;
+    if resp.status != 200 {
+        bail!(
+            "worker {host} rejected range {start}..{end}: HTTP {} — {}",
+            resp.status,
+            resp.body.trim()
+        );
+    }
+    let partial = wire::RangePartial::parse(&resp.body)
+        .with_context(|| format!("decoding range {start}..{end} partial from {host}"))?;
+    ensure!(
+        partial.start == start && partial.end == end,
+        "worker {host} answered range {}..{} for request {start}..{end}",
+        partial.start,
+        partial.end
+    );
+    Ok(partial)
+}
+
+// ---------------------------------------------------------------------------
+// Plan mode
+// ---------------------------------------------------------------------------
+
+/// Run a plan across the fleet and reassemble the [`Frontier`] —
+/// byte-identical to [`Planner::run`] on the same query (the chunked
+/// tiling, the merged accumulator, and the dedup replay are all exact).
+///
+/// `source` is the original query file text; `q` is that text parsed
+/// *plus any CLI overrides* (backend/top-k/prune), which travel explicitly
+/// in the range requests.
+pub fn run_fleet_plan(
+    source: &str,
+    q: &Query,
+    cfg: &FleetConfig,
+) -> Result<(Frontier, FleetStats)> {
+    let backends = backends_for(&q.backend_spec)?;
+    let names: Vec<String> = backends.iter().map(|b| b.name().to_string()).collect();
+    let n = q.space.len();
+    let req = wire::RangeRequest {
+        mode: wire::RangeMode::Plan,
+        source: source.to_string(),
+        backend: q.backend_spec.clone(),
+        top_k: q.top_k,
+        prune: q.prune,
+        batch: cfg.batch,
+        threads: cfg.threads,
+        start: 0,
+        end: 0,
+    };
+    let spec = ScatterSpec { req: &req, n, start_chunk: 0, max_chunks: None, cancel: None };
+    let mut accum = RankAccum::new(&q.objective, q.top_k);
+    let mut counters = PlanCounters::default();
+    let mut points: Vec<PlannedPoint> = Vec::with_capacity(n);
+    let mut seen: HashSet<u128> = HashSet::new();
+    let (mut evaluated, mut cache_hits) = (0usize, 0usize);
+    let (stats, _interrupted) = scatter_gather(&spec, cfg, &mut |partial| {
+        if partial.backends != names {
+            bail!(
+                "worker resolved backends {:?}, coordinator expected {:?} — mixed builds?",
+                partial.backends,
+                names
+            );
+        }
+        accum.merge(partial.accum(&q.objective, q.top_k)?);
+        counters.absorb(&partial.counters);
+        for (mut p, fps) in partial.points {
+            // Global dedup replay: workers ran disjoint ranges with fresh
+            // ledgers, so only the coordinator can see which slot is the
+            // grid-order-first occurrence of its key. Walking points in
+            // index order reproduces the shared-`seen` classification of
+            // a single-process run exactly.
+            for (slot, fp) in p.evals.iter_mut().zip(&fps) {
+                if let PointEval::Done { cache_hit, .. } = slot {
+                    if seen.insert(*fp) {
+                        evaluated += 1;
+                        *cache_hit = false;
+                    } else {
+                        cache_hits += 1;
+                        *cache_hit = true;
+                    }
+                }
+            }
+            points.push(p);
+        }
+        Ok(())
+    })?;
+    counters.evaluated = evaluated;
+    counters.cache_hits = cache_hits;
+    counters.points = n;
+    let ranked = accum.finish();
+    debug_assert_eq!(
+        ranked,
+        rank(&q.objective, &points, q.top_k),
+        "merged accumulator must equal a sequential fold over the reassembled points"
+    );
+    let frontier = Frontier {
+        objective: q.objective.clone(),
+        backends: names,
+        axes: q.space.axes.clone(),
+        constraints: q.constraints.iter().map(|c| c.render()).collect(),
+        top_k: q.top_k,
+        prune: q.prune,
+        counters,
+        ranked,
+        points,
+    };
+    Ok((frontier, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_lists_validate_strictly() {
+        assert_eq!(
+            parse_hosts("127.0.0.1:8080, localhost:9000").unwrap(),
+            vec!["127.0.0.1:8080".to_string(), "localhost:9000".to_string()]
+        );
+        assert_eq!(parse_hosts("[::1]:8080").unwrap(), vec!["[::1]:8080".to_string()]);
+        for bad in [
+            "",
+            " ",
+            ",",
+            "host1:8080,",
+            "host1:8080,,host2:8080",
+            "host-without-port",
+            ":8080",
+            "host:not-a-port",
+            "host:99999",
+            "host:80:80x",
+        ] {
+            assert!(parse_hosts(bad).is_err(), "must reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn worker_executes_a_range_and_the_wire_round_trips_it() {
+        let req = wire::RangeRequest {
+            mode: wire::RangeMode::Plan,
+            source: "model = 13B\nbatch = 1\nsweep.n_gpus = 8,16\nsweep.seq_len = \
+                     2048,4096\nquery.top_k = 2\n"
+                .to_string(),
+            backend: "analytical".to_string(),
+            top_k: 2,
+            prune: false,
+            batch: true,
+            threads: 2,
+            start: 1,
+            end: 3,
+        };
+        let body = execute_range_request(&req, None).unwrap().dump();
+        let partial = wire::RangePartial::parse(&body).unwrap();
+        assert_eq!((partial.start, partial.end), (1, 3));
+        assert_eq!(partial.backends, vec!["analytical".to_string()]);
+        assert_eq!(partial.counters.points, 2);
+        assert_eq!(partial.points.len(), 2);
+        assert_eq!(partial.points[0].0.index, 1);
+        assert_eq!(partial.points[1].0.index, 2);
+        // Out-of-grid ranges are refused, not truncated.
+        let mut over = req.clone();
+        over.start = 3;
+        over.end = 9;
+        assert!(execute_range_request(&over, None).is_err());
+    }
+
+    #[test]
+    fn range_fingerprints_separate_runs_and_ranges() {
+        let req = wire::RangeRequest {
+            mode: wire::RangeMode::Sweep,
+            source: "model = 1.3B\nsweep.n_gpus = 4,8\n".to_string(),
+            backend: "analytical".to_string(),
+            top_k: 0,
+            prune: false,
+            batch: true,
+            threads: 0,
+            start: 0,
+            end: 0,
+        };
+        let run = run_fingerprint(&req, 64);
+        assert_eq!(run, run_fingerprint(&req, 64), "fingerprints are deterministic");
+        assert_ne!(run, run_fingerprint(&req, 128), "chunking is part of the run identity");
+        let mut other = req.clone();
+        other.backend = "simulated".to_string();
+        assert_ne!(run, run_fingerprint(&other, 64));
+        assert_ne!(range_fingerprint(run, 0, 64), range_fingerprint(run, 64, 128));
+    }
+}

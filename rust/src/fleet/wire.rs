@@ -1,0 +1,739 @@
+//! The fleet wire format — `POST /v1/ranges` request and partial bodies.
+//!
+//! The coordinator and its workers exchange *internal engine state*
+//! ([`PlannedPoint`]s with dedup fingerprints, [`PlanCounters`], a
+//! serialized rank accumulator), not user-facing reports, so this codec
+//! must be **lossless** where the report renderings are deliberately
+//! lossy:
+//!
+//! * floats that the engine may legitimately produce as non-finite
+//!   (objective scores) travel as the strings `"inf"` / `"-inf"` /
+//!   `"nan"` — [`Evaluation::json`]'s `null`-for-non-finite convention
+//!   would destroy them, and the coordinator must reassemble the exact
+//!   in-memory value so its renderings are byte-identical to a
+//!   single-process run;
+//! * finite floats travel as plain JSON numbers — the emitter prints the
+//!   shortest round-tripping form, so `parse(dump(x)) == x` exactly;
+//! * dedup fingerprints are 128-bit and JSON numbers are doubles, so they
+//!   travel as fixed-width hex strings.
+//!
+//! Everything here is plain data-shuffling; the protocol semantics
+//! (scatter, gather, re-issue) live in [`super`].
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Precision, ZeroStage};
+use crate::eval::{
+    num, obj, EvalBounds, EvalMemory, EvalMetrics, EvalSearch, EvalStep, Evaluation,
+    ScenarioPoint, SearchChoice, BACKEND_NAMES,
+};
+use crate::query::frontier::RankAccum;
+use crate::query::{PlanCounters, PlannedPoint, PointEval};
+use crate::util::json::Json;
+
+/// Which front-end dialect the shipped `source` text is written in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RangeMode {
+    /// `source` is a sweep file; the worker builds the query via
+    /// `Query::from_sweep` (report-all, unpruned — sweep semantics).
+    Sweep,
+    /// `source` is a query file; the worker parses it and then applies the
+    /// explicit `backend`/`top_k`/`prune` overrides below (the coordinator
+    /// CLI may have overridden any of them after parsing).
+    Plan,
+}
+
+impl RangeMode {
+    fn tag(self) -> &'static str {
+        match self {
+            RangeMode::Sweep => "sweep",
+            RangeMode::Plan => "plan",
+        }
+    }
+
+    fn parse(tag: &str) -> Result<RangeMode> {
+        Ok(match tag {
+            "sweep" => RangeMode::Sweep,
+            "plan" => RangeMode::Plan,
+            other => bail!("unknown range mode {other:?} (known: sweep, plan)"),
+        })
+    }
+}
+
+/// One scattered work item: run `start..end` of the grid a worker rebuilds
+/// from `source`. The query is shipped as *source text*, not expanded
+/// points — O(file) per request regardless of range size, and the worker's
+/// parser is the single source of truth for grid order.
+#[derive(Debug, Clone)]
+pub struct RangeRequest {
+    pub mode: RangeMode,
+    /// The original sweep/query file text, verbatim.
+    pub source: String,
+    /// Resolved backend spec (CLI `--backend` may override the file).
+    pub backend: String,
+    /// Effective `query.top_k` after CLI overrides (0 = keep all).
+    pub top_k: usize,
+    /// Effective `query.prune` after CLI overrides.
+    pub prune: bool,
+    /// Allow the batched evaluation path (`--no-batch` clears it). Shipped
+    /// so every worker stays on the same fingerprint scheme as the
+    /// coordinator's accounting assumes.
+    pub batch: bool,
+    /// Worker-side planner threads (0 = the worker's own default).
+    pub threads: usize,
+    /// Grid index range, `start..end`.
+    pub start: usize,
+    pub end: usize,
+}
+
+impl RangeRequest {
+    pub fn json(&self) -> Json {
+        obj(vec![
+            ("mode", Json::Str(self.mode.tag().to_string())),
+            ("source", Json::Str(self.source.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("top_k", num(self.top_k as f64)),
+            ("prune", Json::Bool(self.prune)),
+            ("batch", Json::Bool(self.batch)),
+            ("threads", num(self.threads as f64)),
+            ("start", num(self.start as f64)),
+            ("end", num(self.end as f64)),
+        ])
+    }
+
+    pub fn parse(body: &str) -> Result<RangeRequest> {
+        let v = Json::parse(body).context("parsing /v1/ranges body")?;
+        let req = RangeRequest {
+            mode: RangeMode::parse(v.get("mode")?.as_str().context("mode")?)?,
+            source: v.get("source")?.as_str().context("source")?.to_string(),
+            backend: v.get("backend")?.as_str().context("backend")?.to_string(),
+            top_k: v.get("top_k")?.as_usize().context("top_k")?,
+            prune: bool_of(v.get("prune")?).context("prune")?,
+            batch: bool_of(v.get("batch")?).context("batch")?,
+            threads: v.get("threads")?.as_usize().context("threads")?,
+            start: v.get("start")?.as_usize().context("start")?,
+            end: v.get("end")?.as_usize().context("end")?,
+        };
+        if req.start > req.end {
+            bail!("range start {} exceeds end {}", req.start, req.end);
+        }
+        Ok(req)
+    }
+}
+
+/// One gathered range partial — the worker's fold of its range.
+#[derive(Debug, Clone)]
+pub struct RangePartial {
+    pub start: usize,
+    pub end: usize,
+    /// Backend names the worker resolved, primary first (sanity-checked
+    /// against the coordinator's own resolution).
+    pub backends: Vec<String>,
+    /// The worker's range-local execution counters
+    /// (`counters.points == end - start`, so disjoint partials sum).
+    pub counters: PlanCounters,
+    /// Serialized [`RankAccum`] state over the range's candidates.
+    pub accum: Json,
+    /// Every planned point of the range, in index order, paired with its
+    /// per-slot dedup fingerprints.
+    pub points: Vec<(PlannedPoint, Vec<u128>)>,
+}
+
+impl RangePartial {
+    pub fn parse(body: &str) -> Result<RangePartial> {
+        let v = Json::parse(body).context("parsing range partial")?;
+        let start = v.get("start")?.as_usize().context("start")?;
+        let end = v.get("end")?.as_usize().context("end")?;
+        let mut backends = Vec::new();
+        for b in v.get("backends")?.as_arr().context("backends")? {
+            backends.push(b.as_str().context("backend name")?.to_string());
+        }
+        let counters = PlanCounters::from_json(v.get("counters")?)?;
+        let accum = v.get("accum")?.clone();
+        let arr = v.get("points")?.as_arr().context("points")?;
+        let mut points = Vec::with_capacity(arr.len());
+        let mut at = start;
+        for p in arr {
+            let (planned, fps) = planned_point_of(p)?;
+            if planned.index != at {
+                bail!("range partial out of order: expected index {at}, got {}", planned.index);
+            }
+            at += 1;
+            points.push((planned, fps));
+        }
+        if at != end {
+            bail!("range partial covers {start}..{at}, expected {start}..{end}");
+        }
+        Ok(RangePartial { start, end, backends, counters, accum, points })
+    }
+
+    /// Deserialize the shipped accumulator state under the coordinator's
+    /// own objective shape.
+    pub(crate) fn accum(
+        &self,
+        objective: &crate::query::Objective,
+        top_k: usize,
+    ) -> Result<RankAccum> {
+        RankAccum::from_state(objective, top_k, &self.accum)
+    }
+}
+
+/// Build the worker's response body around already-encoded points.
+pub(crate) fn partial_json(
+    start: usize,
+    end: usize,
+    backends: Vec<Json>,
+    counters: &PlanCounters,
+    accum: &RankAccum,
+    points: Vec<Json>,
+) -> Json {
+    obj(vec![
+        ("start", num(start as f64)),
+        ("end", num(end as f64)),
+        ("backends", Json::Arr(backends)),
+        ("counters", counters.json()),
+        ("accum", accum.state_json()),
+        ("points", Json::Arr(points)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Planned points
+// ---------------------------------------------------------------------------
+
+/// Encode one planned point plus its per-slot dedup fingerprints
+/// (`fps.len() == p.evals.len()`; pruned slots carry fingerprint 0 and
+/// travel without one).
+pub fn planned_point_json(p: &PlannedPoint, fps: &[u128]) -> Json {
+    debug_assert_eq!(p.evals.len(), fps.len(), "one fingerprint per eval slot");
+    let mut pairs: Vec<(&str, Json)> = vec![("index", num(p.index as f64))];
+    let point: Vec<Json> = p
+        .point
+        .iter()
+        .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), Json::Str(v.clone())]))
+        .collect();
+    pairs.push(("point", Json::Arr(point)));
+    if let Some(e) = &p.error {
+        pairs.push(("error", Json::Str(e.clone())));
+    }
+    if let Some(r) = &p.rejected_by {
+        pairs.push(("rejected_by", Json::Str(r.clone())));
+    }
+    if let Some(s) = p.score {
+        pairs.push(("score", enc_f(s)));
+    }
+    let evals: Vec<Json> = p
+        .evals
+        .iter()
+        .zip(fps)
+        .map(|(pe, &fp)| match pe {
+            PointEval::Pruned { reason } => obj(vec![("pruned", Json::Str(reason.clone()))]),
+            PointEval::Done { eval, cache_hit } => obj(vec![
+                ("cache_hit", Json::Bool(*cache_hit)),
+                ("eval", eval_json(eval)),
+                ("fp", Json::Str(format!("{fp:032x}"))),
+            ]),
+        })
+        .collect();
+    pairs.push(("evals", Json::Arr(evals)));
+    obj(pairs)
+}
+
+/// Decode one planned point and its per-slot fingerprints.
+pub fn planned_point_of(v: &Json) -> Result<(PlannedPoint, Vec<u128>)> {
+    let index = v.get("index")?.as_usize().context("point index")?;
+    let mut point = Vec::new();
+    for pair in v.get("point")?.as_arr().context("point assignment")? {
+        let kv = pair.as_arr().context("point assignment entry")?;
+        if kv.len() != 2 {
+            bail!("point assignment entry is not a [key, value] pair");
+        }
+        point.push((
+            kv[0].as_str().context("axis key")?.to_string(),
+            kv[1].as_str().context("axis value")?.to_string(),
+        ));
+    }
+    let error = match v.opt("error") {
+        Some(e) => Some(e.as_str().context("point error")?.to_string()),
+        None => None,
+    };
+    let rejected_by = match v.opt("rejected_by") {
+        Some(r) => Some(r.as_str().context("rejected_by")?.to_string()),
+        None => None,
+    };
+    let score = match v.opt("score") {
+        Some(s) => Some(dec_f(s).context("point score")?),
+        None => None,
+    };
+    let mut evals = Vec::new();
+    let mut fps = Vec::new();
+    for e in v.get("evals")?.as_arr().context("evals")? {
+        if let Some(reason) = e.opt("pruned") {
+            evals.push(PointEval::Pruned {
+                reason: reason.as_str().context("prune reason")?.to_string(),
+            });
+            fps.push(0);
+        } else {
+            let fp = u128::from_str_radix(e.get("fp")?.as_str().context("slot fp")?, 16)
+                .context("slot fingerprint")?;
+            evals.push(PointEval::Done {
+                eval: eval_of(e.get("eval")?)?,
+                cache_hit: bool_of(e.get("cache_hit")?).context("cache_hit")?,
+            });
+            fps.push(fp);
+        }
+    }
+    Ok((PlannedPoint { index, point, error, rejected_by, evals, score }, fps))
+}
+
+// ---------------------------------------------------------------------------
+// Evaluations
+// ---------------------------------------------------------------------------
+
+/// Lossless encoding of one [`Evaluation`] — every field group, every
+/// float round-tripping exactly (unlike the user-facing
+/// [`Evaluation::json`], which nulls non-finite values and derives extra
+/// presentation keys).
+pub fn eval_json(e: &Evaluation) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("backend", Json::Str(e.backend.to_string())),
+        ("scenario", scenario_json(&e.scenario)),
+        ("feasible", Json::Bool(e.feasible)),
+        ("oom", Json::Bool(e.oom)),
+    ];
+    if let Some(m) = e.metrics {
+        pairs.push((
+            "metrics",
+            obj(vec![("mfu", enc_f(m.mfu)), ("hfu", enc_f(m.hfu)), ("tgs", enc_f(m.tgs))]),
+        ));
+    }
+    if let Some(s) = e.step {
+        pairs.push((
+            "step",
+            obj(vec![
+                ("t_step", enc_f(s.t_step)),
+                ("t_fwd", enc_f(s.t_fwd)),
+                ("t_bwd", enc_f(s.t_bwd)),
+                ("exposed_comm", enc_f(s.exposed_comm)),
+                ("r_fwd", enc_f(s.r_fwd)),
+                ("r_bwd", enc_f(s.r_bwd)),
+            ]),
+        ));
+    }
+    if let Some(m) = e.memory {
+        let mut mem: Vec<(&str, Json)> = Vec::new();
+        if let Some(v) = m.m_free_gib {
+            mem.push(("m_free_gib", enc_f(v)));
+        }
+        if let Some(v) = m.active_gib {
+            mem.push(("active_gib", enc_f(v)));
+        }
+        if let Some(v) = m.reserved_gib {
+            mem.push(("reserved_gib", enc_f(v)));
+        }
+        pairs.push(("memory", obj(mem)));
+    }
+    if let Some(b) = e.bounds {
+        pairs.push((
+            "bounds",
+            obj(vec![
+                ("e_max", enc_f(b.e_max)),
+                ("hfu_max", enc_f(b.hfu_max)),
+                ("mfu_max", enc_f(b.mfu_max)),
+                ("k_max", enc_f(b.k_max)),
+            ]),
+        ));
+    }
+    if let Some(s) = &e.search {
+        let mut search: Vec<(&str, Json)> =
+            vec![("feasible_points", num(s.feasible_points as f64))];
+        if let Some(c) = &s.best_mfu {
+            search.push(("best_mfu", choice_json(c)));
+        }
+        if let Some(c) = &s.best_tgs {
+            search.push(("best_tgs", choice_json(c)));
+        }
+        pairs.push(("search", obj(search)));
+    }
+    obj(pairs)
+}
+
+/// Decode one [`Evaluation`].
+pub fn eval_of(v: &Json) -> Result<Evaluation> {
+    let name = v.get("backend")?.as_str().context("eval backend")?;
+    let backend = backend_static(name)?;
+    let scenario = scenario_of(v.get("scenario")?)?;
+    let feasible = bool_of(v.get("feasible")?).context("feasible")?;
+    let oom = bool_of(v.get("oom")?).context("oom")?;
+    let metrics = match v.opt("metrics") {
+        Some(m) => Some(EvalMetrics {
+            mfu: dec_f(m.get("mfu")?).context("mfu")?,
+            hfu: dec_f(m.get("hfu")?).context("hfu")?,
+            tgs: dec_f(m.get("tgs")?).context("tgs")?,
+        }),
+        None => None,
+    };
+    let step = match v.opt("step") {
+        Some(s) => Some(EvalStep {
+            t_step: dec_f(s.get("t_step")?).context("t_step")?,
+            t_fwd: dec_f(s.get("t_fwd")?).context("t_fwd")?,
+            t_bwd: dec_f(s.get("t_bwd")?).context("t_bwd")?,
+            exposed_comm: dec_f(s.get("exposed_comm")?).context("exposed_comm")?,
+            r_fwd: dec_f(s.get("r_fwd")?).context("r_fwd")?,
+            r_bwd: dec_f(s.get("r_bwd")?).context("r_bwd")?,
+        }),
+        None => None,
+    };
+    let memory = match v.opt("memory") {
+        Some(m) => Some(EvalMemory {
+            m_free_gib: opt_f(m, "m_free_gib")?,
+            active_gib: opt_f(m, "active_gib")?,
+            reserved_gib: opt_f(m, "reserved_gib")?,
+        }),
+        None => None,
+    };
+    let bounds = match v.opt("bounds") {
+        Some(b) => Some(EvalBounds {
+            e_max: dec_f(b.get("e_max")?).context("e_max")?,
+            hfu_max: dec_f(b.get("hfu_max")?).context("hfu_max")?,
+            mfu_max: dec_f(b.get("mfu_max")?).context("mfu_max")?,
+            k_max: dec_f(b.get("k_max")?).context("k_max")?,
+        }),
+        None => None,
+    };
+    let search = match v.opt("search") {
+        Some(s) => Some(EvalSearch {
+            feasible_points: s.get("feasible_points")?.as_usize().context("feasible_points")?,
+            best_mfu: match s.opt("best_mfu") {
+                Some(c) => Some(choice_of(c)?),
+                None => None,
+            },
+            best_tgs: match s.opt("best_tgs") {
+                Some(c) => Some(choice_of(c)?),
+                None => None,
+            },
+        }),
+        None => None,
+    };
+    Ok(Evaluation { backend, scenario, feasible, oom, metrics, step, memory, bounds, search })
+}
+
+fn choice_json(c: &SearchChoice) -> Json {
+    obj(vec![
+        ("alpha_hat", enc_f(c.alpha_hat)),
+        ("gamma", enc_f(c.gamma)),
+        ("stage", Json::Str(c.stage.clone())),
+        ("tokens", enc_f(c.tokens)),
+        ("mfu", enc_f(c.mfu)),
+        ("hfu", enc_f(c.hfu)),
+        ("tgs", enc_f(c.tgs)),
+    ])
+}
+
+fn choice_of(v: &Json) -> Result<SearchChoice> {
+    Ok(SearchChoice {
+        alpha_hat: dec_f(v.get("alpha_hat")?).context("alpha_hat")?,
+        gamma: dec_f(v.get("gamma")?).context("gamma")?,
+        stage: v.get("stage")?.as_str().context("stage")?.to_string(),
+        tokens: dec_f(v.get("tokens")?).context("tokens")?,
+        mfu: dec_f(v.get("mfu")?).context("mfu")?,
+        hfu: dec_f(v.get("hfu")?).context("hfu")?,
+        tgs: dec_f(v.get("tgs")?).context("tgs")?,
+    })
+}
+
+fn scenario_json(s: &ScenarioPoint) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("model", Json::Str(s.model.clone())),
+        ("cluster", Json::Str(s.cluster.clone())),
+        ("n_gpus", num(s.n_gpus as f64)),
+        ("seq_len", num(s.seq_len as f64)),
+        ("batch", num(s.batch as f64)),
+        ("gamma", enc_f(s.gamma)),
+        ("zero_stage", Json::Str(s.zero_stage.to_string())),
+        ("precision", Json::Str(s.precision.to_string())),
+        ("empty_cache", Json::Bool(s.empty_cache)),
+        ("collective", Json::Str(s.collective.clone())),
+    ];
+    if let Some(a) = s.alpha {
+        pairs.push(("alpha", enc_f(a)));
+    }
+    obj(pairs)
+}
+
+fn scenario_of(v: &Json) -> Result<ScenarioPoint> {
+    Ok(ScenarioPoint {
+        model: v.get("model")?.as_str().context("model")?.to_string(),
+        cluster: v.get("cluster")?.as_str().context("cluster")?.to_string(),
+        n_gpus: u64_of(v.get("n_gpus")?).context("n_gpus")?,
+        seq_len: u64_of(v.get("seq_len")?).context("seq_len")?,
+        batch: u64_of(v.get("batch")?).context("batch")?,
+        gamma: dec_f(v.get("gamma")?).context("gamma")?,
+        zero_stage: match v.get("zero_stage")?.as_str().context("zero_stage")? {
+            "zero-3" => ZeroStage::Stage3,
+            "zero-1/2" => ZeroStage::Stage12,
+            other => bail!("unknown zero stage {other:?} on the wire"),
+        },
+        precision: match v.get("precision")?.as_str().context("precision")? {
+            "bf16" => Precision::Bf16,
+            "fp16" => Precision::Fp16,
+            "fp32" => Precision::Fp32,
+            other => bail!("unknown precision {other:?} on the wire"),
+        },
+        empty_cache: bool_of(v.get("empty_cache")?).context("empty_cache")?,
+        collective: v.get("collective")?.as_str().context("collective")?.to_string(),
+        alpha: match v.opt("alpha") {
+            Some(a) => Some(dec_f(a).context("alpha")?),
+            None => None,
+        },
+    })
+}
+
+/// Map a wire backend name back to the `&'static str` the enum of known
+/// backends interns — provenance strings stay pointer-cheap.
+fn backend_static(name: &str) -> Result<&'static str> {
+    BACKEND_NAMES
+        .iter()
+        .copied()
+        .find(|b| *b == name)
+        .with_context(|| format!("unknown backend {name:?} on the wire"))
+}
+
+// ---------------------------------------------------------------------------
+// Scalar codecs
+// ---------------------------------------------------------------------------
+
+/// Lossless float: finite values as JSON numbers (the emitter prints the
+/// shortest round-tripping decimal), non-finite as tagged strings.
+pub(crate) fn enc_f(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".to_string())
+    } else if v > 0.0 {
+        Json::Str("inf".to_string())
+    } else {
+        Json::Str("-inf".to_string())
+    }
+}
+
+/// Inverse of [`enc_f`].
+pub(crate) fn dec_f(v: &Json) -> Result<f64> {
+    match v {
+        Json::Num(n) => Ok(*n),
+        Json::Str(s) => match s.as_str() {
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "nan" => Ok(f64::NAN),
+            other => bail!("expected a float, got string {other:?}"),
+        },
+        other => bail!("expected a float, got {}", other.dump()),
+    }
+}
+
+fn opt_f(v: &Json, key: &str) -> Result<Option<f64>> {
+    match v.opt(key) {
+        Some(f) => Ok(Some(dec_f(f).context("optional float")?)),
+        None => Ok(None),
+    }
+}
+
+fn bool_of(v: &Json) -> Result<bool> {
+    match v {
+        Json::Bool(b) => Ok(*b),
+        other => bail!("expected a bool, got {}", other.dump()),
+    }
+}
+
+fn u64_of(v: &Json) -> Result<u64> {
+    let n = v.as_f64()?;
+    if n < 0.0 || n.fract() != 0.0 || n > 9e15 {
+        bail!("expected a non-negative integer, got {n}");
+    }
+    Ok(n as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floats_round_trip_losslessly_including_non_finite() {
+        for v in [
+            0.0,
+            1.0 / 3.0,
+            0.1 + 0.2,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            -12345.678901234567,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+        ] {
+            let wire = enc_f(v).dump();
+            let back = dec_f(&Json::parse(&wire).unwrap()).unwrap();
+            assert!(back == v, "{v} -> {wire} -> {back}");
+        }
+        let back = dec_f(&Json::parse(&enc_f(f64::NAN).dump()).unwrap()).unwrap();
+        assert!(back.is_nan());
+    }
+
+    #[test]
+    fn planned_points_round_trip_the_wire() {
+        let eval = Evaluation {
+            backend: "analytical",
+            scenario: ScenarioPoint {
+                model: "13B".to_string(),
+                cluster: "a100-cluster".to_string(),
+                n_gpus: 16,
+                seq_len: 4096,
+                batch: 2,
+                gamma: 0.5,
+                zero_stage: ZeroStage::Stage3,
+                precision: Precision::Bf16,
+                empty_cache: false,
+                collective: "ring".to_string(),
+                alpha: Some(0.62),
+            },
+            feasible: true,
+            oom: false,
+            metrics: Some(EvalMetrics { mfu: 0.41, hfu: 0.47, tgs: 1234.5 }),
+            step: Some(EvalStep {
+                t_step: 1.25,
+                t_fwd: 0.4,
+                t_bwd: 0.8,
+                exposed_comm: 0.05,
+                r_fwd: 0.9,
+                r_bwd: 1.1,
+            }),
+            memory: Some(EvalMemory {
+                m_free_gib: Some(12.5),
+                active_gib: None,
+                reserved_gib: Some(70.0),
+            }),
+            bounds: Some(EvalBounds {
+                e_max: 4.0,
+                hfu_max: 0.55,
+                mfu_max: 0.5,
+                k_max: f64::INFINITY,
+            }),
+            search: Some(EvalSearch {
+                feasible_points: 7,
+                best_mfu: Some(SearchChoice {
+                    alpha_hat: 0.6,
+                    gamma: 1.0,
+                    stage: "zero-3".to_string(),
+                    tokens: 8192.0,
+                    mfu: 0.44,
+                    hfu: 0.5,
+                    tgs: 999.25,
+                }),
+                best_tgs: None,
+            }),
+        };
+        let p = PlannedPoint {
+            index: 3,
+            point: vec![
+                ("n_gpus".to_string(), "16".to_string()),
+                ("gamma".to_string(), "0.5".to_string()),
+            ],
+            error: None,
+            rejected_by: Some("where.mfu = >= 0.9".to_string()),
+            evals: vec![
+                PointEval::Done { eval, cache_hit: true },
+                PointEval::Pruned { reason: "eq12: E_max < 1".to_string() },
+            ],
+            score: Some(f64::NEG_INFINITY),
+        };
+        let fps = vec![0xdead_beef_u128 << 64 | 42, 0];
+        let wire = planned_point_json(&p, &fps).dump();
+        let (back, back_fps) = planned_point_of(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.index, p.index);
+        assert_eq!(back.point, p.point);
+        assert_eq!(back.error, p.error);
+        assert_eq!(back.rejected_by, p.rejected_by);
+        assert_eq!(back.evals, p.evals);
+        assert_eq!(back.score.map(f64::to_bits), p.score.map(f64::to_bits));
+        assert_eq!(back_fps, fps);
+    }
+
+    #[test]
+    fn errored_point_with_no_evals_round_trips() {
+        let p = PlannedPoint {
+            index: 0,
+            point: vec![("n_gpus".to_string(), "1000000".to_string())],
+            error: Some("no cluster fits".to_string()),
+            rejected_by: None,
+            evals: vec![],
+            score: None,
+        };
+        let wire = planned_point_json(&p, &[]).dump();
+        let (back, fps) = planned_point_of(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, p);
+        assert!(fps.is_empty());
+    }
+
+    #[test]
+    fn range_request_round_trips_and_validates() {
+        let req = RangeRequest {
+            mode: RangeMode::Plan,
+            source: "model = 13B\nsweep.n_gpus = 8,16\n".to_string(),
+            backend: "analytical".to_string(),
+            top_k: 5,
+            prune: true,
+            batch: false,
+            threads: 3,
+            start: 16,
+            end: 32,
+        };
+        let back = RangeRequest::parse(&req.json().dump()).unwrap();
+        assert_eq!(back.mode, req.mode);
+        assert_eq!(back.source, req.source);
+        assert_eq!(back.backend, req.backend);
+        assert_eq!(back.top_k, req.top_k);
+        assert_eq!(back.prune, req.prune);
+        assert_eq!(back.batch, req.batch);
+        assert_eq!(back.threads, req.threads);
+        assert_eq!((back.start, back.end), (req.start, req.end));
+        // An inverted range is rejected at parse time, not deep in the planner.
+        let mut bad = req.json();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("start".to_string(), Json::Num(99.0));
+        }
+        assert!(RangeRequest::parse(&bad.dump()).is_err());
+    }
+
+    #[test]
+    fn partials_reject_gaps_and_disorder() {
+        let point = |i: usize| {
+            planned_point_json(
+                &PlannedPoint {
+                    index: i,
+                    point: vec![],
+                    error: None,
+                    rejected_by: None,
+                    evals: vec![],
+                    score: None,
+                },
+                &[],
+            )
+        };
+        let body = |pts: Vec<Json>| {
+            obj(vec![
+                ("start", num(4.0)),
+                ("end", num(6.0)),
+                ("backends", Json::Arr(vec![Json::Str("analytical".to_string())])),
+                ("counters", PlanCounters { points: 2, ..Default::default() }.json()),
+                (
+                    "accum",
+                    obj(vec![("kind", Json::Str("all".to_string())), ("indices", Json::Arr(vec![]))]),
+                ),
+                ("points", Json::Arr(pts)),
+            ])
+            .dump()
+        };
+        assert!(RangePartial::parse(&body(vec![point(4), point(5)])).is_ok());
+        assert!(RangePartial::parse(&body(vec![point(5), point(4)])).is_err());
+        assert!(RangePartial::parse(&body(vec![point(4)])).is_err());
+        assert!(RangePartial::parse(&body(vec![point(4), point(5), point(6)])).is_err());
+    }
+}

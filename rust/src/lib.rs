@@ -32,6 +32,11 @@
 //!   (`POST /v1/plan`, `GET /v1/presets`, `/healthz`, Prometheus
 //!   `/metrics`) over one cross-request evaluation cache, with bounded
 //!   accept-queue backpressure and graceful shutdown.
+//! * [`fleet`] — the distributed sweep fabric: a coordinator that
+//!   scatters chunk ranges across serve workers (`POST /v1/ranges`),
+//!   gathers partials online, re-issues ranges lost to dead workers with
+//!   exactly-once accounting, and reassembles reports byte-identical to
+//!   the single-process run (`fsdp-bw sweep --fleet`, `plan --fleet`).
 //! * [`simulator`] — a discrete-event FSDP *cluster* simulator (network ring
 //!   collectives, GPU kernel-efficiency model, CUDA-allocator model) that
 //!   substitutes for the paper's two JUWELS A100 clusters and regenerates
@@ -69,6 +74,7 @@ pub mod coordinator;
 pub mod docs;
 pub mod eval;
 pub mod experiments;
+pub mod fleet;
 pub mod gridsearch;
 pub mod query;
 #[cfg(feature = "xla")]

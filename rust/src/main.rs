@@ -68,14 +68,18 @@ COMMANDS:
   sweep      <file.scn> [--backend both] [--threads N] [--json|--csv]
              [--out report.json] [--chunk 65536] [--checkpoint ck.json]
              [--resume] [--max-chunks N] [--no-batch]
-                                         expand sweep.* axes to a grid and
+             [--fleet host:port,...]     expand sweep.* axes to a grid and
                                          stream it in bounded-memory chunks
                                          (O(chunk) resident, any grid size);
                                          --checkpoint + --resume continue an
-                                         interrupted run byte-identically
+                                         interrupted run byte-identically;
+                                         --fleet scatters the chunks across
+                                         `fsdp-bw serve` workers (same
+                                         bytes, workers may die mid-run)
   plan       <file.scn> [--backend analytical] [--threads N] [--top-k K]
              [--no-prune] [--check-prune] [--json|--csv] [--out path]
-             [--chunk N] [--no-batch]    declarative query: sweep.* axes +
+             [--chunk N] [--no-batch] [--fleet host:port,...]
+                                         declarative query: sweep.* axes +
                                          where.* constraints + query.*
                                          objective, §2.7 bounds-pruned,
                                          ranked frontier (see README)
@@ -325,7 +329,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .get(1)
         .ok_or_else(|| anyhow::anyhow!("sweep needs a file path (scenario + sweep.* axes)"))?;
     let sweep = Sweep::load(Path::new(path))?;
-    let backends = backends_for(&args.str_opt("backend", "both"))?;
+    let backend_spec = args.str_opt("backend", "both");
+    let backends = backends_for(&backend_spec)?;
     // Static pre-flight (see `fsdp-bw check`): sweeps legitimately report
     // infeasible/OOM points, so only the unrunnable verdict — no point
     // even constructs a scenario — refuses up front.
@@ -364,7 +369,26 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // Escape hatch for the batched SoA evaluation path (output bytes are
     // identical either way — see the CI byte-compare leg).
     cfg.batch = !args.flag("no-batch");
-    let outcome = run_sweep_streamed(&sweep, &backends, &cfg)?;
+    let outcome = match args.str_maybe("fleet") {
+        // Scatter the same chunk tiling across serve workers; the report
+        // (and any checkpoint) is byte-identical to the local run, so the
+        // two paths interoperate — including --resume across them. The
+        // recovery stats go to stderr: stdout stays the report.
+        Some(fleet_spec) => {
+            let hosts = fsdp_bw::fleet::parse_hosts(&fleet_spec)?;
+            let n_hosts = hosts.len();
+            let mut fc = fsdp_bw::fleet::FleetConfig::new(hosts);
+            fc.chunk = cfg.chunk;
+            fc.batch = cfg.batch;
+            let source = std::fs::read_to_string(Path::new(path))
+                .with_context(|| format!("reading {path}"))?;
+            let (outcome, stats) =
+                fsdp_bw::eval::run_sweep_fleet(&sweep, &source, &backend_spec, &cfg, &fc)?;
+            eprintln!("{}", stats.summary(n_hosts));
+            outcome
+        }
+        None => run_sweep_streamed(&sweep, &backends, &cfg)?,
+    };
     if outcome.interrupted {
         println!(
             "sweep checkpointed after {} of {} chunks ({} of {} points, {} errors) — \
@@ -440,6 +464,10 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
 
     if args.flag("check-prune") {
+        anyhow::ensure!(
+            args.str_maybe("fleet").is_none(),
+            "--check-prune runs both executions locally — drop --fleet"
+        );
         // Parity harness: the §2.7-pruned plan must return the byte-identical
         // frontier to brute force, evaluating no more points. Runs without a
         // shared cache so the two executions stay fully independent.
@@ -477,20 +505,37 @@ fn cmd_plan(args: &Args) -> Result<()> {
     // Per-process cache instance of the serve path (see cmd_sweep) — the
     // frontier is identical with or without it. `--chunk` routes through
     // the chunked engine (byte-identical output; the serve job API's
-    // execution path) instead of one whole-grid pass.
-    let mut planner = Planner::new(threads).with_cache(EvalCache::shared());
-    if args.flag("no-batch") {
-        planner = planner.without_batch();
-    }
+    // execution path) instead of one whole-grid pass; `--fleet` scatters
+    // that same tiling across serve workers and reassembles the identical
+    // frontier (recovery stats on stderr).
     let chunk = args.num_opt("chunk", 0usize)?;
-    let frontier = if chunk > 0 {
-        let backends = backends_for(&query.backend_spec)?;
-        let opts = StreamOptions { chunk, ..StreamOptions::default() };
-        planner
-            .run_chunked(&query, &backends, &opts, |_| {})?
-            .expect("uncancelled run completes")
+    let frontier = if let Some(fleet_spec) = args.str_maybe("fleet") {
+        let hosts = fsdp_bw::fleet::parse_hosts(&fleet_spec)?;
+        let n_hosts = hosts.len();
+        let mut fc = fsdp_bw::fleet::FleetConfig::new(hosts);
+        if chunk > 0 {
+            fc.chunk = chunk;
+        }
+        fc.batch = !args.flag("no-batch");
+        let source = std::fs::read_to_string(Path::new(path))
+            .with_context(|| format!("reading {path}"))?;
+        let (frontier, stats) = fsdp_bw::fleet::run_fleet_plan(&source, &query, &fc)?;
+        eprintln!("{}", stats.summary(n_hosts));
+        frontier
     } else {
-        planner.run(&query)?
+        let mut planner = Planner::new(threads).with_cache(EvalCache::shared());
+        if args.flag("no-batch") {
+            planner = planner.without_batch();
+        }
+        if chunk > 0 {
+            let backends = backends_for(&query.backend_spec)?;
+            let opts = StreamOptions { chunk, ..StreamOptions::default() };
+            planner
+                .run_chunked(&query, &backends, &opts, |_| {})?
+                .expect("uncancelled run completes")
+        } else {
+            planner.run(&query)?
+        }
     };
     let mut body = if args.flag("json") {
         frontier.to_json()
@@ -548,7 +593,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("fsdp-bw serve: listening on http://{}", server.addr());
     println!(
         "  endpoints : POST /v1/plan · POST /v1/validate · \
-         POST/GET/DELETE /v1/jobs[/:id[/result]] · \
+         POST/GET/DELETE /v1/jobs[/:id[/result]] · POST /v1/ranges · \
          GET /v1/presets · GET /healthz · GET /metrics"
     );
     println!(

@@ -13,6 +13,8 @@
 
 use std::cmp::Ordering;
 
+use anyhow::{bail, Context, Result};
+
 use crate::eval::report::{csv_cell, scalar, SweepPointResult, SweepReport};
 use crate::eval::sweep::SweepAxis;
 use crate::eval::{num, obj, Evaluation};
@@ -109,7 +111,7 @@ pub struct PlanCounters {
 }
 
 impl PlanCounters {
-    fn json(&self) -> Json {
+    pub(crate) fn json(&self) -> Json {
         obj(vec![
             ("points", num(self.points as f64)),
             ("evaluated", num(self.evaluated as f64)),
@@ -120,6 +122,39 @@ impl PlanCounters {
             ("feasible", num(self.feasible as f64)),
             ("errors", num(self.errors as f64)),
         ])
+    }
+
+    /// Inverse of [`Self::json`] — the fleet wire format.
+    pub(crate) fn from_json(v: &Json) -> Result<PlanCounters> {
+        Ok(PlanCounters {
+            points: v.get("points")?.as_usize().context("counters.points")?,
+            evaluated: v.get("evaluated")?.as_usize().context("counters.evaluated")?,
+            pruned_by_bounds: v
+                .get("pruned_by_bounds")?
+                .as_usize()
+                .context("counters.pruned_by_bounds")?,
+            cache_hits: v.get("cache_hits")?.as_usize().context("counters.cache_hits")?,
+            rejected: v.get("rejected")?.as_usize().context("counters.rejected")?,
+            infeasible: v.get("infeasible")?.as_usize().context("counters.infeasible")?,
+            feasible: v.get("feasible")?.as_usize().context("counters.feasible")?,
+            errors: v.get("errors")?.as_usize().context("counters.errors")?,
+        })
+    }
+
+    /// Fold another range's counters into this one. Every field is a plain
+    /// sum over disjoint index ranges — except `evaluated`/`cache_hits`,
+    /// which the fleet coordinator recomputes from the global dedup ledger
+    /// (see `fleet::replay_dedup`) because cross-range duplicates are only
+    /// visible once partials are joined.
+    pub(crate) fn absorb(&mut self, o: &PlanCounters) {
+        self.points += o.points;
+        self.evaluated += o.evaluated;
+        self.pruned_by_bounds += o.pruned_by_bounds;
+        self.cache_hits += o.cache_hits;
+        self.rejected += o.rejected;
+        self.infeasible += o.infeasible;
+        self.feasible += o.feasible;
+        self.errors += o.errors;
     }
 }
 
@@ -200,6 +235,148 @@ impl RankAccum {
                 front.push((va, vb, p.index));
             }
         }
+    }
+
+    /// Fold another accumulator — built over a *disjoint* set of grid
+    /// indices under the same objective — into this one. Associative and
+    /// commutative: because every tie is broken by the grid index (a total
+    /// order) and Pareto dominance is an order-independent set property,
+    /// the merged state equals the state of one accumulator fed both input
+    /// streams in any interleaving. This is what lets the fleet
+    /// coordinator gather range partials as they arrive.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the two accumulators have different objective shapes.
+    pub fn merge(&mut self, other: RankAccum) {
+        match (self, other) {
+            (RankAccum::All { indices }, RankAccum::All { indices: more }) => {
+                // `add` collects in grid order; a sort restores it across
+                // ranges (indices are unique, so stability is moot).
+                indices.extend(more);
+                indices.sort_unstable();
+            }
+            (RankAccum::Scalar { k, entries }, RankAccum::Scalar { entries: more, .. }) => {
+                if *k > 0 {
+                    for entry in more {
+                        let at = entries
+                            .partition_point(|e| scalar_cmp(e, &entry) == Ordering::Less);
+                        if at < *k {
+                            entries.insert(at, entry);
+                            entries.truncate(*k);
+                        }
+                    }
+                } else {
+                    // Keep-all: `finish` sorts under the same total order.
+                    entries.extend(more);
+                }
+            }
+            (RankAccum::Pareto { front, .. }, RankAccum::Pareto { front: more, .. }) => {
+                for (va, vb, idx) in more {
+                    if front
+                        .iter()
+                        .any(|&(ma, mb, _)| ma >= va && mb >= vb && (ma > va || mb > vb))
+                    {
+                        continue;
+                    }
+                    front.retain(|&(ma, mb, _)| !(va >= ma && vb >= mb && (va > ma || vb > mb)));
+                    front.push((va, vb, idx));
+                }
+            }
+            _ => panic!("RankAccum::merge across objective shapes"),
+        }
+    }
+
+    /// Serialize the accumulator state for the fleet wire. The objective
+    /// shape travels alongside so [`Self::from_state`] can reject a
+    /// mismatched partial instead of mis-folding it.
+    pub fn state_json(&self) -> Json {
+        match self {
+            RankAccum::All { indices } => obj(vec![
+                ("kind", Json::Str("all".into())),
+                ("indices", Json::Arr(indices.iter().map(|&i| num(i as f64)).collect())),
+            ]),
+            RankAccum::Scalar { k, entries } => obj(vec![
+                ("kind", Json::Str("scalar".into())),
+                ("k", num(*k as f64)),
+                (
+                    "entries",
+                    Json::Arr(
+                        entries
+                            .iter()
+                            .map(|&(s, i)| Json::Arr(vec![num(s), num(i as f64)]))
+                            .collect(),
+                    ),
+                ),
+            ]),
+            RankAccum::Pareto { front, .. } => obj(vec![
+                ("kind", Json::Str("pareto".into())),
+                (
+                    "front",
+                    Json::Arr(
+                        front
+                            .iter()
+                            .map(|&(a, b, i)| Json::Arr(vec![num(a), num(b), num(i as f64)]))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        }
+    }
+
+    /// Inverse of [`Self::state_json`], shaped by the coordinator's own
+    /// objective (the wire carries no [`ParetoAxis`] — only coordinates).
+    /// Scores and coordinates are finite by construction ([`Self::add`]
+    /// filters non-finite values), so plain JSON numbers are lossless.
+    pub fn from_state(objective: &Objective, top_k: usize, v: &Json) -> Result<RankAccum> {
+        let mut acc = RankAccum::new(objective, top_k);
+        let kind = v.get("kind")?.as_str().context("accum.kind")?.to_string();
+        match &mut acc {
+            RankAccum::All { indices } => {
+                if kind != "all" {
+                    bail!("rank accumulator shape mismatch: expected all, got {kind}");
+                }
+                for i in v.get("indices")?.as_arr().context("accum.indices")? {
+                    indices.push(i.as_usize().context("accum index")?);
+                }
+            }
+            RankAccum::Scalar { k, entries } => {
+                if kind != "scalar" {
+                    bail!("rank accumulator shape mismatch: expected scalar, got {kind}");
+                }
+                let wire_k = v.get("k")?.as_usize().context("accum.k")?;
+                if wire_k != *k {
+                    bail!("rank accumulator top-k mismatch: expected {k}, got {wire_k}");
+                }
+                for e in v.get("entries")?.as_arr().context("accum.entries")? {
+                    let pair = e.as_arr().context("accum entry")?;
+                    if pair.len() != 2 {
+                        bail!("rank accumulator entry is not a [score, index] pair");
+                    }
+                    entries.push((
+                        pair[0].as_f64().context("accum score")?,
+                        pair[1].as_usize().context("accum index")?,
+                    ));
+                }
+            }
+            RankAccum::Pareto { front, .. } => {
+                if kind != "pareto" {
+                    bail!("rank accumulator shape mismatch: expected pareto, got {kind}");
+                }
+                for e in v.get("front")?.as_arr().context("accum.front")? {
+                    let triple = e.as_arr().context("accum front member")?;
+                    if triple.len() != 3 {
+                        bail!("rank accumulator front member is not an [a, b, index] triple");
+                    }
+                    front.push((
+                        triple[0].as_f64().context("accum a")?,
+                        triple[1].as_f64().context("accum b")?,
+                        triple[2].as_usize().context("accum index")?,
+                    ));
+                }
+            }
+        }
+        Ok(acc)
     }
 
     /// The ranked point indices.
@@ -594,6 +771,113 @@ mod tests {
         // The rendering contains a comma, so the cell must be quoted to
         // keep the comment row at two columns.
         assert_eq!(first, "# objective,\"pareto(mfu, tgs_per_gpu)\"", "{csv}");
+    }
+
+    /// Fold a slice of points into a fresh accumulator.
+    fn fold(objective: &Objective, top_k: usize, pts: &[PlannedPoint]) -> RankAccum {
+        let mut acc = RankAccum::new(objective, top_k);
+        for p in pts {
+            acc.add(p);
+        }
+        acc
+    }
+
+    #[test]
+    fn rank_accum_merge_matches_sequential_fold_for_every_shape() {
+        // One real candidate pool per objective shape (scalar top-k,
+        // report_all, pareto) — merge over any split/order must equal the
+        // sequential grid-order fold.
+        let programs = [
+            "model = 13B\nbatch = 1\nsweep.n_gpus = 8,16,32\nsweep.gamma = 0,0.5,1\n\
+             query.top_k = 2\n",
+            "model = 13B\nbatch = 1\nsweep.n_gpus = 8,16,32\nsweep.gamma = 0,0.5,1\n\
+             query.objective = report_all\n",
+            "model = 13B\nbatch = 1\nsweep.n_gpus = 8,16,32\nsweep.gamma = 0,0.5,1\n\
+             query.objective = pareto(mfu, tgs_per_gpu)\n",
+        ];
+        for text in programs {
+            let f = plan(text);
+            let seq = rank(&f.objective, &f.points, f.top_k);
+            let n = f.points.len();
+            // Every two-range split, merged in both orders — including via
+            // the wire round-trip (state_json → parse → from_state).
+            for split in 1..n {
+                let (a, b) = f.points.split_at(split);
+                for (x, y) in [(a, b), (b, a)] {
+                    let mut m = fold(&f.objective, f.top_k, x);
+                    m.merge(fold(&f.objective, f.top_k, y));
+                    assert_eq!(m.finish(), seq, "{text:?} split {split}");
+
+                    let thaw = |pts: &[PlannedPoint]| {
+                        let wire = fold(&f.objective, f.top_k, pts).state_json().dump();
+                        RankAccum::from_state(&f.objective, f.top_k, &Json::parse(&wire).unwrap())
+                            .unwrap()
+                    };
+                    let mut m = thaw(x);
+                    m.merge(thaw(y));
+                    assert_eq!(m.finish(), seq, "{text:?} wire split {split}");
+                }
+            }
+            // A three-range split, merged in all six orders.
+            let parts = [&f.points[..n / 3], &f.points[n / 3..2 * n / 3], &f.points[2 * n / 3..]];
+            for perm in [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
+                let mut m = fold(&f.objective, f.top_k, parts[perm[0]]);
+                m.merge(fold(&f.objective, f.top_k, parts[perm[1]]));
+                m.merge(fold(&f.objective, f.top_k, parts[perm[2]]));
+                assert_eq!(m.finish(), seq, "{text:?} perm {perm:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_merge_breaks_ties_by_grid_index_in_any_order() {
+        // Synthetic scores with deliberate ties: the (score desc, index
+        // asc) total order must make merge insensitive to arrival order
+        // even when truncation lands inside a tie group.
+        let sp = |index: usize, score: f64| PlannedPoint {
+            index,
+            point: Vec::new(),
+            error: None,
+            rejected_by: None,
+            evals: Vec::new(),
+            score: Some(score),
+        };
+        let scores = [1.0, 3.0, 3.0, 2.0, 3.0, 1.0, 2.5, 3.0];
+        let pts: Vec<PlannedPoint> =
+            scores.iter().enumerate().map(|(i, &s)| sp(i, s)).collect();
+        let objective = Objective::MaxMfu;
+        for k in [0usize, 1, 2, 3, scores.len()] {
+            let seq = rank(&objective, &pts, k);
+            for split in 1..pts.len() {
+                let (a, b) = pts.split_at(split);
+                for (x, y) in [(a, b), (b, a)] {
+                    let mut m = fold(&objective, k, x);
+                    m.merge(fold(&objective, k, y));
+                    assert_eq!(m.finish(), seq, "k={k} split={split}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_counters_round_trip_the_wire() {
+        let c = PlanCounters {
+            points: 9,
+            evaluated: 7,
+            pruned_by_bounds: 1,
+            cache_hits: 2,
+            rejected: 3,
+            infeasible: 1,
+            feasible: 4,
+            errors: 1,
+        };
+        let back =
+            PlanCounters::from_json(&Json::parse(&c.json().dump()).unwrap()).unwrap();
+        assert_eq!(c, back);
+        let mut sum = c;
+        sum.absorb(&back);
+        assert_eq!(sum.points, 18);
+        assert_eq!(sum.evaluated, 14);
     }
 
     #[test]

@@ -252,7 +252,7 @@ impl Planner {
         let mut counters = PlanCounters { points: n, ..Default::default() };
         let mut seen = HashSet::new();
         let mut points: Vec<PlannedPoint> = Vec::with_capacity(n);
-        self.execute_range(q, backends, 0..n, &mut seen, &mut counters, &mut |p| {
+        self.execute_range(q, backends, 0..n, &mut seen, &mut counters, &mut |p, _| {
             points.push(p);
             Ok(())
         })
@@ -285,6 +285,12 @@ impl Planner {
     /// single-range run for any chunk size. Its value is re-obtained from
     /// the attached shared cache when one is present, or recomputed (pure
     /// evaluators make both byte-identical).
+    ///
+    /// `emit` additionally receives one dedup fingerprint per entry of the
+    /// point's `evals` (0 for pruned slots, which never partake in dedup).
+    /// Most sinks ignore them; the fleet worker ships them to the
+    /// coordinator, whose global ledger replay reclassifies cross-range
+    /// duplicates exactly as a shared `seen` would have.
     pub(crate) fn execute_range(
         &self,
         q: &Query,
@@ -292,7 +298,7 @@ impl Planner {
         range: Range<usize>,
         seen: &mut HashSet<u128>,
         counters: &mut PlanCounters,
-        emit: &mut dyn FnMut(PlannedPoint) -> Result<()>,
+        emit: &mut dyn FnMut(PlannedPoint, &[u128]) -> Result<()>,
     ) -> Result<()> {
         // Compile the typed decoder once per range — microseconds against a
         // range of thousands of points. `None` (an axis value outside the
@@ -380,6 +386,7 @@ impl Planner {
         for (i, (pre, row)) in pres.into_iter().zip(assigned).enumerate() {
             let index = range.start + i;
             let kind = pre.kind;
+            let mut fps: Vec<u128> = Vec::new();
             let planned = match kind {
                 PreKind::Error(msg) => {
                     counters.errors += 1;
@@ -413,9 +420,11 @@ impl Planner {
                                 if bi == 0 {
                                     primary_pruned_constraint = by_constraint;
                                 }
+                                fps.push(0);
                                 evs.push(PointEval::Pruned { reason });
                             }
-                            Slot::Eval(_) => {
+                            Slot::Eval(key) => {
+                                fps.push(slot_fingerprint(bi, &key));
                                 let (job, hit) = row[bi].expect("eval slot has a job");
                                 let mut eval = job_results[job].clone();
                                 if hit {
@@ -471,7 +480,7 @@ impl Planner {
                     }
                 }
             };
-            emit(planned)?;
+            emit(planned, &fps)?;
         }
         Ok(())
     }
@@ -512,7 +521,7 @@ impl Planner {
         range: Range<usize>,
         seen: &mut HashSet<u128>,
         counters: &mut PlanCounters,
-        emit: &mut dyn FnMut(PlannedPoint) -> Result<()>,
+        emit: &mut dyn FnMut(PlannedPoint, &[u128]) -> Result<()>,
     ) -> Result<()> {
         // Segment the range at inner-run boundaries so each work item is a
         // slice of exactly one run, and at SEG_CAP so one huge run still
@@ -547,17 +556,21 @@ impl Planner {
                 match row {
                     BatchRow::Error { point, msg } => {
                         counters.errors += 1;
-                        emit(PlannedPoint {
-                            index,
-                            point,
-                            error: Some(msg),
-                            rejected_by: None,
-                            evals: Vec::new(),
-                            score: None,
-                        })?;
+                        emit(
+                            PlannedPoint {
+                                index,
+                                point,
+                                error: Some(msg),
+                                rejected_by: None,
+                                evals: Vec::new(),
+                                score: None,
+                            },
+                            &[],
+                        )?;
                     }
                     BatchRow::Done { point, evals } => {
                         let mut evs: Vec<PointEval> = Vec::with_capacity(evals.len());
+                        let mut fps: Vec<u128> = Vec::with_capacity(evals.len());
                         for (eval, fp) in evals {
                             // First occurrence in this range consults the
                             // cross-range ledger; a repeat within the range
@@ -575,6 +588,7 @@ impl Planner {
                             if hit {
                                 counters.cache_hits += 1;
                             }
+                            fps.push(fp);
                             evs.push(PointEval::Done { eval, cache_hit: hit });
                         }
                         let mut score = None;
@@ -588,14 +602,17 @@ impl Planner {
                                 score = q.objective.score(eval);
                             }
                         }
-                        emit(PlannedPoint {
-                            index,
-                            point,
-                            error: None,
-                            rejected_by: None,
-                            evals: evs,
-                            score,
-                        })?;
+                        emit(
+                            PlannedPoint {
+                                index,
+                                point,
+                                error: None,
+                                rejected_by: None,
+                                evals: evs,
+                                score,
+                            },
+                            &fps,
+                        )?;
                     }
                 }
             }
@@ -931,7 +948,7 @@ mod tests {
             while start < n {
                 let end = (start + chunk).min(n);
                 planner
-                    .execute_range(&q, &backends, start..end, &mut seen, &mut counters, &mut |p| {
+                    .execute_range(&q, &backends, start..end, &mut seen, &mut counters, &mut |p, _| {
                         points.push(p);
                         Ok(())
                     })
@@ -1018,7 +1035,7 @@ mod tests {
             while start < n {
                 let end = (start + chunk).min(n);
                 planner
-                    .execute_range(&q, &backends, start..end, &mut seen, &mut counters, &mut |p| {
+                    .execute_range(&q, &backends, start..end, &mut seen, &mut counters, &mut |p, _| {
                         points.push(p);
                         Ok(())
                     })

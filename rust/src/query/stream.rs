@@ -187,7 +187,7 @@ impl Planner {
             }
             peak = peak.max(range.len());
             let done_after = range.end;
-            self.execute_range(q, backends, range, &mut seen, &mut counters, &mut |p| {
+            self.execute_range(q, backends, range, &mut seen, &mut counters, &mut |p, _| {
                 if let Some(s) = p.score.filter(|s| s.is_finite()) {
                     let better = match best {
                         Some((bs, bi)) => s > bs || (s == bs && p.index < bi),

@@ -1,32 +1,61 @@
-//! A minimal blocking HTTP/1.1 client for tests, benches, and examples —
-//! just enough to exercise the planner service without external tooling
-//! (curl is the documented interface for humans; this is the in-process
-//! one).
+//! A minimal blocking HTTP/1.1 client for tests, benches, examples and
+//! the fleet coordinator — just enough to exercise the planner service
+//! without external tooling (curl is the documented interface for humans;
+//! this is the in-process one).
+//!
+//! The fleet coordinator talks to peers that can die mid-request, so the
+//! client takes explicit connect/read timeouts ([`ClientConfig`]) and
+//! retries *once* on transient I/O errors (refused, reset, timed out) —
+//! a dead peer turns into a bounded error instead of a hang, and a
+//! momentary hiccup doesn't fail a whole range.
 
 use std::io::Write as _;
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use super::http::{read_response, Response};
 
-/// Default per-call socket timeout. Generous: a cold plan over a large
-/// grid is real work.
+/// Default per-call socket read/write timeout. Generous: a cold plan over
+/// a large grid is real work.
 pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
 
-/// `GET` a path from `addr` (`host:port`).
+/// Default connect timeout — failing to open a socket is fast or never.
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Client-side socket policy for one request.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientConfig {
+    /// TCP connect timeout (a dead or unroutable peer fails this fast).
+    pub connect_timeout: Duration,
+    /// Read/write timeout once connected.
+    pub timeout: Duration,
+    /// Extra attempts after a *transient* I/O failure (refused, reset,
+    /// aborted, timed out, broken pipe, truncated response). Bounded by
+    /// design: 0 = fail fast, 1 = the single retry the coordinator uses.
+    /// HTTP-level errors (any status) never retry.
+    pub retries: u32,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self { connect_timeout: DEFAULT_CONNECT_TIMEOUT, timeout: DEFAULT_TIMEOUT, retries: 1 }
+    }
+}
+
+/// `GET` a path from `addr` (`host:port`), with the default policy.
 pub fn get(addr: &str, path: &str) -> Result<Response> {
-    request(addr, "GET", path, None, DEFAULT_TIMEOUT)
+    request_with(addr, "GET", path, None, &ClientConfig::default())
 }
 
-/// `POST` a body to a path on `addr`.
+/// `POST` a body to a path on `addr`, with the default policy.
 pub fn post(addr: &str, path: &str, body: &str) -> Result<Response> {
-    request(addr, "POST", path, Some(body), DEFAULT_TIMEOUT)
+    request_with(addr, "POST", path, Some(body), &ClientConfig::default())
 }
 
-/// Issue one request with an explicit timeout (applied to connect, read
-/// and write independently).
+/// Issue one request with an explicit read/write timeout and no retry
+/// (the connect timeout is capped at [`DEFAULT_CONNECT_TIMEOUT`]).
 pub fn request(
     addr: &str,
     method: &str,
@@ -34,9 +63,43 @@ pub fn request(
     body: Option<&str>,
     timeout: Duration,
 ) -> Result<Response> {
-    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-    stream.set_read_timeout(Some(timeout))?;
-    stream.set_write_timeout(Some(timeout))?;
+    let cfg = ClientConfig {
+        connect_timeout: timeout.min(DEFAULT_CONNECT_TIMEOUT),
+        timeout,
+        retries: 0,
+    };
+    request_with(addr, method, path, body, &cfg)
+}
+
+/// Issue one request under an explicit [`ClientConfig`].
+pub fn request_with(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    cfg: &ClientConfig,
+) -> Result<Response> {
+    let mut attempts_left = cfg.retries.saturating_add(1);
+    loop {
+        attempts_left -= 1;
+        match attempt(addr, method, path, body, cfg) {
+            Ok(r) => return Ok(r),
+            Err(e) if attempts_left > 0 && is_transient(&e) => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn attempt(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    cfg: &ClientConfig,
+) -> Result<Response> {
+    let mut stream = connect(addr, cfg.connect_timeout)?;
+    stream.set_read_timeout(Some(cfg.timeout))?;
+    stream.set_write_timeout(Some(cfg.timeout))?;
     let body = body.unwrap_or("");
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
@@ -46,4 +109,74 @@ pub fn request(
     stream.write_all(body.as_bytes())?;
     stream.flush()?;
     read_response(&mut stream)
+}
+
+/// Open a TCP connection within `timeout`, trying every resolved address.
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let addrs = addr.to_socket_addrs().with_context(|| format!("resolving {addr}"))?;
+    let mut last: Option<std::io::Error> = None;
+    for sa in addrs {
+        match TcpStream::connect_timeout(&sa, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    match last {
+        Some(e) => Err(anyhow::Error::new(e).context(format!("connecting {addr}"))),
+        None => Err(anyhow!("connecting {addr}: no addresses resolved")),
+    }
+}
+
+/// Would a second attempt plausibly succeed? Only socket-level failures
+/// qualify; anything that produced an HTTP response does not.
+fn is_transient(err: &anyhow::Error) -> bool {
+    use std::io::ErrorKind::*;
+    err.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                ConnectionRefused
+                    | ConnectionReset
+                    | ConnectionAborted
+                    | BrokenPipe
+                    | TimedOut
+                    | WouldBlock
+                    | UnexpectedEof
+            )
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dead_peer_fails_fast_instead_of_hanging() {
+        // A port nothing listens on: refused (or timed out) well within
+        // the bound — never the OS default of minutes.
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_millis(500),
+            timeout: Duration::from_millis(500),
+            retries: 1,
+        };
+        let t0 = std::time::Instant::now();
+        let err = request_with("127.0.0.1:9", "GET", "/healthz", None, &cfg)
+            .expect_err("nothing listens on the discard port");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "dead peer must fail within the configured bounds, took {:?}",
+            t0.elapsed()
+        );
+        assert!(is_transient(&err), "refused/timed out is transient: {err:#}");
+    }
+
+    #[test]
+    fn transient_classification_is_io_only() {
+        assert!(!is_transient(&anyhow!("worker returned HTTP 500")));
+        let io = std::io::Error::new(std::io::ErrorKind::ConnectionReset, "reset");
+        assert!(is_transient(&anyhow::Error::new(io).context("posting /v1/ranges")));
+        let io = std::io::Error::new(std::io::ErrorKind::PermissionDenied, "denied");
+        assert!(!is_transient(&anyhow::Error::new(io)));
+    }
 }

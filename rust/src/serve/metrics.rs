@@ -51,6 +51,16 @@ pub const SERIES: &[(&str, &str, &str)] = &[
     ("jobs_failed_total", "counter", "Jobs that errored."),
     ("jobs_cancelled_total", "counter", "Jobs cancelled before completion."),
     ("jobs_shed_total", "counter", "Job submissions shed because the job queue was full (503)."),
+    (
+        "ranges_executed_total",
+        "counter",
+        "Fleet range executions served by POST /v1/ranges.",
+    ),
+    (
+        "range_points_total",
+        "counter",
+        "Grid points executed on behalf of a fleet coordinator (POST /v1/ranges).",
+    ),
 ];
 
 /// HELP + TYPE preamble for a series, read from [`SERIES`] so the
@@ -80,6 +90,10 @@ pub struct ServeMetrics {
     inflight: AtomicU64,
     /// Connections rejected at the accept queue (backpressure 503s).
     rejected: AtomicU64,
+    /// Fleet range executions served (`POST /v1/ranges`).
+    ranges: AtomicU64,
+    /// Grid points executed across those ranges.
+    range_points: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -111,6 +125,17 @@ impl ServeMetrics {
     /// Count one connection shed by accept-queue backpressure.
     pub fn count_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one executed fleet range of `points` grid points.
+    pub fn count_range(&self, points: u64) {
+        self.ranges.fetch_add(1, Ordering::Relaxed);
+        self.range_points.fetch_add(points, Ordering::Relaxed);
+    }
+
+    /// Fleet ranges executed so far.
+    pub fn ranges_executed(&self) -> u64 {
+        self.ranges.load(Ordering::Relaxed)
     }
 
     /// Total requests shed by backpressure so far.
@@ -163,6 +188,19 @@ impl ServeMetrics {
 
         preamble(&mut out, "http_rejected_total");
         let _ = writeln!(out, "{PREFIX}_http_rejected_total {}", self.rejected());
+
+        preamble(&mut out, "ranges_executed_total");
+        let _ = writeln!(
+            out,
+            "{PREFIX}_ranges_executed_total {}",
+            self.ranges.load(Ordering::Relaxed)
+        );
+        preamble(&mut out, "range_points_total");
+        let _ = writeln!(
+            out,
+            "{PREFIX}_range_points_total {}",
+            self.range_points.load(Ordering::Relaxed)
+        );
 
         for (name, value) in [
             ("eval_cache_hits_total", cache.hits),
@@ -266,6 +304,17 @@ mod tests {
         }
         m.count_rejected();
         assert_eq!(m.rejected(), 1);
+    }
+
+    #[test]
+    fn range_counters_accumulate_and_export() {
+        let m = ServeMetrics::new();
+        m.count_range(4096);
+        m.count_range(1000);
+        assert_eq!(m.ranges_executed(), 2);
+        let text = render(&m);
+        assert!(text.contains("fsdp_bw_ranges_executed_total 2"), "{text}");
+        assert!(text.contains("fsdp_bw_range_points_total 5096"), "{text}");
     }
 
     #[test]

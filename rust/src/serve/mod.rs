@@ -26,6 +26,7 @@
 //! | `/v1/jobs/:id`        | GET    | progress: points decided / pruned / remaining, cache hits, current best |
 //! | `/v1/jobs/:id/result` | GET    | the finished Frontier JSON (byte-identical to the synchronous `/v1/plan` answer) |
 //! | `/v1/jobs/:id`        | DELETE | cancel (next chunk boundary) or discard a finished record |
+//! | `/v1/ranges`          | POST   | execute one grid range for a fleet coordinator ([`crate::fleet`]) and answer the folded partial |
 //! | `/v1/presets`         | GET    | model/cluster presets + backends + dialect keys |
 //! | `/healthz`            | GET    | liveness                                    |
 //! | `/metrics`            | GET    | Prometheus text: request/latency/in-flight/backpressure + evaluation-cache + job series |
@@ -100,6 +101,11 @@ pub const ENDPOINTS: &[(&str, &str, &str)] = &[
         "DELETE",
         "/v1/jobs/:id",
         "Cancel a queued/running job, or discard a finished job's record",
+    ),
+    (
+        "POST",
+        "/v1/ranges",
+        "Execute one contiguous grid range for a fleet coordinator; the response is the folded partial (points, counters, rank accumulator)",
     ),
     (
         "GET",
@@ -430,6 +436,10 @@ impl Handler {
                 Ok(body) => ("validate", 200, JSON, body),
                 Err(e) => ("validate", 400, JSON, error_body(&format!("{e:#}"))),
             },
+            ("POST", "/v1/ranges") => match self.handle_ranges(&req.body) {
+                Ok(body) => ("ranges", 200, JSON, body),
+                Err(e) => ("ranges", 400, JSON, error_body(&format!("{e:#}"))),
+            },
             ("POST", "/v1/jobs") => self.handle_job_submit(&req.body),
             ("GET", "/v1/jobs") => ("jobs_list", 200, JSON, self.jobs.list_json().pretty()),
             (_, "/healthz" | "/metrics" | "/v1/presets") => (
@@ -446,6 +456,12 @@ impl Handler {
                 405,
                 JSON,
                 error_body("POST a query to /v1/validate"),
+            ),
+            (_, "/v1/ranges") => (
+                "method_not_allowed",
+                405,
+                JSON,
+                error_body("POST a range request to /v1/ranges"),
             ),
             (_, "/v1/jobs") => (
                 "method_not_allowed",
@@ -612,6 +628,21 @@ impl Handler {
         let planner = Planner::new(self.planner_threads).with_cache(self.cache.clone());
         let frontier = planner.run(&query)?;
         Ok(frontier.to_json())
+    }
+
+    /// `POST /v1/ranges`: the worker side of the fleet protocol
+    /// ([`crate::fleet`]) — rebuild the shipped query, run the planner
+    /// pipeline over the requested index range with a fresh dedup ledger,
+    /// and answer the folded partial. Range evaluations share this
+    /// server's cross-request cache, so a re-issued range is mostly warm.
+    fn handle_ranges(&self, body: &str) -> Result<String> {
+        let mut req = crate::fleet::wire::RangeRequest::parse(body)?;
+        if req.threads == 0 {
+            req.threads = self.planner_threads;
+        }
+        let partial = crate::fleet::execute_range_request(&req, Some(self.cache.clone()))?;
+        self.metrics.count_range((req.end - req.start) as u64);
+        Ok(partial.dump())
     }
 }
 

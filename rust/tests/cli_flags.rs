@@ -146,6 +146,28 @@ fn valid_invocations_still_pass() {
 }
 
 #[test]
+fn fleet_flag_is_scoped_and_its_host_list_validated_offline() {
+    // --fleet belongs to sweep and plan only.
+    assert_rejected(&["bounds", "--fleet", "127.0.0.1:1"], "unknown option --fleet");
+    assert_rejected(&["simulate", "--fleet", "127.0.0.1:1"], "unknown option --fleet");
+    assert_rejected(&["serve", "--fleet", "127.0.0.1:1"], "unknown option --fleet");
+    assert_rejected(&["check", "x.scn", "--fleet", "127.0.0.1:1"], "unknown option --fleet");
+
+    // Malformed host lists fail validation before any socket is opened.
+    let examples = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples");
+    let sweep = format!("{examples}/sweep.scn");
+    let plan = format!("{examples}/plan.scn");
+    assert_rejected(&["sweep", &sweep, "--fleet", ""], "empty worker entry");
+    assert_rejected(&["sweep", &sweep, "--fleet", "127.0.0.1:8080,,127.0.0.1:9"], "empty worker entry");
+    assert_rejected(&["sweep", &sweep, "--fleet", "host-without-port"], "must be host:port");
+    assert_rejected(&["plan", &plan, "--fleet", ":8080"], "empty host");
+    assert_rejected(&["plan", &plan, "--fleet", "host:99999"], "invalid port");
+
+    // --check-prune runs both executions locally by design.
+    assert_rejected(&["plan", &plan, "--check-prune", "--fleet", "127.0.0.1:1"], "drop --fleet");
+}
+
+#[test]
 fn no_batch_is_accepted_and_changes_no_output_bytes() {
     let examples = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples");
     let sweep = format!("{examples}/sweep.scn");

@@ -1,0 +1,317 @@
+//! Acceptance tests of the distributed sweep fabric: real `serve` workers
+//! on ephemeral ports, a real coordinator scattering ranges over real
+//! sockets.
+//!
+//! The contracts under test:
+//! * a fleet plan/sweep is **byte-identical** to the single-process run of
+//!   the same query, for every worker count and chunking — scattering is
+//!   an execution strategy, never an output format;
+//! * a dead worker (never up, or killed mid-run) costs re-issues, not
+//!   correctness: the run completes, the bytes still match, and the
+//!   recovery counters make the loss observable;
+//! * every range folds exactly once — re-issues and duplicate completions
+//!   never double-count a point;
+//! * a fleet run checkpoints like the local engine: interrupted at a chunk
+//!   boundary, it resumes byte-identically on a **fresh fleet**, and the
+//!   checkpoint interoperates with single-process runs in both directions;
+//! * a checkpoint resumed under different run parameters (batch mode) is
+//!   refused via the range ledger instead of silently mixing runs.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use fsdp_bw::eval::{
+    backends_for, run_sweep_fleet, run_sweep_streamed, Sweep, SweepFormat, SweepStreamConfig,
+};
+use fsdp_bw::fleet::{run_fleet_plan, FleetConfig};
+use fsdp_bw::query::{Planner, Query};
+use fsdp_bw::serve::{ServeConfig, Server};
+use fsdp_bw::util::json::Json;
+use fsdp_bw::util::tempdir::TempDir;
+
+/// 3 × 4 × 2 = 24 points, one n_gpus value erroring (beyond any cluster),
+/// so the wire format carries Done and Error evaluations alike.
+const PLAN_SRC: &str = "model = 13B\nbatch = 1\n\
+                        sweep.n_gpus = 8,16,100000\n\
+                        sweep.seq_len = 1024..8192*2\n\
+                        sweep.gamma = 0,0.5\n\
+                        query.backend = analytical\nquery.top_k = 3\n";
+
+/// 3 × 6 × 11 = 198 points — enough ranges at `--chunk 2` that a worker
+/// killed mid-run is guaranteed to strand in-flight work.
+const BIG_PLAN_SRC: &str = "model = 65B\nbatch = 1\n\
+                            sweep.n_gpus = 16,32,64\n\
+                            sweep.seq_len = 1024..32768*2\n\
+                            sweep.gamma = 0..1+0.1\n\
+                            query.backend = analytical\nquery.top_k = 5\n";
+
+const SWEEP_SRC: &str = "model = 1.3B\nbatch = 1\n\
+                         sweep.n_gpus = 8,16,100000\n\
+                         sweep.seq_len = 1024..8192*2\n\
+                         sweep.gamma = 0,0.5\n";
+
+fn start_workers(n: usize) -> Vec<Server> {
+    (0..n)
+        .map(|_| {
+            Server::start(ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                threads: 2,
+                queue: 32,
+                timeout: Duration::from_secs(30),
+                ..ServeConfig::default()
+            })
+            .expect("worker starts on an ephemeral port")
+        })
+        .collect()
+}
+
+fn hosts_of(workers: &[Server]) -> Vec<String> {
+    workers.iter().map(|w| w.addr().to_string()).collect()
+}
+
+fn fleet_cfg(hosts: Vec<String>, chunk: usize) -> FleetConfig {
+    let mut fc = FleetConfig::new(hosts);
+    fc.chunk = chunk;
+    fc.threads = 2;
+    fc
+}
+
+/// An address nothing listens on: bind an ephemeral port, then drop it.
+fn dead_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    addr
+}
+
+#[test]
+fn fleet_plan_is_byte_identical_for_every_worker_count_and_chunking() {
+    let q = Query::parse(PLAN_SRC).unwrap();
+    let want = Planner::new(2).run(&q).unwrap().to_json();
+    let n = q.space.len();
+    assert_eq!(n, 24);
+
+    for workers in [1usize, 2, 3] {
+        let fleet = start_workers(workers);
+        for chunk in [5usize, 7, 64] {
+            let fc = fleet_cfg(hosts_of(&fleet), chunk);
+            let (frontier, stats) = run_fleet_plan(PLAN_SRC, &q, &fc).unwrap();
+            assert_eq!(
+                frontier.to_json(),
+                want,
+                "{workers} workers, chunk {chunk}: fleet output must match the local run"
+            );
+            assert_eq!(stats.ranges, n.div_ceil(chunk));
+            assert_eq!(stats.reissued, 0, "healthy fleet: no recovery traffic");
+            assert_eq!(stats.duplicates_dropped, 0);
+            assert_eq!(stats.worker_failures, 0);
+        }
+        // Every scattered range landed on some worker exactly once.
+        let executed: u64 = fleet.iter().map(|w| w.metrics().ranges_executed()).sum();
+        let per_run: u64 = [5usize, 7, 64].iter().map(|c| n.div_ceil(*c) as u64).sum();
+        assert_eq!(executed, per_run, "{workers} workers");
+        for w in fleet {
+            w.shutdown();
+        }
+    }
+}
+
+#[test]
+fn fleet_sweep_report_is_byte_identical_to_the_local_streamed_report() {
+    let sweep = Sweep::parse(SWEEP_SRC).unwrap();
+    let backends = backends_for("analytical").unwrap();
+    let fleet = start_workers(2);
+    for format in [SweepFormat::Json, SweepFormat::Csv, SweepFormat::Text] {
+        for chunk in [5usize, 50] {
+            let cfg = SweepStreamConfig::new(format, chunk, 2);
+            let want = run_sweep_streamed(&sweep, &backends, &cfg).unwrap().body.unwrap();
+            let fc = fleet_cfg(hosts_of(&fleet), chunk);
+            let (out, stats) =
+                run_sweep_fleet(&sweep, SWEEP_SRC, "analytical", &cfg, &fc).unwrap();
+            assert!(!out.interrupted);
+            assert_eq!(out.n_done, 24);
+            assert_eq!(out.body.as_deref(), Some(want.as_str()), "{format:?} chunk {chunk}");
+            assert_eq!(stats.reissued, 0);
+        }
+    }
+    for w in fleet {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn a_worker_that_was_never_alive_costs_reissues_not_correctness() {
+    let q = Query::parse(PLAN_SRC).unwrap();
+    let want = Planner::new(2).run(&q).unwrap().to_json();
+
+    let fleet = start_workers(2);
+    let mut hosts = hosts_of(&fleet);
+    hosts.push(dead_addr());
+    let fc = fleet_cfg(hosts, 3);
+    let (frontier, stats) = run_fleet_plan(PLAN_SRC, &q, &fc).unwrap();
+    assert_eq!(frontier.to_json(), want, "a dead worker must not change a single byte");
+    assert!(stats.worker_failures >= 1, "{stats:?}");
+    assert!(stats.reissued >= 1, "the dead worker's ranges were re-issued: {stats:?}");
+    for w in fleet {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn a_worker_killed_mid_run_is_survived_with_identical_bytes() {
+    let q = Query::parse(BIG_PLAN_SRC).unwrap();
+    assert_eq!(q.space.len(), 198);
+    let want = Planner::new(2).run(&q).unwrap().to_json();
+
+    let mut fleet = start_workers(3);
+    let doomed = fleet.pop().unwrap();
+    let mut hosts = hosts_of(&fleet);
+    hosts.push(doomed.addr().to_string());
+    let doomed_metrics = doomed.metrics().clone();
+    // Shut the third worker down as soon as it has served two ranges —
+    // mid-run by construction (99 ranges at chunk 2), from another thread
+    // while the coordinator is blocked scattering.
+    let killer = std::thread::spawn(move || {
+        for _ in 0..2_000 {
+            if doomed_metrics.ranges_executed() >= 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        doomed.shutdown();
+    });
+
+    let fc = fleet_cfg(hosts, 2);
+    let (frontier, stats) = run_fleet_plan(BIG_PLAN_SRC, &q, &fc).unwrap();
+    killer.join().unwrap();
+
+    assert_eq!(frontier.to_json(), want, "losing a worker must not change a single byte");
+    assert_eq!(stats.ranges, 99);
+    assert!(stats.worker_failures >= 1, "{stats:?}");
+    assert!(stats.reissued >= 1, "stranded ranges were re-issued: {stats:?}");
+    for w in fleet {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn every_host_entry_must_be_reachable_eventually_or_the_run_fails() {
+    // A fleet of *only* dead workers exhausts the per-range attempt budget
+    // and reports a hard error instead of spinning forever.
+    let q = Query::parse(PLAN_SRC).unwrap();
+    let mut fc = fleet_cfg(vec![dead_addr()], 8);
+    fc.client.retries = 0;
+    let err = run_fleet_plan(PLAN_SRC, &q, &fc).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("failed on every attempt"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn fleet_checkpoint_resumes_on_a_fresh_fleet_byte_identically() {
+    let sweep = Sweep::parse(SWEEP_SRC).unwrap();
+    let backends = backends_for("analytical").unwrap();
+    let chunk = 5; // 24 points → 5 chunks
+    let cfg = SweepStreamConfig::new(SweepFormat::Csv, chunk, 2);
+    let want = run_sweep_streamed(&sweep, &backends, &cfg).unwrap().body.unwrap();
+
+    let dir = TempDir::new().unwrap();
+    let ckpt: PathBuf = dir.path().join("ck.json");
+
+    // Phase 1: fleet A runs two chunks, checkpoints, and is torn down.
+    let fleet_a = start_workers(2);
+    let mut c1 = cfg.clone();
+    c1.checkpoint = Some(ckpt.clone());
+    c1.max_chunks = Some(2);
+    let fa = fleet_cfg(hosts_of(&fleet_a), chunk);
+    let (partial, _) = run_sweep_fleet(&sweep, SWEEP_SRC, "analytical", &c1, &fa).unwrap();
+    assert!(partial.interrupted);
+    assert_eq!(partial.chunks_done, 2);
+    for w in fleet_a {
+        w.shutdown();
+    }
+
+    // The checkpoint carries the fleet's range ledger: one fingerprint per
+    // completed chunk, absent from single-process checkpoints.
+    let doc = Json::parse(&std::fs::read_to_string(&ckpt).unwrap()).unwrap();
+    let ledger = doc.get("ranges").unwrap().as_arr().unwrap();
+    assert_eq!(ledger.len(), 2);
+    assert!(ledger.iter().all(|e| e.as_str().unwrap().len() == 32));
+
+    // Phase 2: a brand-new fleet (new processes, new ports) resumes it.
+    let fleet_b = start_workers(3);
+    let mut c2 = cfg.clone();
+    c2.checkpoint = Some(ckpt.clone());
+    c2.resume = true;
+    let fb = fleet_cfg(hosts_of(&fleet_b), chunk);
+    let (resumed, _) = run_sweep_fleet(&sweep, SWEEP_SRC, "analytical", &c2, &fb).unwrap();
+    assert!(!resumed.interrupted);
+    assert_eq!(resumed.n_done, 24);
+    assert_eq!(resumed.body.as_deref(), Some(want.as_str()), "resume across fleet restart");
+    for w in fleet_b {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn fleet_and_single_process_checkpoints_interoperate() {
+    // A run interrupted locally finishes on a fleet: the checkpoint is the
+    // same artifact, the fleet adopts the completed prefix as-is.
+    let sweep = Sweep::parse(SWEEP_SRC).unwrap();
+    let backends = backends_for("analytical").unwrap();
+    let chunk = 5;
+    let cfg = SweepStreamConfig::new(SweepFormat::Json, chunk, 2);
+    let want = run_sweep_streamed(&sweep, &backends, &cfg).unwrap().body.unwrap();
+
+    let dir = TempDir::new().unwrap();
+    let ckpt: PathBuf = dir.path().join("ck.json");
+    let mut c1 = cfg.clone();
+    c1.checkpoint = Some(ckpt.clone());
+    c1.max_chunks = Some(3);
+    let partial = run_sweep_streamed(&sweep, &backends, &c1).unwrap();
+    assert!(partial.interrupted);
+
+    let fleet = start_workers(2);
+    let mut c2 = cfg.clone();
+    c2.checkpoint = Some(ckpt.clone());
+    c2.resume = true;
+    let fc = fleet_cfg(hosts_of(&fleet), chunk);
+    let (resumed, _) = run_sweep_fleet(&sweep, SWEEP_SRC, "analytical", &c2, &fc).unwrap();
+    assert_eq!(resumed.body.as_deref(), Some(want.as_str()), "local checkpoint, fleet finish");
+    for w in fleet {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn a_checkpoint_from_a_different_fleet_run_is_refused() {
+    // Same sweep, same chunking, same format — but a different batch mode
+    // is a different run, and the range ledger catches it.
+    let sweep = Sweep::parse(SWEEP_SRC).unwrap();
+    let chunk = 5;
+    let dir = TempDir::new().unwrap();
+    let ckpt: PathBuf = dir.path().join("ck.json");
+
+    let fleet = start_workers(2);
+    let mut c1 = SweepStreamConfig::new(SweepFormat::Csv, chunk, 2);
+    c1.checkpoint = Some(ckpt.clone());
+    c1.max_chunks = Some(2);
+    let fc = fleet_cfg(hosts_of(&fleet), chunk);
+    let (partial, _) = run_sweep_fleet(&sweep, SWEEP_SRC, "analytical", &c1, &fc).unwrap();
+    assert!(partial.interrupted);
+
+    let mut c2 = SweepStreamConfig::new(SweepFormat::Csv, chunk, 2);
+    c2.checkpoint = Some(ckpt.clone());
+    c2.resume = true;
+    c2.batch = false;
+    let err = run_sweep_fleet(&sweep, SWEEP_SRC, "analytical", &c2, &fc).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("different fleet run"),
+        "unexpected error: {err:#}"
+    );
+    for w in fleet {
+        w.shutdown();
+    }
+}
