@@ -158,6 +158,13 @@ pub const CMD_SPECS: &[CmdSpec] = &[
                  chunks across; the report is byte-identical to the local run and ranges \
                  lost to dead workers are re-issued (recovery stats go to stderr)",
             ),
+            (
+                "trace",
+                "Write a JSONL execution trace (planner phases, chunk lifecycle, \
+                 checkpoint writes; with --fleet also range issue/gather and merged \
+                 worker-side span summaries) for `fsdp-bw trace`; the report stays \
+                 byte-identical",
+            ),
         ],
         positionals: 1,
         variadic: false,
@@ -187,6 +194,12 @@ pub const CMD_SPECS: &[CmdSpec] = &[
                  is byte-identical to the local run (workers use their own \
                  --planner-threads; recovery stats go to stderr)",
             ),
+            (
+                "trace",
+                "Write a JSONL execution trace (planner phases, chunk lifecycle; with \
+                 --fleet also range issue/gather and merged worker-side span summaries) \
+                 for `fsdp-bw trace`; the frontier stays byte-identical",
+            ),
         ],
         positionals: 1,
         variadic: false,
@@ -209,8 +222,28 @@ pub const CMD_SPECS: &[CmdSpec] = &[
             ("job-queue", "Queued jobs bound; beyond it submissions shed 503; default 32"),
             ("job-chunk", "Grid points per job chunk (progress granularity); default 4096"),
             ("job-records", "Finished job records retained; default 256"),
+            (
+                "trace",
+                "Write a JSONL execution trace (request spans, job lifecycle events, \
+                 per-chunk timings) for `fsdp-bw trace`",
+            ),
         ],
         positionals: 0,
+        variadic: false,
+    },
+    CmdSpec {
+        name: "trace",
+        summary: "Summarize a `--trace` JSONL file: per-phase wall time, per-chunk \
+                  throughput, per-worker utilization, fleet recovery counters and the \
+                  critical path — and optionally export Chrome trace-event JSON.",
+        args: "<trace.jsonl>",
+        flags: &[],
+        opts: &[(
+            "chrome",
+            "Also write Chrome trace-event JSON (load in chrome://tracing or Perfetto) \
+             to a file",
+        )],
+        positionals: 1,
         variadic: false,
     },
     CmdSpec {

@@ -29,6 +29,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::Tracer;
 use crate::query::cache::EvalCache;
 use crate::query::stream::{StreamOptions, StreamProgress, StreamSink};
 use crate::query::{Planner, PlannedPoint, PointEval, Query};
@@ -94,6 +95,10 @@ pub struct SweepStreamConfig {
     /// Allow the planner's batched evaluation path (default). `--no-batch`
     /// clears it; output bytes are identical either way.
     pub batch: bool,
+    /// Execution tracer (`--trace <file.jsonl>`): planner phase spans,
+    /// chunk lifecycle, checkpoint writes. Report bytes, checkpoints and
+    /// fingerprints are unchanged by it (asserted in `tests/trace.rs`).
+    pub trace: Option<Tracer>,
 }
 
 impl SweepStreamConfig {
@@ -109,6 +114,7 @@ impl SweepStreamConfig {
             cancel: None,
             out: None,
             batch: true,
+            trace: None,
         }
     }
 }
@@ -173,6 +179,9 @@ pub fn run_sweep_streamed(
     }
     if !cfg.batch {
         planner = planner.without_batch();
+    }
+    if let Some(t) = &cfg.trace {
+        planner = planner.with_tracer(t.clone());
     }
     let opts = StreamOptions {
         chunk,
@@ -253,6 +262,7 @@ pub fn run_sweep_fleet(
         threads: fleet.threads,
         start: 0,
         end: 0,
+        trace: fleet.trace.is_some(),
     };
     let run_fp = run_fingerprint(&req, chunk);
     let total_chunks = n.div_ceil(chunk);
@@ -359,8 +369,9 @@ fn setup_writer(
         let Some(ckpt) = &cfg.checkpoint else {
             bail!("--resume needs --checkpoint <path>");
         };
-        let (w, chunks_done) =
+        let (mut w, chunks_done) =
             SweepStreamWriter::resume(ckpt, fingerprint, sweep, backend_names, cfg.format)?;
+        w.trace = cfg.trace.clone();
         return Ok((w, chunks_done, None));
     }
     // Temp spill home for multi-chunk runs without a checkpoint — held
@@ -394,6 +405,7 @@ fn setup_writer(
             fingerprint: fingerprint.to_string(),
             chunk,
             fleet_ranges: None,
+            trace: cfg.trace.clone(),
         },
         0,
         tempdir,
@@ -496,6 +508,8 @@ struct SweepStreamWriter {
     /// fleet parameters. `None` for single-process runs — their
     /// checkpoint bytes are unchanged by this field's existence.
     fleet_ranges: Option<Vec<String>>,
+    /// Emits a `checkpoint.write` event per persisted checkpoint.
+    trace: Option<Tracer>,
 }
 
 impl SweepStreamWriter {
@@ -569,6 +583,7 @@ impl SweepStreamWriter {
                 fingerprint: fingerprint.to_string(),
                 chunk,
                 fleet_ranges,
+                trace: None,
             },
             chunks_done,
         ))
@@ -602,6 +617,16 @@ impl SweepStreamWriter {
             .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
         std::fs::rename(&tmp, &ckpt)
             .with_context(|| format!("publishing checkpoint {}", ckpt.display()))?;
+        if let Some(t) = &self.trace {
+            t.event(
+                "checkpoint.write",
+                vec![
+                    ("chunks_done", num(progress.chunks_done as f64)),
+                    ("done", num(progress.done as f64)),
+                    ("rows_bytes", num(self.spill.len() as f64)),
+                ],
+            );
+        }
         Ok(())
     }
 

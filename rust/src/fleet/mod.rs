@@ -43,6 +43,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::eval::{backends_for, Sweep};
+use crate::obs::Tracer;
 use crate::query::cache::EvalCache;
 use crate::query::frontier::{rank, RankAccum};
 use crate::query::{Frontier, PlanCounters, PlannedPoint, Planner, PointEval, Query};
@@ -82,6 +83,11 @@ pub struct FleetConfig {
     /// the host count). Bounds coordinator memory when one straggler
     /// blocks the in-order fold.
     pub max_buffered: usize,
+    /// Coordinator-side tracer (`--trace`): issue/gather/re-issue/retire
+    /// events with per-worker attribution, plus worker-side span
+    /// aggregates merged out of the partials. Also flips
+    /// [`wire::RangeRequest::trace`] so workers summarize their phases.
+    pub trace: Option<Tracer>,
 }
 
 impl FleetConfig {
@@ -94,6 +100,7 @@ impl FleetConfig {
             deadline: DEFAULT_DEADLINE,
             client: ClientConfig { timeout: DEFAULT_RANGE_TIMEOUT, ..ClientConfig::default() },
             max_buffered: 0,
+            trace: None,
         }
     }
 }
@@ -112,6 +119,8 @@ pub struct FleetStats {
     pub duplicates_dropped: usize,
     /// Failed range requests (dead peer, HTTP error, bad partial).
     pub worker_failures: usize,
+    /// Workers retired after [`RETIRE_AFTER`] consecutive failures.
+    pub retired: usize,
 }
 
 impl FleetStats {
@@ -119,8 +128,13 @@ impl FleetStats {
     pub fn summary(&self, hosts: usize) -> String {
         format!(
             "fleet: {} ranges over {} workers — {} re-issued, {} duplicate completions \
-             dropped, {} worker failures",
-            self.ranges, hosts, self.reissued, self.duplicates_dropped, self.worker_failures
+             dropped, {} worker failures, {} workers retired",
+            self.ranges,
+            hosts,
+            self.reissued,
+            self.duplicates_dropped,
+            self.worker_failures,
+            self.retired
         )
     }
 }
@@ -194,6 +208,12 @@ pub fn execute_range_request(
     if !req.batch {
         planner = planner.without_batch();
     }
+    // A traced coordinator asks for per-phase aggregates, not lines: the
+    // worker runs a summarizing tracer and ships the folded spans back.
+    let tracer = if req.trace { Some(Tracer::summarizing()) } else { None };
+    if let Some(t) = &tracer {
+        planner = planner.with_tracer(t.clone());
+    }
     let mut seen: HashSet<u128> = HashSet::new();
     let mut counters = PlanCounters { points: req.end - req.start, ..Default::default() };
     let mut accum = RankAccum::new(&q.objective, q.top_k);
@@ -212,7 +232,8 @@ pub fn execute_range_request(
     )?;
     let names: Vec<Json> =
         backends.iter().map(|b| Json::Str(b.name().to_string())).collect();
-    Ok(wire::partial_json(req.start, req.end, names, &counters, &accum, points))
+    let spans = tracer.map(|t| t.summary()).unwrap_or_default();
+    Ok(wire::partial_json(req.start, req.end, names, &counters, &accum, points, &spans))
 }
 
 // ---------------------------------------------------------------------------
@@ -318,6 +339,8 @@ struct Ctx<'a> {
     first: usize,
     max_buffered: usize,
     max_attempts: u32,
+    /// Issue/gather/fail/retire events with per-worker attribution.
+    trace: Option<&'a Tracer>,
 }
 
 /// Scatter ranges `[start_chunk, …)` of the grid's tiling across the
@@ -338,6 +361,17 @@ pub(crate) fn scatter_gather(
         None => total,
     };
     let mut stats = FleetStats { ranges: last - first, ..FleetStats::default() };
+    if let Some(t) = &cfg.trace {
+        t.event(
+            "fleet.scatter",
+            vec![
+                ("ranges", Json::Num((last - first) as f64)),
+                ("workers", Json::Num(cfg.hosts.len() as f64)),
+                ("chunk", Json::Num(chunk as f64)),
+                ("start_chunk", Json::Num(first as f64)),
+            ],
+        );
+    }
     if first >= last {
         return Ok((stats, last < total));
     }
@@ -368,6 +402,7 @@ pub(crate) fn scatter_gather(
             cfg.max_buffered
         },
         max_attempts: (cfg.hosts.len() as u32) * 3 + 6,
+        trace: cfg.trace.as_ref(),
     };
 
     let mut fold_err: Option<anyhow::Error> = None;
@@ -420,6 +455,20 @@ pub(crate) fn scatter_gather(
     }
     stats = shared.stats;
     stats.ranges = last - first;
+    if let Some(t) = &cfg.trace {
+        // The structured twin of the stderr summary line — the trace
+        // report's recovery section reads this.
+        t.event(
+            "fleet.done",
+            vec![
+                ("ranges", Json::Num(stats.ranges as f64)),
+                ("reissued", Json::Num(stats.reissued as f64)),
+                ("duplicates_dropped", Json::Num(stats.duplicates_dropped as f64)),
+                ("worker_failures", Json::Num(stats.worker_failures as f64)),
+                ("retired", Json::Num(stats.retired as f64)),
+            ],
+        );
+    }
     Ok((stats, cancelled || last < total))
 }
 
@@ -428,13 +477,14 @@ pub(crate) fn scatter_gather(
 fn host_loop(host: &str, ctx: &Ctx) {
     let mut consecutive = 0u32;
     loop {
-        let (id, my_epoch) = {
+        let (id, my_epoch, stolen) = {
             let mut g = ctx.shared.lock().unwrap();
             loop {
                 if g.remaining == 0 || g.stopping || g.failure.is_some() {
                     return;
                 }
                 let mut job = None;
+                let mut stolen = false;
                 if g.buffered.len() < ctx.max_buffered {
                     if let Some(id) = g.pending.pop_front() {
                         job = Some(id);
@@ -449,6 +499,7 @@ fn host_loop(host: &str, ctx: &Ctx) {
                         });
                         if let Some(ix) = overdue {
                             g.stats.reissued += 1;
+                            stolen = true;
                             job = Some(ctx.first + ix);
                         }
                     }
@@ -457,7 +508,7 @@ fn host_loop(host: &str, ctx: &Ctx) {
                     g.epoch += 1;
                     let epoch = g.epoch;
                     g.states[id - ctx.first] = RangeState::Issued { at: Instant::now(), epoch };
-                    break (id, epoch);
+                    break (id, epoch, stolen);
                 }
                 g = ctx.work_cv.wait_timeout(g, Duration::from_millis(50)).unwrap().0;
             }
@@ -465,7 +516,22 @@ fn host_loop(host: &str, ctx: &Ctx) {
 
         let start = id * ctx.chunk;
         let end = ((id + 1) * ctx.chunk).min(ctx.n);
+        if let Some(t) = ctx.trace {
+            t.event(
+                "fleet.issue",
+                vec![
+                    ("range", Json::Num(id as f64)),
+                    ("start", Json::Num(start as f64)),
+                    ("end", Json::Num(end as f64)),
+                    ("host", Json::Str(host.to_string())),
+                    ("epoch", Json::Num(my_epoch as f64)),
+                    ("steal", Json::Bool(stolen)),
+                ],
+            );
+        }
+        let posted_at = Instant::now();
         let result = post_range(host, ctx.req, start, end, ctx.client);
+        let rtt_us = posted_at.elapsed().as_micros() as u64;
 
         let mut g = ctx.shared.lock().unwrap();
         let ix = id - ctx.first;
@@ -476,7 +542,45 @@ fn host_loop(host: &str, ctx: &Ctx) {
                     // A steal raced a slow-but-alive worker: the range
                     // already folded once; this copy is dropped.
                     g.stats.duplicates_dropped += 1;
+                    if let Some(t) = ctx.trace {
+                        t.event(
+                            "fleet.duplicate",
+                            vec![
+                                ("range", Json::Num(id as f64)),
+                                ("host", Json::Str(host.to_string())),
+                            ],
+                        );
+                    }
                 } else {
+                    if let Some(t) = ctx.trace {
+                        t.event(
+                            "fleet.gather",
+                            vec![
+                                ("range", Json::Num(id as f64)),
+                                ("host", Json::Str(host.to_string())),
+                                ("rtt_us", Json::Num(rtt_us as f64)),
+                                ("points", Json::Num((end - start) as f64)),
+                                ("epoch", Json::Num(my_epoch as f64)),
+                            ],
+                        );
+                        // Re-emit the worker's per-phase aggregates with
+                        // the attribution only the coordinator knows.
+                        if !partial.spans.is_empty() {
+                            let m: BTreeMap<String, Json> = partial
+                                .spans
+                                .iter()
+                                .map(|(n, a)| (n.clone(), a.json()))
+                                .collect();
+                            t.event(
+                                "fleet.worker",
+                                vec![
+                                    ("host", Json::Str(host.to_string())),
+                                    ("range", Json::Num(id as f64)),
+                                    ("spans", Json::Obj(m)),
+                                ],
+                            );
+                        }
+                    }
                     g.states[ix] = RangeState::Done;
                     g.remaining -= 1;
                     g.buffered.insert(id, partial);
@@ -487,6 +591,16 @@ fn host_loop(host: &str, ctx: &Ctx) {
             Err(e) => {
                 g.stats.worker_failures += 1;
                 consecutive += 1;
+                if let Some(t) = ctx.trace {
+                    t.event(
+                        "fleet.fail",
+                        vec![
+                            ("range", Json::Num(id as f64)),
+                            ("host", Json::Str(host.to_string())),
+                            ("error", Json::Str(format!("{e:#}"))),
+                        ],
+                    );
+                }
                 let still_mine = matches!(
                     g.states[ix],
                     RangeState::Issued { epoch, .. } if epoch == my_epoch
@@ -512,6 +626,16 @@ fn host_loop(host: &str, ctx: &Ctx) {
                     // The last worker never retires — it keeps trying
                     // until the per-range attempt budget gives out.
                     g.hosts_alive -= 1;
+                    g.stats.retired += 1;
+                    if let Some(t) = ctx.trace {
+                        t.event(
+                            "fleet.retire",
+                            vec![
+                                ("host", Json::Str(host.to_string())),
+                                ("failures", Json::Num(consecutive as f64)),
+                            ],
+                        );
+                    }
                     ctx.work_cv.notify_all();
                     ctx.fold_cv.notify_all();
                     return;
@@ -582,6 +706,7 @@ pub fn run_fleet_plan(
         threads: cfg.threads,
         start: 0,
         end: 0,
+        trace: cfg.trace.is_some(),
     };
     let spec = ScatterSpec { req: &req, n, start_chunk: 0, max_chunks: None, cancel: None };
     let mut accum = RankAccum::new(&q.objective, q.top_k);
@@ -684,6 +809,7 @@ mod tests {
             threads: 2,
             start: 1,
             end: 3,
+            trace: true,
         };
         let body = execute_range_request(&req, None).unwrap().dump();
         let partial = wire::RangePartial::parse(&body).unwrap();
@@ -693,6 +819,9 @@ mod tests {
         assert_eq!(partial.points.len(), 2);
         assert_eq!(partial.points[0].0.index, 1);
         assert_eq!(partial.points[1].0.index, 2);
+        // `trace: true` rode along, so the worker shipped span aggregates.
+        assert!(!partial.spans.is_empty(), "traced requests return span summaries");
+        assert!(partial.spans.iter().all(|(_, a)| a.count > 0));
         // Out-of-grid ranges are refused, not truncated.
         let mut over = req.clone();
         over.start = 3;
@@ -712,10 +841,16 @@ mod tests {
             threads: 0,
             start: 0,
             end: 0,
+            trace: false,
         };
         let run = run_fingerprint(&req, 64);
         assert_eq!(run, run_fingerprint(&req, 64), "fingerprints are deterministic");
         assert_ne!(run, run_fingerprint(&req, 128), "chunking is part of the run identity");
+        // Tracing never shapes output bytes, so it must not fence off
+        // checkpoints either.
+        let mut traced = req.clone();
+        traced.trace = true;
+        assert_eq!(run, run_fingerprint(&traced, 64), "trace is not part of the run identity");
         let mut other = req.clone();
         other.backend = "simulated".to_string();
         assert_ne!(run, run_fingerprint(&other, 64));

@@ -27,6 +27,7 @@ use crate::eval::{
     num, obj, EvalBounds, EvalMemory, EvalMetrics, EvalSearch, EvalStep, Evaluation,
     ScenarioPoint, SearchChoice, BACKEND_NAMES,
 };
+use crate::obs::SpanAgg;
 use crate::query::frontier::RankAccum;
 use crate::query::{PlanCounters, PlannedPoint, PointEval};
 use crate::util::json::Json;
@@ -84,6 +85,10 @@ pub struct RangeRequest {
     /// Grid index range, `start..end`.
     pub start: usize,
     pub end: usize,
+    /// The coordinator is tracing: run a summarizing tracer around the
+    /// range and ship per-phase [`SpanAgg`]s back in the partial. Optional
+    /// on the wire (absent = false), so old requests stay parseable.
+    pub trace: bool,
 }
 
 impl RangeRequest {
@@ -98,6 +103,7 @@ impl RangeRequest {
             ("threads", num(self.threads as f64)),
             ("start", num(self.start as f64)),
             ("end", num(self.end as f64)),
+            ("trace", Json::Bool(self.trace)),
         ])
     }
 
@@ -113,6 +119,10 @@ impl RangeRequest {
             threads: v.get("threads")?.as_usize().context("threads")?,
             start: v.get("start")?.as_usize().context("start")?,
             end: v.get("end")?.as_usize().context("end")?,
+            trace: match v.opt("trace") {
+                Some(b) => bool_of(b).context("trace")?,
+                None => false,
+            },
         };
         if req.start > req.end {
             bail!("range start {} exceeds end {}", req.start, req.end);
@@ -137,6 +147,10 @@ pub struct RangePartial {
     /// Every planned point of the range, in index order, paired with its
     /// per-slot dedup fingerprints.
     pub points: Vec<(PlannedPoint, Vec<u128>)>,
+    /// Worker-side per-phase span aggregates, name-sorted — present only
+    /// when the request asked for tracing ([`RangeRequest::trace`]). The
+    /// coordinator re-emits them with per-worker attribution.
+    pub spans: Vec<(String, SpanAgg)>,
 }
 
 impl RangePartial {
@@ -164,7 +178,13 @@ impl RangePartial {
         if at != end {
             bail!("range partial covers {start}..{at}, expected {start}..{end}");
         }
-        Ok(RangePartial { start, end, backends, counters, accum, points })
+        let mut spans = Vec::new();
+        if let Some(Json::Obj(m)) = v.opt("spans") {
+            for (name, agg) in m {
+                spans.push((name.clone(), SpanAgg::from_json(agg).context("partial spans")?));
+            }
+        }
+        Ok(RangePartial { start, end, backends, counters, accum, points, spans })
     }
 
     /// Deserialize the shipped accumulator state under the coordinator's
@@ -186,15 +206,22 @@ pub(crate) fn partial_json(
     counters: &PlanCounters,
     accum: &RankAccum,
     points: Vec<Json>,
+    spans: &[(String, SpanAgg)],
 ) -> Json {
-    obj(vec![
+    let mut pairs = vec![
         ("start", num(start as f64)),
         ("end", num(end as f64)),
         ("backends", Json::Arr(backends)),
         ("counters", counters.json()),
         ("accum", accum.state_json()),
         ("points", Json::Arr(points)),
-    ])
+    ];
+    if !spans.is_empty() {
+        let m: std::collections::BTreeMap<String, Json> =
+            spans.iter().map(|(n, a)| (n.clone(), a.json())).collect();
+        pairs.push(("spans", Json::Obj(m)));
+    }
+    obj(pairs)
 }
 
 // ---------------------------------------------------------------------------
@@ -684,6 +711,7 @@ mod tests {
             threads: 3,
             start: 16,
             end: 32,
+            trace: true,
         };
         let back = RangeRequest::parse(&req.json().dump()).unwrap();
         assert_eq!(back.mode, req.mode);
@@ -694,6 +722,14 @@ mod tests {
         assert_eq!(back.batch, req.batch);
         assert_eq!(back.threads, req.threads);
         assert_eq!((back.start, back.end), (req.start, req.end));
+        assert_eq!(back.trace, req.trace);
+        // `trace` is optional on the wire: requests from older
+        // coordinators (no key) parse as untraced.
+        let mut old = req.json();
+        if let Json::Obj(m) = &mut old {
+            m.remove("trace");
+        }
+        assert!(!RangeRequest::parse(&old.dump()).unwrap().trace);
         // An inverted range is rejected at parse time, not deep in the planner.
         let mut bad = req.json();
         if let Json::Obj(m) = &mut bad {
@@ -735,5 +771,27 @@ mod tests {
         assert!(RangePartial::parse(&body(vec![point(5), point(4)])).is_err());
         assert!(RangePartial::parse(&body(vec![point(4)])).is_err());
         assert!(RangePartial::parse(&body(vec![point(4), point(5), point(6)])).is_err());
+    }
+
+    #[test]
+    fn partial_spans_are_optional_and_round_trip() {
+        let base = vec![
+            ("start", num(0.0)),
+            ("end", num(0.0)),
+            ("backends", Json::Arr(vec![Json::Str("analytical".to_string())])),
+            ("counters", PlanCounters::default().json()),
+            (
+                "accum",
+                obj(vec![("kind", Json::Str("all".to_string())), ("indices", Json::Arr(vec![]))]),
+            ),
+            ("points", Json::Arr(vec![])),
+        ];
+        let without = RangePartial::parse(&obj(base.clone()).dump()).unwrap();
+        assert!(without.spans.is_empty(), "untraced partials carry no spans");
+        let agg = SpanAgg { count: 3, total_us: 1200, max_us: 700 };
+        let mut with = base;
+        with.push(("spans", obj(vec![("planner.evaluate", agg.json())])));
+        let parsed = RangePartial::parse(&obj(with).dump()).unwrap();
+        assert_eq!(parsed.spans, vec![("planner.evaluate".to_string(), agg)]);
     }
 }

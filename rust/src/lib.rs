@@ -22,6 +22,10 @@
 //!   keys).
 //! * [`gridsearch`] — Appendix C's Algorithm 1 grid-search simulator plus
 //!   the configuration search that generates the paper's Tables 4–6.
+//! * [`obs`] — execution tracing: monotonic-clock spans and typed events
+//!   emitted as JSONL through a lock-cheap per-thread buffer, threaded
+//!   through the planner, stream engine, serve, jobs and fleet layers
+//!   (`--trace`, `fsdp-bw trace`, Chrome trace-event export).
 //! * [`query`] — the declarative Query/Planner API: objectives, `where.*`
 //!   constraints, §2.7 bounds-pruned search (Eqs 12–15) and memoized
 //!   parallel execution — the one way every front-end (CLI `plan`, sweeps,
@@ -76,6 +80,7 @@ pub mod eval;
 pub mod experiments;
 pub mod fleet;
 pub mod gridsearch;
+pub mod obs;
 pub mod query;
 #[cfg(feature = "xla")]
 pub mod runtime;

@@ -14,6 +14,9 @@
 //! * `serve` — the same Planner as a long-running HTTP service with a
 //!   shared cross-request evaluation cache and an async job API (see
 //!   [`fsdp_bw::serve`]);
+//! * `trace` — summarize a `--trace` JSONL execution trace (per-phase
+//!   wall time, per-chunk throughput, per-worker utilization, critical
+//!   path) and export Chrome trace-event JSON;
 //! * `docs` — regenerate `docs/REFERENCE.md` from the binary's own
 //!   registries;
 //! * `experiment` — regenerate a paper table/figure;
@@ -67,7 +70,7 @@ COMMANDS:
                                          (--strict: warnings too, for CI)
   sweep      <file.scn> [--backend both] [--threads N] [--json|--csv]
              [--out report.json] [--chunk 65536] [--checkpoint ck.json]
-             [--resume] [--max-chunks N] [--no-batch]
+             [--resume] [--max-chunks N] [--no-batch] [--trace t.jsonl]
              [--fleet host:port,...]     expand sweep.* axes to a grid and
                                          stream it in bounded-memory chunks
                                          (O(chunk) resident, any grid size);
@@ -78,7 +81,8 @@ COMMANDS:
                                          bytes, workers may die mid-run)
   plan       <file.scn> [--backend analytical] [--threads N] [--top-k K]
              [--no-prune] [--check-prune] [--json|--csv] [--out path]
-             [--chunk N] [--no-batch] [--fleet host:port,...]
+             [--chunk N] [--no-batch] [--trace t.jsonl]
+             [--fleet host:port,...]
                                          declarative query: sweep.* axes +
                                          where.* constraints + query.*
                                          objective, §2.7 bounds-pruned,
@@ -86,13 +90,21 @@ COMMANDS:
   serve      [--addr 127.0.0.1:8787] [--threads 4] [--queue 64]
              [--timeout-ms 30000] [--cache-capacity 4096]
              [--planner-threads 1] [--job-workers 2] [--job-queue 32]
-             [--job-chunk 4096] [--job-records 256]
+             [--job-chunk 4096] [--job-records 256] [--trace t.jsonl]
                                          the Planner as an HTTP service:
                                          POST /v1/plan, async jobs under
                                          /v1/jobs, GET /v1/presets,
                                          GET /healthz, GET /metrics, with a
                                          shared cross-request evaluation
                                          cache and request coalescing
+  trace      <trace.jsonl> [--chrome out.json]
+                                         summarize a --trace execution
+                                         trace: per-phase wall time,
+                                         per-chunk throughput, per-worker
+                                         utilization, fleet recovery and
+                                         the critical path; --chrome
+                                         exports Chrome trace-event JSON
+                                         (chrome://tracing, Perfetto)
   docs       [--out docs/REFERENCE.md] [--check]
                                          generate the reference manual from
                                          the binary's own registries
@@ -173,6 +185,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "plan" => cmd_plan(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "docs" => cmd_docs(&args),
         "train" => cmd_train(&args),
         "list" => cmd_list(),
@@ -369,6 +382,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // Escape hatch for the batched SoA evaluation path (output bytes are
     // identical either way — see the CI byte-compare leg).
     cfg.batch = !args.flag("no-batch");
+    // Execution trace sink — the report (and any checkpoint) stays
+    // byte-identical with or without it.
+    let tracer = match args.str_maybe("trace") {
+        Some(p) => Some(fsdp_bw::obs::Tracer::to_file(Path::new(&p))?),
+        None => None,
+    };
+    cfg.trace = tracer.clone();
     let outcome = match args.str_maybe("fleet") {
         // Scatter the same chunk tiling across serve workers; the report
         // (and any checkpoint) is byte-identical to the local run, so the
@@ -380,6 +400,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             let mut fc = fsdp_bw::fleet::FleetConfig::new(hosts);
             fc.chunk = cfg.chunk;
             fc.batch = cfg.batch;
+            fc.trace = tracer.clone();
             let source = std::fs::read_to_string(Path::new(path))
                 .with_context(|| format!("reading {path}"))?;
             let (outcome, stats) =
@@ -389,6 +410,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         None => run_sweep_streamed(&sweep, &backends, &cfg)?,
     };
+    if let Some(t) = &tracer {
+        t.finish()?;
+    }
     if outcome.interrupted {
         println!(
             "sweep checkpointed after {} of {} chunks ({} of {} points, {} errors) — \
@@ -463,6 +487,13 @@ fn cmd_plan(args: &Args) -> Result<()> {
         );
     }
 
+    // Execution trace sink — the frontier stays byte-identical with or
+    // without it.
+    let tracer = match args.str_maybe("trace") {
+        Some(p) => Some(fsdp_bw::obs::Tracer::to_file(Path::new(&p))?),
+        None => None,
+    };
+
     if args.flag("check-prune") {
         anyhow::ensure!(
             args.str_maybe("fleet").is_none(),
@@ -474,6 +505,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
         let mut planner = Planner::new(threads);
         if args.flag("no-batch") {
             planner = planner.without_batch();
+        }
+        if let Some(t) = &tracer {
+            planner = planner.with_tracer(t.clone());
         }
         let mut pruned_q = query.clone();
         pruned_q.prune = true;
@@ -499,6 +533,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
             pruned.counters.pruned_by_bounds,
             brute.counters.evaluated
         );
+        if let Some(t) = &tracer {
+            t.finish()?;
+        }
         return Ok(());
     }
 
@@ -517,6 +554,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
             fc.chunk = chunk;
         }
         fc.batch = !args.flag("no-batch");
+        fc.trace = tracer.clone();
         let source = std::fs::read_to_string(Path::new(path))
             .with_context(|| format!("reading {path}"))?;
         let (frontier, stats) = fsdp_bw::fleet::run_fleet_plan(&source, &query, &fc)?;
@@ -526,6 +564,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
         let mut planner = Planner::new(threads).with_cache(EvalCache::shared());
         if args.flag("no-batch") {
             planner = planner.without_batch();
+        }
+        if let Some(t) = &tracer {
+            planner = planner.with_tracer(t.clone());
         }
         if chunk > 0 {
             let backends = backends_for(&query.backend_spec)?;
@@ -537,6 +578,9 @@ fn cmd_plan(args: &Args) -> Result<()> {
             planner.run(&query)?
         }
     };
+    if let Some(t) = &tracer {
+        t.finish()?;
+    }
     let mut body = if args.flag("json") {
         frontier.to_json()
     } else if args.flag("csv") {
@@ -573,6 +617,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use fsdp_bw::serve::{ServeConfig, Server};
 
     let defaults = ServeConfig::default();
+    let tracer = match args.str_maybe("trace") {
+        Some(p) => Some(fsdp_bw::obs::Tracer::to_file(Path::new(&p))?),
+        None => None,
+    };
     let cfg = ServeConfig {
         addr: args.str_opt("addr", "127.0.0.1:8787"),
         threads: args.num_opt("threads", defaults.threads)?,
@@ -584,6 +632,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         job_queue: args.num_opt("job-queue", defaults.job_queue)?,
         job_chunk: args.num_opt("job-chunk", defaults.job_chunk)?,
         job_records: args.num_opt("job-records", defaults.job_records)?,
+        trace: tracer.clone(),
     };
     let threads = cfg.threads;
     let queue = cfg.queue;
@@ -601,6 +650,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
          · job workers {job_workers}"
     );
     server.join();
+    if let Some(t) = &tracer {
+        t.finish()?;
+    }
+    Ok(())
+}
+
+/// `fsdp-bw trace`: summarize a `--trace` JSONL file into per-phase,
+/// per-chunk and per-worker tables (plus a critical-path estimate), and
+/// optionally export Chrome trace-event JSON for chrome://tracing.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("trace needs a JSONL file written by --trace"))?;
+    let text = std::fs::read_to_string(Path::new(path))
+        .with_context(|| format!("reading {path}"))?;
+    let lines = fsdp_bw::obs::report::parse_trace(&text)?;
+    if let Some(out) = args.str_maybe("chrome") {
+        let chrome = fsdp_bw::obs::report::chrome_json(&lines);
+        std::fs::write(&out, chrome.dump().as_bytes())?;
+        println!("wrote {out} ({} trace lines)", lines.len());
+    }
+    print!("{}", fsdp_bw::obs::report::summarize(&lines));
     Ok(())
 }
 

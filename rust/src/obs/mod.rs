@@ -1,0 +1,446 @@
+//! Execution tracing: monotonic-clock spans and typed events, written as
+//! JSONL through a lock-cheap per-thread buffer.
+//!
+//! Every execution layer — the planner's phases, the stream engine's chunk
+//! lifecycle, the serve request/job paths, the fleet coordinator — emits
+//! through one [`Tracer`] handle. The design constraints, in order:
+//!
+//! * **Near-zero cost when disabled.** A disabled layer holds no tracer at
+//!   all (`Option<Tracer>` is `None`); the instrumentation points are a
+//!   single branch. Nothing is formatted, no clock is read.
+//! * **Reports stay byte-identical.** Tracing writes to its own JSONL
+//!   sink and never touches report rendering, checkpoint fingerprints, or
+//!   counters — asserted by the `--trace`-on-vs-off byte-compare tests.
+//! * **Lock-cheap emission.** A line is formatted on the emitting thread
+//!   and appended to a thread-local buffer; the shared sink's mutex is
+//!   taken only when a buffer exceeds [`FLUSH_BYTES`] (or the thread
+//!   exits), so the planner's worker pool never serializes on the trace
+//!   file.
+//! * **Total order without synchronization.** Every line carries a `seq`
+//!   from one atomic counter; consumers sort by it. Timestamps (`ts_us`)
+//!   are monotonic-clock micros relative to the tracer's creation — never
+//!   wall clock, so traces are deterministic in *shape* and comparable
+//!   across runs.
+//!
+//! One line per span or event, keys sorted (the [`Json`] object emitter):
+//!
+//! ```json
+//! {"dur_us":1042,"kind":"span","name":"planner.evaluate","seq":7,"tid":1,"ts_us":2150,...}
+//! {"kind":"event","name":"checkpoint.write","seq":9,"tid":1,"ts_us":3301,...}
+//! ```
+//!
+//! Spans are emitted as one *complete* line when they end (start time +
+//! duration — the Chrome trace-event `"X"` shape), so a trace never holds
+//! half-open state. Fleet workers run a [`Tracer::summarizing`] tracer
+//! instead of a file: spans fold into per-name [`SpanAgg`] aggregates that
+//! travel back to the coordinator inside the `RangePartial` (the
+//! coordinator re-emits them with per-worker attribution).
+//!
+//! The trace *reader* — `fsdp-bw trace` summaries and the Chrome export —
+//! lives in [`report`].
+
+pub mod report;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Flush a thread's line buffer into the shared sink beyond this size.
+const FLUSH_BYTES: usize = 8 * 1024;
+
+/// Aggregate of every span (or event) sharing one name — the compact form
+/// a fleet worker ships back instead of full lines. Events aggregate with
+/// zero duration, so `count` is meaningful for both.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanAgg {
+    pub count: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+impl SpanAgg {
+    fn absorb(&mut self, dur_us: u64) {
+        self.count += 1;
+        self.total_us += dur_us;
+        self.max_us = self.max_us.max(dur_us);
+    }
+
+    /// Merge another aggregate (coordinator folding worker summaries).
+    pub fn merge(&mut self, other: &SpanAgg) {
+        self.count += other.count;
+        self.total_us += other.total_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("total_us".to_string(), Json::Num(self.total_us as f64));
+        m.insert("max_us".to_string(), Json::Num(self.max_us as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<SpanAgg> {
+        Ok(SpanAgg {
+            count: v.get("count")?.as_usize().context("span count")? as u64,
+            total_us: v.get("total_us")?.as_usize().context("span total_us")? as u64,
+            max_us: v.get("max_us")?.as_usize().context("span max_us")? as u64,
+        })
+    }
+}
+
+enum SinkKind {
+    /// JSONL to a file (the `--trace <file.jsonl>` surface).
+    File(BufWriter<File>),
+    /// JSONL to memory — tests read it back with [`Tracer::drain`].
+    Mem(Vec<u8>),
+    /// No lines at all: per-name aggregates only (fleet workers).
+    Summary(BTreeMap<String, SpanAgg>),
+}
+
+struct Inner {
+    start: Instant,
+    seq: AtomicU64,
+    /// True for [`SinkKind::Summary`] — checked without taking the lock.
+    summarize: bool,
+    sink: Mutex<SinkKind>,
+    /// First write error, surfaced by [`Tracer::finish`] (emission itself
+    /// stays infallible so instrumentation points never grow error paths).
+    error: Mutex<Option<String>>,
+}
+
+impl Inner {
+    fn lock_sink(&self) -> MutexGuard<'_, SinkKind> {
+        self.sink.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn write_chunk(&self, data: &str) {
+        let mut sink = self.lock_sink();
+        let res = match &mut *sink {
+            SinkKind::File(w) => w.write_all(data.as_bytes()),
+            SinkKind::Mem(buf) => {
+                buf.extend_from_slice(data.as_bytes());
+                Ok(())
+            }
+            SinkKind::Summary(_) => Ok(()),
+        };
+        if let Err(e) = res {
+            let mut err = self.error.lock().unwrap_or_else(|p| p.into_inner());
+            err.get_or_insert_with(|| e.to_string());
+        }
+    }
+}
+
+// -- per-thread machinery ---------------------------------------------------
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Small dense thread ids for attribution (`ThreadId` has no stable
+    /// integer form). Assigned on first emission from a thread.
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+
+    static BUF: RefCell<ThreadBuf> = const { RefCell::new(ThreadBuf { data: String::new(), owner: None }) };
+}
+
+/// One thread's line buffer. `owner` pins which tracer the buffered lines
+/// belong to; a thread switching tracers flushes the old one first. The
+/// `Drop` impl flushes when the thread exits, so scoped worker-pool
+/// threads never lose lines.
+struct ThreadBuf {
+    data: String,
+    owner: Option<Arc<Inner>>,
+}
+
+impl ThreadBuf {
+    fn flush(&mut self) {
+        if let Some(inner) = &self.owner {
+            if !self.data.is_empty() {
+                inner.write_chunk(&self.data);
+                self.data.clear();
+            }
+        }
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// A cloneable handle to one trace. See the module docs for the contract.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Arc<Inner>,
+}
+
+impl fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(if self.inner.summarize { "Tracer(summary)" } else { "Tracer" })
+    }
+}
+
+impl Tracer {
+    fn with_sink(sink: SinkKind, summarize: bool) -> Tracer {
+        Tracer {
+            inner: Arc::new(Inner {
+                start: Instant::now(),
+                seq: AtomicU64::new(0),
+                summarize,
+                sink: Mutex::new(sink),
+                error: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Trace to a JSONL file (created or truncated).
+    pub fn to_file(path: &Path) -> Result<Tracer> {
+        let f = File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(Tracer::with_sink(SinkKind::File(BufWriter::new(f)), false))
+    }
+
+    /// Trace to memory — tests read the JSONL back with [`Self::drain`].
+    pub fn to_memory() -> Tracer {
+        Tracer::with_sink(SinkKind::Mem(Vec::new()), false)
+    }
+
+    /// Aggregate-only tracer: no lines, just per-name [`SpanAgg`]s — the
+    /// fleet worker mode, shipped back inside the `RangePartial`.
+    pub fn summarizing() -> Tracer {
+        Tracer::with_sink(SinkKind::Summary(BTreeMap::new()), true)
+    }
+
+    /// Emit one instantaneous event.
+    pub fn event(&self, name: &'static str, fields: Vec<(&'static str, Json)>) {
+        let ts_us = self.inner.start.elapsed().as_micros() as u64;
+        self.record(name, ts_us, None, fields);
+    }
+
+    /// Open a span; it emits one complete line (start + duration) when
+    /// dropped. Add late fields with [`Span::field`].
+    pub fn span(&self, name: &'static str, fields: Vec<(&'static str, Json)>) -> Span {
+        Span { tracer: self.clone(), name, fields, begin: Instant::now() }
+    }
+
+    fn record(
+        &self,
+        name: &'static str,
+        ts_us: u64,
+        dur_us: Option<u64>,
+        fields: Vec<(&'static str, Json)>,
+    ) {
+        if self.inner.summarize {
+            let mut sink = self.inner.lock_sink();
+            if let SinkKind::Summary(aggs) = &mut *sink {
+                aggs.entry(name.to_string()).or_default().absorb(dur_us.unwrap_or(0));
+            }
+            return;
+        }
+        let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed);
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(name.to_string()));
+        m.insert("ts_us".to_string(), Json::Num(ts_us as f64));
+        m.insert("seq".to_string(), Json::Num(seq as f64));
+        m.insert("tid".to_string(), Json::Num(TID.with(|t| *t) as f64));
+        match dur_us {
+            Some(d) => {
+                m.insert("kind".to_string(), Json::Str("span".to_string()));
+                m.insert("dur_us".to_string(), Json::Num(d as f64));
+            }
+            None => {
+                m.insert("kind".to_string(), Json::Str("event".to_string()));
+            }
+        }
+        for (k, v) in fields {
+            m.insert(k.to_string(), v);
+        }
+        let line = Json::Obj(m).dump();
+        BUF.with(|b| {
+            let mut b = b.borrow_mut();
+            let same_owner =
+                b.owner.as_ref().is_some_and(|o| Arc::ptr_eq(o, &self.inner));
+            if !same_owner {
+                b.flush();
+                b.owner = Some(self.inner.clone());
+            }
+            b.data.push_str(&line);
+            b.data.push('\n');
+            if b.data.len() >= FLUSH_BYTES {
+                b.flush();
+            }
+        });
+    }
+
+    /// The per-name aggregates of a [`Self::summarizing`] tracer (empty
+    /// for line-emitting tracers).
+    pub fn summary(&self) -> Vec<(String, SpanAgg)> {
+        match &*self.inner.lock_sink() {
+            SinkKind::Summary(aggs) => aggs.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Flush the calling thread's buffer and return a memory tracer's
+    /// JSONL content. Worker-pool threads flush on exit, so after their
+    /// scope joins this is the complete trace.
+    pub fn drain(&self) -> String {
+        self.flush_calling_thread();
+        match &*self.inner.lock_sink() {
+            SinkKind::Mem(buf) => String::from_utf8_lossy(buf).into_owned(),
+            _ => String::new(),
+        }
+    }
+
+    fn flush_calling_thread(&self) {
+        BUF.with(|b| {
+            let mut b = b.borrow_mut();
+            if b.owner.as_ref().is_some_and(|o| Arc::ptr_eq(o, &self.inner)) {
+                b.flush();
+            }
+        });
+    }
+
+    /// Flush the calling thread's buffer and the file sink, surfacing any
+    /// write error. Call after every traced worker thread has been joined
+    /// (scoped pools flush on thread exit).
+    pub fn finish(&self) -> Result<()> {
+        self.flush_calling_thread();
+        {
+            let mut sink = self.inner.lock_sink();
+            if let SinkKind::File(w) = &mut *sink {
+                if let Err(e) = w.flush() {
+                    let mut err =
+                        self.inner.error.lock().unwrap_or_else(|p| p.into_inner());
+                    err.get_or_insert_with(|| e.to_string());
+                }
+            }
+        }
+        let err = self.inner.error.lock().unwrap_or_else(|p| p.into_inner()).take();
+        if let Some(e) = err {
+            bail!("trace write failed: {e}");
+        }
+        Ok(())
+    }
+}
+
+/// An open span. Emits one complete `"kind":"span"` line on drop; the
+/// timestamp is the span's start, `dur_us` its measured duration.
+pub struct Span {
+    tracer: Tracer,
+    name: &'static str,
+    fields: Vec<(&'static str, Json)>,
+    begin: Instant,
+}
+
+impl Span {
+    /// Attach a field decided after the span opened (e.g. a result count).
+    pub fn field(&mut self, key: &'static str, v: Json) {
+        self.fields.push((key, v));
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let ts_us =
+            self.begin.saturating_duration_since(self.tracer.inner.start).as_micros() as u64;
+        let dur_us = self.begin.elapsed().as_micros() as u64;
+        let fields = std::mem::take(&mut self.fields);
+        self.tracer.record(self.name, ts_us, Some(dur_us), fields);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines_of(text: &str) -> Vec<Json> {
+        text.lines().map(|l| Json::parse(l).expect("valid JSONL")).collect()
+    }
+
+    #[test]
+    fn events_and_spans_emit_one_sorted_json_line_each() {
+        let t = Tracer::to_memory();
+        t.event("unit.event", vec![("answer", Json::Num(42.0))]);
+        {
+            let mut sp = t.span("unit.span", vec![("start", Json::Num(0.0))]);
+            sp.field("points", Json::Num(7.0));
+        }
+        let text = t.drain();
+        let lines = lines_of(&text);
+        assert_eq!(lines.len(), 2);
+        let ev = &lines[0];
+        assert_eq!(ev.get("kind").unwrap().as_str().unwrap(), "event");
+        assert_eq!(ev.get("name").unwrap().as_str().unwrap(), "unit.event");
+        assert_eq!(ev.get("answer").unwrap().as_usize().unwrap(), 42);
+        assert!(ev.opt("dur_us").is_none(), "events carry no duration");
+        let sp = &lines[1];
+        assert_eq!(sp.get("kind").unwrap().as_str().unwrap(), "span");
+        assert_eq!(sp.get("points").unwrap().as_usize().unwrap(), 7);
+        sp.get("dur_us").unwrap().as_usize().unwrap();
+        // seq is a total order.
+        assert!(
+            ev.get("seq").unwrap().as_usize().unwrap()
+                < sp.get("seq").unwrap().as_usize().unwrap()
+        );
+        t.finish().unwrap();
+    }
+
+    #[test]
+    fn multithreaded_emission_loses_no_lines_and_seq_stays_unique() {
+        let t = Tracer::to_memory();
+        std::thread::scope(|s| {
+            for i in 0..4 {
+                let t = t.clone();
+                s.spawn(move || {
+                    for j in 0..50 {
+                        t.event("mt.event", vec![("i", Json::Num((i * 100 + j) as f64))]);
+                    }
+                });
+            }
+        });
+        let lines = lines_of(&t.drain());
+        assert_eq!(lines.len(), 200, "thread-exit flush preserves every buffered line");
+        let mut seqs: Vec<usize> =
+            lines.iter().map(|l| l.get("seq").unwrap().as_usize().unwrap()).collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        assert_eq!(seqs.len(), 200, "seq is unique across threads");
+    }
+
+    #[test]
+    fn summarizing_tracer_aggregates_instead_of_writing() {
+        let t = Tracer::summarizing();
+        for _ in 0..3 {
+            drop(t.span("phase.a", vec![]));
+        }
+        t.event("note", vec![]);
+        let summary = t.summary();
+        let names: Vec<&str> = summary.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["note", "phase.a"]);
+        let a = &summary.iter().find(|(n, _)| n == "phase.a").unwrap().1;
+        assert_eq!(a.count, 3);
+        assert!(a.max_us <= a.total_us);
+        assert_eq!(t.drain(), "", "summary mode emits no lines");
+    }
+
+    #[test]
+    fn span_agg_json_round_trips_and_merges() {
+        let mut a = SpanAgg { count: 2, total_us: 100, max_us: 80 };
+        let back = SpanAgg::from_json(&Json::parse(&a.json().dump()).unwrap()).unwrap();
+        assert_eq!(back, a);
+        a.merge(&SpanAgg { count: 1, total_us: 200, max_us: 200 });
+        assert_eq!(a, SpanAgg { count: 3, total_us: 300, max_us: 200 });
+    }
+}

@@ -1,0 +1,394 @@
+//! Trace consumption: parse a `--trace` JSONL file, summarize it
+//! (per-phase wall time, per-chunk throughput, per-worker utilization,
+//! recovery counters, critical path), and export Chrome trace-event JSON
+//! for chrome://tracing / Perfetto. This is the `fsdp-bw trace`
+//! subcommand's whole engine, kept in the library so tests drive it
+//! directly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::SpanAgg;
+
+/// One parsed trace line (see the [`super`] schema).
+#[derive(Debug, Clone)]
+pub struct TraceLine {
+    /// True for spans (which carry `dur_us`), false for events.
+    pub is_span: bool,
+    pub name: String,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+    pub seq: u64,
+    /// The full line, for the free-form fields.
+    pub fields: Json,
+}
+
+impl TraceLine {
+    /// A free-form field as an integer, when present and integral.
+    pub fn u64_field(&self, key: &str) -> Option<u64> {
+        self.fields.opt(key).and_then(|v| v.as_usize().ok()).map(|v| v as u64)
+    }
+
+    /// A free-form field as a string, when present.
+    pub fn str_field(&self, key: &str) -> Option<&str> {
+        self.fields.opt(key).and_then(|v| v.as_str().ok())
+    }
+}
+
+/// Parse a whole JSONL trace, sorted by `seq` (emission order — the file
+/// order interleaves per-thread buffers).
+pub fn parse_trace(text: &str) -> Result<Vec<TraceLine>> {
+    let mut lines = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        if raw.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(raw).with_context(|| format!("trace line {}", i + 1))?;
+        let kind = v.get("kind")?.as_str().context("kind")?;
+        let is_span = match kind {
+            "span" => true,
+            "event" => false,
+            other => bail!("trace line {}: unknown kind {other:?}", i + 1),
+        };
+        lines.push(TraceLine {
+            is_span,
+            name: v.get("name")?.as_str().context("name")?.to_string(),
+            ts_us: v.get("ts_us")?.as_usize().context("ts_us")? as u64,
+            dur_us: if is_span { v.get("dur_us")?.as_usize().context("dur_us")? as u64 } else { 0 },
+            tid: v.get("tid")?.as_usize().context("tid")? as u64,
+            seq: v.get("seq")?.as_usize().context("seq")? as u64,
+            fields: v,
+        });
+    }
+    if lines.is_empty() {
+        bail!("trace holds no lines");
+    }
+    lines.sort_by_key(|l| l.seq);
+    Ok(lines)
+}
+
+fn fmt_us(us: u64) -> String {
+    if us >= 1_000_000 {
+        format!("{:.3}s", us as f64 / 1e6)
+    } else if us >= 1_000 {
+        format!("{:.2}ms", us as f64 / 1e3)
+    } else {
+        format!("{us}us")
+    }
+}
+
+/// Render the human summary. One deterministic pass over the lines; every
+/// section degrades gracefully when its events are absent (a plan trace
+/// has no chunks, a local trace no workers).
+pub fn summarize(lines: &[TraceLine]) -> String {
+    let mut out = String::new();
+    let t0 = lines.iter().map(|l| l.ts_us).min().unwrap_or(0);
+    let t1 = lines.iter().map(|l| l.ts_us + l.dur_us).max().unwrap_or(0);
+    let wall_us = t1.saturating_sub(t0);
+    let threads: std::collections::BTreeSet<u64> = lines.iter().map(|l| l.tid).collect();
+    out.push_str(&format!(
+        "trace: {} lines ({} spans) on {} threads, wall {}\n",
+        lines.len(),
+        lines.iter().filter(|l| l.is_span).count(),
+        threads.len(),
+        fmt_us(wall_us)
+    ));
+
+    // Per-phase wall time: every span by name, plus worker-side aggregates
+    // the fleet coordinator merged out of RangePartials (`fleet.worker`
+    // events carry a `spans` object of per-name totals).
+    let mut phases: BTreeMap<String, SpanAgg> = BTreeMap::new();
+    for l in lines.iter().filter(|l| l.is_span) {
+        phases.entry(l.name.clone()).or_default().absorb(l.dur_us);
+    }
+    for l in lines.iter().filter(|l| !l.is_span && l.name == "fleet.worker") {
+        if let Some(Json::Obj(spans)) = l.fields.opt("spans") {
+            for (name, agg) in spans {
+                if let Ok(a) = SpanAgg::from_json(agg) {
+                    phases.entry(format!("worker:{name}")).or_default().merge(&a);
+                }
+            }
+        }
+    }
+    if !phases.is_empty() {
+        out.push_str("\nper-phase wall time\n");
+        out.push_str(&format!(
+            "  {:<28} {:>8} {:>12} {:>12} {:>12}\n",
+            "phase", "count", "total", "mean", "max"
+        ));
+        for (name, agg) in &phases {
+            let mean = if agg.count > 0 { agg.total_us / agg.count } else { 0 };
+            out.push_str(&format!(
+                "  {:<28} {:>8} {:>12} {:>12} {:>12}\n",
+                name,
+                agg.count,
+                fmt_us(agg.total_us),
+                fmt_us(mean),
+                fmt_us(agg.max_us)
+            ));
+        }
+    }
+
+    // Per-chunk throughput, from the stream engine's `chunk` spans.
+    let chunks: Vec<&TraceLine> =
+        lines.iter().filter(|l| l.is_span && l.name == "chunk").collect();
+    if !chunks.is_empty() {
+        const SHOWN: usize = 64;
+        out.push_str("\nper-chunk throughput\n");
+        out.push_str(&format!(
+            "  {:<8} {:>10} {:>12} {:>12}\n",
+            "chunk", "points", "time", "points/s"
+        ));
+        for l in chunks.iter().take(SHOWN) {
+            let chunk = l.u64_field("chunk").unwrap_or(0);
+            let points = l.u64_field("points").unwrap_or(0);
+            let rate = if l.dur_us > 0 { points as f64 * 1e6 / l.dur_us as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "  {:<8} {:>10} {:>12} {:>12.0}\n",
+                chunk,
+                points,
+                fmt_us(l.dur_us),
+                rate
+            ));
+        }
+        if chunks.len() > SHOWN {
+            out.push_str(&format!("  ... {} more chunks elided\n", chunks.len() - SHOWN));
+        }
+        let total_points: u64 = chunks.iter().filter_map(|l| l.u64_field("points")).sum();
+        let total_us: u64 = chunks.iter().map(|l| l.dur_us).sum();
+        if total_us > 0 {
+            out.push_str(&format!(
+                "  overall: {} points in {} — {:.0} points/s\n",
+                total_points,
+                fmt_us(total_us),
+                total_points as f64 * 1e6 / total_us as f64
+            ));
+        }
+    }
+
+    // Per-worker utilization + straggler view, from the coordinator's
+    // `fleet.gather` events (one per folded range, host-attributed).
+    #[derive(Default)]
+    struct Worker {
+        ranges: u64,
+        points: u64,
+        busy_us: u64,
+        max_rtt_us: u64,
+    }
+    let mut workers: BTreeMap<String, Worker> = BTreeMap::new();
+    for l in lines.iter().filter(|l| !l.is_span && l.name == "fleet.gather") {
+        let Some(host) = l.str_field("host") else { continue };
+        let w = workers.entry(host.to_string()).or_default();
+        let rtt = l.u64_field("rtt_us").unwrap_or(0);
+        w.ranges += 1;
+        w.points += l.u64_field("points").unwrap_or(0);
+        w.busy_us += rtt;
+        w.max_rtt_us = w.max_rtt_us.max(rtt);
+    }
+    if !workers.is_empty() {
+        out.push_str("\nper-worker utilization\n");
+        out.push_str(&format!(
+            "  {:<24} {:>7} {:>10} {:>12} {:>7} {:>12}\n",
+            "worker", "ranges", "points", "busy", "util%", "max rtt"
+        ));
+        for (host, w) in &workers {
+            let util = if wall_us > 0 { 100.0 * w.busy_us as f64 / wall_us as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "  {:<24} {:>7} {:>10} {:>12} {:>7.1} {:>12}\n",
+                host,
+                w.ranges,
+                w.points,
+                fmt_us(w.busy_us),
+                util,
+                fmt_us(w.max_rtt_us)
+            ));
+        }
+    }
+
+    // Recovery counters, from the coordinator's closing `fleet.done` event
+    // (the structured form of the stderr summary line).
+    if let Some(done) = lines.iter().rev().find(|l| l.name == "fleet.done") {
+        out.push_str(&format!(
+            "\nfleet recovery: {} ranges, {} re-issued, {} duplicate completions dropped, \
+             {} worker failures, {} workers retired\n",
+            done.u64_field("ranges").unwrap_or(0),
+            done.u64_field("reissued").unwrap_or(0),
+            done.u64_field("duplicates_dropped").unwrap_or(0),
+            done.u64_field("worker_failures").unwrap_or(0),
+            done.u64_field("retired").unwrap_or(0)
+        ));
+    }
+
+    // Critical path: per thread, the top-level (non-nested) span chain;
+    // the busiest thread's chain is the run's serial backbone.
+    let mut by_tid: BTreeMap<u64, Vec<&TraceLine>> = BTreeMap::new();
+    for l in lines.iter().filter(|l| l.is_span) {
+        by_tid.entry(l.tid).or_default().push(l);
+    }
+    let mut best: Option<(u64, u64, BTreeMap<String, u64>)> = None;
+    for (tid, mut spans) in by_tid {
+        spans.sort_by_key(|l| (l.ts_us, u64::MAX - l.dur_us));
+        let mut covered_end = 0u64;
+        let mut busy = 0u64;
+        let mut names: BTreeMap<String, u64> = BTreeMap::new();
+        for l in spans {
+            if l.ts_us >= covered_end {
+                busy += l.dur_us;
+                *names.entry(l.name.clone()).or_default() += l.dur_us;
+                covered_end = l.ts_us + l.dur_us;
+            }
+        }
+        if best.as_ref().map_or(true, |(_, b, _)| busy > *b) {
+            best = Some((tid, busy, names));
+        }
+    }
+    if let Some((tid, busy, names)) = best {
+        let pct = if wall_us > 0 { 100.0 * busy as f64 / wall_us as f64 } else { 0.0 };
+        let mut parts: Vec<(u64, String)> =
+            names.into_iter().map(|(n, d)| (d, n)).collect();
+        parts.sort_by(|a, b| b.cmp(a));
+        let detail: Vec<String> = parts
+            .iter()
+            .take(4)
+            .map(|(d, n)| {
+                let share = if busy > 0 { 100.0 * *d as f64 / busy as f64 } else { 0.0 };
+                format!("{n} {share:.1}%")
+            })
+            .collect();
+        out.push_str(&format!(
+            "\ncritical path: {} on thread {} ({:.1}% of wall) — {}\n",
+            fmt_us(busy),
+            tid,
+            pct,
+            detail.join(", ")
+        ));
+    }
+    out
+}
+
+/// Export the Chrome trace-event JSON document (`chrome://tracing`,
+/// Perfetto): spans become complete `"X"` events, events become instant
+/// `"i"` events, both on their emitting thread's track.
+pub fn chrome_json(lines: &[TraceLine]) -> Json {
+    let events: Vec<Json> = lines
+        .iter()
+        .map(|l| {
+            let mut m: BTreeMap<String, Json> = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(l.name.clone()));
+            m.insert("ph".to_string(), Json::Str(if l.is_span { "X" } else { "i" }.to_string()));
+            m.insert("ts".to_string(), Json::Num(l.ts_us as f64));
+            if l.is_span {
+                m.insert("dur".to_string(), Json::Num(l.dur_us as f64));
+            } else {
+                m.insert("s".to_string(), Json::Str("t".to_string()));
+            }
+            m.insert("pid".to_string(), Json::Num(1.0));
+            m.insert("tid".to_string(), Json::Num(l.tid as f64));
+            let mut args: BTreeMap<String, Json> = BTreeMap::new();
+            if let Json::Obj(fields) = &l.fields {
+                for (k, v) in fields {
+                    if !matches!(
+                        k.as_str(),
+                        "name" | "kind" | "ts_us" | "dur_us" | "tid" | "seq"
+                    ) {
+                        args.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+            args.insert("seq".to_string(), Json::Num(l.seq as f64));
+            m.insert("args".to_string(), Json::Obj(args));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tracer;
+
+    fn sample_trace() -> Vec<TraceLine> {
+        let t = Tracer::to_memory();
+        {
+            let mut sp = t.span("chunk", vec![("chunk", Json::Num(0.0))]);
+            sp.field("points", Json::Num(100.0));
+            drop(t.span("planner.decode", vec![]));
+            drop(t.span("planner.evaluate", vec![]));
+            drop(sp);
+        }
+        t.event(
+            "fleet.gather",
+            vec![
+                ("host", Json::Str("w1:1".to_string())),
+                ("rtt_us", Json::Num(500.0)),
+                ("points", Json::Num(100.0)),
+            ],
+        );
+        t.event(
+            "fleet.done",
+            vec![
+                ("ranges", Json::Num(1.0)),
+                ("reissued", Json::Num(2.0)),
+                ("duplicates_dropped", Json::Num(0.0)),
+                ("worker_failures", Json::Num(3.0)),
+                ("retired", Json::Num(1.0)),
+            ],
+        );
+        parse_trace(&t.drain()).unwrap()
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_sorts_by_seq() {
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("{\"nope\": 1}\n").is_err());
+        let lines = sample_trace();
+        assert!(lines.windows(2).all(|w| w[0].seq < w[1].seq));
+    }
+
+    #[test]
+    fn summary_renders_every_section() {
+        let lines = sample_trace();
+        let s = summarize(&lines);
+        assert!(s.contains("per-phase wall time"), "{s}");
+        assert!(s.contains("planner.evaluate"), "{s}");
+        assert!(s.contains("per-chunk throughput"), "{s}");
+        assert!(s.contains("per-worker utilization"), "{s}");
+        assert!(s.contains("w1:1"), "{s}");
+        assert!(s.contains("2 re-issued"), "{s}");
+        assert!(s.contains("1 workers retired"), "{s}");
+        assert!(s.contains("critical path:"), "{s}");
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_complete() {
+        let lines = sample_trace();
+        let doc = chrome_json(&lines);
+        let back = Json::parse(&doc.pretty()).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), lines.len());
+        for (e, l) in events.iter().zip(&lines) {
+            assert_eq!(e.get("name").unwrap().as_str().unwrap(), l.name);
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            if l.is_span {
+                assert_eq!(ph, "X");
+                e.get("dur").unwrap().as_usize().unwrap();
+            } else {
+                assert_eq!(ph, "i");
+                assert_eq!(e.get("s").unwrap().as_str().unwrap(), "t");
+            }
+            // The schema's bookkeeping keys stay out of args (they have
+            // top-level homes), free-form fields travel through.
+            assert!(e.get("args").unwrap().opt("kind").is_none());
+        }
+        let gather = &events[3];
+        assert_eq!(gather.get("args").unwrap().get("host").unwrap().as_str().unwrap(), "w1:1");
+    }
+}

@@ -34,7 +34,9 @@ use anyhow::Result;
 use crate::config::scenario::Scenario;
 use crate::eval::typed::{EvalColumns, Inner, TypedChunk, TypedSweep};
 use crate::eval::{backends_for, Evaluation, Evaluator, ScenarioPoint};
+use crate::obs::Tracer;
 use crate::util::channel::channel;
+use crate::util::json::Json;
 
 use super::cache::EvalCache;
 use super::frontier::{rank, Frontier, PlanCounters, PlannedPoint, PointEval};
@@ -178,11 +180,15 @@ pub struct Planner {
     /// Decode grid points through a compiled [`TypedSweep`] (default
     /// true; cleared only by [`Self::without_typed_decode`]).
     typed_decode: bool,
+    /// Phase spans + cache events go here when tracing is on
+    /// ([`Self::with_tracer`]). `None` — the default — keeps every
+    /// instrumentation point a single branch.
+    tracer: Option<Tracer>,
 }
 
 impl Planner {
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1), cache: None, batch: true, typed_decode: true }
+        Self { threads: threads.max(1), cache: None, batch: true, typed_decode: true, tracer: None }
     }
 
     /// One worker per available core.
@@ -202,6 +208,23 @@ impl Planner {
     /// The attached shared cache, if any.
     pub fn cache(&self) -> Option<&Arc<EvalCache>> {
         self.cache.as_ref()
+    }
+
+    /// Attach a tracer: every [`Self::execute_range`] emits per-phase
+    /// spans (`planner.decode` / `planner.dedup` / `planner.evaluate` /
+    /// `planner.assemble`, or `planner.batched_eval` /
+    /// `planner.batched_fold` on the batched path) plus a `cache.phase`
+    /// stats-delta event when a shared cache is attached. Results,
+    /// counters and reports are unchanged — asserted by the trace tests.
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// The attached tracer, if any (the stream engine adds chunk-lifecycle
+    /// spans through it).
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
     }
 
     /// Disable the batched evaluation path (the `--no-batch` escape
@@ -327,13 +350,19 @@ impl Planner {
         let len = range.len();
 
         // Phase 1 — decode, constrain, prune (parallel).
+        let sp = self
+            .tracer
+            .as_ref()
+            .map(|t| t.span("planner.decode", vec![("points", Json::Num(len as f64))]));
         let pres: Vec<Pre> = par_map(len, self.threads, |j| {
             pre_point(q, typed.as_ref(), backends, range.start + j)
         });
+        drop(sp);
 
         // Phase 2 — dedup evaluable slots into unique jobs (serial). A key
         // first seen in an *earlier* range becomes a job too (its value is
         // not resident anymore), but is flagged as a cache hit.
+        let mut sp = self.tracer.as_ref().map(|t| t.span("planner.dedup", vec![]));
         let mut key_to_job: HashMap<(usize, &str), usize> = HashMap::new();
         let mut jobs: Vec<(usize, usize, bool)> = Vec::new(); // (point, backend, prior-range dup)
         let mut assigned: Vec<Vec<Option<(usize, bool)>>> = Vec::with_capacity(len);
@@ -362,11 +391,23 @@ impl Planner {
         }
         drop(key_to_job);
         counters.evaluated += jobs.iter().filter(|(_, _, dup)| !dup).count();
+        if let Some(sp) = &mut sp {
+            sp.field("jobs", Json::Num(jobs.len() as f64));
+        }
+        drop(sp);
 
         // Phase 3 — evaluate unique jobs (parallel). With a shared cache
         // attached, each job first consults it (and registers in-flight, so
         // an identical job racing in another Planner run coalesces onto
         // this evaluation instead of repeating it).
+        let sp = self
+            .tracer
+            .as_ref()
+            .map(|t| t.span("planner.evaluate", vec![("jobs", Json::Num(jobs.len() as f64))]));
+        let stats_before = match (&self.tracer, &self.cache) {
+            (Some(_), Some(cache)) => Some(cache.stats()),
+            _ => None,
+        };
         let job_results: Vec<Evaluation> = par_map(jobs.len(), self.threads, |j| {
             let (pi, bi, _) = jobs[j];
             match &pres[pi].kind {
@@ -381,8 +422,25 @@ impl Planner {
                 _ => unreachable!("jobs reference ready points"),
             }
         });
+        drop(sp);
+        if let (Some(t), Some(cache), Some(before)) = (&self.tracer, &self.cache, stats_before) {
+            let after = cache.stats();
+            t.event(
+                "cache.phase",
+                vec![
+                    ("hits", Json::Num(after.hits.saturating_sub(before.hits) as f64)),
+                    ("misses", Json::Num(after.misses.saturating_sub(before.misses) as f64)),
+                    (
+                        "coalesced",
+                        Json::Num(after.coalesced.saturating_sub(before.coalesced) as f64),
+                    ),
+                    ("entries", Json::Num(after.entries as f64)),
+                ],
+            );
+        }
 
         // Phase 4 — assemble, post-constrain, score, emit (serial).
+        let sp = self.tracer.as_ref().map(|t| t.span("planner.assemble", vec![]));
         for (i, (pre, row)) in pres.into_iter().zip(assigned).enumerate() {
             let index = range.start + i;
             let kind = pre.kind;
@@ -482,6 +540,7 @@ impl Planner {
             };
             emit(planned, &fps)?;
         }
+        drop(sp);
         Ok(())
     }
 
@@ -537,6 +596,15 @@ impl Planner {
         }
 
         // Parallel phase: decode + evaluate each segment.
+        let sp = self.tracer.as_ref().map(|t| {
+            t.span(
+                "planner.batched_eval",
+                vec![
+                    ("points", Json::Num(range.len() as f64)),
+                    ("segments", Json::Num(segs.len() as f64)),
+                ],
+            )
+        });
         let rows_per_seg: Vec<Vec<BatchRow>> = par_map(segs.len(), self.threads, |si| {
             let seg = &segs[si];
             match typed.inner() {
@@ -546,9 +614,11 @@ impl Planner {
                 Inner::Other => batched_point_segment(backends, typed, seg),
             }
         });
+        drop(sp);
 
         // Serial phase: dedup bookkeeping, scoring, emission — in index
         // order, mirroring the pointwise phase 2 + 4 exactly.
+        let sp = self.tracer.as_ref().map(|t| t.span("planner.batched_fold", vec![]));
         let mut range_first: HashSet<u128> = HashSet::new();
         for (seg, rows) in segs.iter().zip(rows_per_seg) {
             for (off, row) in rows.into_iter().enumerate() {
@@ -617,6 +687,7 @@ impl Planner {
                 }
             }
         }
+        drop(sp);
         Ok(())
     }
 }

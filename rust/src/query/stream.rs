@@ -43,6 +43,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::eval::Evaluator;
+use crate::util::json::Json;
 
 use super::frontier::{rank, Frontier, PlanCounters, PlannedPoint};
 use super::{Planner, Query};
@@ -187,6 +188,21 @@ impl Planner {
             }
             peak = peak.max(range.len());
             let done_after = range.end;
+            // One span per chunk, wrapping exactly the evaluation; the
+            // `chunk.done` event below adds the cumulative view. Deltas of
+            // the (Copy) counters give the chunk-local cache hit ratio.
+            let counters_before = counters;
+            let sp = self.tracer().map(|t| {
+                t.span(
+                    "chunk",
+                    vec![
+                        ("chunk", Json::Num(chunks_done as f64)),
+                        ("start", Json::Num(range.start as f64)),
+                        ("end", Json::Num(range.end as f64)),
+                        ("points", Json::Num(range.len() as f64)),
+                    ],
+                )
+            });
             self.execute_range(q, backends, range, &mut seen, &mut counters, &mut |p, _| {
                 if let Some(s) = p.score.filter(|s| s.is_finite()) {
                     let better = match best {
@@ -199,6 +215,25 @@ impl Planner {
                 }
                 sink.point(q, p)
             })?;
+            drop(sp);
+            if let Some(t) = self.tracer() {
+                let eval_d = counters.evaluated - counters_before.evaluated;
+                let hits_d = counters.cache_hits - counters_before.cache_hits;
+                let denom = (eval_d + hits_d) as f64;
+                t.event(
+                    "chunk.done",
+                    vec![
+                        ("chunk", Json::Num(chunks_done as f64)),
+                        ("done", Json::Num(done_after as f64)),
+                        ("evaluated", Json::Num(counters.evaluated as f64)),
+                        ("cache_hits", Json::Num(counters.cache_hits as f64)),
+                        (
+                            "hit_ratio",
+                            Json::Num(if denom > 0.0 { hits_d as f64 / denom } else { 0.0 }),
+                        ),
+                    ],
+                );
+            }
             if !opts.provenance_ledger {
                 // No sink cares about cross-chunk dedup provenance here —
                 // drop the ledger so residency stays O(chunk) on grids

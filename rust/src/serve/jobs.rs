@@ -35,9 +35,12 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::eval::backends_for;
+use crate::obs::Tracer;
 use crate::query::stream::{StreamOptions, StreamProgress};
 use crate::query::{EvalCache, Planner, Query};
 use crate::util::json::Json;
+
+use super::metrics::ServeMetrics;
 
 /// Lifecycle of one job.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -96,6 +99,14 @@ pub struct Job {
     infeasible: AtomicU64,
     feasible: AtomicU64,
     errors: AtomicU64,
+    /// Micros from `created` to execution start — the queue wait.
+    /// `u64::MAX` while still queued.
+    exec_start_us: AtomicU64,
+    /// Micros spent executing so far (refreshed at chunk boundaries;
+    /// final on a terminal state).
+    exec_us: AtomicU64,
+    /// Duration of the most recently completed chunk, micros.
+    chunk_us: AtomicU64,
     /// `(grid index, internal score)` of the best candidate so far.
     best: Mutex<Option<(usize, f64)>>,
 }
@@ -120,6 +131,9 @@ impl Job {
             infeasible: AtomicU64::new(0),
             feasible: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            exec_start_us: AtomicU64::new(u64::MAX),
+            exec_us: AtomicU64::new(0),
+            chunk_us: AtomicU64::new(0),
             best: Mutex::new(None),
         }
     }
@@ -195,6 +209,31 @@ impl Job {
                 Json::Num(self.created.elapsed().as_secs_f64()),
             ),
         ];
+        // Timing split: queue wait vs execution. While queued the whole
+        // elapsed time is queue wait; while running, execution time is
+        // live (elapsed minus the recorded start); once terminal it is
+        // the value frozen by the worker.
+        let exec_start = self.exec_start_us.load(Ordering::Relaxed);
+        let elapsed_us = self.created.elapsed().as_micros() as u64;
+        let (queue_us, exec_us) = if exec_start == u64::MAX {
+            (elapsed_us, 0)
+        } else if phase.state == JobState::Running {
+            (exec_start, elapsed_us.saturating_sub(exec_start))
+        } else {
+            (exec_start, self.exec_us.load(Ordering::Relaxed))
+        };
+        let exec_seconds = exec_us as f64 / 1e6;
+        let done_points = done as f64;
+        pairs.push(("queue_seconds".to_string(), Json::Num(queue_us as f64 / 1e6)));
+        pairs.push(("execute_seconds".to_string(), Json::Num(exec_seconds)));
+        pairs.push((
+            "last_chunk_seconds".to_string(),
+            Json::Num(self.chunk_us.load(Ordering::Relaxed) as f64 / 1e6),
+        ));
+        pairs.push((
+            "points_per_second".to_string(),
+            Json::Num(if exec_seconds > 0.0 { done_points / exec_seconds } else { 0.0 }),
+        ));
         let best = *self.best.lock().expect("job poisoned");
         pairs.push((
             "best".to_string(),
@@ -396,20 +435,37 @@ impl JobRegistry {
 
     /// Execute one job to completion (worker-thread entry point). The
     /// frontier is produced by the chunked engine with the shared cache —
-    /// byte-identical to the synchronous `/v1/plan` answer.
+    /// byte-identical to the synchronous `/v1/plan` answer. `metrics`
+    /// feeds the `job_chunk_seconds` histogram and `tracer` the
+    /// `job.start`/`job.chunk`/`job.done` trace events; both are optional
+    /// and change nothing about the job's result.
     pub fn execute(
         &self,
         job: &Arc<Job>,
         planner_threads: usize,
         chunk: usize,
         cache: Arc<EvalCache>,
+        metrics: Option<&ServeMetrics>,
+        tracer: Option<&Tracer>,
     ) {
         if job.cancel.load(Ordering::SeqCst) {
             self.finish(job, JobState::Cancelled, None, None);
             return;
         }
         job.phase.lock().expect("job poisoned").state = JobState::Running;
-        let run = || -> Result<Option<String>> {
+        let queue_us = job.created.elapsed().as_micros() as u64;
+        job.exec_start_us.store(queue_us, Ordering::Relaxed);
+        if let Some(t) = tracer {
+            t.event(
+                "job.start",
+                vec![
+                    ("job", Json::Num(job.id as f64)),
+                    ("queue_us", Json::Num(queue_us as f64)),
+                ],
+            );
+        }
+        let exec_start = Instant::now();
+        let mut run = || -> Result<Option<String>> {
             let backends = backends_for(&job.query.backend_spec)?;
             let planner = Planner::new(planner_threads).with_cache(cache);
             let opts = StreamOptions {
@@ -417,14 +473,47 @@ impl JobRegistry {
                 cancel: Some(job.cancel_flag()),
                 ..StreamOptions::default()
             };
-            let frontier =
-                planner.run_chunked(&job.query, &backends, &opts, |p| job.record_progress(p))?;
+            let mut last_chunk = Instant::now();
+            let frontier = planner.run_chunked(&job.query, &backends, &opts, |p| {
+                let chunk_us = last_chunk.elapsed().as_micros() as u64;
+                last_chunk = Instant::now();
+                job.chunk_us.store(chunk_us, Ordering::Relaxed);
+                job.exec_us.store(exec_start.elapsed().as_micros() as u64, Ordering::Relaxed);
+                job.record_progress(p);
+                if let Some(m) = metrics {
+                    m.observe_job_chunk(chunk_us as f64 / 1e6);
+                }
+                if let Some(t) = tracer {
+                    t.event(
+                        "job.chunk",
+                        vec![
+                            ("job", Json::Num(job.id as f64)),
+                            ("chunk", Json::Num(p.chunks_done as f64)),
+                            ("done", Json::Num(p.done as f64)),
+                            ("elapsed_us", Json::Num(chunk_us as f64)),
+                        ],
+                    );
+                }
+            })?;
             Ok(frontier.map(|f| f.to_json()))
         };
-        match run() {
+        let outcome = run();
+        let exec_us = exec_start.elapsed().as_micros() as u64;
+        job.exec_us.store(exec_us, Ordering::Relaxed);
+        match outcome {
             Ok(Some(body)) => self.finish(job, JobState::Done, Some(body), None),
             Ok(None) => self.finish(job, JobState::Cancelled, None, None),
             Err(e) => self.finish(job, JobState::Failed, None, Some(format!("{e:#}"))),
+        }
+        if let Some(t) = tracer {
+            t.event(
+                "job.done",
+                vec![
+                    ("job", Json::Num(job.id as f64)),
+                    ("state", Json::Str(job.state().name().to_string())),
+                    ("execute_us", Json::Num(exec_us as f64)),
+                ],
+            );
         }
     }
 }
@@ -445,7 +534,7 @@ mod tests {
         assert_eq!(job.state(), JobState::Queued);
         assert_eq!(reg.stats().queued, 1);
         let cache = EvalCache::shared();
-        reg.execute(&job, 1, 1, cache);
+        reg.execute(&job, 1, 1, cache, None, None);
         assert_eq!(job.state(), JobState::Done);
         assert_eq!(reg.stats().done, 1);
         let sync = Planner::new(1).run(&q).unwrap().to_json();
@@ -463,7 +552,7 @@ mod tests {
         let reg = JobRegistry::new(8);
         let job = reg.submit(query("model = 13B\nsweep.seq_len = 2048,4096\n"));
         job.request_cancel();
-        reg.execute(&job, 1, 1, EvalCache::shared());
+        reg.execute(&job, 1, 1, EvalCache::shared(), None, None);
         assert_eq!(job.state(), JobState::Cancelled);
         assert!(job.result().is_none());
         assert_eq!(reg.stats().cancelled, 1);
@@ -475,7 +564,7 @@ mod tests {
         let mut q = query("model = 13B\n");
         q.backend_spec = "warp-drive".to_string();
         let job = reg.submit(q);
-        reg.execute(&job, 1, 1, EvalCache::shared());
+        reg.execute(&job, 1, 1, EvalCache::shared(), None, None);
         assert_eq!(job.state(), JobState::Failed);
         assert!(job.error().unwrap().contains("unknown backend"), "{:?}", job.error());
         assert_eq!(reg.stats().failed, 1);
@@ -485,9 +574,9 @@ mod tests {
     fn record_retention_evicts_oldest_terminal_only() {
         let reg = JobRegistry::new(2);
         let a = reg.submit(query("model = 13B\n"));
-        reg.execute(&a, 1, 1, EvalCache::shared());
+        reg.execute(&a, 1, 1, EvalCache::shared(), None, None);
         let b = reg.submit(query("model = 13B\nseq_len = 4096\n"));
-        reg.execute(&b, 1, 1, EvalCache::shared());
+        reg.execute(&b, 1, 1, EvalCache::shared(), None, None);
         // Third submission evicts the oldest terminal record (id 1).
         let c = reg.submit(query("model = 13B\nseq_len = 8192\n"));
         assert!(reg.get(a.id).is_none(), "oldest terminal record evicted");
@@ -495,7 +584,7 @@ mod tests {
         assert!(reg.get(c.id).is_some());
         // Active jobs are never evicted: cap 2 with two active + one done.
         assert!(!reg.remove_terminal(c.id), "active job cannot be discarded");
-        reg.execute(&c, 1, 1, EvalCache::shared());
+        reg.execute(&c, 1, 1, EvalCache::shared(), None, None);
         assert!(reg.remove_terminal(c.id));
         assert!(reg.get(c.id).is_none());
     }

@@ -21,6 +21,12 @@ use super::jobs::JobStats;
 pub const LATENCY_BUCKETS: [f64; 11] =
     [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5];
 
+/// Bucket bounds for evaluation-time histograms (`range_seconds`,
+/// `job_chunk_seconds`). Wider than [`LATENCY_BUCKETS`]: a chunked
+/// evaluation or a fleet range round trip runs seconds, not milliseconds.
+pub const EVAL_BUCKETS: [f64; 11] =
+    [0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0];
+
 /// Metric name prefix — every exported series starts with this.
 pub const PREFIX: &str = "fsdp_bw";
 
@@ -61,6 +67,21 @@ pub const SERIES: &[(&str, &str, &str)] = &[
         "counter",
         "Grid points executed on behalf of a fleet coordinator (POST /v1/ranges).",
     ),
+    (
+        "ranges_failed_total",
+        "counter",
+        "Fleet range executions that errored (POST /v1/ranges).",
+    ),
+    (
+        "range_seconds",
+        "histogram",
+        "Fleet range execution time histogram (POST /v1/ranges).",
+    ),
+    (
+        "job_chunk_seconds",
+        "histogram",
+        "Per-chunk evaluation time histogram for background jobs.",
+    ),
 ];
 
 /// HELP + TYPE preamble for a series, read from [`SERIES`] so the
@@ -74,6 +95,50 @@ fn preamble(out: &mut String, name: &str) {
     let _ = writeln!(out, "# TYPE {PREFIX}_{name} {typ}");
 }
 
+/// A lock-free cumulative histogram: per-bucket counts plus count/sum.
+/// Bucket bounds are passed at observe/render time so one shape serves
+/// both the request-latency and evaluation-time series.
+#[derive(Debug, Default)]
+struct Histo {
+    buckets: [AtomicU64; 11],
+    count: AtomicU64,
+    /// Sum in microseconds (an atomic f64 is unavailable; µs granularity
+    /// keeps rounding error irrelevant at service latencies).
+    sum_us: AtomicU64,
+}
+
+impl Histo {
+    fn observe(&self, bounds: &[f64; 11], seconds: f64) {
+        for (i, le) in bounds.iter().enumerate() {
+            if seconds <= *le {
+                self.buckets[i].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Render `_bucket`/`_sum`/`_count` lines with the standard preamble.
+    fn render(&self, out: &mut String, name: &str, bounds: &[f64; 11]) {
+        preamble(out, name);
+        for (i, le) in bounds.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "{PREFIX}_{name}_bucket{{le=\"{le}\"}} {}",
+                self.buckets[i].load(Ordering::Relaxed)
+            );
+        }
+        let count = self.count.load(Ordering::Relaxed);
+        let _ = writeln!(out, "{PREFIX}_{name}_bucket{{le=\"+Inf\"}} {count}");
+        let _ = writeln!(
+            out,
+            "{PREFIX}_{name}_sum {}",
+            self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+        );
+        let _ = writeln!(out, "{PREFIX}_{name}_count {count}");
+    }
+}
+
 /// Counters for one server instance. Shared via `Arc` between the accept
 /// loop, the workers, and the `/metrics` handler.
 #[derive(Debug, Default)]
@@ -81,11 +146,7 @@ pub struct ServeMetrics {
     /// `(endpoint label, status code)` → request count.
     requests: Mutex<BTreeMap<(String, u16), u64>>,
     /// Cumulative request latency histogram (all endpoints).
-    bucket_counts: [AtomicU64; LATENCY_BUCKETS.len()],
-    latency_count: AtomicU64,
-    /// Sum in microseconds (an atomic f64 is unavailable; µs granularity
-    /// keeps rounding error irrelevant at service latencies).
-    latency_sum_us: AtomicU64,
+    latency: Histo,
     /// Requests currently being handled by a worker.
     inflight: AtomicU64,
     /// Connections rejected at the accept queue (backpressure 503s).
@@ -94,6 +155,12 @@ pub struct ServeMetrics {
     ranges: AtomicU64,
     /// Grid points executed across those ranges.
     range_points: AtomicU64,
+    /// Fleet range executions that errored.
+    ranges_failed: AtomicU64,
+    /// Fleet range execution time (`range_seconds`).
+    range_latency: Histo,
+    /// Per-chunk evaluation time for background jobs (`job_chunk_seconds`).
+    chunk_latency: Histo,
 }
 
 impl ServeMetrics {
@@ -107,13 +174,22 @@ impl ServeMetrics {
             let mut req = self.requests.lock().expect("metrics poisoned");
             *req.entry((endpoint.to_string(), status)).or_insert(0) += 1;
         }
-        for (i, le) in LATENCY_BUCKETS.iter().enumerate() {
-            if seconds <= *le {
-                self.bucket_counts[i].fetch_add(1, Ordering::Relaxed);
-            }
-        }
-        self.latency_count.fetch_add(1, Ordering::Relaxed);
-        self.latency_sum_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.latency.observe(&LATENCY_BUCKETS, seconds);
+    }
+
+    /// Record one fleet range execution time (`range_seconds`).
+    pub fn observe_range(&self, seconds: f64) {
+        self.range_latency.observe(&EVAL_BUCKETS, seconds);
+    }
+
+    /// Record one per-chunk job evaluation time (`job_chunk_seconds`).
+    pub fn observe_job_chunk(&self, seconds: f64) {
+        self.chunk_latency.observe(&EVAL_BUCKETS, seconds);
+    }
+
+    /// Count one fleet range execution that errored.
+    pub fn count_range_failed(&self) {
+        self.ranges_failed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// RAII in-flight gauge: increments now, decrements on drop.
@@ -166,22 +242,7 @@ impl ServeMetrics {
             }
         }
 
-        preamble(&mut out, "http_request_seconds");
-        for (i, le) in LATENCY_BUCKETS.iter().enumerate() {
-            let _ = writeln!(
-                out,
-                "{PREFIX}_http_request_seconds_bucket{{le=\"{le}\"}} {}",
-                self.bucket_counts[i].load(Ordering::Relaxed)
-            );
-        }
-        let count = self.latency_count.load(Ordering::Relaxed);
-        let _ = writeln!(out, "{PREFIX}_http_request_seconds_bucket{{le=\"+Inf\"}} {count}");
-        let _ = writeln!(
-            out,
-            "{PREFIX}_http_request_seconds_sum {}",
-            self.latency_sum_us.load(Ordering::Relaxed) as f64 / 1e6
-        );
-        let _ = writeln!(out, "{PREFIX}_http_request_seconds_count {count}");
+        self.latency.render(&mut out, "http_request_seconds", &LATENCY_BUCKETS);
 
         preamble(&mut out, "http_inflight");
         let _ = writeln!(out, "{PREFIX}_http_inflight {}", self.inflight.load(Ordering::Relaxed));
@@ -201,6 +262,14 @@ impl ServeMetrics {
             "{PREFIX}_range_points_total {}",
             self.range_points.load(Ordering::Relaxed)
         );
+        preamble(&mut out, "ranges_failed_total");
+        let _ = writeln!(
+            out,
+            "{PREFIX}_ranges_failed_total {}",
+            self.ranges_failed.load(Ordering::Relaxed)
+        );
+        self.range_latency.render(&mut out, "range_seconds", &EVAL_BUCKETS);
+        self.chunk_latency.render(&mut out, "job_chunk_seconds", &EVAL_BUCKETS);
 
         for (name, value) in [
             ("eval_cache_hits_total", cache.hits),
@@ -315,6 +384,24 @@ mod tests {
         let text = render(&m);
         assert!(text.contains("fsdp_bw_ranges_executed_total 2"), "{text}");
         assert!(text.contains("fsdp_bw_range_points_total 5096"), "{text}");
+    }
+
+    #[test]
+    fn eval_histograms_and_failure_counter_export() {
+        let m = ServeMetrics::new();
+        m.observe_range(0.004);
+        m.observe_range(7.0);
+        m.observe_job_chunk(0.3);
+        m.count_range_failed();
+        let text = render(&m);
+        // 0.004 lands in every range bucket; 7.0 only in le=10 and +Inf.
+        assert!(text.contains("fsdp_bw_range_seconds_bucket{le=\"0.005\"} 1"), "{text}");
+        assert!(text.contains("fsdp_bw_range_seconds_bucket{le=\"10\"} 2"), "{text}");
+        assert!(text.contains("fsdp_bw_range_seconds_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("fsdp_bw_range_seconds_count 2"), "{text}");
+        assert!(text.contains("fsdp_bw_job_chunk_seconds_bucket{le=\"0.5\"} 1"), "{text}");
+        assert!(text.contains("fsdp_bw_job_chunk_seconds_count 1"), "{text}");
+        assert!(text.contains("fsdp_bw_ranges_failed_total 1"), "{text}");
     }
 
     #[test]

@@ -55,6 +55,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::config::scenario::KNOWN_KEYS;
 use crate::config::{ClusterConfig, ModelConfig};
+use crate::obs::Tracer;
 use crate::query::cache::{EvalCache, DEFAULT_CAPACITY};
 use crate::query::{Planner, Query};
 use crate::util::channel::{channel, Receiver, Sender, TrySendError};
@@ -90,7 +91,7 @@ pub const ENDPOINTS: &[(&str, &str, &str)] = &[
     (
         "GET",
         "/v1/jobs/:id",
-        "Job progress: points decided/pruned/remaining, cache hits, current best",
+        "Job progress: points decided/pruned/remaining, cache hits, current best, queue/execute/per-chunk timings and cumulative points/s",
     ),
     (
         "GET",
@@ -151,6 +152,10 @@ pub struct ServeConfig {
     /// Finished job records retained for `GET /v1/jobs/:id[/result]`
     /// (oldest evicted first; active jobs are never evicted).
     pub job_records: usize,
+    /// Execution tracer ([`crate::obs`]): request spans, job lifecycle
+    /// events, and per-chunk timings. `None` (the default) costs nothing;
+    /// response bodies are identical either way.
+    pub trace: Option<Tracer>,
 }
 
 impl Default for ServeConfig {
@@ -166,6 +171,7 @@ impl Default for ServeConfig {
             job_queue: 32,
             job_chunk: 4096,
             job_records: 256,
+            trace: None,
         }
     }
 }
@@ -204,6 +210,8 @@ impl Server {
             let rx: Receiver<Arc<Job>> = job_submit_rx.clone();
             let registry = jobs.clone();
             let cache = cache.clone();
+            let worker_metrics = metrics.clone();
+            let tracer = cfg.trace.clone();
             let planner_threads = cfg.planner_threads.max(1);
             let job_chunk = cfg.job_chunk.max(1);
             job_workers.push(std::thread::spawn(move || {
@@ -211,7 +219,14 @@ impl Server {
                     // A panicking evaluator must cost one job, not the
                     // worker (mirrors the request workers below).
                     let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        registry.execute(&job, planner_threads, job_chunk, cache.clone());
+                        registry.execute(
+                            &job,
+                            planner_threads,
+                            job_chunk,
+                            cache.clone(),
+                            Some(&worker_metrics),
+                            tracer.as_ref(),
+                        );
                     }));
                     if caught.is_err() {
                         registry.fail_panicked(&job);
@@ -232,6 +247,7 @@ impl Server {
                 job_submit: job_submit_tx.clone(),
                 planner_threads: cfg.planner_threads.max(1),
                 timeout: cfg.timeout,
+                trace: cfg.trace.clone(),
             };
             workers.push(std::thread::spawn(move || {
                 while let Ok(stream) = rx.recv() {
@@ -390,6 +406,7 @@ struct Handler {
     job_submit: Sender<Arc<Job>>,
     planner_threads: usize,
     timeout: Duration,
+    trace: Option<Tracer>,
 }
 
 impl Handler {
@@ -407,7 +424,13 @@ impl Handler {
                 return;
             }
         };
+        let mut sp = self.trace.as_ref().map(|t| t.span("serve.request", vec![]));
         let (endpoint, status, content_type, body) = self.route(&req);
+        if let Some(sp) = &mut sp {
+            sp.field("endpoint", Json::Str(endpoint.to_string()));
+            sp.field("status", Json::Num(f64::from(status)));
+        }
+        drop(sp);
         let _ = write_response(&mut stream, status, content_type, &body);
         self.metrics.observe(endpoint, status, start.elapsed().as_secs_f64());
     }
@@ -519,6 +542,15 @@ impl Handler {
         let job = self.jobs.submit(query);
         match self.job_submit.try_send(job.clone()) {
             Ok(()) => {
+                if let Some(t) = &self.trace {
+                    t.event(
+                        "job.submit",
+                        vec![
+                            ("job", Json::Num(job.id as f64)),
+                            ("points", Json::Num(job.query.space.len() as f64)),
+                        ],
+                    );
+                }
                 // State is reported as "queued" — the state at submission
                 // time — rather than read back from the job, which a fast
                 // worker may already have moved to running or even done.
@@ -640,8 +672,19 @@ impl Handler {
         if req.threads == 0 {
             req.threads = self.planner_threads;
         }
-        let partial = crate::fleet::execute_range_request(&req, Some(self.cache.clone()))?;
+        let started = Instant::now();
+        let partial = match crate::fleet::execute_range_request(&req, Some(self.cache.clone()))
+        {
+            Ok(p) => p,
+            Err(e) => {
+                // Parse failures above return before this point: the
+                // failure counter means "a well-formed range errored".
+                self.metrics.count_range_failed();
+                return Err(e);
+            }
+        };
         self.metrics.count_range((req.end - req.start) as u64);
+        self.metrics.observe_range(started.elapsed().as_secs_f64());
         Ok(partial.dump())
     }
 }

@@ -168,6 +168,21 @@ fn fleet_flag_is_scoped_and_its_host_list_validated_offline() {
 }
 
 #[test]
+fn trace_flag_and_subcommand_are_scoped() {
+    // --trace belongs to sweep, plan and serve only.
+    assert_rejected(&["bounds", "--trace", "t.jsonl"], "unknown option --trace");
+    assert_rejected(&["simulate", "--trace", "t.jsonl"], "unknown option --trace");
+    assert_rejected(&["scenario", "x.scn", "--trace", "t.jsonl"], "unknown option --trace");
+    assert_rejected(&["check", "x.scn", "--trace", "t.jsonl"], "unknown option --trace");
+
+    // The trace subcommand takes exactly one file and the --chrome option.
+    assert_rejected(&["trace"], "trace needs a JSONL file");
+    assert_rejected(&["trace", "a.jsonl", "b.jsonl"], "unexpected argument");
+    assert_rejected(&["trace", "a.jsonl", "--json"], "unknown option --json");
+    assert_rejected(&["trace", "/nonexistent/t.jsonl"], "reading /nonexistent/t.jsonl");
+}
+
+#[test]
 fn no_batch_is_accepted_and_changes_no_output_bytes() {
     let examples = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples");
     let sweep = format!("{examples}/sweep.scn");

@@ -1,0 +1,326 @@
+//! Acceptance tests of the execution-tracing layer: the JSONL schema is
+//! pinned, the chunk lifecycle is fully and deterministically recorded
+//! under the worker pool, and — the load-bearing contract — **tracing
+//! never changes a report byte**, locally, over a fleet, or across a
+//! checkpoint boundary. The `fsdp-bw trace` reader is exercised end to
+//! end through the binary, Chrome export included.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::Duration;
+
+use fsdp_bw::eval::{
+    backends_for, run_sweep_fleet, run_sweep_streamed, Sweep, SweepFormat, SweepStreamConfig,
+};
+use fsdp_bw::fleet::FleetConfig;
+use fsdp_bw::obs::report::{chrome_json, parse_trace, summarize, TraceLine};
+use fsdp_bw::obs::Tracer;
+use fsdp_bw::serve::{ServeConfig, Server};
+use fsdp_bw::util::json::Json;
+use fsdp_bw::util::tempdir::TempDir;
+
+/// 3 × 4 × 2 = 24 points, one n_gpus value erroring (beyond any cluster),
+/// so traces cover Done and Error evaluations alike.
+const SWEEP_SRC: &str = "model = 1.3B\nbatch = 1\n\
+                         sweep.n_gpus = 8,16,100000\n\
+                         sweep.seq_len = 1024..8192*2\n\
+                         sweep.gamma = 0,0.5\n";
+
+fn sweep() -> Sweep {
+    Sweep::parse(SWEEP_SRC).unwrap()
+}
+
+/// Run a chunked sweep with a memory tracer attached; return the report
+/// body and the parsed trace.
+fn traced_sweep(chunk: usize, threads: usize) -> (String, Vec<TraceLine>) {
+    let backends = backends_for("analytical").unwrap();
+    let tracer = Tracer::to_memory();
+    let mut cfg = SweepStreamConfig::new(SweepFormat::Csv, chunk, threads);
+    cfg.trace = Some(tracer.clone());
+    let out = run_sweep_streamed(&sweep(), &backends, &cfg).unwrap();
+    let lines = parse_trace(&tracer.drain()).unwrap();
+    tracer.finish().unwrap();
+    (out.body.unwrap(), lines)
+}
+
+fn keys(v: &Json) -> Vec<&str> {
+    v.as_obj().unwrap().keys().map(String::as_str).collect()
+}
+
+#[test]
+fn jsonl_schema_is_pinned() {
+    // The golden shapes: one sorted-key JSON object per line, `kind`
+    // discriminated, envelope keys (kind/name/seq/tid/ts_us [+ dur_us])
+    // merged flat with the free-form fields. Downstream consumers parse
+    // these files; key-set changes are breaking.
+    let t = Tracer::to_memory();
+    t.event("chunk.done", vec![("chunk", Json::Num(0.0)), ("done", Json::Num(8.0))]);
+    {
+        let mut sp = t.span("planner.evaluate", vec![("points", Json::Num(8.0))]);
+        sp.field("evaluated", Json::Num(8.0));
+    }
+    let text = t.drain();
+    let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 2);
+
+    assert_eq!(keys(&lines[0]), ["chunk", "done", "kind", "name", "seq", "tid", "ts_us"]);
+    assert_eq!(lines[0].get("kind").unwrap().as_str().unwrap(), "event");
+    assert_eq!(lines[0].get("name").unwrap().as_str().unwrap(), "chunk.done");
+
+    assert_eq!(
+        keys(&lines[1]),
+        ["dur_us", "evaluated", "kind", "name", "points", "seq", "tid", "ts_us"]
+    );
+    assert_eq!(lines[1].get("kind").unwrap().as_str().unwrap(), "span");
+    assert_eq!(lines[1].get("name").unwrap().as_str().unwrap(), "planner.evaluate");
+
+    // parse_trace accepts its own output and preserves the free fields.
+    let parsed = parse_trace(&text).unwrap();
+    assert_eq!(parsed.len(), 2);
+    assert!(!parsed[0].is_span);
+    assert!(parsed[1].is_span);
+    assert_eq!(parsed[1].fields.get("points").unwrap().as_usize().unwrap(), 8);
+}
+
+#[test]
+fn chunked_sweep_trace_is_ordered_and_complete_under_the_pool() {
+    // 24 points at chunk 5 → 5 chunks, evaluated on a 4-thread pool. The
+    // trace must still be a total order (seq), with exactly one `chunk`
+    // span and one `chunk.done` event per chunk, in chunk order — the
+    // driver thread emits them, however the pool schedules points.
+    let (_, lines) = traced_sweep(5, 4);
+    assert!(
+        lines.windows(2).all(|w| w[0].seq < w[1].seq),
+        "parse_trace returns a strict seq total order"
+    );
+
+    let chunk_ids = |name: &str, is_span: bool| -> Vec<u64> {
+        lines
+            .iter()
+            .filter(|l| l.is_span == is_span && l.name == name)
+            .map(|l| l.u64_field("chunk").unwrap())
+            .collect()
+    };
+    assert_eq!(chunk_ids("chunk", true), vec![0, 1, 2, 3, 4]);
+    assert_eq!(chunk_ids("chunk.done", false), vec![0, 1, 2, 3, 4]);
+
+    // Planner phases nest inside the chunk spans: each chunk span's
+    // interval covers the evaluation spans emitted for that chunk.
+    assert!(
+        lines.iter().any(|l| l.is_span && l.name.starts_with("planner.")),
+        "planner phase spans present"
+    );
+    let points: u64 = lines
+        .iter()
+        .filter(|l| l.is_span && l.name == "chunk")
+        .map(|l| l.u64_field("points").unwrap())
+        .sum();
+    assert_eq!(points, 24, "chunk spans cover every point exactly once");
+
+    // The summary renders every local section from this trace.
+    let s = summarize(&lines);
+    assert!(s.contains("per-phase wall time"), "{s}");
+    assert!(s.contains("per-chunk throughput"), "{s}");
+    assert!(s.contains("critical path:"), "{s}");
+    assert!(!s.contains("per-worker utilization"), "local trace has no workers: {s}");
+}
+
+#[test]
+fn tracing_never_changes_report_bytes() {
+    let backends = backends_for("analytical").unwrap();
+    for (chunk, threads) in [(5usize, 1usize), (5, 4), (24, 2)] {
+        let cfg = SweepStreamConfig::new(SweepFormat::Csv, chunk, threads);
+        let want = run_sweep_streamed(&sweep(), &backends, &cfg).unwrap().body.unwrap();
+        let (traced, lines) = traced_sweep(chunk, threads);
+        assert_eq!(traced, want, "chunk {chunk}, {threads} threads");
+        assert!(!lines.is_empty(), "the trace itself is non-empty");
+    }
+}
+
+#[test]
+fn fleet_trace_attributes_work_per_worker_and_changes_no_bytes() {
+    let backends = backends_for("analytical").unwrap();
+    let cfg = SweepStreamConfig::new(SweepFormat::Csv, 5, 2);
+    let want = run_sweep_streamed(&sweep(), &backends, &cfg).unwrap().body.unwrap();
+
+    let workers: Vec<Server> = (0..2)
+        .map(|_| {
+            Server::start(ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                threads: 2,
+                queue: 32,
+                timeout: Duration::from_secs(30),
+                ..ServeConfig::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    let hosts: Vec<String> = workers.iter().map(|w| w.addr().to_string()).collect();
+
+    let tracer = Tracer::to_memory();
+    let mut fc = FleetConfig::new(hosts.clone());
+    fc.chunk = 5;
+    fc.threads = 2;
+    fc.trace = Some(tracer.clone());
+    let (out, stats) = run_sweep_fleet(&sweep(), SWEEP_SRC, "analytical", &cfg, &fc).unwrap();
+    assert_eq!(out.body.as_deref(), Some(want.as_str()), "fleet trace changes no bytes");
+    assert_eq!(stats.ranges, 5);
+
+    let lines = parse_trace(&tracer.drain()).unwrap();
+    let gathers: Vec<&TraceLine> =
+        lines.iter().filter(|l| !l.is_span && l.name == "fleet.gather").collect();
+    assert_eq!(gathers.len(), 5, "one gather per folded range");
+    for g in &gathers {
+        assert!(hosts.contains(&g.str_field("host").unwrap().to_string()));
+        assert!(g.u64_field("rtt_us").is_some());
+        assert_eq!(g.u64_field("epoch"), Some(0), "healthy fleet stays in epoch 0");
+    }
+    // Worker-side span summaries came back over the wire and carry the
+    // planner phase names measured *on the worker*.
+    let worker_spans = lines
+        .iter()
+        .filter(|l| !l.is_span && l.name == "fleet.worker")
+        .filter_map(|l| l.fields.opt("spans"))
+        .filter_map(|s| s.as_obj().ok())
+        .flat_map(|m| m.keys().cloned())
+        .collect::<std::collections::BTreeSet<String>>();
+    assert!(
+        worker_spans.iter().any(|n| n.starts_with("planner.")),
+        "worker summaries name planner phases: {worker_spans:?}"
+    );
+    let done = lines.iter().find(|l| l.name == "fleet.done").unwrap();
+    assert_eq!(done.u64_field("ranges"), Some(5));
+    assert_eq!(done.u64_field("reissued"), Some(0));
+
+    let s = summarize(&lines);
+    assert!(s.contains("per-worker utilization"), "{s}");
+    assert!(s.contains("fleet recovery: 5 ranges, 0 re-issued"), "{s}");
+    assert!(s.contains("worker:planner."), "merged worker phases in the table: {s}");
+
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn a_checkpoint_written_with_tracing_resumes_without_it_byte_identically() {
+    // The run fingerprint excludes trace configuration: interrupt a traced
+    // run, resume untraced, get the uninterrupted bytes.
+    let backends = backends_for("analytical").unwrap();
+    let cfg = SweepStreamConfig::new(SweepFormat::Json, 5, 2);
+    let want = run_sweep_streamed(&sweep(), &backends, &cfg).unwrap().body.unwrap();
+
+    let dir = TempDir::new().unwrap();
+    let ckpt: PathBuf = dir.path().join("ck.json");
+    let mut c1 = cfg.clone();
+    c1.checkpoint = Some(ckpt.clone());
+    c1.max_chunks = Some(2);
+    c1.trace = Some(Tracer::to_memory());
+    let partial = run_sweep_streamed(&sweep(), &backends, &c1).unwrap();
+    assert!(partial.interrupted);
+    assert_eq!(partial.chunks_done, 2);
+
+    let mut c2 = cfg.clone();
+    c2.checkpoint = Some(ckpt.clone());
+    c2.resume = true;
+    let resumed = run_sweep_streamed(&sweep(), &backends, &c2).unwrap();
+    assert!(!resumed.interrupted);
+    assert_eq!(resumed.body.as_deref(), Some(want.as_str()), "traced checkpoint, plain resume");
+}
+
+// -- the `fsdp-bw trace` subcommand, through the binary ---------------------
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_fsdp-bw"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn cli_sweep_trace_roundtrip_summary_and_chrome_export() {
+    let dir = TempDir::new().unwrap();
+    let scn = dir.path().join("s.scn");
+    std::fs::write(&scn, SWEEP_SRC).unwrap();
+    let scn = scn.to_str().unwrap().to_string();
+    let trace = dir.path().join("t.jsonl");
+    let trace = trace.to_str().unwrap();
+
+    let (ok, plain, _) = run(&["sweep", &scn, "--csv", "--chunk", "5"]);
+    assert!(ok);
+    let (ok, traced, _) = run(&["sweep", &scn, "--csv", "--chunk", "5", "--trace", trace]);
+    assert!(ok);
+    assert_eq!(plain, traced, "--trace must not change one report byte");
+
+    // The file parses, and the summary names the sections.
+    let chrome = dir.path().join("t.chrome.json");
+    let chrome = chrome.to_str().unwrap();
+    let (ok, summary, _) = run(&["trace", trace, "--chrome", chrome]);
+    assert!(ok);
+    assert!(summary.contains("per-phase wall time"), "{summary}");
+    assert!(summary.contains("per-chunk throughput"), "{summary}");
+    assert!(summary.contains("critical path:"), "{summary}");
+    assert!(summary.contains(&format!("wrote {chrome}")), "{summary}");
+
+    // Chrome trace-event JSON: an object with a traceEvents array whose
+    // entries are all "X" (complete spans) or "i" (instants) with the
+    // required keys — loadable by chrome://tracing and Perfetto.
+    let doc = Json::parse(&std::fs::read_to_string(chrome).unwrap()).unwrap();
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let raw = std::fs::read_to_string(trace).unwrap();
+    assert_eq!(events.len(), raw.lines().count(), "one Chrome event per trace line");
+    for e in events {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        assert!(ph == "X" || ph == "i", "unexpected phase {ph}");
+        e.get("name").unwrap().as_str().unwrap();
+        e.get("ts").unwrap().as_f64().unwrap();
+        e.get("pid").unwrap().as_usize().unwrap();
+        e.get("tid").unwrap().as_usize().unwrap();
+        if ph == "X" {
+            e.get("dur").unwrap().as_f64().unwrap();
+        }
+    }
+    // Library-level agreement: the export equals chrome_json over the file.
+    let lines = parse_trace(&raw).unwrap();
+    assert_eq!(doc.dump(), chrome_json(&lines).dump());
+}
+
+#[test]
+fn cli_plan_trace_changes_no_bytes() {
+    let examples = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples");
+    let plan_scn = format!("{examples}/plan.scn");
+    let dir = TempDir::new().unwrap();
+    let trace = dir.path().join("p.jsonl");
+    let trace = trace.to_str().unwrap();
+
+    let (ok, plain, _) = run(&["plan", &plan_scn, "--json"]);
+    assert!(ok);
+    let (ok, traced, _) = run(&["plan", &plan_scn, "--json", "--trace", trace]);
+    assert!(ok);
+    assert_eq!(plain, traced, "--trace must not change the frontier bytes");
+
+    let (ok, summary, _) = run(&["trace", trace]);
+    assert!(ok);
+    assert!(summary.contains("per-phase wall time"), "{summary}");
+}
+
+#[test]
+fn cli_trace_rejects_missing_and_malformed_input() {
+    let (ok, _, err) = run(&["trace"]);
+    assert!(!ok);
+    assert!(err.contains("trace needs a JSONL file"), "{err}");
+
+    let dir = TempDir::new().unwrap();
+    let bad = dir.path().join("bad.jsonl");
+    std::fs::write(&bad, "this is not json\n").unwrap();
+    let (ok, _, err) = run(&["trace", bad.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(err.contains("trace line 1"), "{err}");
+}
