@@ -64,6 +64,22 @@ fn main() {
         std::hint::black_box(run_sweep(&sweep, &backends, 8).to_json().len())
     });
 
+    // Mixed-strategy grid: all seven distribution strategies through the
+    // analytical evaluator — the per-strategy memory/comm dispatch must
+    // not move the points/s needle against the plain FSDP sweeps above.
+    let strat_sweep = Sweep::parse(
+        "model = 1.3B\nbatch = 1\nn_gpus = 32\n\
+         sweep.strategy = fsdp,ddp,zero1,zero2,zero3,param_server,hybrid_shard\n\
+         sweep.seq_len = 2048..32768*2\n\
+         sweep.cluster.inter_node_gbps = 50,400\n",
+    )
+    .expect("strategy sweep");
+    let strat_backends = backends_for("analytical").expect("backends");
+    let n = strat_sweep.len() as f64;
+    b.case("eval/sweep_strategy_mixed_70pt", n, || {
+        std::hint::black_box(run_sweep(&strat_sweep, &strat_backends, 8).n_points())
+    });
+
     // Planner: §2.7 bounds pruning vs brute force on a 594-point grid with
     // many infeasible corners — the pruned run must win, and both must
     // agree (asserted here so the bench cannot silently drift).

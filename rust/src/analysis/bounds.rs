@@ -5,10 +5,14 @@
 //! memory and per-GPU bandwidth bounds every efficiency metric — "memory
 //! and bandwidth are all you need".
 //!
-//! `S_volume` here is the *effective* per-GPU bandwidth of the cluster's
-//! configured collective algorithm ([`crate::comm::CommEngine::s_effective`]
-//! — ε = 0, same engine as the rest of the chain): the flat bottleneck
-//! share for the ring, a lifted value for hierarchical collectives.
+//! `S_volume` here is the *strategy-aware* effective per-GPU bandwidth
+//! ([`StepModel::s_volume`] — ε = 0, same engine as the rest of the
+//! chain): the collective's effective bandwidth for the FSDP/ZeRO/DDP
+//! family (flat bottleneck share for the ring, lifted for hierarchical
+//! collectives), the server-link share for parameter server, and the
+//! two-tier harmonic composition for hybrid sharding. Each choice keeps
+//! the bounds' premise — a step spends ≥ `2φQ/S_volume` on collectives —
+//! provably true for its strategy.
 
 use super::StepModel;
 
@@ -32,7 +36,7 @@ impl Bounds {
         let l = sm.model.layers as f64;
         let h = sm.model.hidden as f64;
         let lseq = sm.cfg.seq_len as f64;
-        let s_vol = sm.comm().s_effective();
+        let s_vol = sm.s_volume();
         let s_flops = sm.cluster.s_flops();
         let m_free = mem.m_free;
 
@@ -58,7 +62,7 @@ impl Bounds {
         let l = sm.model.layers as f64;
         let h = sm.model.hidden as f64;
         let lseq = sm.cfg.seq_len as f64;
-        let s_vol = sm.comm().s_effective();
+        let s_vol = sm.s_volume();
         let denom = (q + 15.0 * gamma * q + 2.0 * gamma) * l * h * q;
         ((2.0 + lseq / (3.0 * h)) / denom * s_vol * mem.m_free / sm.cluster.s_flops()).min(1.0)
     }
@@ -122,6 +126,42 @@ mod tests {
                             );
                         }
                     }
+                }
+            }
+        }
+    }
+
+    /// The bounds' premise — `t_step ≥ 2φQ/S_volume` — holds for every
+    /// strategy, so achieved TGS never exceeds `K_max` at capacity tokens.
+    #[test]
+    fn achieved_below_kmax_for_every_strategy() {
+        let strategies = [
+            Strategy::Fsdp,
+            Strategy::Ddp,
+            Strategy::Zero1,
+            Strategy::Zero2,
+            Strategy::Zero3,
+            Strategy::ParamServer,
+            Strategy::HybridShard,
+        ];
+        for strat in strategies {
+            for n in [4u64, 8, 64, 512] {
+                let mut s = sm("7B", 2048, n, "40GB-A100-100Gbps");
+                s.cfg = s.cfg.clone().with_strategy(strat);
+                if !s.memory().fits() {
+                    continue;
+                }
+                let b = s.bounds();
+                let e = s.memory().capacity_tokens;
+                for alpha in [0.3, 0.75, 1.0] {
+                    let bd = crate::analysis::step::breakdown(&s, alpha, e);
+                    let m = crate::analysis::metrics::from_breakdown(&s, &bd);
+                    assert!(
+                        m.tgs <= b.k_max * (1.0 + 1e-9) || b.k_max >= 1e9,
+                        "{strat} n={n} α={alpha}: K={} > K_max={}",
+                        m.tgs,
+                        b.k_max
+                    );
                 }
             }
         }

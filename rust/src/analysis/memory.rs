@@ -6,7 +6,7 @@
 //! gradients are always divided by `N`; parameters only under ZeRO-3
 //! (Eq 1). Activations per token follow Eq 3 with checkpoint fraction γ.
 
-use crate::config::{ClusterConfig, ModelConfig, TrainingConfig};
+use crate::config::{ClusterConfig, ModelConfig, Strategy, TrainingConfig};
 
 /// Evaluated memory model for one (model, cluster, config, N) point.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,10 +44,29 @@ impl MemoryModel {
         let grads_bytes = phi * q;
         let optimizer_bytes = 3.0 * 2.0 * q * phi;
 
-        // Eq 1: optimizer + gradients always shard by N; parameters shard
-        // only under full-shard FSDP (ZeRO-3).
-        let param_div = if cfg.zero_stage.shards_params() { n } else { 1.0 };
-        let state_per_gpu = (optimizer_bytes + grads_bytes) / n + params_bytes / param_div;
+        // Eq 1, generalized per strategy: each strategy picks which model
+        // states shard and over which group.
+        let state_per_gpu = match cfg.strategy {
+            // The seed's Eq-1 expression, shared verbatim by the ZeRO-family
+            // strategies that map onto it (zero3 pins stage 3, zero2 pins
+            // stage 1/2) — `strategy = zero3` stays bit-exact with FSDP.
+            Strategy::Fsdp | Strategy::Zero2 | Strategy::Zero3 => {
+                let param_div = if cfg.effective_stage().shards_params() { n } else { 1.0 };
+                (optimizer_bytes + grads_bytes) / n + params_bytes / param_div
+            }
+            // ZeRO-1 shards the optimizer state only.
+            Strategy::Zero1 => optimizer_bytes / n + grads_bytes + params_bytes,
+            // DDP replicates everything.
+            Strategy::Ddp => optimizer_bytes + grads_bytes + params_bytes,
+            // Workers hold parameter and gradient replicas; the optimizer
+            // state lives on the servers.
+            Strategy::ParamServer => grads_bytes + params_bytes,
+            // Full sharding over the intra-node group, replicas across nodes.
+            Strategy::HybridShard => {
+                let k = n_gpus.min(cluster.gpus_per_node.max(1)) as f64;
+                (optimizer_bytes + grads_bytes + params_bytes) / k
+            }
+        };
 
         let m_free = (cluster.m_usable() - state_per_gpu).max(0.0);
 
@@ -174,6 +193,25 @@ mod tests {
         let mm8 = MemoryModel::new(&m, &a100_200(), &cfg, 8);
         assert!(!mm4.fits(), "13B must OOM on 4 GPUs: free={} act={}", mm4.m_free, mm4.act_bytes);
         assert!(mm8.fits(), "13B must fit on 8 GPUs: free={} act={}", mm8.m_free, mm8.act_bytes);
+    }
+
+    /// Eq 2 monotonicity across strategies: DDP ≥ ZeRO-1 ≥ ZeRO-2 ≥ ZeRO-3
+    /// per-GPU state, with hybrid-shard between ZeRO-2 and DDP (it shards
+    /// everything, but only over the node's GPUs).
+    #[test]
+    fn strategy_state_monotonicity() {
+        let m = ModelConfig::preset("13B").unwrap();
+        let base = TrainingConfig::paper_default(2048, 1);
+        let state = |s: Strategy| {
+            MemoryModel::new(&m, &a100_200(), &base.clone().with_strategy(s), 32).state_per_gpu
+        };
+        assert!(state(Strategy::Ddp) >= state(Strategy::Zero1));
+        assert!(state(Strategy::Zero1) >= state(Strategy::Zero2));
+        assert!(state(Strategy::Zero2) >= state(Strategy::Zero3));
+        assert!(state(Strategy::HybridShard) <= state(Strategy::Ddp));
+        assert!(state(Strategy::HybridShard) >= state(Strategy::Zero3));
+        // zero3 == fsdp at the default stage, bit-exact.
+        assert_eq!(state(Strategy::Zero3), state(Strategy::Fsdp));
     }
 
     /// Capacity: more GPUs → more free memory → more tokens per GPU.

@@ -23,7 +23,7 @@ pub mod metrics;
 pub mod step;
 
 use crate::comm::CommEngine;
-use crate::config::{ClusterConfig, ModelConfig, TrainingConfig};
+use crate::config::{ClusterConfig, ModelConfig, Strategy, TrainingConfig};
 
 pub use bounds::Bounds;
 pub use memory::MemoryModel;
@@ -72,6 +72,105 @@ impl StepModel {
     pub fn t_transfer(&self) -> f64 {
         self.comm()
             .t_transfer(self.model.phi(), self.cfg.precision.bytes(), self.model.layers)
+    }
+
+    /// The parameter-server fan-in at this point: workers `W` and resolved
+    /// server count `S` (`strategy.servers`, or one per node when 0).
+    fn ps_fan(&self, engine: &CommEngine) -> (f64, f64) {
+        let w = self.n_gpus as f64;
+        let s = if self.cfg.ps_servers > 0 { self.cfg.ps_servers } else { engine.topo.nodes() };
+        (w, s.max(1) as f64)
+    }
+
+    /// The strategy's communication profile at this point:
+    /// `(comm_fwd, comm_bwd, comm_exposed)` — collective time overlappable
+    /// with forward, with backward, and time hidden behind neither phase.
+    /// Generalizes Eq 9's `(T, T, 0)` FSDP profile to every strategy.
+    pub fn comm_profile(&self) -> (f64, f64, f64) {
+        if self.n_gpus <= 1 {
+            return (0.0, 0.0, 0.0);
+        }
+        let engine = self.comm();
+        let phi = self.model.phi();
+        let q = self.cfg.precision.bytes();
+        match self.cfg.strategy {
+            // The paper's Eq-5/Eq-9 convention: one full parameter
+            // aggregation charged against each phase. `zero3` is `fsdp` at
+            // stage 3; `fsdp` at stage 1/2 keeps the seed's stage-blind
+            // charge so the default path is bit-identical to the seed.
+            Strategy::Fsdp | Strategy::Zero3 => {
+                let t = engine.t_transfer(phi, q, self.model.layers);
+                (t, t, 0.0)
+            }
+            // DDP, ZeRO-1 and ZeRO-2 all move the ZeRO paper's 2φQ of
+            // gradient traffic (all-reduce, or reduce-scatter + re-gather),
+            // overlapped with backward; forward needs no collective.
+            Strategy::Ddp | Strategy::Zero1 | Strategy::Zero2 => {
+                (0.0, 2.0 * phi * q / engine.s_effective(), 0.0)
+            }
+            // Workers push φQ of gradients (overlapping backward) and pull
+            // φQ of updated parameters (exposed before the next forward);
+            // with fewer servers than workers the server links serialize
+            // `W/S` transfers each way.
+            Strategy::ParamServer => {
+                let topo = engine.topo;
+                let (w, s) = self.ps_fan(&engine);
+                let t_xfer = phi * q / topo.bottleneck_bw() * (w / s).max(1.0)
+                    + topo.bottleneck_latency() * (w / s).ceil();
+                (0.0, t_xfer, t_xfer)
+            }
+            // FSDP inside the node (Eq 5 over the intra-node group), plus a
+            // gradient all-reduce of each rank's φQ/k shard across the `m`
+            // node replicas, overlapped with backward. As the job shrinks
+            // to one node this degenerates to exactly the FSDP profile.
+            Strategy::HybridShard => {
+                let topo = engine.topo;
+                let k = topo.local_ranks().max(1);
+                let m = topo.nodes();
+                let mut intra = engine;
+                intra.topo.n_gpus = k;
+                let t_intra = intra.t_transfer(phi, q, self.model.layers);
+                let t_rep = if m > 1 {
+                    let mf = m as f64;
+                    2.0 * (phi * q / k as f64) * (mf - 1.0) / mf / topo.inter_bw
+                        + mf * topo.inter_latency
+                } else {
+                    0.0
+                };
+                (t_intra, t_intra + t_rep, 0.0)
+            }
+        }
+    }
+
+    /// The strategy-aware `S_volume` the §2.7 bounds multiply against
+    /// `M_free`: a per-GPU bandwidth such that every step provably spends
+    /// at least `2φQ / S_volume` seconds on that step's collectives — the
+    /// premise the closed-form maxima (Eqs 13–15) rest on.
+    pub fn s_volume(&self) -> f64 {
+        let engine = self.comm();
+        match self.cfg.strategy {
+            // 2φQ of traffic at the collective's effective bandwidth: two
+            // Eq-5 aggregations (FSDP family) or one 2φQ gradient
+            // all-reduce (DDP / ZeRO-1/2).
+            Strategy::Fsdp
+            | Strategy::Zero1
+            | Strategy::Zero2
+            | Strategy::Zero3
+            | Strategy::Ddp => engine.s_effective(),
+            // Push + pull is 2φQ serialized over the server links.
+            Strategy::ParamServer => {
+                let (w, s) = self.ps_fan(&engine);
+                engine.topo.bottleneck_bw() * (s / w).min(1.0)
+            }
+            // Two intra-node aggregations plus the φQ/k cross-node
+            // all-reduce: harmonic composition of the two tiers.
+            Strategy::HybridShard => {
+                let topo = engine.topo;
+                let k = topo.local_ranks().max(1) as f64;
+                let m = topo.nodes() as f64;
+                1.0 / (1.0 / topo.intra_bw + (m - 1.0) / (m * k * topo.inter_bw))
+            }
+        }
     }
 
     /// Per-token forward FLOPs (Eq 6's `F_fwd`).

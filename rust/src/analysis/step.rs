@@ -1,7 +1,10 @@
 //! Step-time model — paper §2.4 Eq 9 and §2.5 Eq 10.
 //!
-//! Eq 9 assumes full overlap of parameter aggregation with compute within
-//! each phase: `T = max(T_fwd, T_transfer) + max(T_bwd, T_transfer)`.
+//! Eq 9 assumes full overlap of each phase's collectives with that phase's
+//! compute: `T = max(T_fwd, C_fwd) + max(T_bwd, C_bwd) + C_exposed`, where
+//! `(C_fwd, C_bwd, C_exposed)` is the strategy's communication profile
+//! ([`StepModel::comm_profile`]). For FSDP the profile is the paper's
+//! `(T_transfer, T_transfer, 0)` and the formula reduces to Eq 9 verbatim.
 
 use super::{compute, StepModel};
 
@@ -14,13 +17,21 @@ pub struct StepBreakdown {
     pub t_fwd: f64,
     /// Eq 8 backward time (includes recomputation).
     pub t_bwd: f64,
-    /// Eq 5 transfer time.
+    /// The step's dominant collective time — for FSDP exactly Eq 5's
+    /// transfer time; in general `max(comm_fwd, comm_bwd)`.
     pub t_transfer: f64,
+    /// Collective time the strategy overlaps with forward.
+    pub comm_fwd: f64,
+    /// Collective time the strategy overlaps with backward.
+    pub comm_bwd: f64,
+    /// Collective time hidden behind neither phase (e.g. a parameter
+    /// server's pull before the next forward).
+    pub comm_exposed: f64,
     /// Eq 9 overlapped step time.
     pub t_step: f64,
-    /// Eq 10 `R_fwd = T_transfer / T_fwd`.
+    /// Eq 10 `R_fwd = C_fwd / T_fwd`.
     pub r_fwd: f64,
-    /// Eq 10 `R_bwd = T_transfer / T_bwd`.
+    /// Eq 10 `R_bwd = C_bwd / T_bwd`.
     pub r_bwd: f64,
 }
 
@@ -30,9 +41,11 @@ impl StepBreakdown {
         self.r_fwd > 1.0 || self.r_bwd > 1.0
     }
 
-    /// Seconds of transfer time not hidden behind compute.
+    /// Seconds of collective time not hidden behind compute.
     pub fn exposed_comm(&self) -> f64 {
-        (self.t_transfer - self.t_fwd).max(0.0) + (self.t_transfer - self.t_bwd).max(0.0)
+        (self.comm_fwd - self.t_fwd).max(0.0)
+            + (self.comm_bwd - self.t_bwd).max(0.0)
+            + self.comm_exposed
     }
 }
 
@@ -45,18 +58,22 @@ pub fn breakdown(sm: &StepModel, alpha_hfu: f64, e: f64) -> StepBreakdown {
 
     let t_fwd = compute::phase_time(f_fwd, e, alpha_hfu, s_flops);
     let t_bwd = compute::phase_time(f_bwd, e, alpha_hfu, s_flops);
-    let t_transfer = sm.t_transfer();
+    let (comm_fwd, comm_bwd, comm_exposed) = sm.comm_profile();
+    let t_transfer = comm_fwd.max(comm_bwd);
 
-    let t_step = t_fwd.max(t_transfer) + t_bwd.max(t_transfer);
+    let t_step = t_fwd.max(comm_fwd) + t_bwd.max(comm_bwd) + comm_exposed;
 
     StepBreakdown {
         tokens: e,
         t_fwd,
         t_bwd,
         t_transfer,
+        comm_fwd,
+        comm_bwd,
+        comm_exposed,
         t_step,
-        r_fwd: if t_fwd > 0.0 { t_transfer / t_fwd } else { f64::INFINITY },
-        r_bwd: if t_bwd > 0.0 { t_transfer / t_bwd } else { f64::INFINITY },
+        r_fwd: if t_fwd > 0.0 { comm_fwd / t_fwd } else { f64::INFINITY },
+        r_bwd: if t_bwd > 0.0 { comm_bwd / t_bwd } else { f64::INFINITY },
     }
 }
 
@@ -106,5 +123,48 @@ mod tests {
         let b = sm("175B", 512, 512, "40GB-A100-100Gbps").breakdown(0.75);
         assert!((b.t_step - (b.t_fwd + b.t_bwd + b.exposed_comm())).abs() < 1e-9);
         assert!(b.bandwidth_bound());
+    }
+
+    /// Strategy comm profiles: FSDP charges both phases, DDP/ZeRO-1/2 only
+    /// backward, parameter server exposes its pull, and the step identity
+    /// `t_step = t_fwd + t_bwd + exposed_comm()` holds for all of them.
+    #[test]
+    fn strategy_profiles_shape_the_step() {
+        let with = |strat: Strategy| {
+            let mut s = sm("13B", 2048, 8, "40GB-A100-200Gbps");
+            s.cfg = s.cfg.clone().with_strategy(strat);
+            s.breakdown(0.75)
+        };
+        let fsdp = with(Strategy::Fsdp);
+        assert!(fsdp.comm_fwd > 0.0 && fsdp.comm_fwd == fsdp.comm_bwd);
+        assert_eq!(fsdp.comm_exposed, 0.0);
+
+        let ddp = with(Strategy::Ddp);
+        assert_eq!(ddp.comm_fwd, 0.0);
+        assert!(ddp.comm_bwd > fsdp.comm_bwd, "all-reduce moves 2φQ");
+        assert_eq!(ddp.r_fwd, 0.0);
+
+        let ps = with(Strategy::ParamServer);
+        assert!(ps.comm_exposed > 0.0, "parameter pull cannot overlap");
+
+        for strat in Strategy::NAMES {
+            let b = with(Strategy::parse(strat).unwrap());
+            assert!(
+                (b.t_step - (b.t_fwd + b.t_bwd + b.exposed_comm())).abs() < 1e-9,
+                "{strat}: step identity"
+            );
+        }
+    }
+
+    /// Hybrid shard degenerates to exactly the FSDP profile on one node.
+    #[test]
+    fn hybrid_shard_converges_to_fsdp_on_one_node() {
+        let mut s = sm("7B", 2048, 4, "40GB-A100-200Gbps");
+        let fsdp = s.breakdown(0.75);
+        s.cfg = s.cfg.clone().with_strategy(Strategy::HybridShard);
+        let hybrid = s.breakdown(0.75);
+        assert_eq!(hybrid.comm_fwd, fsdp.comm_fwd);
+        assert_eq!(hybrid.comm_bwd, fsdp.comm_bwd);
+        assert_eq!(hybrid.t_step, fsdp.t_step);
     }
 }

@@ -734,6 +734,28 @@ mod tests {
     }
 
     #[test]
+    fn w201_flags_a_zero_family_strategy_axis_under_gridsearch() {
+        // The grid search sweeps the ZeRO stages itself, so a zero-family
+        // `strategy` axis projects to the same cache key — a dead axis...
+        let r = check(
+            "model = 1.3B\nn_gpus = 64\nquery.backend = gridsearch\n\
+             sweep.strategy = fsdp, zero1, zero3\n",
+        );
+        let w = r.diagnostics.iter().find(|d| d.code == "W201").unwrap();
+        assert_eq!(w.span, "sweep.strategy");
+        // ...while the analytical backend prices each strategy distinctly.
+        let r2 = check("model = 1.3B\nn_gpus = 64\nsweep.strategy = fsdp, ddp, zero1\n");
+        assert!(!codes(&r2).contains(&"W201"), "{:?}", codes(&r2));
+        // Non-family strategies keep distinct gridsearch keys (each is
+        // rejected, but identifiably), so that axis is not dead.
+        let r3 = check(
+            "model = 1.3B\nn_gpus = 64\nquery.backend = gridsearch\n\
+             sweep.strategy = ddp, param_server, hybrid_shard\n",
+        );
+        assert!(!codes(&r3).contains(&"W201"), "{:?}", codes(&r3));
+    }
+
+    #[test]
     fn exhaustive_e100_combines_mixed_causes() {
         // One point fails construction (64 GPUs on an 8-GPU cluster), the
         // other a tier-1 constraint — neither cause alone covers the grid.

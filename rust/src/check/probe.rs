@@ -38,6 +38,7 @@ pub(crate) const ENUMERATE_KEYS: &[&str] = &[
     "cluster.topology.collective",
     "n_gpus",
     "zero_stage",
+    "strategy",
     "precision",
     "empty_cache",
 ];

@@ -10,7 +10,7 @@ pub mod scenario;
 pub use cluster::{ClusterConfig, GpuSpec};
 pub use model::ModelConfig;
 pub use precision::Precision;
-pub use training::{TrainingConfig, ZeroStage};
+pub use training::{Strategy, TrainingConfig, ZeroStage};
 
 /// One gibibyte in bytes. The paper reports memory in GiB ("40GB A100" is
 /// the marketing 40·2³⁰ device).

@@ -43,7 +43,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{ClusterConfig, ModelConfig, Precision, TrainingConfig, ZeroStage, GIB};
+use super::{ClusterConfig, ModelConfig, Precision, Strategy, TrainingConfig, ZeroStage, GIB};
 use crate::util::suggest::suggestion;
 
 /// The cluster assumed when a scenario names none (the paper's main
@@ -85,6 +85,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "cluster.sim_latency",
     "cluster.straggler.knee",
     "cluster.straggler.slope",
+    "strategy",
+    "strategy.servers",
 ];
 
 /// Is `key` a scalar key the dialect understands (sweepable by the sweep
@@ -133,6 +135,14 @@ pub const KEY_DOCS: &[(&str, &str)] = &[
     ("cluster.sim_latency", "Simulator per-hop latency floor when ε = 0, seconds"),
     ("cluster.straggler.knee", "Straggler calibration: GPU count where slowdown starts"),
     ("cluster.straggler.slope", "Straggler calibration: slowdown slope ∈ [0, 1] per decade"),
+    (
+        "strategy",
+        "Distribution strategy: `fsdp`, `ddp`, `zero1`, `zero2`, `zero3`, `param_server` or `hybrid_shard`; default fsdp",
+    ),
+    (
+        "strategy.servers",
+        "Server count for `strategy = param_server`; 0 (default) means one per node",
+    ),
 ];
 
 /// A complete scenario: what to train, on what, and how.
@@ -314,10 +324,26 @@ impl Scenario {
         );
         training.gamma = get("gamma", "0.0").parse().context("gamma")?;
         training.empty_cache = get("empty_cache", "false").parse().context("empty_cache")?;
-        training.zero_stage = match get("zero_stage", "3").as_str() {
-            "3" | "zero-3" | "zero3" => ZeroStage::Stage3,
-            "1" | "2" | "12" | "1/2" | "zero-1/2" | "zero-12" => ZeroStage::Stage12,
-            other => bail!("zero_stage must be 3 or 1/2 (or zero-3 / zero-1/2), got {other:?}"),
+        let strategy_val = get("strategy", "fsdp");
+        training.strategy = match Strategy::parse(&strategy_val) {
+            Some(s) => s,
+            None => bail!(
+                "strategy must be one of {}, got {strategy_val:?}{}",
+                Strategy::NAMES.join(", "),
+                suggestion(&strategy_val, &Strategy::NAMES)
+            ),
+        };
+        training.ps_servers = get("strategy.servers", "0").parse().context("strategy.servers")?;
+        // Without an explicit `zero_stage`, the stage defaults to whatever the
+        // strategy pins (ZeRO-family), else the paper default of stage 3. An
+        // explicit key that contradicts the strategy is caught by `validate`.
+        training.zero_stage = match kv.get("zero_stage") {
+            None => training.strategy.implied_stage().unwrap_or(ZeroStage::Stage3),
+            Some(v) => match v.as_str() {
+                "3" | "zero-3" | "zero3" => ZeroStage::Stage3,
+                "1" | "2" | "12" | "1/2" | "zero-1/2" | "zero-12" => ZeroStage::Stage12,
+                other => bail!("zero_stage must be 3 or 1/2 (or zero-3 / zero-1/2), got {other:?}"),
+            },
         };
         training.precision = match get("precision", "bf16").to_ascii_lowercase().as_str() {
             "bf16" => Precision::Bf16,
@@ -452,6 +478,15 @@ impl Scenario {
         );
         let _ = writeln!(out, "precision = {}", self.training.precision);
         let _ = writeln!(out, "empty_cache = {}", self.training.empty_cache);
+        // Conditional emission keeps legacy (FSDP) scenarios byte-identical
+        // to what the seed serialized — wire formats and fingerprints of
+        // existing plans are unchanged.
+        if self.training.strategy != Strategy::Fsdp {
+            let _ = writeln!(out, "strategy = {}", self.training.strategy);
+        }
+        if self.training.ps_servers != 0 {
+            let _ = writeln!(out, "strategy.servers = {}", self.training.ps_servers);
+        }
         if let Some(a) = self.alpha {
             let _ = writeln!(out, "alpha = {a}");
         }
@@ -485,6 +520,29 @@ impl Scenario {
             (0.0..=1.0).contains(&comm.straggler.slope),
             "cluster.straggler.slope must be in [0,1]"
         );
+        let t = &self.training;
+        if let Some(stage) = t.strategy.implied_stage() {
+            anyhow::ensure!(
+                t.zero_stage == stage,
+                "zero_stage = {} contradicts strategy = {} (which pins {stage}) — drop the zero_stage key",
+                t.zero_stage,
+                t.strategy
+            );
+        }
+        if !matches!(t.strategy, Strategy::Fsdp) && t.strategy.implied_stage().is_none() {
+            anyhow::ensure!(
+                t.zero_stage == ZeroStage::Stage3,
+                "zero_stage does not apply to strategy = {} — drop the zero_stage key",
+                t.strategy
+            );
+        }
+        if t.ps_servers != 0 {
+            anyhow::ensure!(
+                t.strategy == Strategy::ParamServer,
+                "strategy.servers requires strategy = param_server (got strategy = {})",
+                t.strategy
+            );
+        }
         Ok(())
     }
 }
@@ -626,6 +684,55 @@ mod tests {
         assert_eq!(Scenario::parse("model = 7B\n").unwrap().alpha, None);
         assert!(Scenario::parse("model = 7B\nalpha = 0\n").is_err());
         assert!(Scenario::parse("model = 7B\nalpha = 1.5\n").is_err());
+    }
+
+    #[test]
+    fn strategy_key_parses_validates_and_roundtrips() {
+        // Default: fsdp, not emitted — legacy serializations stay byte-identical.
+        let s = Scenario::parse("model = 7B\nn_gpus = 8\n").unwrap();
+        assert_eq!(s.training.strategy, Strategy::Fsdp);
+        assert!(!s.to_text().contains("strategy"), "{}", s.to_text());
+
+        // Every named strategy parses and roundtrips through text.
+        for name in Strategy::NAMES {
+            let s = Scenario::parse(&format!("model = 7B\nn_gpus = 8\nstrategy = {name}\n"))
+                .unwrap();
+            assert_eq!(s.training.strategy.to_string(), name);
+            assert_eq!(Scenario::parse(&s.to_text()).unwrap(), s, "roundtrip for {name}");
+        }
+
+        // ZeRO-family strategies pin the stage.
+        let s = Scenario::parse("model = 7B\nstrategy = zero1\n").unwrap();
+        assert_eq!(s.training.zero_stage, ZeroStage::Stage12);
+        let s = Scenario::parse("model = 7B\nstrategy = zero3\n").unwrap();
+        assert_eq!(s.training.zero_stage, ZeroStage::Stage3);
+
+        // Consistent explicit stage is fine; a contradiction is an error.
+        assert!(Scenario::parse("model = 7B\nstrategy = zero2\nzero_stage = 1/2\n").is_ok());
+        let err = Scenario::parse("model = 7B\nstrategy = zero1\nzero_stage = 3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("contradicts strategy"), "{err}");
+        let err = Scenario::parse("model = 7B\nstrategy = ddp\nzero_stage = 1/2\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not apply"), "{err}");
+
+        // strategy.servers is a param_server sub-axis only.
+        let s = Scenario::parse(
+            "model = 7B\nn_gpus = 8\nstrategy = param_server\nstrategy.servers = 4\n",
+        )
+        .unwrap();
+        assert_eq!(s.training.ps_servers, 4);
+        assert_eq!(Scenario::parse(&s.to_text()).unwrap(), s);
+        let err = Scenario::parse("model = 7B\nstrategy.servers = 4\n").unwrap_err().to_string();
+        assert!(err.contains("requires strategy = param_server"), "{err}");
+
+        // Unknown strategy names are rejected with a suggestion.
+        let err = Scenario::parse("model = 7B\nstrategy = hybrid_sahrd\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean \"hybrid_shard\"?"), "{err}");
     }
 
     #[test]

@@ -33,6 +33,109 @@ impl std::fmt::Display for ZeroStage {
     }
 }
 
+/// Which distribution strategy the run uses. Each variant is a first-class
+/// memory/communication model, not a label: it decides which model states are
+/// sharded (Eq 2's divisors) and which collectives sit on the step path
+/// (Eq 5's transfer terms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Strategy {
+    /// The paper's FSDP model — sharding follows `zero_stage` exactly as the
+    /// seed repo did, with the Eq-5 transfer charged against both phases.
+    #[default]
+    Fsdp,
+    /// Plain data parallelism: full replicas of parameters, gradients and
+    /// optimizer state; a gradient all-reduce overlapped with backward.
+    Ddp,
+    /// ZeRO stage 1: optimizer state sharded; parameters and gradients
+    /// replicated; gradient all-reduce plus parameter re-gather on backward.
+    Zero1,
+    /// ZeRO stage 2: optimizer state and gradients sharded; parameters
+    /// replicated; reduce-scatter + all-gather on backward.
+    Zero2,
+    /// ZeRO stage 3: everything sharded — identical to `Fsdp` with
+    /// `zero_stage = 3` (pinned bit-exact by `tests/strategy_models.rs`).
+    Zero3,
+    /// Parameter server: workers push gradients to and pull parameters from
+    /// a set of servers over the cluster's bottleneck tier. Server count is
+    /// the `strategy.servers` sub-axis (0 = one server per node).
+    ParamServer,
+    /// Hybrid sharding (FSDP `HYBRID_SHARD`): full sharding *within* a node
+    /// over the intra-node tier, replication *across* nodes with a gradient
+    /// all-reduce over the inter-node tier.
+    HybridShard,
+}
+
+impl Strategy {
+    /// Every parsable strategy name, in documentation order.
+    pub const NAMES: [&'static str; 7] = [
+        "fsdp",
+        "ddp",
+        "zero1",
+        "zero2",
+        "zero3",
+        "param_server",
+        "hybrid_shard",
+    ];
+
+    /// Parse a scenario-file value.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fsdp" => Strategy::Fsdp,
+            "ddp" => Strategy::Ddp,
+            "zero1" | "zero-1" => Strategy::Zero1,
+            "zero2" | "zero-2" => Strategy::Zero2,
+            "zero3" | "zero-3" => Strategy::Zero3,
+            "param_server" | "ps" => Strategy::ParamServer,
+            "hybrid_shard" | "hybrid" => Strategy::HybridShard,
+            _ => return None,
+        })
+    }
+
+    /// Is this strategy expressible as a point on the paper's (γ, ZeRO-stage)
+    /// grid? `gridsearch`/`alg1` only model this family.
+    pub fn zero_family(self) -> bool {
+        matches!(
+            self,
+            Strategy::Fsdp | Strategy::Zero1 | Strategy::Zero2 | Strategy::Zero3
+        )
+    }
+
+    /// The ZeRO stage this strategy pins, if it pins one. `Fsdp` follows the
+    /// scenario's own `zero_stage`; non-ZeRO strategies have no stage.
+    pub fn implied_stage(self) -> Option<ZeroStage> {
+        match self {
+            Strategy::Zero1 | Strategy::Zero2 => Some(ZeroStage::Stage12),
+            Strategy::Zero3 => Some(ZeroStage::Stage3),
+            _ => None,
+        }
+    }
+
+    /// Does this strategy all-gather parameters on the step path (i.e. shard
+    /// parameters across some group)?
+    pub fn shards_params(self, stage: ZeroStage) -> bool {
+        match self {
+            Strategy::Fsdp => stage.shards_params(),
+            Strategy::Zero3 | Strategy::HybridShard => true,
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            Strategy::Fsdp => "fsdp",
+            Strategy::Ddp => "ddp",
+            Strategy::Zero1 => "zero1",
+            Strategy::Zero2 => "zero2",
+            Strategy::Zero3 => "zero3",
+            Strategy::ParamServer => "param_server",
+            Strategy::HybridShard => "hybrid_shard",
+        };
+        write!(f, "{name}")
+    }
+}
+
 /// One training setup.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainingConfig {
@@ -44,8 +147,15 @@ pub struct TrainingConfig {
     /// (γ=0 — full recomputation, only block outputs checkpointed;
     /// γ=1 — no recomputation).
     pub gamma: f64,
-    /// ZeRO sharding stage.
+    /// ZeRO sharding stage (meaningful for `strategy = fsdp`; pinned by the
+    /// ZeRO-family strategies; inert otherwise — `validate` rejects
+    /// contradictions).
     pub zero_stage: ZeroStage,
+    /// Distribution strategy (memory + collective model).
+    pub strategy: Strategy,
+    /// Parameter-server count for `strategy = param_server`
+    /// (0 = auto: one server per node).
+    pub ps_servers: u64,
     /// Numeric precision (`Q`).
     pub precision: Precision,
     /// Whether the training loop calls `empty_cache` each step (the paper
@@ -62,6 +172,8 @@ impl TrainingConfig {
             batch_per_gpu,
             gamma: 0.0,
             zero_stage: ZeroStage::Stage3,
+            strategy: Strategy::Fsdp,
+            ps_servers: 0,
             precision: Precision::Bf16,
             empty_cache: false,
         }
@@ -88,6 +200,22 @@ impl TrainingConfig {
         self.zero_stage = stage;
         self
     }
+
+    /// Switch strategy, keeping `zero_stage` consistent with any stage the
+    /// strategy pins.
+    pub fn with_strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        if let Some(stage) = strategy.implied_stage() {
+            self.zero_stage = stage;
+        }
+        self
+    }
+
+    /// The ZeRO stage the run effectively executes at: the strategy's pinned
+    /// stage where it pins one, else the scenario's `zero_stage`.
+    pub fn effective_stage(&self) -> ZeroStage {
+        self.strategy.implied_stage().unwrap_or(self.zero_stage)
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +235,29 @@ mod tests {
     fn stage_semantics() {
         assert!(ZeroStage::Stage3.shards_params());
         assert!(!ZeroStage::Stage12.shards_params());
+    }
+
+    #[test]
+    fn strategy_parse_roundtrips_every_name() {
+        for name in Strategy::NAMES {
+            let s = Strategy::parse(name).unwrap();
+            assert_eq!(s.to_string(), name);
+        }
+        assert_eq!(Strategy::parse("3dp"), None);
+    }
+
+    #[test]
+    fn strategy_stage_pinning() {
+        assert_eq!(Strategy::Zero1.implied_stage(), Some(ZeroStage::Stage12));
+        assert_eq!(Strategy::Zero2.implied_stage(), Some(ZeroStage::Stage12));
+        assert_eq!(Strategy::Zero3.implied_stage(), Some(ZeroStage::Stage3));
+        assert_eq!(Strategy::Fsdp.implied_stage(), None);
+        let c = TrainingConfig::paper_default(8, 1).with_strategy(Strategy::Zero1);
+        assert_eq!(c.effective_stage(), ZeroStage::Stage12);
+        let c = TrainingConfig::paper_default(8, 1).with_stage(ZeroStage::Stage12);
+        assert_eq!(c.effective_stage(), ZeroStage::Stage12);
+        assert!(Strategy::HybridShard.shards_params(ZeroStage::Stage12));
+        assert!(!Strategy::Ddp.shards_params(ZeroStage::Stage3));
     }
 
     #[test]

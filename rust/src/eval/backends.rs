@@ -355,6 +355,12 @@ impl Evaluator for Searched {
     }
 
     fn evaluate(&self, s: &Scenario) -> Evaluation {
+        // Algorithm 1's grid is (α̂, γ, ZeRO stage): strategies outside the
+        // ZeRO family have no grid point, and silently costing them as FSDP
+        // would misattribute the result — reject them as infeasible.
+        if !s.training.strategy.zero_family() {
+            return search_rejects_strategy(self.name(), s);
+        }
         let mut gs = GridSearch::new(&s.model, &s.cluster, s.n_gpus);
         gs.precision = s.training.precision;
         // Serial inner planner: this evaluator usually runs on an outer
@@ -391,9 +397,17 @@ impl Evaluator for Searched {
     fn cache_key(&self, s: &Scenario) -> String {
         // The search sweeps seq/γ/stage/α itself: only (model, cluster, N,
         // precision) matter. Projecting the key makes grid points that
-        // differ elsewhere cache hits under the Planner.
+        // differ elsewhere cache hits under the Planner. ZeRO-family
+        // strategies normalize to the default `fsdp` (the search covers
+        // their stages), so a swept zero-family `strategy` axis is a dead
+        // axis here and `check`'s W201 flags it; non-family strategies are
+        // rejected outright, which the key must distinguish.
         let mut cfg = TrainingConfig::paper_default(1, 1);
         cfg.precision = s.training.precision;
+        if !s.training.strategy.zero_family() {
+            cfg.strategy = s.training.strategy;
+            cfg.ps_servers = s.training.ps_servers;
+        }
         let p = Scenario {
             model: s.model.clone(),
             cluster: s.cluster.clone(),
@@ -421,6 +435,24 @@ impl Evaluator for Searched {
     }
 }
 
+/// The Algorithm-1 family's rejection of a non-ZeRO-family strategy: an
+/// infeasible evaluation with an empty search (0 feasible grid points) —
+/// the same shape a fully-OOM search reports, so downstream ranking and
+/// wire codecs need no special case.
+fn search_rejects_strategy(backend: &'static str, s: &Scenario) -> Evaluation {
+    Evaluation {
+        backend,
+        scenario: ScenarioPoint::of(s),
+        feasible: false,
+        oom: false,
+        metrics: None,
+        step: None,
+        memory: None,
+        bounds: None,
+        search: Some(EvalSearch { feasible_points: 0, best_mfu: None, best_tgs: None }),
+    }
+}
+
 /// One grid point of Appendix C's Algorithm 1: evaluate the scenario's own
 /// (α̂ = `alpha`, γ, ZeRO stage) in the fill-the-GPU regime (sequence length
 /// = memory capacity, batch 1) with Algorithm 1's acceptance rule
@@ -444,11 +476,17 @@ impl Evaluator for Alg1Point {
     }
 
     fn evaluate(&self, s: &Scenario) -> Evaluation {
+        // Same family restriction as [`Searched`]: a grid point exists only
+        // for ZeRO-family strategies (whose stage `effective_stage`
+        // resolves); anything else is rejected, not silently costed as FSDP.
+        if !s.training.strategy.zero_family() {
+            return search_rejects_strategy(self.name(), s);
+        }
         let mut gs = GridSearch::new(&s.model, &s.cluster, s.n_gpus);
         gs.precision = s.training.precision;
         gs.tokens_cap = self.tokens_cap;
         let alpha = s.alpha.unwrap_or(DEFAULT_ALPHA);
-        match gs.eval_point(alpha, s.training.gamma, s.training.zero_stage) {
+        match gs.eval_point(alpha, s.training.gamma, s.training.effective_stage()) {
             Some(p) => {
                 let choice = SearchChoice {
                     alpha_hat: p.alpha_hat,
@@ -497,12 +535,20 @@ impl Evaluator for Alg1Point {
     }
 
     fn prune_by_bounds(&self, s: &Scenario) -> Option<String> {
+        // Non-ZeRO-family strategies are rejected unconditionally by
+        // `evaluate`, so pruning them is trivially sound.
+        if !s.training.strategy.zero_family() {
+            return Some(format!(
+                "alg1 searches ZeRO stages only — strategy = {} has no grid point",
+                s.training.strategy
+            ));
+        }
         // Eq 12 at this point's stage with γ=0 (the loosest γ): capacity at
         // the point's own γ can only be smaller, so < 1 token here means
         // `eval_point` must return None.
         let mut cfg = TrainingConfig::paper_default(1, 1);
         cfg.precision = s.training.precision;
-        cfg.zero_stage = s.training.zero_stage;
+        cfg.zero_stage = s.training.effective_stage();
         let mem = MemoryModel::new(&s.model, &s.cluster, &cfg, s.n_gpus);
         if mem.capacity_tokens < 1.0 {
             return Some(format!(
@@ -524,8 +570,14 @@ pub const BACKEND_DOCS: &[(&str, &str)] = &[
     ("analytical", "The §2 closed-form model, Eqs 1–11, at an assumed kernel efficiency α̂"),
     ("simulated", "The discrete-event cluster simulator (calibrated kernels + allocator)"),
     ("bounds", "The §2.7 closed-form maxima only, Eqs 12–15"),
-    ("gridsearch", "Algorithm 1: best feasible (α̂, γ, stage) configuration, fill-the-GPU"),
-    ("alg1", "One Algorithm 1 grid point: α̂/γ/stage pinned by the scenario"),
+    (
+        "gridsearch",
+        "Algorithm 1: best feasible (α̂, γ, stage) configuration, fill-the-GPU (ZeRO-family strategies only)",
+    ),
+    (
+        "alg1",
+        "One Algorithm 1 grid point: α̂/γ/stage pinned by the scenario (ZeRO-family strategies only)",
+    ),
 ];
 
 /// Resolve one backend by name.

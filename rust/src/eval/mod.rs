@@ -41,7 +41,7 @@ pub mod sweep;
 pub mod typed;
 
 use crate::config::scenario::Scenario;
-use crate::config::{Precision, ZeroStage, GIB};
+use crate::config::{Precision, Strategy, ZeroStage, GIB};
 use crate::util::json::Json;
 
 pub use backends::{
@@ -204,6 +204,10 @@ pub struct ScenarioPoint {
     pub batch: u64,
     pub gamma: f64,
     pub zero_stage: ZeroStage,
+    /// Distribution strategy (`fsdp` unless the scenario overrides it).
+    pub strategy: Strategy,
+    /// Server count for `strategy = param_server` (0 = one per node).
+    pub ps_servers: u64,
     pub precision: Precision,
     pub empty_cache: bool,
     /// Collective algorithm the cluster's fabric runs (`"ring"` unless
@@ -224,6 +228,8 @@ impl ScenarioPoint {
             batch: s.training.batch_per_gpu,
             gamma: s.training.gamma,
             zero_stage: s.training.zero_stage,
+            strategy: s.training.strategy,
+            ps_servers: s.training.ps_servers,
             precision: s.training.precision,
             empty_cache: s.training.empty_cache,
             collective: s.cluster.comm.collective.to_string(),
@@ -231,8 +237,17 @@ impl ScenarioPoint {
         }
     }
 
-    /// One-line human rendering.
+    /// One-line human rendering. The distribution token is the ZeRO stage
+    /// for the default `fsdp` strategy (the paper's convention) and the
+    /// strategy name otherwise (the stage is implied or inapplicable).
     pub fn describe(&self) -> String {
+        let dist = match self.strategy {
+            Strategy::Fsdp => self.zero_stage.to_string(),
+            Strategy::ParamServer if self.ps_servers > 0 => {
+                format!("{} ({} servers)", self.strategy, self.ps_servers)
+            }
+            other => other.to_string(),
+        };
         format!(
             "{} on {}× {} (ctx {} × batch {}, γ={}, {}, {}, {} collectives)",
             self.model,
@@ -241,7 +256,7 @@ impl ScenarioPoint {
             self.seq_len,
             self.batch,
             self.gamma,
-            self.zero_stage,
+            dist,
             self.precision,
             self.collective
         )
@@ -256,11 +271,15 @@ impl ScenarioPoint {
             ("batch", num(self.batch as f64)),
             ("gamma", num(self.gamma)),
             ("zero_stage", Json::Str(self.zero_stage.to_string())),
+            ("strategy", Json::Str(self.strategy.to_string())),
             ("precision", Json::Str(self.precision.to_string())),
             ("empty_cache", Json::Bool(self.empty_cache)),
             ("collective", Json::Str(self.collective.clone())),
             ("tokens_per_gpu", num((self.seq_len * self.batch) as f64)),
         ];
+        if self.ps_servers != 0 {
+            pairs.push(("strategy_servers", num(self.ps_servers as f64)));
+        }
         if let Some(a) = self.alpha {
             pairs.push(("alpha", num(a)));
         }

@@ -54,7 +54,7 @@ use anyhow::Result;
 
 use crate::comm::Algorithm;
 use crate::config::scenario::Scenario;
-use crate::config::{ClusterConfig, ModelConfig, Precision, ZeroStage, GIB};
+use crate::config::{ClusterConfig, ModelConfig, Precision, Strategy, ZeroStage, GIB};
 
 use super::sweep::Sweep;
 use super::{EvalBounds, EvalMemory, EvalMetrics, EvalSearch, EvalStep, Evaluation, ScenarioPoint};
@@ -174,6 +174,25 @@ fn compile_patch(key: &str, v: &str, base: &BTreeMap<String, String>) -> Option<
                 _ => return None,
             };
             patch(move |s| s.training.zero_stage = z)
+        }
+        "strategy" => {
+            let strat = Strategy::parse(v)?;
+            // `from_kv` defaults zero_stage from the strategy only when the
+            // key is absent; when zero_stage is itself an axis its patch
+            // re-applies afterwards ("strategy" < "zero_stage" in the
+            // key-sorted patch order), reproducing explicit-key-wins.
+            let default_stage = (!base.contains_key("zero_stage"))
+                .then(|| strat.implied_stage().unwrap_or(ZeroStage::Stage3));
+            patch(move |s| {
+                s.training.strategy = strat;
+                if let Some(stage) = default_stage {
+                    s.training.zero_stage = stage;
+                }
+            })
+        }
+        "strategy.servers" => {
+            let v: u64 = v.parse().ok()?;
+            patch(move |s| s.training.ps_servers = v)
         }
         "precision" => {
             let p = match v.to_ascii_lowercase().as_str() {

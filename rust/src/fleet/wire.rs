@@ -22,7 +22,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{Precision, ZeroStage};
+use crate::config::{Precision, Strategy, ZeroStage};
 use crate::eval::{
     num, obj, EvalBounds, EvalMemory, EvalMetrics, EvalSearch, EvalStep, Evaluation,
     ScenarioPoint, SearchChoice, BACKEND_NAMES,
@@ -482,6 +482,14 @@ fn scenario_json(s: &ScenarioPoint) -> Json {
         ("empty_cache", Json::Bool(s.empty_cache)),
         ("collective", Json::Str(s.collective.clone())),
     ];
+    // Strategy fields ride the wire only when non-default, so frames from
+    // strategy-less scenarios stay byte-identical to older peers'.
+    if s.strategy != Strategy::default() {
+        pairs.push(("strategy", Json::Str(s.strategy.to_string())));
+    }
+    if s.ps_servers != 0 {
+        pairs.push(("strategy_servers", num(s.ps_servers as f64)));
+    }
     if let Some(a) = s.alpha {
         pairs.push(("alpha", enc_f(a)));
     }
@@ -500,6 +508,18 @@ fn scenario_of(v: &Json) -> Result<ScenarioPoint> {
             "zero-3" => ZeroStage::Stage3,
             "zero-1/2" => ZeroStage::Stage12,
             other => bail!("unknown zero stage {other:?} on the wire"),
+        },
+        strategy: match v.opt("strategy") {
+            Some(j) => {
+                let name = j.as_str().context("strategy")?;
+                Strategy::parse(name)
+                    .with_context(|| format!("unknown strategy {name:?} on the wire"))?
+            }
+            None => Strategy::default(),
+        },
+        ps_servers: match v.opt("strategy_servers") {
+            Some(j) => u64_of(j).context("strategy_servers")?,
+            None => 0,
         },
         precision: match v.get("precision")?.as_str().context("precision")? {
             "bf16" => Precision::Bf16,
@@ -616,6 +636,8 @@ mod tests {
                 batch: 2,
                 gamma: 0.5,
                 zero_stage: ZeroStage::Stage3,
+                strategy: Strategy::HybridShard,
+                ps_servers: 0,
                 precision: Precision::Bf16,
                 empty_cache: false,
                 collective: "ring".to_string(),

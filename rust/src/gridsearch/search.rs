@@ -98,14 +98,11 @@ impl GridSearch {
     /// query Planner.
     pub fn eval_point(&self, alpha_hat: f64, gamma: f64, stage: ZeroStage) -> Option<SearchPoint> {
         let q = self.precision.bytes();
-        let cfg = TrainingConfig {
-            seq_len: 1, // placeholder; tokens are set from capacity below
-            batch_per_gpu: 1,
-            gamma,
-            zero_stage: stage,
-            precision: self.precision,
-            empty_cache: false,
-        };
+        // seq_len 1 is a placeholder; tokens are set from capacity below.
+        let mut cfg = TrainingConfig::paper_default(1, 1);
+        cfg.gamma = gamma;
+        cfg.zero_stage = stage;
+        cfg.precision = self.precision;
         let mem = memory::MemoryModel::new(&self.model, &self.cluster, &cfg, self.n_gpus);
         let tokens = mem.capacity_tokens.min(self.tokens_cap).floor();
         if tokens < 1.0 || mem.m_free <= 0.0 {

@@ -21,7 +21,7 @@
 //! capacity); `empty_cache` shrinks it toward active at the throughput cost
 //! modeled in [`super::EfficiencyModel`].
 
-use crate::config::{ClusterConfig, ModelConfig, TrainingConfig};
+use crate::config::{ClusterConfig, ModelConfig, Strategy, TrainingConfig};
 
 /// Evaluated allocator state for one configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -59,16 +59,36 @@ impl AllocatorModel {
         let n = n_gpus as f64;
         let phi = model.phi();
 
-        // Sharded model states (Eq 1's numerators).
-        let param_div = if cfg.zero_stage.shards_params() { n } else { 1.0 };
-        let states = (6.0 * q * phi + phi * q) / n + phi * q / param_div;
-
-        // Gathered-block working set: current + prefetched block, unsharded.
-        let gathered = if cfg.zero_stage.shards_params() && n_gpus > 1 {
-            2.0 * model.phi_per_layer() * q
-        } else {
-            0.0
+        // Sharded model states (Eq 1's numerators), per strategy — the same
+        // branching as `analysis::MemoryModel`.
+        let states = match cfg.strategy {
+            Strategy::Fsdp | Strategy::Zero2 | Strategy::Zero3 => {
+                let param_div = if cfg.effective_stage().shards_params() { n } else { 1.0 };
+                (6.0 * q * phi + phi * q) / n + phi * q / param_div
+            }
+            Strategy::Zero1 => 6.0 * q * phi / n + 2.0 * phi * q,
+            Strategy::Ddp => 6.0 * q * phi + 2.0 * phi * q,
+            Strategy::ParamServer => 2.0 * phi * q,
+            Strategy::HybridShard => {
+                let k = n_gpus.min(cluster.gpus_per_node.max(1)) as f64;
+                (6.0 * q * phi + 2.0 * phi * q) / k
+            }
         };
+
+        // Gathered-block working set: strategies that all-gather parameters
+        // materialize the current + prefetched block unsharded.
+        let shard_group = match cfg.strategy {
+            Strategy::Fsdp | Strategy::Zero3 => {
+                if cfg.effective_stage().shards_params() {
+                    n_gpus
+                } else {
+                    1
+                }
+            }
+            Strategy::HybridShard => n_gpus.min(cluster.gpus_per_node.max(1)),
+            _ => 1,
+        };
+        let gathered = if shard_group > 1 { 2.0 * model.phi_per_layer() * q } else { 0.0 };
 
         // Stored activations (Eq 3) + transient per-layer working set (Eq 2
         // per-layer term) for the whole batch.

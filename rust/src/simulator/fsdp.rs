@@ -21,7 +21,7 @@
 use super::{AllocatorModel, EfficiencyModel};
 use crate::analysis::compute;
 use crate::comm::CommEngine;
-use crate::config::{ClusterConfig, ModelConfig, TrainingConfig, GIB};
+use crate::config::{ClusterConfig, ModelConfig, Strategy, TrainingConfig, GIB};
 
 /// Simulated result of one training step on one configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -91,15 +91,65 @@ pub fn simulate_step(
     let t_comp_fwd_layer = f_fwd_layer / (eta * s_flops);
     let t_comp_bwd_layer = f_bwd_layer / (eta * s_flops);
 
-    let sharded = cfg.zero_stage.shards_params() && n_gpus > 1;
-    let t_ag_layer = if sharded { net.all_gather(layer_param_bytes) } else { 0.0 };
-    // Gradient reduction happens for any data-parallel run (all-reduce for
-    // ZeRO-1/2 ≈ 2× the reduce-scatter volume; reduce-scatter for ZeRO-3).
+    // The strategy's parameter-sharding group: the whole job for full-shard
+    // FSDP / ZeRO-3, the node for hybrid shard, nobody otherwise.
+    let shard_ranks = match cfg.strategy {
+        Strategy::Fsdp | Strategy::Zero3 => {
+            if cfg.effective_stage().shards_params() {
+                n_gpus
+            } else {
+                1
+            }
+        }
+        Strategy::HybridShard => n_gpus.min(net.topo.gpus_per_node).max(1),
+        _ => 1,
+    };
+    let sharded = shard_ranks > 1;
+    // Collectives of the shard group price on that group's tier — for
+    // hybrid shard, the intra-node ring.
+    let mut shard_net = net;
+    shard_net.topo.n_gpus = shard_ranks;
+    let t_ag_layer = if sharded { shard_net.all_gather(layer_param_bytes) } else { 0.0 };
+    // Backward-phase gradient traffic per block, plus any tail collective
+    // that overlaps with neither phase (the parameter server's pull).
+    let mut t_tail = 0.0;
     let t_rs_layer = if n_gpus > 1 {
-        if sharded {
-            net.reduce_scatter(layer_param_bytes)
-        } else {
-            2.0 * net.reduce_scatter(layer_param_bytes)
+        match cfg.strategy {
+            // Full-shard: reduce-scatter this block's gradients.
+            Strategy::Fsdp | Strategy::Zero3 if sharded => {
+                net.reduce_scatter(layer_param_bytes)
+            }
+            // Replicated gradients (stage-1/2 FSDP, DDP, ZeRO-1/2):
+            // all-reduce ≈ 2× the reduce-scatter volume.
+            Strategy::Fsdp | Strategy::Zero3 | Strategy::Ddp | Strategy::Zero1
+            | Strategy::Zero2 => 2.0 * net.reduce_scatter(layer_param_bytes),
+            // Push this block's gradients to the servers during backward;
+            // the parameter pull serializes before the next forward.
+            Strategy::ParamServer => {
+                let w = n_gpus as f64;
+                let servers =
+                    if cfg.ps_servers > 0 { cfg.ps_servers } else { net.topo.nodes() };
+                let s = servers.max(1) as f64;
+                let per_layer = layer_param_bytes / net.topo.bottleneck_bw()
+                    * (w / s).max(1.0)
+                    + net.topo.bottleneck_latency() * (w / s).ceil();
+                t_tail = per_layer * l as f64;
+                per_layer
+            }
+            // Intra-node reduce-scatter plus the cross-node all-reduce of
+            // this block's gradient shard over the node replicas.
+            Strategy::HybridShard => {
+                let m = net.topo.nodes();
+                let ar = if m > 1 {
+                    let mf = m as f64;
+                    2.0 * (layer_param_bytes / shard_ranks as f64) * (mf - 1.0) / mf
+                        / net.topo.inter_bw
+                        + mf * net.topo.inter_latency
+                } else {
+                    0.0
+                };
+                shard_net.reduce_scatter(layer_param_bytes) + ar
+            }
         }
     } else {
         0.0
@@ -117,7 +167,7 @@ pub fn simulate_step(
 
     // Whole-step multipliers: fixed host overhead, straggler jitter at
     // scale, allocator penalties.
-    let mut t_step = t_fwd + t_bwd + eff.t_fixed(model);
+    let mut t_step = t_fwd + t_bwd + eff.t_fixed(model) + t_tail;
     t_step *= eff.straggler(n_gpus, &cluster.comm.straggler);
     if cfg.empty_cache {
         t_step *= eff.empty_cache_penalty;
@@ -139,7 +189,7 @@ pub fn simulate_step(
         t_step,
         t_fwd,
         t_bwd,
-        exposed_comm: (t_fwd - busy_fwd).max(0.0) + (t_bwd - busy_bwd).max(0.0),
+        exposed_comm: (t_fwd - busy_fwd).max(0.0) + (t_bwd - busy_bwd).max(0.0) + t_tail,
         r_fwd: if busy_fwd > 0.0 { total_comm_fwd / busy_fwd } else { f64::INFINITY },
         r_bwd: if busy_bwd > 0.0 { total_comm_bwd / busy_bwd } else { f64::INFINITY },
         tgs,
@@ -262,6 +312,30 @@ mod tests {
         assert!(hier.t_step < ring.t_step, "{} vs {}", hier.t_step, ring.t_step);
         assert!(hier.mfu > ring.mfu);
         assert!(hier.exposed_comm <= ring.exposed_comm + 1e-12);
+    }
+
+    /// Strategy plumbing: zero3 is bit-identical to the default FSDP path;
+    /// hybrid shard beats DDP on a multi-node job (NVLink absorbs the
+    /// all-gathers, only the φQ/k shard crosses nodes); the parameter
+    /// server's pull shows up as exposed communication.
+    #[test]
+    fn strategy_timelines() {
+        let m = ModelConfig::preset("1.3B").unwrap();
+        // Bandwidth-starved, comm-bound point (short context) so the
+        // strategies' collective costs actually separate the step times.
+        let c = ClusterConfig::preset("40GB-A100-100Gbps").unwrap();
+        let eff = EfficiencyModel::default();
+        let with = |strat: Strategy| {
+            let cfg = TrainingConfig::paper_default(512, 1).with_strategy(strat);
+            simulate_step(&m, &c, &cfg, 16, &eff)
+        };
+        assert_eq!(with(Strategy::Zero3), with(Strategy::Fsdp));
+        let ddp = with(Strategy::Ddp);
+        let hybrid = with(Strategy::HybridShard);
+        assert!(!ddp.oom && !hybrid.oom);
+        assert!(hybrid.t_step < ddp.t_step, "{} vs {}", hybrid.t_step, ddp.t_step);
+        let ps = with(Strategy::ParamServer);
+        assert!(ps.exposed_comm > 0.0);
     }
 
     /// ZeRO-1/2 vs ZeRO-3: stage 3 pays all-gathers but frees memory; on a

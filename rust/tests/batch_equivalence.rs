@@ -26,7 +26,9 @@ impl Lcg {
 /// Axis pool: typed scalar runs (seq_len/batch inner), duplicate values
 /// (dedup + cache_hit provenance), an oversized cluster (whole-run
 /// validation errors), preset axes, and non-scalar inner axes
-/// (zero_stage/precision sort after seq_len, forcing the `Points` path).
+/// (strategy/zero_stage/precision sort after seq_len, forcing the
+/// `Points` path). The strategy mixes cross ZeRO-family and replica
+/// strategies so the batched kernels see both memory/comm shapes.
 const AXES: &[(&str, &[&str])] = &[
     ("seq_len", &["1024,2048,4096", "512,1024", "1024,1024,8192"]),
     ("batch", &["1,2", "1,2,4,8"]),
@@ -34,6 +36,7 @@ const AXES: &[(&str, &[&str])] = &[
     ("gamma", &["0,0.5", "0,0,1"]),
     ("alpha", &["0.5,0.75", "0.6"]),
     ("zero_stage", &["3,1/2"]),
+    ("strategy", &["fsdp,ddp,zero1", "zero3,param_server,hybrid_shard", "ddp,zero2"]),
     ("precision", &["bf16,fp32"]),
     ("empty_cache", &["true,false"]),
     ("cluster", &["40GB-A100-200Gbps,40GB-A100-100Gbps"]),

@@ -51,6 +51,15 @@ const SWEEP_SRC: &str = "model = 1.3B\nbatch = 1\n\
                          sweep.seq_len = 1024..8192*2\n\
                          sweep.gamma = 0,0.5\n";
 
+/// 3 × 7 = 21 points over every distribution strategy. The 7-value
+/// strategy axis is the inner (fastest) axis and is coprime with both
+/// chunkings below, so scattered ranges cross strategy boundaries and the
+/// wire codec must round-trip every strategy variant.
+const STRATEGY_PLAN_SRC: &str = "model = 1.3B\nbatch = 1\nn_gpus = 32\n\
+    sweep.seq_len = 1024,2048,4096\n\
+    sweep.strategy = fsdp,ddp,zero1,zero2,zero3,param_server,hybrid_shard\n\
+    query.backend = analytical\nquery.top_k = 5\n";
+
 fn start_workers(n: usize) -> Vec<Server> {
     (0..n)
         .map(|_| {
@@ -134,6 +143,30 @@ fn fleet_sweep_report_is_byte_identical_to_the_local_streamed_report() {
             assert_eq!(out.body.as_deref(), Some(want.as_str()), "{format:?} chunk {chunk}");
             assert_eq!(stats.reissued, 0);
         }
+    }
+    for w in fleet {
+        w.shutdown();
+    }
+}
+
+#[test]
+fn fleet_scatter_is_byte_identical_on_a_mixed_strategy_grid() {
+    let q = Query::parse(STRATEGY_PLAN_SRC).unwrap();
+    assert_eq!(q.space.len(), 21);
+    let want = Planner::new(2).run(&q).unwrap().to_json();
+
+    let fleet = start_workers(2);
+    for chunk in [2usize, 5] {
+        let fc = fleet_cfg(hosts_of(&fleet), chunk);
+        let (frontier, stats) = run_fleet_plan(STRATEGY_PLAN_SRC, &q, &fc).unwrap();
+        assert_eq!(
+            frontier.to_json(),
+            want,
+            "chunk {chunk}: mixed-strategy fleet output must match the local run"
+        );
+        assert_eq!(stats.ranges, 21usize.div_ceil(chunk));
+        assert_eq!(stats.reissued, 0);
+        assert_eq!(stats.duplicates_dropped, 0);
     }
     for w in fleet {
         w.shutdown();
